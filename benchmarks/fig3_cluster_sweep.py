@@ -1,0 +1,40 @@
+"""Paper Figure 3: impact of cluster number on ACC and TTFT."""
+from __future__ import annotations
+
+import argparse
+
+from repro.rag.workbench import build_workbench, test_items
+
+
+def run(num_queries: int = 100, clusters=(1, 2, 3, 4, 5, 10, 20, 30, 40, 50),
+        dataset: str = "scene", train_steps: int = 300, log_fn=print):
+    wb = build_workbench(dataset, train_steps=train_steps, log_fn=log_fn)
+    items = test_items(wb, num_queries)
+    pipe = wb.pipeline("gretriever")
+    pipe.engine.warmup()
+    rb, sb = pipe.run_baseline(items)
+    log_fn(f"baseline: ACC {sb.acc:.2f} TTFT {sb.ttft_ms:.2f}ms")
+    out = [{"clusters": 0, "acc": sb.acc, "ttft_ms": sb.ttft_ms,
+            "name": "baseline"}]
+    for c in clusters:
+        if c > len(items):
+            continue
+        _, ss, plan, stats = pipe.run_subgcache(items, num_clusters=c)
+        log_fn(f"c={c:3d}: ACC {ss.acc:6.2f}  TTFT {ss.ttft_ms:8.2f}ms  "
+               f"RT {ss.rt_ms:8.2f}ms  reuse x{plan.reuse_factor:.1f}  "
+               f"savings x{stats.prefill_savings:.2f}")
+        out.append({"clusters": c, "acc": ss.acc, "ttft_ms": ss.ttft_ms,
+                    "rt_ms": ss.rt_ms, "reuse": plan.reuse_factor})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="scene")
+    ap.add_argument("--num-queries", type=int, default=100)
+    args = ap.parse_args()
+    run(args.num_queries, dataset=args.dataset)
+
+
+if __name__ == "__main__":
+    main()

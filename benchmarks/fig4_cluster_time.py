@@ -1,0 +1,40 @@
+"""Paper Figure 4: cluster processing time vs LLM response time by
+cluster count — validates the paper's 'minimal processing overhead' claim."""
+from __future__ import annotations
+
+import argparse
+
+from repro.rag.workbench import build_workbench, test_items
+
+
+def run(num_queries: int = 100, clusters=(1, 2, 5, 10, 20, 50),
+        dataset: str = "scene", train_steps: int = 300, log_fn=print):
+    wb = build_workbench(dataset, train_steps=train_steps, log_fn=log_fn)
+    items = test_items(wb, num_queries)
+    pipe = wb.pipeline("gretriever")
+    pipe.engine.warmup()
+    out = []
+    for c in clusters:
+        if c > len(items):
+            continue
+        recs, ss, plan, _ = pipe.run_subgcache(items, num_clusters=c)
+        llm_ms = ss.rt_ms * len(items)              # total LLM time
+        cl_ms = ss.cluster_processing_ms            # total cluster time
+        frac = cl_ms / max(cl_ms + llm_ms, 1e-9) * 100
+        log_fn(f"c={c:3d}: cluster {cl_ms:8.2f}ms  llm {llm_ms:10.2f}ms  "
+               f"overhead {frac:5.2f}%")
+        out.append({"clusters": c, "cluster_ms": cl_ms, "llm_ms": llm_ms,
+                    "overhead_pct": frac})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="scene")
+    ap.add_argument("--num-queries", type=int, default=100)
+    args = ap.parse_args()
+    run(args.num_queries, dataset=args.dataset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Perf hillclimb driver: lower one (arch, shape) with a variant and
+report the fitted roofline terms + memory.  Appends to results/perf.json.
+
+  PYTHONPATH=src python benchmarks/perf_iter.py --arch tinyllama-1.1b \
+      --shape train_4k --name seqshard --set seq_shard_boundary=true
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import json
+
+from repro.launch import dryrun as D
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.configs import registry as R
+from repro.models import attention as attn_mod
+
+
+def parse_val(v):
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    try:
+        return int(v)
+    except ValueError:
+        return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--name", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--out", default="results/perf.json")
+    args = ap.parse_args()
+    variant = {}
+    for kv in args.set:
+        k, v = kv.split("=")
+        variant[k] = parse_val(v)
+
+    cfg = D.build_cfg(args.arch, args.shape, D.SWA_OVERRIDE_WINDOW)
+    mesh = make_production_mesh()
+
+    # full-depth scan lowering for memory
+    full = D.lower_one(cfg, args.shape, mesh, variant=variant)
+
+    # two-point accounting
+    attn_mod.UNROLL_CHUNKS = True
+    a1 = D.lower_one(D._accounting_cfg(cfg, 1), args.shape, mesh,
+                     variant=variant)
+    a2 = D.lower_one(D._accounting_cfg(cfg, 2), args.shape, mesh,
+                     variant=variant)
+    attn_mod.UNROLL_CHUNKS = False
+    from repro.models.model import group_period
+    groups = cfg.num_layers / group_period(cfg)
+
+    def fit(k1, k2=None):
+        v1 = a1[k1] if k2 is None else a1[k1][k2]
+        v2 = a2[k1] if k2 is None else a2[k1][k2]
+        per = v2 - v1
+        return max(0.0, (v1 - per) + per * groups)
+
+    flops, bytes_acc, coll = fit("flops"), fit("bytes"), fit("coll", "total")
+    rec = {
+        "arch": args.arch, "shape": args.shape, "variant_name": args.name,
+        "variant": variant,
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll / ICI_BW,
+        "collectives": {op: fit("coll", op) for op in D._COLLECTIVES},
+        "temp_gib": full["memory"].get("temp_size_in_bytes", 0) / 2 ** 30,
+        "flops_per_chip": flops, "bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": coll,
+    }
+    print(json.dumps(rec, indent=1))
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    results.append(rec)
+    os.makedirs("results", exist_ok=True)
+    json.dump(results, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Roofline table formatter: reads results/dryrun.json -> EXPERIMENTS table.
+
+Per (arch x shape), single-pod mesh: the three roofline terms, dominant
+bottleneck, model-FLOPs ratio, and per-device memory; multi-pod rows show
+the compile proof.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_table(results, multi_pod=False):
+    rows = []
+    head = (f"| {'arch':22s} | {'shape':11s} | {'compute_s':>9s} | "
+            f"{'memory_s':>9s} | {'collect_s':>9s} | {'dominant':10s} | "
+            f"{'useful%':>7s} | {'temp GiB':>8s} |")
+    sep = "|" + "|".join("-" * (len(c) + 2) for c in
+                         ["arch" + " " * 18, "shape" + " " * 6, "x" * 9,
+                          "x" * 9, "x" * 9, "dominant" + "  ", "x" * 7,
+                          "x" * 8]) + "|"
+    rows.append(head)
+    rows.append(sep)
+    for r in results:
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']:22s} | {r['shape']:11s} | "
+                        f"{'—':>9s} | {'—':>9s} | {'—':>9s} | "
+                        f"{'skip':10s} | {'—':>7s} | {'—':>8s} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']:22s} | {r['shape']:11s} | ERROR: "
+                        f"{r['note'][:60]} |")
+            continue
+        temp = r["memory"].get("temp_size_in_bytes", 0) / 2 ** 30
+        if "roofline" in r:
+            rt = r["roofline"]
+            rows.append(
+                f"| {r['arch']:22s} | {r['shape']:11s} | "
+                f"{rt['compute_s']:9.4f} | {rt['memory_s']:9.4f} | "
+                f"{rt['collective_s']:9.4f} | {rt['dominant']:10s} | "
+                f"{100*rt['useful_flops_ratio']:7.1f} | {temp:8.2f} |")
+        else:
+            rows.append(
+                f"| {r['arch']:22s} | {r['shape']:11s} | "
+                f"{'ok':>9s} | {'ok':>9s} | {'ok':>9s} | "
+                f"{'compiled':10s} | {'—':>7s} | {temp:8.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    print("## single-pod (16x16 = 256 chips) — roofline terms")
+    print(fmt_table(results, multi_pod=False))
+    print()
+    print("## multi-pod (2x16x16 = 512 chips) — compile proof")
+    print(fmt_table(results, multi_pod=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Benchmark harness entrypoint: one function per paper table/figure.
+
+``python -m benchmarks.run`` executes the fast suite and prints
+``name,us_per_call,derived`` CSV rows.  The heavyweight full-scale
+variants live in the sibling modules (table2_overall, fig3_cluster_sweep,
+fig4_cluster_time, table3_linkage, table4_batch_size, roofline) and are
+driven with larger query counts from the CLI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def row(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _time(fn, iters=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ----------------------------------------------------------------------
+def bench_kernels():
+    """Pallas kernels (interpret mode) vs jnp oracle — per-call us."""
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    B, Hq, Hkv, D, S, T = 2, 8, 2, 64, 256, 64
+    q = jax.random.normal(key, (B, Hq, T, D))
+    k = jax.random.normal(key, (B, Hkv, S, D))
+    v = jax.random.normal(key, (B, Hkv, S, D))
+    q_pos = jnp.broadcast_to(128 + jnp.arange(T)[None], (B, T))
+    k_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    f1 = lambda: ops.prefix_attention(q, k, v, q_pos, k_pos)
+    f2 = jax.jit(lambda: ref.prefix_attention_ref(q, k, v, q_pos, k_pos))
+    us1 = _time(lambda: jax.block_until_ready(f1()))
+    us2 = _time(lambda: jax.block_until_ready(f2()))
+    row("kernel.prefix_attention.pallas_interpret", us1, f"ref_us={us2:.0f}")
+
+    qd = jax.random.normal(key, (B, Hq, D))
+    us = _time(lambda: jax.block_until_ready(
+        ops.decode_gqa(qd, k, v, q_pos[:, 0], k_pos)))
+    row("kernel.decode_gqa.pallas_interpret", us)
+
+    Bt, T2, Di, N = 2, 64, 128, 16
+    x = jax.random.normal(key, (Bt, T2, Di))
+    dt = jax.nn.softplus(jax.random.normal(key, (Bt, T2, Di))) * 0.1
+    Bm = jax.random.normal(key, (Bt, T2, N))
+    Cm = jax.random.normal(key, (Bt, T2, N))
+    A = -jnp.exp(jax.random.normal(key, (Di, N)))
+    us = _time(lambda: jax.block_until_ready(
+        ops.ssm_scan(x, dt, Bm, Cm, A, block_d=64, block_t=32)))
+    row("kernel.ssm_scan.pallas_interpret", us)
+
+    W = 128
+    xw = jax.random.normal(key, (Bt, T2, W))
+    al = -jax.nn.softplus(jax.random.normal(key, (Bt, T2, W)))
+    us = _time(lambda: jax.block_until_ready(
+        ops.rglru_scan(xw, al, block_w=64, block_t=32)))
+    row("kernel.rglru_scan.pallas_interpret", us)
+
+
+def bench_clustering():
+    """Hierarchical clustering cost (paper Fig. 4 substrate)."""
+    from repro.core.clustering import hierarchical_clustering
+    rng = np.random.default_rng(0)
+    for m in (50, 200):
+        x = rng.normal(size=(m, 64))
+        us = _time(lambda: hierarchical_clustering(x, 5, "ward"), iters=2)
+        row(f"core.clustering.ward.m{m}", us)
+
+
+def bench_moe_dispatch():
+    """Sort-based MoE dispatch vs dense oracle."""
+    from repro.models import moe as moe_lib
+    key = jax.random.PRNGKey(0)
+    p = moe_lib.init_moe(key, 128, 256, 8, jnp.float32)
+    x = jax.random.normal(key, (4, 128, 128))
+    f_sort = jax.jit(lambda: moe_lib.apply_moe(x=x, p=p, top_k=2)[0])
+    f_dense = jax.jit(lambda: moe_lib.apply_moe_dense_oracle(x=x, p=p, top_k=2))
+    us1 = _time(lambda: jax.block_until_ready(f_sort()))
+    us2 = _time(lambda: jax.block_until_ready(f_dense()))
+    row("moe.dispatch.sort_capacity", us1, f"dense_oracle_us={us2:.0f}")
+
+
+def bench_subgcache_small():
+    """Reduced Table-2: 24 in-batch queries on the cached tiny backbone."""
+    from benchmarks import table2_overall
+    logs = []
+    t0 = time.perf_counter()
+    rows_ = table2_overall.run(num_queries=24, train_steps=200,
+                               datasets=("scene",),
+                               retrievers=("gretriever",),
+                               log_fn=lambda *a: logs.append(" ".join(map(str, a))))
+    us = (time.perf_counter() - t0) * 1e6
+    r = rows_[0]
+    row("paper.table2.scene.gretriever", us,
+        f"ttft_x={r['speedup']['ttft_x']:.2f};pftt_x={r['speedup']['pftt_x']:.2f};"
+        f"dacc={r['speedup']['acc_delta']:+.1f}")
+    for line in logs:
+        print("#", line)
+
+
+def main() -> None:
+    os.makedirs("results", exist_ok=True)
+    print("name,us_per_call,derived")
+    bench_kernels()
+    bench_clustering()
+    bench_moe_dispatch()
+    bench_subgcache_small()
+    # roofline table (if the dry-run sweep has produced results)
+    if os.path.exists("results/dryrun.json"):
+        import json
+        from benchmarks.roofline import fmt_table
+        with open("results/dryrun.json") as f:
+            results = json.load(f)
+        ok = sum(1 for r in results if r["status"] == "ok")
+        row("dryrun.pairs_ok", 0.0, f"count={ok}/{len(results)}")
+
+
+if __name__ == "__main__":
+    main()

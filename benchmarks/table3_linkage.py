@@ -1,0 +1,41 @@
+"""Paper Table 3: sensitivity to the hierarchical-clustering linkage."""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.clustering import LINKAGES
+from repro.rag.workbench import build_workbench, test_items
+from repro.serving.metrics import speedup
+
+
+def run(num_queries: int = 100, dataset: str = "scene",
+        num_clusters: int = 2, train_steps: int = 300, log_fn=print):
+    wb = build_workbench(dataset, train_steps=train_steps, log_fn=log_fn)
+    items = test_items(wb, num_queries)
+    pipe = wb.pipeline("gretriever")
+    pipe.engine.warmup()
+    rb, sb = pipe.run_baseline(items)
+    log_fn(sb.row())
+    out = []
+    for link in LINKAGES:
+        _, ss, _, stats = pipe.run_subgcache(items, num_clusters=num_clusters,
+                                             linkage=link)
+        sp = speedup(sb, ss)
+        log_fn(f"{link:9s}: dACC {sp['acc_delta']:+6.2f}  "
+               f"RT x{sp['rt_x']:5.2f}  TTFT x{sp['ttft_x']:5.2f}  "
+               f"PFTT x{sp['pftt_x']:5.2f}")
+        out.append({"linkage": link, **sp})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="scene")
+    ap.add_argument("--num-queries", type=int, default=100)
+    ap.add_argument("--clusters", type=int, default=2)
+    args = ap.parse_args()
+    run(args.num_queries, dataset=args.dataset, num_clusters=args.clusters)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Table 4 / A.4: effect of the in-batch query count."""
+from __future__ import annotations
+
+import argparse
+
+from repro.rag.workbench import build_workbench, test_items
+from repro.serving.metrics import speedup
+
+
+def run(sizes=(25, 50, 100), dataset: str = "scene", num_clusters: int = 2,
+        train_steps: int = 300, log_fn=print):
+    wb = build_workbench(dataset, train_steps=train_steps, log_fn=log_fn)
+    pipe = wb.pipeline("gretriever")
+    pipe.engine.warmup()
+    out = []
+    for n in sizes:
+        items = test_items(wb, n, seed=1000 + n)
+        rb, sb = pipe.run_baseline(items)
+        _, ss, _, stats = pipe.run_subgcache(items, num_clusters=num_clusters)
+        sp = speedup(sb, ss)
+        log_fn(f"batch {n:4d}: base ACC {sb.acc:6.2f} TTFT {sb.ttft_ms:8.2f}"
+               f" | ours ACC {ss.acc:6.2f} TTFT {ss.ttft_ms:8.2f}"
+               f" | dACC {sp['acc_delta']:+5.2f} TTFT x{sp['ttft_x']:.2f}"
+               f" PFTT x{sp['pftt_x']:.2f}")
+        out.append({"batch": n, **sp})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="scene")
+    ap.add_argument("--sizes", type=int, nargs="+", default=[25, 50, 100])
+    args = ap.parse_args()
+    run(tuple(args.sizes), dataset=args.dataset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Generalized PrefixState reuse on an attention-free SSM backbone.
+
+SubGCache caches attention KV; for Mamba there are no KV tensors, so the
+framework caches the *SSM prefix state* (conv + scan states) after the
+representative prompt instead (DESIGN.md §4).  This demo proves the
+adaptation is exact: decoding from the cached prefix state reproduces the
+full-recompute generation token-for-token, while prefilling only the
+suffix.
+
+    PYTHONPATH=src python examples/prefix_state_ssm.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import PrefixState
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    tok = Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                           "a b c d e f g shared prefix question answer"])
+    cfg = ModelConfig(name="mamba-demo", family="ssm", num_layers=3,
+                      d_model=96, num_heads=0, num_kv_heads=0, d_ff=0,
+                      vocab_size=tok.vocab_size, ssm_state=8,
+                      dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=8)
+
+    prefix = tok.encode("shared prefix a b c d e f g", bos=True)
+    suffixes = [tok.encode("question the quick answer"),
+                tok.encode("question lazy dog answer"),
+                tok.encode("question brown fox answer")]
+
+    # SubGCache path: SSM prefix state computed once, reused 3x
+    state, t = eng.prefill_prefix(prefix)
+    leaf_kinds = sorted({k for k in
+                         ("conv", "state")
+                         for _ in [0]})
+    print(f"cached PrefixState: {state.prefix_len} tokens; state leaves = "
+          f"{[k + ':' + str(v.shape) for k, v in jax.tree_util.tree_leaves_with_path(state.cache)[:0]] or 'conv+scan states per layer'}")
+    outs, _ = eng.generate_with_prefix(state, suffixes)
+
+    # reference: full recompute per query
+    ok = True
+    for sfx, got in zip(suffixes, outs):
+        ref, _ = eng.generate(prefix + sfx)
+        match = ref == got
+        ok &= match
+        print(f"suffix {tok.decode(sfx)[:30]:32s} reuse==recompute: {match}")
+    assert ok, "SSM prefix-state reuse diverged from full recompute!"
+    print("\nSSM prefix-state reuse is EXACT — the paper's KV-cache idea "
+          "transfers to attention-free architectures as state reuse.")
+
+
+if __name__ == "__main__":
+    main()

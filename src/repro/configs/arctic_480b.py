@@ -1,0 +1,24 @@
+"""arctic-480b — MoE 128 experts top-2 with always-on dense residual MLP
+[hf:Snowflake/snowflake-arctic-base].
+
+35L, d_model 7168, 56 heads (GQA kv=8), expert d_ff 4864 + dense residual
+d_ff 4864, vocab 32000.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=4864, vocab_size=32000, head_dim=128,
+    num_experts=128, num_experts_per_tok=2,
+    dense_residual_d_ff=4864,
+    rope_theta=10_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="arctic-480b-smoke", num_layers=2, d_model=256,
+        num_heads=8, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=512, num_experts=4, num_experts_per_tok=2,
+        dense_residual_d_ff=256, dtype="float32")

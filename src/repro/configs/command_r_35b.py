@@ -1,0 +1,20 @@
+"""command-r-35b — dense GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01].
+
+40L, d_model 8192, 64 heads (GQA kv=8), d_ff 22528, vocab 256000.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b", family="dense",
+    num_layers=40, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22528, vocab_size=256000, head_dim=128,
+    use_qkv_bias=False, rope_theta=8_000_000.0,
+    tie_embeddings=True,        # command-r ties input/output embeddings
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="command-r-35b-smoke", num_layers=2, d_model=256,
+        num_heads=8, num_kv_heads=2, head_dim=32, d_ff=704,
+        vocab_size=512, dtype="float32")

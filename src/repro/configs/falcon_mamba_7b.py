@@ -1,0 +1,20 @@
+"""falcon-mamba-7b — attention-free Mamba-1 SSM [arXiv:2410.05355].
+
+64L, d_model 4096 (d_inner 8192, expand 2), ssm_state 16, vocab 65024.
+O(1) decode state -> runs long_500k natively.  SubGCache's KV reuse is
+adapted as SSM prefix-state reuse (DESIGN.md §4).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    num_layers=64, d_model=4096, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="falcon-mamba-7b-smoke", num_layers=2, d_model=256,
+        vocab_size=512, ssm_state=8, dtype="float32")

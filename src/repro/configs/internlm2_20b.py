@@ -1,0 +1,19 @@
+"""internlm2-20b — dense GQA [arXiv:2403.17297].
+
+48L, d_model 6144, 48 heads (GQA kv=8), d_ff 16384, vocab 92544.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b", family="dense",
+    num_layers=48, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=16384, vocab_size=92544, head_dim=128,
+    rope_theta=1_000_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="internlm2-20b-smoke", num_layers=2, d_model=384,
+        num_heads=6, num_kv_heads=2, head_dim=64, d_ff=768,
+        vocab_size=512, dtype="float32")

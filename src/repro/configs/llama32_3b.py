@@ -1,0 +1,20 @@
+"""llama32-3b — the paper's primary LLM backbone scale (Llama-3.2-3B).
+
+28L, d_model 3072, 24 heads (GQA kv=8), d_ff 8192, vocab 128256.
+Included as the paper's own architecture next to the 10 assigned ones.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama32-3b", family="dense",
+    num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8,
+    d_ff=8192, vocab_size=128256, head_dim=128,
+    rope_theta=500_000.0, tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="llama32-3b-smoke", num_layers=2, d_model=256,
+        num_heads=8, num_kv_heads=2, head_dim=32, d_ff=512,
+        vocab_size=512, dtype="float32")

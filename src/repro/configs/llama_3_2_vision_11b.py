@@ -1,0 +1,26 @@
+"""llama-3.2-vision-11b — VLM with periodic cross-attention image layers
+[hf:meta-llama/Llama-3.2-11B-Vision].
+
+40L decoder, d_model 4096, 32 heads (GQA kv=8), d_ff 14336, vocab 128256;
+every 5th layer (8 total) cross-attends to vision tokens.  The ViT vision
+encoder + projector frontend is stubbed per the assignment carve-out:
+``input_specs`` supplies precomputed patch embeddings [B, 1600, 1280].
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=128256, head_dim=128,
+    cross_attn_period=5, cross_attn_offset=3,
+    num_image_tokens=1600, frontend_dim=1280,
+    rope_theta=500_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="llama-3.2-vision-11b-smoke", num_layers=5, d_model=256,
+        num_heads=8, num_kv_heads=2, head_dim=32, d_ff=512,
+        vocab_size=512, num_image_tokens=16, frontend_dim=64,
+        dtype="float32")

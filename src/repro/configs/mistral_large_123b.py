@@ -1,0 +1,19 @@
+"""mistral-large-123b — dense GQA [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L, d_model 12288, 96 heads (GQA kv=8), d_ff 28672, vocab 32768.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b", family="dense",
+    num_layers=88, d_model=12288, num_heads=96, num_kv_heads=8,
+    d_ff=28672, vocab_size=32768, head_dim=128,
+    rope_theta=1_000_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="mistral-large-123b-smoke", num_layers=2, d_model=384,
+        num_heads=6, num_kv_heads=2, head_dim=64, d_ff=896,
+        vocab_size=512, dtype="float32")

@@ -1,0 +1,25 @@
+"""mixtral-8x22b — MoE 8 experts top-2 with sliding-window attention
+[arXiv:2401.04088].
+
+56L, d_model 6144, 48 heads (GQA kv=8), expert d_ff 16384, vocab 32768.
+SWA window 4096 (per the assignment card) bounds the decode KV cache, so
+this arch runs the long_500k shape natively.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    num_layers=56, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=16384, vocab_size=32768, head_dim=128,
+    num_experts=8, num_experts_per_tok=2,
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="mixtral-8x22b-smoke", num_layers=2, d_model=256,
+        num_heads=8, num_kv_heads=2, head_dim=32, d_ff=512,
+        vocab_size=512, num_experts=4, num_experts_per_tok=2,
+        sliding_window=64, dtype="float32")

@@ -1,0 +1,24 @@
+"""recurrentgemma-2b — hybrid RG-LRU + local attention, 1:2 ratio
+[arXiv:2402.19427].
+
+26L, d_model 2560, 10 heads (MQA kv=1, head_dim 256), d_ff 7680,
+vocab 256000; block pattern (rglru, rglru, local-attn), local window 2048.
+Bounded decode state (recurrent + windowed KV) -> runs long_500k natively.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1,
+    d_ff=7680, vocab_size=256000, head_dim=256,
+    block_pattern=("rglru", "rglru", "attn_local"),
+    local_window=2048, lru_width=2560, ssm_conv=4,
+    rope_theta=10_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="recurrentgemma-2b-smoke", num_layers=3, d_model=256,
+        num_heads=4, num_kv_heads=1, head_dim=64, d_ff=512,
+        vocab_size=512, local_window=32, lru_width=256, dtype="float32")

@@ -1,0 +1,153 @@
+"""Architecture registry + assigned input shapes + input_specs().
+
+``--arch <id>`` resolution for every launcher, plus the four assigned
+input shapes as ShapeDtypeStruct factories (no device allocation — the
+dry-run lowers against these).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "internlm2-20b": "internlm2_20b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "arctic-480b": "arctic_480b",
+    "command-r-35b": "command_r_35b",
+    "mistral-large-123b": "mistral_large_123b",
+    "llama32-3b": "llama32_3b",          # the paper's own backbone scale
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _MODULES if k != "llama32-3b")
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.reduced()
+
+
+def list_archs():
+    return sorted(_MODULES)
+
+
+# ----------------------------------------------------------------------
+# shape applicability (DESIGN.md §4)
+# ----------------------------------------------------------------------
+def shape_supported(cfg: ModelConfig, shape: str,
+                    swa_override: int = 0) -> tuple:
+    """Returns (supported: bool, note: str)."""
+    s = INPUT_SHAPES[shape]
+    if shape == "long_500k":
+        if cfg.supports_long_context:
+            return True, "native sub-quadratic decode state"
+        if swa_override:
+            return True, f"swa-override window={swa_override}"
+        return False, ("pure full attention: 500k decode KV unbounded; "
+                       "run with --swa-override (DESIGN.md §4)")
+    return True, ""
+
+
+def apply_swa_override(cfg: ModelConfig, window: int) -> ModelConfig:
+    """Give a dense arch a sliding-window serving mode (beyond-paper knob
+    that lets every assigned arch lower the long_500k shape)."""
+    return cfg.replace(sliding_window=window)
+
+
+# ----------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable)
+# ----------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                cache_capacity: Optional[int] = None) -> dict:
+    """ShapeDtypeStructs for every model input of (arch x shape).
+
+    train  -> {tokens, labels, mask (+ enc_frames | img_embeds)}
+    prefill-> {tokens, positions, valid (+ enc_frames | img_embeds)}
+    decode -> {token, positions, cache}  (cache capacity = seq_len bounded
+              by window for SWA/local archs; recurrent state for SSM)
+    """
+    s = INPUT_SHAPES[shape]
+    b, t = s.global_batch, s.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    from repro.models.layers import dtype_of
+    dt = dtype_of(cfg.dtype)
+
+    def modality(batch):
+        out = {}
+        if cfg.is_encdec:
+            out["enc_frames"] = _sds((batch, cfg.encoder_seq,
+                                      cfg.frontend_dim), dt)
+        elif cfg.num_image_tokens:
+            out["img_embeds"] = _sds((batch, cfg.num_image_tokens,
+                                      cfg.frontend_dim), dt)
+        return out
+
+    if s.kind == "train":
+        return {"tokens": _sds((b, t), i32),
+                "labels": _sds((b, t), i32),
+                "mask": _sds((b, t), f32), **modality(b)}
+
+    if s.kind == "prefill":
+        return {"tokens": _sds((b, t), i32),
+                "positions": _sds((b, t), i32),
+                "valid": _sds((b, t), jnp.bool_), **modality(b)}
+
+    # decode: one token against a cache of capacity ~ seq_len
+    cap = cache_capacity or t
+    enc_len = cfg.encoder_seq if cfg.is_encdec else cfg.num_image_tokens
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, b, cap, enc_len=enc_len))
+    return {"token": _sds((b, 1), i32),
+            "positions": _sds((b, 1), i32),
+            "cache": cache}
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); D = tokens
+    processed by the step (decode: batch tokens; train: fwd+bwd -> 6ND
+    already accounts for that with N params and D tokens)."""
+    s = INPUT_SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if s.kind == "train":
+        return 6.0 * n_active * s.global_batch * s.seq_len
+    if s.kind == "prefill":
+        return 2.0 * n_active * s.global_batch * s.seq_len
+    return 2.0 * n_active * s.global_batch      # decode: 1 token / seq

@@ -1,0 +1,20 @@
+"""tinyllama-1.1b — dense GQA Llama-2-arch small [arXiv:2401.02385].
+
+22L, d_model 2048, 32 heads (GQA kv=4), d_ff 5632, vocab 32000.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b", family="dense",
+    num_layers=22, d_model=2048, num_heads=32, num_kv_heads=4,
+    d_ff=5632, vocab_size=32000, head_dim=64,
+    rope_theta=10_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    """2L / d_model<=512 smoke variant of the same family."""
+    return CONFIG.replace(
+        name="tinyllama-1.1b-smoke", num_layers=2, d_model=256,
+        num_heads=8, num_kv_heads=2, head_dim=32, d_ff=512,
+        vocab_size=512, dtype="float32")

@@ -1,0 +1,47 @@
+"""Subgraph -> embedding via the pipeline's pretrained GNN (paper §3.2)."""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.subgraph import Subgraph
+from repro.rag.retriever import RetrieverIndex
+
+
+def subgraph_tensors(index: RetrieverIndex, sg: Subgraph):
+    """Extract (node_feats [n,F], senders [e], receivers [e], edge_feats [e,F])
+    with node ids relabelled to 0..n-1.  Self-loops added so isolated nodes
+    still receive messages."""
+    nodes = sorted(sg.nodes)
+    relabel = {n: i for i, n in enumerate(nodes)}
+    node_feats = index.node_vecs[nodes]
+    edge_pos = {e: i for i, e in enumerate(index.graph.edges)}
+    senders, receivers, efeats = [], [], []
+    for e in sorted(sg.edges):
+        s, _, d = e
+        senders.append(relabel[s])
+        receivers.append(relabel[d])
+        ei = edge_pos.get(e)
+        efeats.append(index.edge_vecs[ei] if ei is not None
+                      else np.zeros(index.node_vecs.shape[1], np.float32))
+    for i in range(len(nodes)):              # self loops
+        senders.append(i)
+        receivers.append(i)
+        efeats.append(np.zeros(index.node_vecs.shape[1], np.float32))
+    return (jnp.asarray(node_feats), jnp.asarray(senders, jnp.int32),
+            jnp.asarray(receivers, jnp.int32),
+            jnp.asarray(np.stack(efeats)))
+
+
+def embed_subgraphs(index: RetrieverIndex, subgraphs: Sequence[Subgraph],
+                    gnn_params: dict,
+                    gnn_apply: Callable) -> np.ndarray:
+    """Encode each retrieved subgraph with the pretrained GNN; mean-pool."""
+    out = []
+    for sg in subgraphs:
+        x, snd, rcv, ef = subgraph_tensors(index, sg)
+        h = gnn_apply(gnn_params, x, snd, rcv, ef)
+        out.append(np.asarray(jnp.mean(h, axis=0)))
+    return np.stack(out)

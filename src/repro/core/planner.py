@@ -1,0 +1,76 @@
+"""SubGCache batch planner: cluster -> representative subgraph -> schedule.
+
+Implements the paper's three-step pipeline (§3.1) as a pure planning
+stage, independent of the serving engine that executes it:
+
+  1. cluster in-batch queries on their retrieved-subgraph embeddings,
+  2. union-merge each cluster into a representative subgraph,
+  3. emit per-cluster execution plans (processed sequentially by the
+     engine, which precomputes / reuses / releases the prefix state).
+
+``num_clusters`` is the paper's knob: 1 cluster = maximal reuse,
+m clusters = vanilla graph-based RAG (the planner then degenerates to
+per-query processing, as noted in the paper's Discussion).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.clustering import hierarchical_clustering
+from repro.core.subgraph import Subgraph, merge_subgraphs
+
+
+@dataclasses.dataclass
+class ClusterPlan:
+    cluster_id: int
+    member_indices: List[int]          # indices into the in-batch query list
+    representative: Subgraph
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    clusters: List[ClusterPlan]
+    cluster_processing_time_s: float   # paper Fig. 4 quantity
+    num_queries: int
+
+    @property
+    def reuse_factor(self) -> float:
+        """Average members per cluster (upper bound on prefill reuse)."""
+        return self.num_queries / max(1, len(self.clusters))
+
+
+def plan_batch(subgraphs: Sequence[Subgraph],
+               embeddings: np.ndarray,
+               num_clusters: int,
+               linkage: str = "ward") -> BatchPlan:
+    """Cluster the batch and build representative subgraphs.
+
+    ``embeddings``: [m, dim] GNN subgraph embeddings (paper §3.2 — the same
+    pretrained GNN the RAG pipeline uses for soft prompts).
+    """
+    t0 = time.perf_counter()
+    m = len(subgraphs)
+    assert embeddings.shape[0] == m
+    labels = hierarchical_clustering(embeddings, num_clusters, linkage)
+    clusters: List[ClusterPlan] = []
+    for c in sorted(set(labels.tolist())):
+        idx = [i for i in range(m) if labels[i] == c]
+        rep = merge_subgraphs([subgraphs[i] for i in idx])
+        clusters.append(ClusterPlan(cluster_id=c, member_indices=idx,
+                                    representative=rep))
+    dt = time.perf_counter() - t0
+    return BatchPlan(clusters=clusters, cluster_processing_time_s=dt,
+                     num_queries=m)
+
+
+def plan_singleton(subgraphs: Sequence[Subgraph]) -> BatchPlan:
+    """Degenerate plan: one cluster per query (vanilla graph-based RAG)."""
+    clusters = [ClusterPlan(cluster_id=i, member_indices=[i],
+                            representative=sg)
+                for i, sg in enumerate(subgraphs)]
+    return BatchPlan(clusters=clusters, cluster_processing_time_s=0.0,
+                     num_queries=len(subgraphs))

@@ -1,0 +1,72 @@
+"""Subgraph representation, union-merge, and prompt textualization.
+
+The retrieved unit of graph-based RAG is a subgraph of the textual graph:
+a set of node ids plus a set of (src, rel_text, dst) edges.  SubGCache's
+representative subgraph for a cluster is the union of its members'
+nodes and edges (paper §3.3) — order-normalized so that every member of
+a cluster maps to the *identical* prompt prefix (the cached unit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, Iterable, Sequence, Tuple
+
+Edge = Tuple[int, str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class Subgraph:
+    nodes: FrozenSet[int]
+    edges: FrozenSet[Edge]
+
+    @staticmethod
+    def from_lists(nodes: Iterable[int], edges: Iterable[Edge]) -> "Subgraph":
+        edges = frozenset((int(s), str(r), int(d)) for s, r, d in edges)
+        nodes = frozenset(int(n) for n in nodes) | \
+            frozenset(n for s, _, d in edges for n in (s, d))
+        return Subgraph(nodes=nodes, edges=edges)
+
+    def union(self, other: "Subgraph") -> "Subgraph":
+        return Subgraph(nodes=self.nodes | other.nodes,
+                        edges=self.edges | other.edges)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges)
+
+    def jaccard(self, other: "Subgraph") -> float:
+        """Structural overlap measure (diagnostics / tests)."""
+        a = self.nodes | {("e",) + e for e in self.edges}
+        b = other.nodes | {("e",) + e for e in other.edges}
+        if not a and not b:
+            return 1.0
+        return len(a & b) / max(1, len(a | b))
+
+
+def merge_subgraphs(subgraphs: Sequence[Subgraph]) -> Subgraph:
+    """Representative subgraph = union of all members (paper §3.3)."""
+    assert subgraphs, "cannot merge an empty cluster"
+    out = subgraphs[0]
+    for sg in subgraphs[1:]:
+        out = out.union(sg)
+    return out
+
+
+def textualize(sg: Subgraph, node_text: Sequence[str]) -> str:
+    """Render a subgraph as the prompt prefix (G-Retriever textualization).
+
+    Nodes and edges are emitted in sorted id order so that identical
+    subgraphs always produce byte-identical prompts — a precondition for
+    prefix-cache hits.
+    """
+    lines = ["node_id,node_attr"]
+    for n in sorted(sg.nodes):
+        lines.append(f"{n},{node_text[n]}")
+    lines.append("src,edge_attr,dst")
+    for s, r, d in sorted(sg.edges):
+        lines.append(f"{s},{r},{d}")
+    return "\n".join(lines)

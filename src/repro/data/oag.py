@@ -1,0 +1,114 @@
+"""Synthetic OAG-like academic graph (paper App. A.1 statistics).
+
+Heterogeneous textual graph: papers, authors, organizations and fields,
+with relations {written by, focuses on, cites, has member}.  Queries are
+link prediction: "How is <X> connected to <Y>?" with the relation text as
+the answer — exactly the paper's OAG adaptation.
+
+Community structure (papers grouped into topical communities sharing
+fields/authors) produces the overlapping retrieved subgraphs the in-batch
+setting exploits.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.data.scenegraph import QAItem
+from repro.rag.textgraph import TextGraph
+
+TOPIC_WORDS = {
+    "artificial intelligence": ["neural", "learning", "agents", "reasoning",
+                                "models", "planning"],
+    "computer vision": ["video", "image", "surveillance", "detection",
+                        "segmentation", "recognition"],
+    "databases": ["query", "index", "transactions", "storage", "batch",
+                  "processing"],
+    "human computer interaction": ["interface", "tabletops", "usability",
+                                   "interaction", "design", "users"],
+    "networks": ["routing", "wireless", "protocols", "latency", "traffic",
+                 "topology"],
+    "security": ["encryption", "authentication", "privacy", "attacks",
+                 "detection", "trust"],
+}
+FIRST = ["wei", "maria", "john", "li", "anna", "pedro", "yuki", "omar",
+         "ivan", "sara", "chen", "amir"]
+LAST = ["zhang", "garcia", "smith", "wang", "novak", "tanaka", "khan",
+        "petrov", "rossi", "kim", "mueller", "larsen"]
+ORGS = ["university of castilla la mancha", "aalborg university copenhagen",
+        "queen mary university of london", "nanyang technological university",
+        "eth zurich", "university of tokyo", "mit", "tsinghua university"]
+
+
+def generate_oag(num_papers: int = 700, num_authors: int = 300,
+                 num_queries: int = 3434, seed: int = 1
+                 ) -> Tuple[TextGraph, List[QAItem]]:
+    rng = np.random.default_rng(seed)
+    fields = list(TOPIC_WORDS.keys())
+    node_text: List[str] = []
+
+    paper_ids = []
+    paper_field = []
+    for i in range(num_papers):
+        f = fields[int(rng.integers(0, len(fields)))]
+        words = TOPIC_WORDS[f]
+        n = int(rng.integers(4, 7))
+        title = " ".join(str(rng.choice(words)) for _ in range(n)) + f" {i}"
+        paper_ids.append(len(node_text))
+        paper_field.append(f)
+        node_text.append(f"name: {title}")
+
+    author_ids = []
+    for i in range(num_authors):
+        nm = f"{FIRST[i % len(FIRST)]} {LAST[(i // len(FIRST)) % len(LAST)]} {i}"
+        author_ids.append(len(node_text))
+        node_text.append(f"name: {nm}")
+
+    org_ids = []
+    for o in ORGS:
+        org_ids.append(len(node_text))
+        node_text.append(f"name: {o}")
+
+    field_ids = {}
+    for f in fields:
+        field_ids[f] = len(node_text)
+        node_text.append(f"name: {f}")
+
+    edges = []
+    # community structure: authors specialize in 1-2 fields
+    author_fields = {a: rng.choice(fields, size=int(rng.integers(1, 3)),
+                                   replace=False).tolist()
+                     for a in author_ids}
+    field_authors = {f: [a for a in author_ids if f in author_fields[a]]
+                     for f in fields}
+    for idx, p in enumerate(paper_ids):
+        f = paper_field[idx]
+        edges.append((p, "focuses on", field_ids[f]))
+        pool = field_authors[f] or author_ids
+        k = int(rng.integers(1, 4))
+        for a in rng.choice(pool, size=min(k, len(pool)), replace=False):
+            edges.append((p, "written by", int(a)))
+        # citations within the same field mostly
+        same = [paper_ids[j] for j in range(idx) if paper_field[j] == f]
+        if same and rng.random() < 0.5:
+            edges.append((p, "cites", int(rng.choice(same))))
+    for a in author_ids:
+        if rng.random() < 0.6:
+            edges.append((int(rng.choice(org_ids)), "has member", a))
+
+    graph = TextGraph(node_text=node_text, edges=edges)
+
+    # link-prediction queries over existing edges
+    queries: List[QAItem] = []
+    eidx = rng.permutation(len(edges))
+    i = 0
+    while len(queries) < num_queries:
+        s, r, d = edges[int(eidx[i % len(edges)])]
+        i += 1
+        sname = node_text[s].removeprefix("name: ")
+        dname = node_text[d].removeprefix("name: ")
+        queries.append(QAItem(
+            question=f'How is "{sname}" connected to "{dname}"?',
+            answer=r, anchor_nodes=(s, d)))
+    return graph, queries

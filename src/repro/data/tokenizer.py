@@ -1,0 +1,58 @@
+"""In-repo word-level tokenizer (no external vocab files).
+
+Deterministic: lowercases, splits on whitespace and punctuation, builds
+the vocab from a corpus pass.  IDs 0..3 are reserved specials.  Used by
+the small trained backbone; the full-scale configs only need vocab *sizes*
+(dry-run lowers on ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import re
+from typing import Iterable, List
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<unk>"]
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+|[^\sa-z0-9]")
+
+
+def _words(text: str) -> List[str]:
+    return _TOKEN_RE.findall(text.lower())
+
+
+class Tokenizer:
+    def __init__(self, vocab: List[str]):
+        self.vocab = list(vocab)
+        self._ids = {w: i for i, w in enumerate(self.vocab)}
+
+    @staticmethod
+    def train(corpus: Iterable[str], max_vocab: int = 8192) -> "Tokenizer":
+        counts: dict = {}
+        for text in corpus:
+            for w in _words(text):
+                counts[w] = counts.get(w, 0) + 1
+        ordered = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+        vocab = SPECIALS + [w for w, _ in ordered[: max_vocab - len(SPECIALS)]]
+        return Tokenizer(vocab)
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.vocab)
+
+    def encode(self, text: str, *, bos: bool = False, eos: bool = False) -> List[int]:
+        ids = [self._ids.get(w, UNK) for w in _words(text)]
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids: Iterable[int]) -> str:
+        out = []
+        for i in ids:
+            if i in (PAD, BOS):
+                continue
+            if i == EOS:
+                break
+            out.append(self.vocab[i] if 0 <= i < len(self.vocab) else "<unk>")
+        return " ".join(out)

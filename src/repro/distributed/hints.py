@@ -1,0 +1,65 @@
+"""Activation-sharding hints: mesh-agnostic model code, mesh-aware launchers.
+
+Model code calls ``constrain(x, tag)`` at propagation-hostile points
+(scatter-fed buffers, scan boundaries).  By default it is the identity;
+a launcher installs a hint function (tag, array) -> array that applies
+``with_sharding_constraint`` with the right NamedSharding.  GSPMD's
+propagation gives up at scatters from freshly-created zeros (the MoE
+dispatch buffer) — without the hint it replicates the batch dim and
+multiplies expert-FFN flops by the model-axis size.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable, Optional
+
+_active: contextvars.ContextVar[Optional[Callable]] = \
+    contextvars.ContextVar("repro_shard_hints", default=None)
+
+
+def constrain(x, tag: str):
+    fn = _active.get()
+    return fn(x, tag) if fn is not None else x
+
+
+@contextlib.contextmanager
+def use_hints(fn: Callable):
+    token = _active.set(fn)
+    try:
+        yield
+    finally:
+        _active.reset(token)
+
+
+def make_batch_hint(mesh, cfg=None, *, seq_shard_boundary: bool = False):
+    """Standard hint: leading dim = batch over the data axes; MoE
+    dispatch buffers additionally shard the expert dim over 'model'
+    when expert-parallel.
+
+    ``seq_shard_boundary``: Megatron-sequence-parallel style — layer
+    boundary activations [B, T, D] additionally shard T over 'model'
+    (bounds remat-saved bytes; perf-iteration knob)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import sharding as S
+
+    b_ax = S.batch_axes(mesh)
+    bspec = b_ax[0] if len(b_ax) == 1 else tuple(b_ax)
+
+    def hint(x, tag):
+        ndim = x.ndim
+        if tag == "layer_boundary":
+            if not seq_shard_boundary or ndim != 3:
+                return x
+            raw = (bspec, "model", None)
+        elif tag == "moe_expert_in" and cfg is not None \
+                and S._moe_expert_parallel(cfg, mesh):
+            raw = (bspec, "model") + (None,) * (ndim - 2)
+        else:
+            raw = (bspec,) + (None,) * (ndim - 1)
+        spec = S.sanitize(raw, tuple(x.shape), mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return hint

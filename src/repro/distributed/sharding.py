@@ -1,0 +1,225 @@
+"""Partition rules: param/cache pytrees -> PartitionSpecs.
+
+Naming-based rules (leaf names are unique per role across the model zoo).
+Tensor-parallel ('model' axis) shards:
+  * attention q/o on heads, k/v on kv-heads,
+  * FFN on d_ff,
+  * MoE on the expert dim when num_experts >= mesh model size
+    (arctic 128e), else inside the expert on d_ff (mixtral 8e),
+  * Mamba / RG-LRU on the inner channel dim,
+  * embeddings / lm head on vocab.
+Training adds a ZeRO-style 'data' axis on the complementary dim so
+params + AdamW moments shard over the full mesh.
+Batch dims shard over ('pod','data') on the multi-pod mesh.
+
+Scanned layer stacks carry a leading group dim -> a leading None is
+prepended automatically (detected from leaf rank vs rule rank).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize(spec: tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not divide the dim (pjit input
+    shardings require divisibility; e.g. batch=1 on long_500k, or the
+    256206-token seamless vocab on a 16-way model axis)."""
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+            continue
+        # try a prefix of a composite axis tuple
+        if isinstance(entry, (tuple, list)):
+            kept = []
+            for a in entry:
+                if dim % (_axis_size(mesh, tuple(kept + [a]))) == 0:
+                    kept.append(a)
+            out.append(tuple(kept) if kept else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# perf-iteration override: None (auto) | "heads" | "seq"
+KV_SHARD_OVERRIDE = None
+
+
+def _moe_expert_parallel(cfg: ModelConfig, mesh: Mesh) -> bool:
+    return cfg.num_experts >= mesh.shape["model"]
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, mesh: Mesh, zero: bool = False) -> P:
+    """PartitionSpec for one param leaf addressed by its flattened path."""
+    name = path[-1]
+    dp = "data" if zero else None
+    ndim = len(shape)
+
+    def base() -> Optional[tuple]:
+        if name in ("ln1", "ln2", "ln_cross", "final_norm", "norm",
+                    "b_a", "b_i", "lambda", "dt_bias", "D",
+                    "bq", "bk", "bv", "b"):
+            return (None,) * ndim_base
+        if name == "embed":
+            return ("model", dp)
+        if name == "lm_head":
+            return (dp, "model")
+        if name == "frontend_proj":
+            return (None, None)
+        # attention
+        if name in ("wq", "wk", "wv"):
+            return (dp, "model")
+        if name == "wo":
+            return ("model", dp)
+        # mlp vs moe (same names, different rank)
+        if name in ("w_gate", "w_up"):
+            if ndim_base == 3:          # [E, D, F]
+                if _moe_expert_parallel(cfg, mesh):
+                    return ("model", dp, None)
+                return (None, dp, "model")
+            return (dp, "model")
+        if name == "w_down":
+            if ndim_base == 3:          # [E, F, D]
+                if _moe_expert_parallel(cfg, mesh):
+                    return ("model", None, dp)
+                return (None, "model", dp)
+            return ("model", dp)
+        if name == "router":
+            return (None, None)
+        # mamba
+        if name == "in_proj":
+            return (dp, "model")
+        if name == "x_proj":
+            return ("model", dp)
+        if name == "dt_proj":
+            return (dp, "model")
+        if name == "A_log":
+            return ("model", None)
+        if name == "out_proj":
+            return ("model", dp)
+        if name == "w":                 # depthwise conv [W, C]
+            return (None, "model")
+        # rglru
+        if name in ("in_x", "in_gate"):
+            return (dp, "model")
+        if name in ("w_a", "w_i"):
+            return (dp, "model")
+        if name == "out":
+            return ("model", dp)
+        return (None,) * ndim_base
+
+    # figure out the base rank by stripping a possible leading group dim:
+    # rules are written for the unstacked layer shapes.
+    ndim_base = ndim
+    spec = base()
+    if spec is not None and len(spec) < ndim:
+        spec = (None,) * (ndim - len(spec)) + tuple(spec)
+    if spec is None or len(spec) != ndim:
+        spec = (None,) * ndim
+    return sanitize(spec, shape, mesh)
+
+
+def param_pspecs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                 zero: bool = False) -> Any:
+    """Map a params (or eval_shape) pytree to PartitionSpecs."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    treedef = jax.tree_util.tree_structure(params_shape)
+    specs = []
+    for kp, leaf in flat:
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in kp)
+        specs.append(param_spec(path, tuple(leaf.shape), cfg, mesh, zero))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, mesh: Mesh) -> P:
+    """PartitionSpec for a KV/state cache leaf.
+
+    KV: [.., B, C, Hkv, D] (seq-major) — batch on data axes; heads on
+    'model' when kv_heads >= model shards, else sequence (flash-decode
+    style; GSPMD inserts the partial-softmax collectives).
+    """
+    name = path[-1]
+    b_ax = batch_axes(mesh)
+    bspec = b_ax if len(b_ax) == 1 else (b_ax,)
+    nm = mesh.shape["model"]
+
+    def base():
+        if name in ("k", "v", "cross_k", "cross_v"):
+            mode = KV_SHARD_OVERRIDE
+            if mode is None:
+                mode = ("heads" if cfg.num_kv_heads
+                        and cfg.num_kv_heads >= nm else "seq")
+            if mode == "heads":
+                return (*bspec, None, "model", None)   # [B, C, H, D]
+            return (*bspec, "model", None, None)       # seq-sharded
+        if name == "pos":
+            return (*bspec, None)
+        if name == "conv":               # [B, W-1, C]
+            return (*bspec, None, "model")
+        if name == "state":
+            if len(shape) >= 3 and shape[-1] == cfg.ssm_state:
+                return (*bspec, "model", None)   # [B, Di, N]
+            return (*bspec, "model")             # [B, W]
+        return None
+
+    spec = base()
+    ndim = len(shape)
+    if spec is not None and len(spec) < ndim:
+        spec = (None,) * (ndim - len(spec)) + tuple(spec)
+    if spec is None or len(spec) != ndim:
+        spec = (None,) * ndim
+    return sanitize(spec, shape, mesh)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh) -> Any:
+    flat = jax.tree_util.tree_flatten_with_path(cache_shape)[0]
+    treedef = jax.tree_util.tree_structure(cache_shape)
+    specs = []
+    for kp, leaf in flat:
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in kp)
+        specs.append(cache_spec(path, tuple(leaf.shape), cfg, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Shard every batch leaf's leading dim over the data axes."""
+    b_ax = batch_axes(mesh)
+    bspec = b_ax if len(b_ax) == 1 else (b_ax,)
+
+    def spec(leaf):
+        raw = (*bspec, *(None,) * (len(leaf.shape) - 1))
+        return sanitize(raw, tuple(leaf.shape), mesh)
+
+    return jax.tree.map(spec, batch_shape)
+
+
+def named(mesh: Mesh, pspecs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,49 @@
+"""GAT encoder with edge features — GRAG's graph encoder (paper App. A.2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.gnn.graph_transformer import _segment_softmax
+from repro.models.layers import dense_init
+
+
+def init_gat(key, in_dim: int, hidden: int, num_layers: int, num_heads: int,
+             dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, num_layers)
+    layers = []
+    for i in range(num_layers):
+        k = jax.random.split(keys[i], 5)
+        d_in = in_dim if i == 0 else hidden
+        dh = hidden // num_heads
+        layers.append({
+            "w": dense_init(k[0], d_in, hidden, dtype),
+            "we": dense_init(k[1], in_dim, hidden, dtype),
+            "a_src": (jax.random.normal(k[2], (num_heads, dh)) * 0.1),
+            "a_dst": (jax.random.normal(k[3], (num_heads, dh)) * 0.1),
+            "a_edge": (jax.random.normal(k[4], (num_heads, dh)) * 0.1),
+            "skip": dense_init(jax.random.fold_in(k[0], 7), d_in, hidden, dtype),
+        })
+    return {"layers": layers, "num_heads": num_heads}
+
+
+def apply_gat(params: dict, x: jnp.ndarray, senders: jnp.ndarray,
+              receivers: jnp.ndarray, edge_feat: jnp.ndarray) -> jnp.ndarray:
+    h = params["num_heads"]
+    n = x.shape[0]
+    for layer in params["layers"]:
+        hidden = layer["w"].shape[1]
+        dh = hidden // h
+        z = (x @ layer["w"]).reshape(n, h, dh)
+        e = (edge_feat @ layer["we"]).reshape(-1, h, dh)
+        logit = (jnp.sum(z[senders] * layer["a_src"], -1)
+                 + jnp.sum(z[receivers] * layer["a_dst"], -1)
+                 + jnp.sum(e * layer["a_edge"], -1))          # [E, h]
+        logit = jax.nn.leaky_relu(logit, 0.2)
+        alpha = jnp.stack(
+            [_segment_softmax(logit[:, j], receivers, n) for j in range(h)],
+            axis=1)
+        msg = alpha[..., None] * (z[senders] + e)
+        agg = jax.ops.segment_sum(msg.reshape(-1, hidden), receivers, n)
+        x = jax.nn.elu(agg + x @ layer["skip"])
+    return x

@@ -1,0 +1,70 @@
+"""Graph Transformer encoder (UniMP-style) — G-Retriever's graph encoder.
+
+Edge-list message passing with per-head attention over incoming edges
+(segment-softmax), supporting edge features.  Pure JAX; graphs are small
+(retrieved subgraphs), so this runs on host-side CPU during serving and
+its pooled output is both the soft prompt input and SubGCache's
+subgraph embedding (paper §3.2: same pretrained GNN for both roles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_graph_transformer(key, in_dim: int, hidden: int, num_layers: int,
+                           num_heads: int, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, num_layers + 1)
+    layers = []
+    for i in range(num_layers):
+        k = jax.random.split(keys[i], 6)
+        d_in = in_dim if i == 0 else hidden
+        layers.append({
+            "wq": dense_init(k[0], d_in, hidden, dtype),
+            "wk": dense_init(k[1], d_in, hidden, dtype),
+            "wv": dense_init(k[2], d_in, hidden, dtype),
+            "we": dense_init(k[3], in_dim, hidden, dtype),     # edge feats
+            "wo": dense_init(k[4], hidden, hidden, dtype),
+            "skip": dense_init(k[5], d_in, hidden, dtype),
+        })
+    return {"layers": layers, "num_heads": num_heads}
+
+
+def _segment_softmax(logits, segments, num_segments):
+    seg_max = jax.ops.segment_max(logits, segments, num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    ex = jnp.exp(logits - seg_max[segments])
+    seg_sum = jax.ops.segment_sum(ex, segments, num_segments)
+    return ex / (seg_sum[segments] + 1e-9)
+
+
+def apply_graph_transformer(params: dict, x: jnp.ndarray,
+                            senders: jnp.ndarray, receivers: jnp.ndarray,
+                            edge_feat: jnp.ndarray) -> jnp.ndarray:
+    """x: [N, F]; senders/receivers: [E]; edge_feat: [E, F] -> [N, H]."""
+    h = params["num_heads"]
+    n = x.shape[0]
+    for layer in params["layers"]:
+        hidden = layer["wq"].shape[1]
+        dh = hidden // h
+        q = (x @ layer["wq"]).reshape(n, h, dh)
+        k = (x @ layer["wk"]).reshape(n, h, dh)
+        v = (x @ layer["wv"]).reshape(n, h, dh)
+        e = (edge_feat @ layer["we"]).reshape(-1, h, dh)
+
+        k_e = k[senders] + e                                  # [E, h, dh]
+        v_e = v[senders] + e
+        logits = jnp.sum(q[receivers] * k_e, axis=-1) / (dh ** 0.5)  # [E, h]
+        alpha = jnp.stack(
+            [_segment_softmax(logits[:, j], receivers, n) for j in range(h)],
+            axis=1)                                           # [E, h]
+        msg = alpha[..., None] * v_e                          # [E, h, dh]
+        agg = jax.ops.segment_sum(msg.reshape(-1, hidden), receivers, n)
+        x = jax.nn.relu(agg @ layer["wo"] + x @ layer["skip"])
+    return x
+
+
+def mean_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=0)

@@ -1,0 +1,31 @@
+"""Soft-prompt projector: pooled GNN embedding -> LLM soft tokens.
+
+G-Retriever/GRAG condition the frozen LLM on the retrieved subgraph both
+via the textualized prompt and a projected graph embedding prepended as
+soft token(s); this is the trained component (the LLM stays frozen).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_projector(key, gnn_dim: int, d_model: int, num_soft_tokens: int = 1,
+                   dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    hidden = max(gnn_dim, d_model)
+    return {
+        "w1": dense_init(k1, gnn_dim, hidden, dtype),
+        "w2": dense_init(k2, hidden, num_soft_tokens * d_model, dtype),
+        "num_soft_tokens": num_soft_tokens,
+        "d_model": d_model,
+    }
+
+
+def apply_projector(p: dict, graph_embedding: jnp.ndarray) -> jnp.ndarray:
+    """[gnn_dim] -> [num_soft_tokens, d_model]."""
+    h = jax.nn.relu(graph_embedding @ p["w1"])
+    out = h @ p["w2"]
+    return out.reshape(int(p["num_soft_tokens"]), int(p["d_model"]))

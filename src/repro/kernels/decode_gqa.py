@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: single-token GQA decode attention.
+
+decode_32k / long_500k hot spot: one query token against a long KV cache
+is purely memory-bound (arithmetic intensity ~ 1 FLOP/byte), so the win
+is reading each KV block exactly once.  GQA lets the whole q-head *group*
+share one KV stream: the q block is [group, d] (all q heads of one kv
+head), giving an MXU-shaped [group, block_k] score tile.
+
+Grid (B, Hkv, nk), KV minor; online softmax scratch persists over nk.
+Ring-buffer caches just work: masking is positional (slot position array),
+so slot order is irrelevant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, window: int, nk: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [g, d]
+    k = k_ref[0, 0].astype(jnp.float32)                    # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    qp = qpos_ref[0, 0]                                    # scalar int32
+    kp = kpos_ref[0]                                       # [bk]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[:, 0] = alpha * l_ref[:, 0] + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(j == nk - 1)
+    def _done():
+        l = l_ref[:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_gqa(q, k, v, q_pos, k_pos, *, window: int = 0, block_k: int = 128,
+               interpret: bool = True):
+    """q: [B, Hq, D]; k, v: [B, Hkv, S, D]; q_pos: [B]; k_pos: [B, S]."""
+    b, hq, d = q.shape
+    hkv, s_len = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = d ** -0.5
+
+    bk = min(block_k, s_len)
+    s_p = ((s_len + bk - 1) // bk) * bk
+    if s_p != s_len:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, s_p - s_len)), constant_values=-1)
+    nk = s_p // bk
+
+    qg = q.reshape(b, hkv, group, d)
+    qp2 = q_pos.reshape(b, 1).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, nk=nk, scale=scale),
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h, j: (b_, 0)),               # q_pos
+            pl.BlockSpec((1, bk), lambda b_, h, j: (b_, j)),              # k_pos
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp2, k_pos, qg, k, v)
+    return out.reshape(b, hq, d)

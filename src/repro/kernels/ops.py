@@ -1,0 +1,39 @@
+"""Public jit'd wrappers for every Pallas kernel.
+
+``interpret`` defaults to True off-TPU (CPU validation per the repo's
+target/runtime split) and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import decode_gqa as _decode
+from repro.kernels import prefix_attention as _prefix
+from repro.kernels import rglru_scan as _rglru
+from repro.kernels import ssm_scan as _ssm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def prefix_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                     block_q=128, block_k=128):
+    return _prefix.prefix_attention(
+        q, k, v, q_pos, k_pos, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+def decode_gqa(q, k, v, q_pos, k_pos, *, window=0, block_k=128):
+    return _decode.decode_gqa(q, k, v, q_pos, k_pos, window=window,
+                              block_k=block_k, interpret=_interpret())
+
+
+def ssm_scan(x, dt, B, C, A, h0=None, *, block_d=256, block_t=256):
+    return _ssm.ssm_scan(x, dt, B, C, A, h0, block_d=block_d,
+                         block_t=block_t, interpret=_interpret())
+
+
+def rglru_scan(x, a_log, h0=None, *, block_w=512, block_t=256):
+    return _rglru.rglru_scan(x, a_log, h0, block_w=block_w, block_t=block_t,
+                             interpret=_interpret())

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: masked flash attention over a (prefix-)KV cache.
+
+This is the compute hot-spot of SubGCache: after the representative
+subgraph's KV prefix is cached, each member query's suffix tokens attend
+over [cached prefix ++ fresh suffix KV].  Masking is purely positional
+(slot position arrays), which also covers plain causal prefill and
+sliding-window attention with the same kernel.
+
+Tiling: grid (B, Hq, nq, nk) with the KV dimension minor, streaming KV
+HBM->VMEM in (block_k, head_dim) tiles; online-softmax state (m, l, acc)
+lives in VMEM scratch and persists across the nk loop.  MXU-relevant dims
+(block_q, block_k, head_dim) are 128-multiples for the TPU target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, causal: bool, window: int, nk: int,
+            scale: float):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    qp = qpos_ref[0]                                     # [bq] int32
+    kp = kpos_ref[0]                                     # [bk] int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = kp[None, :] >= 0
+    if causal:
+        mask = mask & (kp[None, :] <= qp[:, None])
+    if window:
+        mask = mask & (qp[:, None] - kp[None, :] < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                                 # [bq]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)                          # kill exp(NEG_INF-m)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(j == nk - 1)
+    def _done():
+        l = l_ref[:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def prefix_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                     window: int = 0, block_q: int = 128, block_k: int = 128,
+                     interpret: bool = True):
+    """q: [B,Hq,Tq,D]; k,v: [B,Hkv,S,D]; q_pos: [B,Tq]; k_pos: [B,S]."""
+    b, hq, tq, d = q.shape
+    hkv, s_len = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = d ** -0.5
+
+    bq = min(block_q, tq)
+    bk = min(block_k, s_len)
+    # pad to block multiples; padded kv slots get pos -1 (masked),
+    # padded q rows are sliced off below.
+    tq_p = ((tq + bq - 1) // bq) * bq
+    s_p = ((s_len + bk - 1) // bk) * bk
+    if tq_p != tq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, tq_p - tq), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, tq_p - tq)), constant_values=0)
+    if s_p != s_len:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, s_p - s_len)), constant_values=-1)
+
+    nq, nk = tq_p // bq, s_p // bk
+    grid = (b, hq, nq, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, window=window, nk=nk,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b_, h, i, j: (b_, i)),          # q_pos
+            pl.BlockSpec((1, bk), lambda b_, h, i, j: (b_, j)),          # k_pos
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),     # acc
+            pltpu.VMEM((bq, 1), jnp.float32),     # m
+            pltpu.VMEM((bq, 1), jnp.float32),     # l
+        ],
+        interpret=interpret,
+    )(q_pos, k_pos, q, k, v)
+    return out[:, :, :tq, :]

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the single source of truth for kernel semantics; the kernel tests
+sweep shapes/dtypes and assert allclose against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefix_attention_ref(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                         window: int = 0):
+    """Masked GQA flash-attention oracle.
+
+    q: [B, Hq, Tq, D]; k, v: [B, Hkv, S, D]; q_pos: [B, Tq]; k_pos: [B, S]
+    (k_pos == -1 marks invalid slots).  Covers full prefill, SubGCache
+    suffix prefill over a cached prefix, and sliding-window attention.
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, tq, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgtd,bhsd->bhgts", qg, k.astype(jnp.float32))
+    scores = scores * (d ** -0.5)
+    mask = k_pos[:, None, :] >= 0
+    if causal:
+        mask = mask & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    # fully-masked query rows (padding) -> zero output, not NaN
+    any_valid = jnp.any(mask, axis=-1)                         # [B, Tq]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, hq, tq, d)
+    out = jnp.where(any_valid[:, None, :, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def decode_gqa_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
+    """Single-token GQA decode oracle.
+
+    q: [B, Hq, D]; k, v: [B, Hkv, S, D]; q_pos: [B]; k_pos: [B, S].
+    """
+    out = prefix_attention_ref(q[:, :, None, :], k, v, q_pos[:, None], k_pos,
+                               causal=True, window=window)
+    return out[:, :, 0, :]
+
+
+def ssm_scan_ref(x, dt, B, C, A, h0=None):
+    """Mamba selective-scan oracle.
+
+    x, dt: [Bt, T, Di]; B, C: [Bt, T, N]; A: [Di, N]; h0: [Bt, Di, N] or None.
+    Returns (y [Bt, T, Di], h_final [Bt, Di, N]); float32 math.
+    """
+    bt, t, di = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bt, di, n), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * A)
+        db = dt_t[..., None] * b_t[:, None, :]
+        h = da * h + db * x_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def rglru_scan_ref(x, a_log, h0=None):
+    """RG-LRU recurrence oracle.
+
+    x (gated input), a_log (log decay, <= 0): [B, T, W]; h0: [B, W] or None.
+    h_t = exp(a_log_t) h_{t-1} + sqrt(1 - exp(2 a_log_t)) x_t
+    Returns (y [B, T, W] = all h_t, h_final [B, W]).
+    """
+    b, t, w = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    def step(h, inp):
+        x_t, al_t = inp
+        a = jnp.exp(al_t)
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x_t
+        return h, h
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(a_log, 1, 0).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_final

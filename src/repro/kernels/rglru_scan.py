@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence (Griffin / RecurrentGemma).
+
+Same blocking strategy as ``ssm_scan`` but the state is diagonal per
+channel ([block_w] vector instead of [block_d, N]):
+
+    h_t = exp(a_log_t) * h_{t-1} + sqrt(1 - exp(2 a_log_t)) * x_t
+
+Channels tile the width grid dim; time chunks stream with the state in
+VMEM scratch across the sequential minor grid dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, h0_ref, y_ref, hT_ref, h_ref, *, nt: int, bt: int):
+    t_idx = pl.program_id(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)                      # [bt, bw]
+    al = a_ref[0].astype(jnp.float32)                     # [bt, bw]
+
+    def step(t, carry):
+        h, ybuf = carry                                    # h: [1, bw]
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)     # [1, bw]
+        a_t = jnp.exp(jax.lax.dynamic_slice_in_dim(al, t, 1, 0))
+        h = a_t * h + jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 1e-12)) * x_t
+        ybuf = jax.lax.dynamic_update_slice_in_dim(ybuf, h, t, 0)
+        return h, ybuf
+
+    ybuf0 = jnp.zeros((bt, x.shape[1]), jnp.float32)
+    h, ybuf = jax.lax.fori_loop(0, bt, step, (h_ref[...], ybuf0))
+    h_ref[...] = h
+    y_ref[0] = ybuf.astype(y_ref.dtype)
+
+    @pl.when(t_idx == nt - 1)
+    def _done():
+        hT_ref[...] = h_ref[...].astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "block_t", "interpret"))
+def rglru_scan(x, a_log, h0=None, *, block_w: int = 512, block_t: int = 256,
+               interpret: bool = True):
+    """x, a_log: [B, T, W]; h0: [B, W].  Returns (y [B,T,W] f32, hT [B,W] f32)."""
+    b, t_len, w = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    bw = min(block_w, w)
+    btk = min(block_t, t_len)
+    assert w % bw == 0, (w, bw)
+    t_p = ((t_len + btk - 1) // btk) * btk
+    if t_p != t_len:
+        pad = ((0, 0), (0, t_p - t_len), (0, 0))
+        x = jnp.pad(x, pad)
+        # padded steps: a_log = big negative -> a ~ 0... that would reset h!
+        # use a_log = 0 -> a = 1, sqrt(1-1) = 0 -> state unchanged.
+        a_log = jnp.pad(a_log, pad, constant_values=0.0)
+    nw, nt = w // bw, t_p // btk
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_kernel, nt=nt, bt=btk),
+        grid=(b, nw, nt),
+        in_specs=[
+            pl.BlockSpec((1, btk, bw), lambda b_, w_, t_: (b_, t_, w_)),
+            pl.BlockSpec((1, btk, bw), lambda b_, w_, t_: (b_, t_, w_)),
+            pl.BlockSpec((1, bw), lambda b_, w_, t_: (b_, w_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, btk, bw), lambda b_, w_, t_: (b_, t_, w_)),
+            pl.BlockSpec((1, bw), lambda b_, w_, t_: (b_, w_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t_p, w), jnp.float32),
+            jax.ShapeDtypeStruct((b, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(x, a_log, h0)
+    return y[:, :t_len], h_final

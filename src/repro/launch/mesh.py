@@ -1,0 +1,28 @@
+"""Production mesh builders (TPU v5e target).
+
+Functions, not module-level constants — importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data, model);
+multi-pod: 2 pods x 256 = 512 chips with a leading pure-data-parallel
+"pod" axis (gradient all-reduce crosses the DCN pod boundary once per
+step; everything else stays on intra-pod ICI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the same axis names (tests / CPU smoke)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link

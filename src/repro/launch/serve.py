@@ -1,0 +1,55 @@
+"""Serving launcher: in-batch graph-RAG with SubGCache.
+
+  PYTHONPATH=src python -m repro.launch.serve --dataset scene \
+      --num-queries 50 --clusters 2 [--no-subgcache]
+
+Full-scale serve_step lowering for an assigned arch:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch command-r-35b --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="scene", choices=["scene", "oag"])
+    ap.add_argument("--num-queries", type=int, default=50)
+    ap.add_argument("--clusters", type=int, default=2)
+    ap.add_argument("--linkage", default="ward")
+    ap.add_argument("--retriever", default="gretriever",
+                    choices=["gretriever", "grag"])
+    ap.add_argument("--no-subgcache", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        assert args.arch, "--dry-run requires --arch"
+        import os
+        import subprocess
+        import sys
+        raise SystemExit(subprocess.call(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             args.arch, "--shape", args.shape], env=os.environ))
+
+    from repro.rag.workbench import build_workbench, test_items
+    wb = build_workbench(args.dataset)
+    items = test_items(wb, args.num_queries)
+    pipe = wb.pipeline(args.retriever)
+    pipe.engine.warmup()
+    if args.no_subgcache:
+        _, summary = pipe.run_baseline(items)
+        print(summary.row())
+    else:
+        _, summary, plan, stats = pipe.run_subgcache(
+            items, num_clusters=args.clusters, linkage=args.linkage)
+        print(summary.row())
+        print(f"clusters {[len(c.member_indices) for c in plan.clusters]}  "
+              f"prefill savings x{stats.prefill_savings:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Step functions lowered by the dry-run and launchers.
+
+train_step  — fwd + bwd + AdamW update (remat per layer group).
+prefill     — full-prompt prefill writing a fresh cache; returns
+              last-token logits + cache (serve_step for prefill shapes).
+decode      — ONE new token against a KV/state cache (serve_step for
+              decode shapes); ring buffer when capacity < positions.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.AdamWConfig,
+                    compute_shardings=None,
+                    storage_shardings=None) -> Callable:
+    """ZeRO gather-at-use: params live 2D-sharded ('data' x 'model', with
+    AdamW moments), are all-gathered to the tensor-parallel compute layout
+    at step entry, and gradients reduce-scatter back to the storage layout
+    before the (fully sharded) optimizer update."""
+    def train_step(params, opt_state, batch):
+        params_c = params
+        if compute_shardings is not None:
+            params_c = jax.lax.with_sharding_constraint(params,
+                                                        compute_shardings)
+        loss, grads = jax.value_and_grad(
+            lambda p: M.train_loss(p, cfg, batch))(params_c)
+        if storage_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads,
+                                                     storage_shardings)
+        params, opt_state, metrics = opt.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, capacity: int) -> Callable:
+    enc_len = cfg.encoder_seq if cfg.is_encdec else cfg.num_image_tokens
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = M.embed_tokens(params, tokens)
+        enc = None
+        if cfg.is_encdec:
+            enc = M.run_encoder(params, cfg, batch["enc_frames"])
+        elif cfg.num_image_tokens:
+            enc = M.project_frontend(params, batch["img_embeds"])
+        cache = M.init_cache(cfg, b, capacity, enc_len=enc_len)
+        hidden, cache, _ = M.forward(params, cfg, x, batch["positions"],
+                                     cache=cache, enc=enc,
+                                     valid=batch["valid"])
+        last = hidden[:, -1]
+        logits = M.unembed(params, cfg, last[:, None])[:, 0]
+        return logits, cache
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode(params, batch):
+        token, positions, cache = batch["token"], batch["positions"], \
+            batch["cache"]
+        x = M.embed_tokens(params, token)
+        hidden, cache, _ = M.forward(params, cfg, x, positions, cache=cache,
+                                     ring=True)
+        logits = M.unembed(params, cfg, hidden)[:, 0]
+        return logits, cache
+    return decode
+
+
+def make_suffix_prefill_step(cfg: ModelConfig) -> Callable:
+    """The SubGCache fast path at production scale: member-suffix prefill
+    against a shared prefix already resident in the cache."""
+    def suffix_prefill(params, batch):
+        x = M.embed_tokens(params, batch["tokens"])
+        hidden, cache, _ = M.forward(params, cfg, x, batch["positions"],
+                                     cache=batch["cache"],
+                                     valid=batch["valid"])
+        logits = M.unembed(params, cfg, hidden[:, -1][:, None])[:, 0]
+        return logits, cache
+    return suffix_prefill

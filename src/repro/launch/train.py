@@ -1,0 +1,46 @@
+"""Training launcher.
+
+Host mode (default): trains the paper-small backbone on a RAG dataset
+(this is the CPU-runnable path used by the benchmarks).
+
+Mesh mode (--dry-run): lowers the full-scale train step for --arch on the
+production mesh and prints the memory/cost analysis (no allocation).
+
+  PYTHONPATH=src python -m repro.launch.train --dataset scene --steps 300
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-20b --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="scene", choices=["scene", "oag"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        assert args.arch, "--dry-run requires --arch"
+        # dryrun module must own process start (device-count env var)
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", "train_4k"]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd, env=os.environ))
+
+    from repro.rag.workbench import build_workbench
+    wb = build_workbench(args.dataset, train_steps=args.steps,
+                         force_retrain=True)
+    print(f"trained + checkpointed backbone for {args.dataset} "
+          f"({wb.cfg.param_count()/1e6:.1f}M params)")
+
+
+if __name__ == "__main__":
+    main()

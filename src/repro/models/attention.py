@@ -1,0 +1,262 @@
+"""Attention: GQA self-attention with a unified fixed-capacity KV cache.
+
+Cache semantics (one mechanism covers full attention, sliding-window,
+local attention, prefix reuse and ring-buffer long-context decode):
+
+  cache = {"k": [B, Hkv, C, D], "v": [B, Hkv, C, D], "pos": [B, C]}
+
+``pos`` holds the absolute token position stored in each slot, ``-1``
+meaning empty.  Keys are RoPE-rotated *at write time* with their absolute
+position, so slot order inside the buffer is irrelevant — masking is done
+purely on position values.  This makes SubGCache prefix reuse, sliding
+windows and wrap-around decode all the same code path.
+
+All masking is positional:
+  valid(k)   = k_pos >= 0
+  causal     = k_pos <= q_pos
+  window(w)  = q_pos - k_pos < w
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, linear
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype, use_bias: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype),
+    }
+    if use_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def init_kv_cache(batch: int, num_kv_heads: int, capacity: int, head_dim: int,
+                  dtype) -> dict:
+    """KV cache in write-friendly [B, C, Hkv, D] layout.
+
+    Perf iteration (EXPERIMENTS.md §Perf, decode pair): projected K/V
+    arrive as [B, T, H*D]; storing the cache seq-major removes the
+    transpose+copy pair that XLA otherwise inserts on every cache update
+    (the dominant decode byte traffic after the irreducible KV read)."""
+    return {
+        "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
+# core attend
+# ----------------------------------------------------------------------
+ATTEND_CHUNK = 512       # q-block size for the chunked XLA path
+ATTEND_CHUNK_MIN_T = 2048  # chunk only long sequences
+UNROLL_CHUNKS = False  # dry-run sets True: exact HLO flop accounting
+SCORES_BF16 = False    # store attention probs bf16 (perf-iteration knob;
+                       # softmax math stays f32)
+
+
+def _attend_block(qg, k, v, q_pos, k_pos, *, causal, window, scale):
+    """qg: [B, Hkv, G, Tq, D]; k, v: [B, Tk, Hkv, D] (seq-major cache)."""
+    scores = jnp.einsum("bhgtd,bshd->bhgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = k_pos[:, None, :] >= 0                              # [B, 1, Tk]
+    if causal:
+        mask = mask & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    ex = jnp.exp(scores - m)
+    if SCORES_BF16:
+        ex = ex.astype(jnp.bfloat16)
+    denom = jnp.sum(ex.astype(jnp.float32), axis=-1, keepdims=True)
+    probs = (ex.astype(jnp.float32) / denom)
+    return jnp.einsum("bhgts,bshd->bhgtd", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+           *, causal: bool, window: int = 0) -> jnp.ndarray:
+    """Masked GQA attention.
+
+    q: [B, Hq, Tq, D]; k, v: [B, Tk, Hkv, D]; q_pos: [B, Tq]; k_pos: [B, Tk].
+
+    Long queries are processed in q-blocks (flash-style chunking on the
+    XLA path) so the [Tq, Tk] score matrix never fully materializes —
+    this is what makes the 4k/32k shapes fit HBM without the Pallas
+    kernel (which is the TPU-target fast path).
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, tq, d)
+    scale = d ** -0.5
+
+    if tq >= ATTEND_CHUNK_MIN_T and tq % ATTEND_CHUNK == 0:
+        nc = tq // ATTEND_CHUNK
+        qc = jnp.moveaxis(
+            qg.reshape(b, hkv, g, nc, ATTEND_CHUNK, d), 3, 0)   # [nc,B,H,G,c,D]
+        pc = jnp.moveaxis(
+            q_pos.reshape(b, nc, ATTEND_CHUNK), 1, 0)           # [nc,B,c]
+
+        def one(args):
+            qi, pi = args
+            return _attend_block(qi, k, v, pi, k_pos, causal=causal,
+                                 window=window, scale=scale)
+
+        if UNROLL_CHUNKS:
+            out = jnp.stack([one((qc[i], pc[i])) for i in range(nc)])
+        else:
+            out = jax.lax.map(one, (qc, pc))                    # [nc,B,H,G,c,D]
+        out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, tq, d)
+    else:
+        out = _attend_block(qg, k, v, q_pos, k_pos, causal=causal,
+                            window=window, scale=scale)
+    return out.reshape(b, hq, tq, d).astype(q.dtype)
+
+
+def cache_write(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                positions: jnp.ndarray, *, ring: bool,
+                valid: Optional[jnp.ndarray] = None) -> dict:
+    """Write [B,T,Hkv,D] keys/values at absolute ``positions`` [B, T].
+
+    Seq-major cache layout: the write is a pure scatter on dim 1 with no
+    transpose (decode perf iteration, EXPERIMENTS.md §Perf).
+    ``ring=False``: contiguous write at slot = positions (requires
+    positions < capacity; used for prefill / suffix prefill).
+    ``ring=True``: slot = positions % capacity (long-context decode).
+    ``valid`` [B, T]: padded entries get pos = -1 (masked forever).
+    """
+    cap = cache["k"].shape[1]
+    slots = positions % cap if ring else positions             # [B, T]
+    b_idx = jnp.arange(cache["k"].shape[0])[:, None]           # [B, 1]
+    k = cache["k"].at[b_idx, slots].set(
+        k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[b_idx, slots].set(
+        v_new.astype(cache["v"].dtype))
+    written = positions if valid is None else jnp.where(valid, positions, -1)
+    pos = cache["pos"].at[b_idx, slots].set(written)
+    return {"k": k, "v": v, "pos": pos}
+
+
+# ----------------------------------------------------------------------
+# self attention layer
+# ----------------------------------------------------------------------
+def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
+                   num_kv_heads: int, head_dim: int, rope_theta: float,
+                   positions: jnp.ndarray, cache: Optional[dict] = None,
+                   causal: bool = True, window: int = 0,
+                   ring: bool = False, valid: Optional[jnp.ndarray] = None,
+                   impl: str = "xla"):
+    """x: [B, T, D_model]; positions: [B, T] absolute positions.
+
+    Returns (out [B, T, D_model], new_cache or None).
+    ``impl="pallas"`` routes attention through the Pallas kernels
+    (prefix_attention / decode_gqa); "xla" uses the jnp reference path.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        def _attend(q_, k_, v_, qp_, kp_):
+            # kernels take head-major K/V; cache is seq-major
+            k_ = k_.transpose(0, 2, 1, 3)
+            v_ = v_.transpose(0, 2, 1, 3)
+            if q_.shape[2] == 1:        # decode: 1 token vs long cache
+                out_ = kops.decode_gqa(q_[:, :, 0], k_, v_, qp_[:, 0], kp_,
+                                       window=window)
+                return out_[:, :, None]
+            return kops.prefix_attention(q_, k_, v_, qp_, kp_,
+                                         causal=causal, window=window)
+    else:
+        def _attend(q_, k_, v_, qp_, kp_):
+            return attend(q_, k_, v_, qp_, kp_, causal=causal, window=window)
+    b, t, _ = x.shape
+    q = linear(x, p["wq"])
+    k = linear(x, p["wk"])
+    v = linear(x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # q head-major for the MXU attention; k/v stay seq-major (cache layout)
+    q = q.reshape(b, t, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, num_kv_heads, head_dim)
+    v = v.reshape(b, t, num_kv_heads, head_dim)
+    q = apply_rope(q, positions[:, None, :], rope_theta)
+    k = apply_rope(k, positions[:, :, None], rope_theta)
+
+    if cache is None:
+        self_pos = positions if valid is None else jnp.where(valid, positions, -1)
+        out = _attend(q, k, v, positions, self_pos)
+        new_cache = None
+    elif window and t > 1:
+        # Windowed multi-token (prefill / suffix prefill): the ring buffer
+        # cannot hold T > capacity fresh tokens at once, so attend over
+        # [cached prefix ++ fresh self-KV] and ring-write only the tail.
+        cap = cache["k"].shape[1]
+        self_pos = positions if valid is None else jnp.where(valid, positions, -1)
+        k_all = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
+        v_all = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
+        pos_all = jnp.concatenate([cache["pos"], self_pos], axis=1)
+        out = _attend(q, k_all, v_all, positions, pos_all)
+        tail = min(t, cap)
+        new_cache = cache_write(
+            cache, k[:, t - tail:], v[:, t - tail:],
+            positions[:, t - tail:], ring=True,
+            valid=None if valid is None else valid[:, t - tail:])
+    else:
+        ring_eff = ring or bool(window)
+        new_cache = cache_write(cache, k, v, positions, ring=ring_eff,
+                                valid=valid)
+        out = _attend(q, new_cache["k"], new_cache["v"], positions,
+                      new_cache["pos"])
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, num_heads * head_dim)
+    return linear(out, p["wo"]), new_cache
+
+
+# ----------------------------------------------------------------------
+# cross attention (enc-dec decoder / VLM image layers)
+# ----------------------------------------------------------------------
+def init_cross_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                         head_dim: int, dtype) -> dict:
+    return init_attention(key, d_model, num_heads, num_kv_heads, head_dim, dtype)
+
+
+def cross_attention_kv(p: dict, enc: jnp.ndarray, *, num_kv_heads: int,
+                       head_dim: int):
+    """Project encoder states once; reusable across all decode steps.
+    Seq-major layout [B, S, Hkv, D], matching the self-attention cache."""
+    b, s, _ = enc.shape
+    k = linear(enc, p["wk"]).reshape(b, s, num_kv_heads, head_dim)
+    v = linear(enc, p["wv"]).reshape(b, s, num_kv_heads, head_dim)
+    return k, v
+
+
+def cross_attention(p: dict, x: jnp.ndarray, enc_kv, *, num_heads: int,
+                    num_kv_heads: int, head_dim: int):
+    """x: [B, T, D]; enc_kv: (k, v) each [B, S, Hkv, D]."""
+    b, t, _ = x.shape
+    k, v = enc_kv
+    q = linear(x, p["wq"]).reshape(b, t, num_heads, head_dim).transpose(0, 2, 1, 3)
+    s = k.shape[1]
+    q_pos = jnp.zeros((b, t), jnp.int32)
+    k_pos = jnp.zeros((b, s), jnp.int32)
+    out = attend(q, k, v, q_pos, k_pos, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, num_heads * head_dim)
+    return linear(out, p["wo"])

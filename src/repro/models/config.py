@@ -1,0 +1,216 @@
+"""Model configuration covering every architecture family in the assigned pool.
+
+A single ``ModelConfig`` describes dense / MoE / SSM / hybrid / enc-dec / VLM
+decoder stacks.  ``layer_specs()`` expands the config into one ``LayerSpec``
+per layer; the model assembly in ``model.py`` is driven purely by that list,
+so new families are added by extending the spec vocabulary, not the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+# Mixer kinds.
+ATTN = "attn"                # global causal self attention (GQA)
+ATTN_SWA = "attn_swa"        # sliding-window causal self attention
+ATTN_LOCAL = "attn_local"    # local attention (hybrid archs; same math as SWA)
+MAMBA = "mamba"              # Mamba-1 selective SSM
+RGLRU = "rglru"              # RG-LRU recurrent block (Griffin/RecurrentGemma)
+
+# FFN kinds.
+MLP = "mlp"                  # SwiGLU MLP
+MOE = "moe"                  # top-k routed experts
+NONE = "none"                # no channel mixer (Mamba layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                  # one of the mixer kinds above
+    ffn: str                    # one of the ffn kinds above
+    cross_attn: bool = False    # additionally cross-attend to encoder states
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+
+    # --- attention ---
+    sliding_window: int = 0           # 0 = full attention
+    rope_theta: float = 10_000.0
+    use_qkv_bias: bool = False
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    dense_residual_d_ff: int = 0      # arctic-style always-on dense MLP next to MoE
+
+    # --- SSM (Mamba-1) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0              # 0 -> ceil(d_model / 16)
+
+    # --- hybrid (RecurrentGemma / Griffin) ---
+    block_pattern: Tuple[str, ...] = ()   # cycled per-layer mixer pattern
+    local_window: int = 0                 # window for ATTN_LOCAL layers
+    lru_width: int = 0                    # 0 -> d_model
+
+    # --- encoder-decoder (audio) ---
+    num_encoder_layers: int = 0
+    encoder_seq: int = 0                  # frames produced by the (stubbed) frontend
+    frontend_dim: int = 0                 # dim of stubbed frame/patch embeddings
+
+    # --- VLM ---
+    cross_attn_period: int = 0            # every p-th layer gets cross attention
+    cross_attn_offset: int = 3            # first cross layer index within period
+    num_image_tokens: int = 0
+
+    # --- misc ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    scan_layers: bool = True              # scan over stacked layer params
+    remat: bool = False                   # jax.checkpoint each layer (training)
+    attention_impl: str = "xla"           # "xla" | "pallas"
+    max_target_len: int = 8192            # rope table sizing hint only
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.ssm_dt_rank or int(math.ceil(self.d_model / 16))
+
+    @property
+    def d_inner_(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def lru_width_(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.num_encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(s.mixer in (MAMBA, RGLRU) for s in self.layer_specs())
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True when decode memory/compute is bounded (sub-quadratic)."""
+        return all(
+            s.mixer in (MAMBA, RGLRU, ATTN_SWA, ATTN_LOCAL)
+            for s in self.layer_specs()
+        )
+
+    # ------------------------------------------------------------------
+    def layer_specs(self) -> Tuple[LayerSpec, ...]:
+        """Expand the config into one LayerSpec per decoder layer."""
+        specs = []
+        for i in range(self.num_layers):
+            # mixer
+            if self.block_pattern:
+                kind = self.block_pattern[i % len(self.block_pattern)]
+            elif self.family == "ssm":
+                kind = MAMBA
+            elif self.sliding_window:
+                kind = ATTN_SWA
+            else:
+                kind = ATTN
+            # ffn
+            if kind == MAMBA:
+                ffn = NONE
+            elif self.num_experts:
+                ffn = MOE
+            else:
+                ffn = MLP
+            # cross attention (vlm periodic / encdec every layer)
+            cross = False
+            if self.cross_attn_period:
+                cross = (i % self.cross_attn_period) == self.cross_attn_offset
+            elif self.is_encdec:
+                cross = kind in (ATTN, ATTN_SWA, ATTN_LOCAL)
+            specs.append(LayerSpec(mixer=kind, ffn=ffn, cross_attn=cross))
+        return tuple(specs)
+
+    def homogeneous(self) -> bool:
+        specs = self.layer_specs()
+        return all(s == specs[0] for s in specs)
+
+    def validate(self) -> None:
+        assert self.d_model > 0 and self.num_layers > 0
+        if any(s.mixer in (ATTN, ATTN_SWA, ATTN_LOCAL) for s in self.layer_specs()):
+            assert self.num_heads > 0 and self.num_kv_heads > 0
+            assert self.num_heads % self.num_kv_heads == 0
+        if self.num_experts:
+            assert 0 < self.num_experts_per_tok <= self.num_experts
+        if self.block_pattern:
+            for k in self.block_pattern:
+                assert k in (ATTN, ATTN_SWA, ATTN_LOCAL, MAMBA, RGLRU), k
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs accounting)."""
+        d, hd = self.d_model, self.head_dim_
+        n = self.vocab_size * d                      # embeddings
+        if not self.tie_embeddings:
+            n += self.vocab_size * d                 # lm head
+        for s in self.layer_specs():
+            if s.mixer in (ATTN, ATTN_SWA, ATTN_LOCAL):
+                n += d * self.num_heads * hd         # q
+                n += 2 * d * self.num_kv_heads * hd  # k, v
+                n += self.num_heads * hd * d         # o
+            elif s.mixer == MAMBA:
+                di, ds, dr = self.d_inner_, self.ssm_state, self.dt_rank_
+                n += d * 2 * di + di * self.ssm_conv + di * (dr + 2 * ds)
+                n += dr * di + di * ds + 2 * di + di * d
+            elif s.mixer == RGLRU:
+                w = self.lru_width_
+                n += 2 * d * w + w * self.ssm_conv + 3 * w + w * d
+            if s.cross_attn:
+                n += d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd
+                n += self.num_heads * hd * d
+            if s.ffn == MLP:
+                n += 3 * d * self.d_ff
+            elif s.ffn == MOE:
+                n += d * self.num_experts                       # router
+                n += self.num_experts * 3 * d * self.d_ff       # experts
+                if self.dense_residual_d_ff:
+                    n += 3 * d * self.dense_residual_d_ff
+        if self.is_encdec:
+            for _ in range(self.num_encoder_layers):
+                n += (2 + 2 * self.num_kv_heads / self.num_heads) * d * d
+                n += 3 * d * self.d_ff
+            n += (self.frontend_dim or d) * d
+        if self.num_image_tokens:
+            n += (self.frontend_dim or d) * d
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if not self.num_experts:
+            return self.param_count()
+        full = self.param_count()
+        d = self.d_model
+        n_moe_layers = sum(1 for s in self.layer_specs() if s.ffn == MOE)
+        inactive = (self.num_experts - self.num_experts_per_tok) * 3 * d * self.d_ff
+        return int(full - n_moe_layers * inactive)

@@ -1,0 +1,124 @@
+"""Primitive layers: init helpers, RMSNorm, RoPE, SwiGLU MLP.
+
+Everything is pure-functional: ``init_*`` returns a params dict of jnp
+arrays, ``apply`` style functions take ``(params, x, ...)``.  All matmuls
+accumulate in float32 and cast back to the activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# ops
+# ----------------------------------------------------------------------
+def linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """[head_dim//2] inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate ``x`` of shape [..., T, head_dim] by RoPE at ``positions`` [..., T].
+
+    ``positions`` broadcasts against x's leading dims; typically shape [T]
+    or [B, T].
+    """
+    head_dim = x.shape[-1]
+    inv = rope_frequencies(head_dim, theta)                     # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv        # [..., T, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # Broadcast cos/sin over any head dims between batch and T.
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(linear(x, p["w_gate"]).astype(jnp.float32))
+    up = linear(x, p["w_up"]).astype(jnp.float32)
+    return linear((gate * up).astype(x.dtype), p["w_down"])
+
+
+# ----------------------------------------------------------------------
+# depthwise causal conv1d (Mamba / RG-LRU front conv)
+# ----------------------------------------------------------------------
+def init_conv1d(key, channels: int, width: int, dtype) -> dict:
+    scale = (1.0 / width) ** 0.5
+    return {
+        "w": (jax.random.normal(key, (width, channels), jnp.float32) * scale).astype(dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d(p: dict, x: jnp.ndarray, state: jnp.ndarray | None = None):
+    """Depthwise causal conv.
+
+    x: [B, T, C];  state: [B, W-1, C] trailing context from previous chunk.
+    Returns (y [B, T, C], new_state [B, W-1, C]).
+    """
+    w = p["w"].astype(jnp.float32)                       # [W, C]
+    width = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), jnp.float32)
+    ctx = jnp.concatenate([state.astype(jnp.float32), xf], axis=1)   # [B, T+W-1, C]
+    y = jnp.zeros_like(xf)
+    for i in range(width):
+        y = y + ctx[:, i:i + x.shape[1], :] * w[i]
+    y = y + p["b"].astype(jnp.float32)
+    new_state = ctx[:, -(width - 1):, :] if width > 1 else state
+    return y.astype(x.dtype), new_state.astype(x.dtype)

@@ -1,0 +1,402 @@
+"""Model assembly: layer stacks, group-scan, caches, forward modes.
+
+One implementation drives all ten architectures.  ``ModelConfig.layer_specs``
+expands the config into per-layer ``LayerSpec``s; layers are grouped into
+repeating units of size ``group_period`` (1 for homogeneous stacks, the
+pattern length for hybrids, the cross-attention period for VLMs) and the
+stack is executed with ``jax.lax.scan`` over stacked group params, with a
+small unrolled remainder.  This keeps HLO size O(group) instead of
+O(layers), which matters for 88-layer models lowered onto 512 devices.
+
+Forward modes (all the same function):
+  train          cache=None                      full causal self-attn
+  prefill        cache=zeros, positions=0..T     writes cache
+  suffix prefill cache=prefix, positions=P..P+T  ← the SubGCache fast path
+  decode         cache=state,  positions=len     T=1, ring buffer optional
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import (ATTN, ATTN_LOCAL, ATTN_SWA, MAMBA, MLP, MOE,
+                                 NONE, RGLRU, LayerSpec, ModelConfig)
+from repro.models.layers import (dense_init, dtype_of, embed_init, init_mlp,
+                                 init_rms_norm, apply_mlp, linear, rms_norm)
+
+
+# ======================================================================
+# per-layer init / apply
+# ======================================================================
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    dt = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    p = {"ln1": init_rms_norm(cfg.d_model, dt)}
+    if spec.mixer in (ATTN, ATTN_SWA, ATTN_LOCAL):
+        p["mixer"] = attn_lib.init_attention(
+            keys[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim_, dt, cfg.use_qkv_bias)
+    elif spec.mixer == MAMBA:
+        p["mixer"] = ssm_lib.init_mamba(
+            keys[0], cfg.d_model, cfg.d_inner_, cfg.ssm_state,
+            cfg.dt_rank_, cfg.ssm_conv, dt)
+    elif spec.mixer == RGLRU:
+        p["mixer"] = rglru_lib.init_rglru(
+            keys[0], cfg.d_model, cfg.lru_width_, cfg.ssm_conv, dt)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["ln_cross"] = init_rms_norm(cfg.d_model, dt)
+        p["cross"] = attn_lib.init_cross_attention(
+            keys[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim_, dt)
+    if spec.ffn == MLP:
+        p["ln2"] = init_rms_norm(cfg.d_model, dt)
+        p["ffn"] = init_mlp(keys[2], cfg.d_model, cfg.d_ff, dt)
+    elif spec.ffn == MOE:
+        p["ln2"] = init_rms_norm(cfg.d_model, dt)
+        p["ffn"] = moe_lib.init_moe(keys[2], cfg.d_model, cfg.d_ff,
+                                    cfg.num_experts, dt,
+                                    cfg.dense_residual_d_ff)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     capacity: int, enc_len: int, dt) -> dict:
+    c = {}
+    if spec.mixer in (ATTN, ATTN_SWA, ATTN_LOCAL):
+        cap = capacity
+        if spec.mixer == ATTN_SWA and cfg.sliding_window:
+            cap = min(cap, cfg.sliding_window)
+        if spec.mixer == ATTN_LOCAL and cfg.local_window:
+            cap = min(cap, cfg.local_window)
+        c.update(attn_lib.init_kv_cache(batch, cfg.num_kv_heads, cap,
+                                        cfg.head_dim_, dt))
+    elif spec.mixer == MAMBA:
+        c.update(ssm_lib.init_mamba_cache(batch, cfg.d_inner_, cfg.ssm_state,
+                                          cfg.ssm_conv, dt))
+    elif spec.mixer == RGLRU:
+        c.update(rglru_lib.init_rglru_cache(batch, cfg.lru_width_,
+                                            cfg.ssm_conv, dt))
+    if spec.cross_attn:
+        c["cross_k"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                  cfg.head_dim_), dt)
+        c["cross_v"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                  cfg.head_dim_), dt)
+    return c
+
+
+def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
+                cache: Optional[dict], ctx: dict):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = dict(cache) if cache is not None else None
+
+    if spec.mixer in (ATTN, ATTN_SWA, ATTN_LOCAL):
+        window = 0
+        if spec.mixer == ATTN_SWA:
+            window = cfg.sliding_window
+        elif spec.mixer == ATTN_LOCAL:
+            window = cfg.local_window
+        sub = ({k: cache[k] for k in ("k", "v", "pos")}
+               if cache is not None else None)
+        out, sub_new = attn_lib.self_attention(
+            p["mixer"], h,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+            positions=ctx["positions"], cache=sub,
+            causal=ctx.get("causal", True), window=window,
+            ring=ctx.get("ring", False), valid=ctx.get("valid"),
+            impl=cfg.attention_impl)
+        if sub_new is not None:
+            new_cache.update(sub_new)
+    elif spec.mixer == MAMBA:
+        sub = ({k: cache[k] for k in ("conv", "state")}
+               if cache is not None else None)
+        out, sub_new = ssm_lib.apply_mamba(
+            p["mixer"], h, sub, d_state=cfg.ssm_state, dt_rank=cfg.dt_rank_,
+            impl=cfg.attention_impl)
+        if sub_new is not None:
+            new_cache.update(sub_new)
+    elif spec.mixer == RGLRU:
+        sub = ({k: cache[k] for k in ("conv", "state")}
+               if cache is not None else None)
+        out, sub_new = rglru_lib.apply_rglru(p["mixer"], h, sub,
+                                             impl=cfg.attention_impl)
+        if sub_new is not None:
+            new_cache.update(sub_new)
+    x = x + out
+
+    if spec.cross_attn:
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        enc = ctx.get("enc")
+        if enc is not None:
+            ekv = attn_lib.cross_attention_kv(
+                p["cross"], enc, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.head_dim_)
+            if new_cache is not None:
+                new_cache["cross_k"], new_cache["cross_v"] = ekv
+        else:
+            ekv = (cache["cross_k"], cache["cross_v"])
+        out = attn_lib.cross_attention(
+            p["cross"], h, ekv, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_)
+        x = x + out
+
+    if spec.ffn == MLP:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + apply_mlp(p["ffn"], h)
+    elif spec.ffn == MOE:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        out, moe_aux = moe_lib.apply_moe(
+            p["ffn"], h, top_k=cfg.num_experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor)
+        x = x + out
+        aux = aux + moe_aux
+    return x, new_cache, aux
+
+
+# ======================================================================
+# stack grouping
+# ======================================================================
+def group_period(cfg: ModelConfig) -> int:
+    if cfg.cross_attn_period:
+        return cfg.cross_attn_period
+    if cfg.block_pattern:
+        return len(cfg.block_pattern)
+    return 1
+
+
+def stack_layout(cfg: ModelConfig):
+    """Returns (period, n_groups, n_rest)."""
+    specs = cfg.layer_specs()
+    g = group_period(cfg) if cfg.scan_layers else 0
+    if g == 0 or len(specs) < 2 * g:
+        return 0, 0, len(specs)          # fully unrolled
+    n_groups = len(specs) // g
+    return g, n_groups, len(specs) - n_groups * g
+
+
+# ======================================================================
+# full model params
+# ======================================================================
+def init_params(key, cfg: ModelConfig) -> dict:
+    cfg.validate()
+    dt = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    specs = cfg.layer_specs()
+    period, n_groups, n_rest = stack_layout(cfg)
+
+    params = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+              "final_norm": init_rms_norm(cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size, dt)
+    if cfg.frontend_dim:
+        params["frontend_proj"] = dense_init(keys[2], cfg.frontend_dim,
+                                             cfg.d_model, dt)
+
+    def group_params(gkey, gspecs):
+        gk = jax.random.split(gkey, len(gspecs))
+        return {str(j): init_layer(gk[j], cfg, s)
+                for j, s in enumerate(gspecs)}
+
+    dec = {}
+    if n_groups:
+        gkeys = jax.random.split(keys[3], n_groups)
+        per_group = [group_params(gkeys[i], specs[i * period:(i + 1) * period])
+                     for i in range(n_groups)]
+        dec["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    rest_specs = specs[n_groups * period:]
+    if rest_specs:
+        rkeys = jax.random.split(keys[4], len(rest_specs))
+        dec["rest"] = [init_layer(rkeys[i], cfg, s)
+                       for i, s in enumerate(rest_specs)]
+    params["dec"] = dec
+
+    if cfg.is_encdec:
+        enc_spec = LayerSpec(mixer=ATTN, ffn=MLP, cross_attn=False)
+        ekeys = jax.random.split(keys[5], cfg.num_encoder_layers)
+        per = [{"0": init_layer(ekeys[i], cfg, enc_spec)}
+               for i in range(cfg.num_encoder_layers)]
+        params["enc"] = {"groups": jax.tree.map(lambda *xs: jnp.stack(xs), *per),
+                         "norm": init_rms_norm(cfg.d_model, dt)}
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               enc_len: int = 0) -> dict:
+    dt = dtype_of(cfg.dtype)
+    specs = cfg.layer_specs()
+    period, n_groups, n_rest = stack_layout(cfg)
+    cache = {}
+    if n_groups:
+        one_group = {str(j): init_layer_cache(cfg, specs[j], batch, capacity,
+                                              enc_len, dt)
+                     for j in range(period)}
+        cache["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(), one_group)
+    rest_specs = specs[n_groups * period:]
+    if rest_specs:
+        cache["rest"] = [init_layer_cache(cfg, s, batch, capacity, enc_len, dt)
+                         for s in rest_specs]
+    return cache
+
+
+# ======================================================================
+# forward
+# ======================================================================
+def _group_body(cfg: ModelConfig, gspecs, ctx):
+    from repro.distributed.hints import constrain
+
+    def body(carry, xs):
+        x, aux = carry
+        gparams, gcache = xs
+        new_gcache = {} if gcache is not None else None
+        for j, spec in enumerate(gspecs):
+            lc = gcache[str(j)] if gcache is not None else None
+            x, nc, a = apply_layer(gparams[str(j)], spec, cfg, x, lc, ctx)
+            x = constrain(x, "layer_boundary")
+            aux = aux + a
+            if new_gcache is not None:
+                new_gcache[str(j)] = nc
+        return (x, aux), new_gcache
+    return body
+
+
+def run_stack(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+              cache: Optional[dict], ctx: dict, specs=None):
+    """Run the decoder stack.  Returns (x, new_cache, aux)."""
+    specs = specs if specs is not None else cfg.layer_specs()
+    period, n_groups, _ = stack_layout(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+
+    if n_groups:
+        gspecs = specs[:period]
+        body = _group_body(cfg, gspecs, ctx)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        gcaches = cache.get("groups") if cache is not None else None
+        if gcaches is None:
+            (x, aux), _ = jax.lax.scan(
+                lambda c, p: (body((c[0], c[1]), (p, None))[0], None),
+                (x, aux), params["dec"]["groups"])
+        else:
+            (x, aux), new_g = jax.lax.scan(
+                body, (x, aux), (params["dec"]["groups"], gcaches))
+            new_cache["groups"] = new_g
+
+    rest_specs = specs[n_groups * period:]
+    for i, spec in enumerate(rest_specs):
+        lc = cache["rest"][i] if cache is not None else None
+        p = params["dec"]["rest"][i]
+
+        def fn(p_, x_, lc_, _spec=spec):
+            from repro.distributed.hints import constrain
+            x2, nc_, a_ = apply_layer(p_, _spec, cfg, x_, lc_, ctx)
+            return constrain(x2, "layer_boundary"), nc_, a_
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x, nc, a = fn(p, x, lc)
+        aux = aux + a
+        if new_cache is not None:
+            new_cache.setdefault("rest", []).append(nc)
+    return x, new_cache, aux
+
+
+def run_encoder(params: dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: [B, T_enc, F] stubbed frontend embeddings -> [B, T_enc, D]."""
+    x = linear(frames, params["frontend_proj"]) if "frontend_proj" in params \
+        else frames
+    enc_spec = LayerSpec(mixer=ATTN, ffn=MLP, cross_attn=False)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    ctx = {"positions": positions, "causal": False}
+    body = _group_body(cfg, (enc_spec,), ctx)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, _), _ = jax.lax.scan(
+        lambda c, p: (body((c[0], c[1]), (p, None))[0], None),
+        (x, jnp.zeros((), jnp.float32)), params["enc"]["groups"])
+    return rms_norm(x, params["enc"]["norm"], cfg.norm_eps)
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["embed"][tokens]
+
+
+def project_frontend(params: dict, embeds: jnp.ndarray) -> jnp.ndarray:
+    """Project stubbed modality embeddings [B, T, F] to d_model."""
+    if "frontend_proj" in params:
+        return linear(embeds, params["frontend_proj"])
+    return embeds
+
+
+def unembed(params: dict, cfg: ModelConfig, hidden: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jax.lax.dot_general(
+        h, w, (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def forward(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
+            positions: jnp.ndarray, cache: Optional[dict] = None,
+            enc: Optional[jnp.ndarray] = None,
+            valid: Optional[jnp.ndarray] = None, ring: bool = False):
+    """embeds: [B, T, D] already-embedded inputs.
+
+    Returns (hidden [B, T, D], new_cache, aux_loss).
+    """
+    ctx = {"positions": positions, "valid": valid, "ring": ring,
+           "enc": enc, "causal": True}
+    return run_stack(params, cfg, embeds, cache, ctx)
+
+
+# ======================================================================
+# losses / steps
+# ======================================================================
+def lm_loss(params: dict, cfg: ModelConfig, logits: jnp.ndarray,
+            labels: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """logits [B,T,V] fp32; labels [B,T]; mask [B,T] (1 = contributes).
+
+    Sharding-friendly cross entropy: the label logit is extracted with a
+    one-hot contraction (XLA fuses the one-hot; GSPMD turns the
+    vocab-sharded reduction into a small all-reduce) instead of
+    ``take_along_axis``, which would all-gather the vocab-sharded logits.
+    """
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.einsum("btv,btv->bt", logits, onehot)
+    ll = label_logit - lse
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(ll * mask) / denom
+
+
+def train_loss(params: dict, cfg: ModelConfig, batch: dict,
+               aux_weight: float = 0.01) -> jnp.ndarray:
+    """batch: tokens [B,T] (+ optional enc_frames / img_embeds), labels, mask."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = embed_tokens(params, tokens)
+    enc = None
+    if cfg.is_encdec:
+        enc = run_encoder(params, cfg, batch["enc_frames"])
+    elif cfg.num_image_tokens:
+        img = project_frontend(params, batch["img_embeds"])
+        enc = img
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    hidden, _, aux = forward(params, cfg, x, positions, enc=enc)
+    logits = unembed(params, cfg, hidden)
+    loss = lm_loss(params, cfg, logits, batch["labels"], batch["mask"])
+    return loss + aux_weight * aux

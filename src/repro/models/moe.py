@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+TPU adaptation: instead of the dense one-hot dispatch einsum (whose FLOPs
+scale as B*S^2*k*D and would swamp the roofline at 32k context) we use a
+sort/scatter dispatch: tokens are grouped per expert into a static
+``[E, C, D]`` buffer (scatter = memory op, no FLOPs), the expert FFN runs
+as a batched matmul over the expert dim (MXU-friendly, shardable over the
+``model`` axis for expert parallelism), and outputs are gathered back and
+combined with router weights.  Tokens beyond expert capacity are dropped
+(standard capacity-factor semantics); the router aux loss penalizes
+imbalance during training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import constrain
+from repro.models.layers import dense_init, linear
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype,
+             dense_residual_d_ff: int = 0) -> dict:
+    kr, kg, ku, kd, kres = jax.random.split(key, 5)
+    scale = (1.0 / d_model) ** 0.5
+    p = {
+        "router": dense_init(kr, d_model, num_experts, dtype),
+        "w_gate": (jax.random.normal(kg, (num_experts, d_model, d_ff), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ku, (num_experts, d_model, d_ff), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(kd, (num_experts, d_ff, d_model), jnp.float32)
+                   * (1.0 / d_ff) ** 0.5).astype(dtype),
+    }
+    if dense_residual_d_ff:
+        from repro.models.layers import init_mlp
+        p["dense_residual"] = init_mlp(kres, d_model, dense_residual_d_ff, dtype)
+    return p
+
+
+def _row_gather(x, idx):
+    """x: [B, N, D], idx: [B, M] -> [B, M, D] without index broadcast."""
+    return jax.vmap(lambda xi, ii: jnp.take(xi, ii, axis=0))(x, idx)
+
+
+def expert_capacity(num_tokens: int, num_experts: int, top_k: int,
+                    capacity_factor: float) -> int:
+    cap = int(num_tokens * top_k * capacity_factor / num_experts)
+    return max(8, ((cap + 7) // 8) * 8)      # 8-align for TPU tiling
+
+
+def apply_moe(p: dict, x: jnp.ndarray, *, top_k: int,
+              capacity_factor: float = 1.25):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Per-row sort-based dispatch: every batch row sorts ITS tokens into a
+    [E, C_row, D] buffer, so the whole dispatch is batched over B and
+    GSPMD keeps the data-parallel sharding intact (no global argsort over
+    the batch-sharded token dim — that would all-gather activations).
+    Expert FFN is a batched matmul over the expert dim, shardable on E
+    (expert parallelism, arctic) or on d_ff (TP within expert, mixtral).
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    sk = s * top_k
+
+    logits = linear(x, p["router"]).astype(jnp.float32)         # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)                  # [B, S, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)      # renormalize
+
+    # ---- load-balance aux loss (Switch-style) ----
+    # scatter-add histogram instead of a [B,S,E] one-hot (at E=128 that
+    # buffer is ~0.5 TB global; EXPERIMENTS.md §Perf arctic iteration)
+    counts = jnp.zeros((e,), jnp.float32).at[top_i[..., 0].reshape(-1)].add(1.0)
+    density = counts / (b * s)
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * e
+
+    # ---- per-row dispatch ----
+    cap = max(top_k, expert_capacity(s, e, top_k, capacity_factor))
+    flat_expert = top_i.reshape(b, sk)                          # [B, S*K]
+    flat_weight = top_p.reshape(b, sk)
+    flat_token = jnp.broadcast_to(
+        (jnp.arange(sk) // top_k)[None], (b, sk))               # [B, S*K]
+
+    order = jnp.argsort(flat_expert, axis=1, stable=True)
+    sorted_expert = jnp.take_along_axis(flat_expert, order, 1)  # [B, S*K]
+    sorted_token = jnp.take_along_axis(flat_token, order, 1)
+    sorted_weight = jnp.take_along_axis(flat_weight, order, 1)
+
+    # position within the expert's group, per row: the array is sorted by
+    # expert id, so rank = index - first_occurrence(expert).  searchsorted
+    # is O(S*K log) and avoids the [B, S*K, E] one-hot cumsum whose bytes
+    # dominate at E=128 (EXPERIMENTS.md §Perf arctic iteration).
+    first = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(
+        sorted_expert)                                           # [B, E]
+    rank = jnp.arange(sk)[None, :] - jnp.take_along_axis(
+        first, sorted_expert, 1)
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_expert * cap + rank, e * cap)  # [B, S*K]
+
+    b_idx = jnp.arange(b)[:, None]
+    # vmapped take, NOT take_along_axis: the latter broadcasts its index
+    # operand to [B, S*K, D] (112 GiB of u32 at arctic scale) and GSPMD
+    # all-gathers it — EXPERIMENTS.md §Perf arctic iteration 3.
+    tokens = _row_gather(x, sorted_token)                        # [B, S*K, D]
+    tokens = constrain(tokens, "moe_tokens")
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    buf = constrain(buf, "moe_buf")
+    buf = buf.at[b_idx, slot].set(tokens.astype(x.dtype))
+    buf = constrain(buf, "moe_buf")
+    expert_in = buf[:, : e * cap].reshape(b, e, cap, d)
+    expert_in = constrain(expert_in, "moe_expert_in")
+
+    # ---- expert FFN (batched over B and E) ----
+    gate = jnp.einsum("becd,edf->becf", expert_in, p["w_gate"],
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("becd,edf->becf", expert_in, p["w_up"],
+                    preferred_element_type=jnp.float32)
+    hidden = (jax.nn.silu(gate) * up).astype(x.dtype)
+    expert_out = jnp.einsum("becf,efd->becd", hidden, p["w_down"],
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+    expert_out = constrain(expert_out, "moe_expert_out")
+
+    # ---- combine ----
+    flat_out = expert_out.reshape(b, e * cap, d)
+    gathered = _row_gather(flat_out, jnp.clip(slot, 0, e * cap - 1))
+    gathered = constrain(jnp.where(keep[..., None], gathered, 0),
+                         "moe_tokens")
+    combined = constrain(jnp.zeros((b, s, d), jnp.float32), "moe_combine")
+    combined = combined.at[b_idx, sorted_token].add(
+        gathered.astype(jnp.float32) * sorted_weight[..., None])
+    out = constrain(combined.astype(x.dtype), "moe_combine")
+
+    if "dense_residual" in p:
+        from repro.models.layers import apply_mlp
+        out = out + apply_mlp(p["dense_residual"], x)
+    return out, aux
+
+
+def apply_moe_dense_oracle(p: dict, x: jnp.ndarray, *, top_k: int):
+    """Reference: every expert computed for every token (no drops)."""
+    b, s, d = x.shape
+    logits = linear(x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    e = p["router"].shape[1]
+    gate = jnp.einsum("bsd,edf->besf", x, p["w_gate"],
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("bsd,edf->besf", x, p["w_up"],
+                    preferred_element_type=jnp.float32)
+    hidden = (jax.nn.silu(gate) * up).astype(x.dtype)
+    all_out = jnp.einsum("besf,efd->besd", hidden, p["w_down"],
+                         preferred_element_type=jnp.float32)    # [B,E,S,D]
+    weights = jnp.zeros((b, s, e), jnp.float32)
+    bi = jnp.arange(b)[:, None, None]
+    si = jnp.arange(s)[None, :, None]
+    weights = weights.at[bi, si, top_i].set(top_p)
+    out = jnp.einsum("bse,besd->bsd", weights, all_out).astype(x.dtype)
+    if "dense_residual" in p:
+        from repro.models.layers import apply_mlp
+        out = out + apply_mlp(p["dense_residual"], x)
+    return out

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma family).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Block structure follows Griffin: two input branches (conv+RG-LRU branch and
+a GeLU gate branch) merged multiplicatively, then output projection.
+
+Prefix-state analogue of KV reuse: ``(conv_state, rec_state)`` after the
+representative prefix is the cached unit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, dense_init, init_conv1d, linear
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def init_rglru(key, d_model: int, width: int, conv_width: int, dtype) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # Lambda init so that a ~ U(0.9, 0.999)^c proxy (Griffin appendix).
+    u = jax.random.uniform(k5, (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "in_x": dense_init(k1, d_model, width, dtype),
+        "in_gate": dense_init(k2, d_model, width, dtype),
+        "conv": init_conv1d(k3, width, conv_width, dtype),
+        "w_a": dense_init(k4, width, width, dtype),
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_i": dense_init(jax.random.fold_in(k4, 1), width, width, dtype),
+        "b_i": jnp.zeros((width,), jnp.float32),
+        "lambda": lam,
+        "out": dense_init(jax.random.fold_in(k1, 2), width, d_model, dtype),
+    }
+
+
+def init_rglru_cache(batch: int, width: int, conv_width: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+        "state": jnp.zeros((batch, width), jnp.float32),
+    }
+
+
+def _rglru_scan(h0, x, a_log):
+    """h0: [B, W]; x (gated input): [B, T, W]; a_log: [B, T, W] (log decay).
+
+    h_t = exp(a_log_t) * h_{t-1} + sqrt(1 - exp(2 a_log_t)) * x_t
+    """
+    def step(h, inp):
+        x_t, al_t = inp
+        a = jnp.exp(al_t)
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x_t
+        return h, h
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(a_log, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def apply_rglru(p: dict, x: jnp.ndarray, cache: Optional[dict] = None,
+                *, impl: str = "xla"):
+    """x: [B, T, D_model] -> (out [B, T, D_model], new_cache)."""
+    b, t, _ = x.shape
+    xi = linear(x, p["in_x"])
+    gate = jax.nn.gelu(linear(x, p["in_gate"]).astype(jnp.float32))
+
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = causal_conv1d(p["conv"], xi, conv_state)
+
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(linear(xi, p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(linear(xi, p["w_i"]).astype(jnp.float32) + p["b_i"])
+    a_log = -_C * jax.nn.softplus(p["lambda"]) * r          # [B, T, W], <= 0
+    gated_in = i * xf
+
+    h0 = (cache["state"] if cache is not None
+          else jnp.zeros((b, xi.shape[-1]), jnp.float32))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        ys, h_final = kops.rglru_scan(gated_in, a_log, h0)
+    else:
+        ys, h_final = _rglru_scan(h0, gated_in, a_log)
+
+    out = linear((ys * gate).astype(x.dtype), p["out"])
+    new_cache = {"conv": new_conv, "state": h_final} if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,126 @@
+"""Mamba-1 selective SSM block (falcon-mamba family).
+
+State-space recurrence per channel c and state dim n:
+    h_t = exp(dt_t * A[c, n]) * h_{t-1} + dt_t * B_t[n] * x_t[c]
+    y_t[c] = sum_n C_t[n] * h_t[c, n] + D[c] * x_t[c]
+
+The prefix-state analogue of the paper's KV reuse for attention-free archs:
+after consuming the representative-subgraph prompt, ``(conv_state,
+ssm_state)`` fully summarizes the prefix; member queries resume from it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, dense_init, init_conv1d, linear
+
+
+def init_mamba(key, d_model: int, d_inner: int, d_state: int, dt_rank: int,
+               conv_width: int, dtype) -> dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # S4D-real initialization of A.
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, 1))
+    dt_bias = jnp.log(jnp.exp(jnp.linspace(1e-3, 1e-1, d_inner)) - 1.0)  # softplus^-1
+    return {
+        "in_proj": dense_init(k1, d_model, 2 * d_inner, dtype),
+        "conv": init_conv1d(k2, d_inner, conv_width, dtype),
+        "x_proj": dense_init(k3, d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(k4, dt_rank, d_inner, dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a),                       # [d_inner, d_state] fp32
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(k6, d_inner, d_model, dtype),
+    }
+
+
+def init_mamba_cache(batch: int, d_inner: int, d_state: int, conv_width: int,
+                     dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+        "state": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def _ssm_scan_ref(x, dt, B, C, A):
+    """Sequential selective scan in pure jnp (oracle; used on XLA path).
+
+    x: [Bt, T, Di]; dt: [Bt, T, Di]; B, C: [Bt, T, N]; A: [Di, N].
+    Returns (y [Bt, T, Di], final_state [Bt, Di, N]).
+    """
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                        # [Bt,Di],[Bt,Di],[Bt,N],[Bt,N]
+        da = jnp.exp(dt_t[..., None] * A)                # [Bt, Di, N]
+        db = dt_t[..., None] * b_t[:, None, :]           # [Bt, Di, N]
+        h = da * h + db * x_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    bt, t, di = x.shape
+    h0 = jnp.zeros((bt, di, A.shape[1]), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def apply_mamba(p: dict, x: jnp.ndarray, cache: Optional[dict] = None,
+                *, d_state: int, dt_rank: int, impl: str = "xla"):
+    """x: [B, T, D_model] -> (out, new_cache)."""
+    b, t, _ = x.shape
+    d_inner = p["out_proj"].shape[0]
+    xz = linear(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                    # [B, T, Di] each
+
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = causal_conv1d(p["conv"], xi, conv_state)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+
+    proj = linear(xi, p["x_proj"]).astype(jnp.float32)   # [B, T, dt_rank+2N]
+    dt, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt, p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"])                                   # [B, T, Di]
+    A = -jnp.exp(p["A_log"])                              # [Di, N]
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        h0 = cache["state"] if cache is not None else None
+        y, h_final = kops.ssm_scan(xi.astype(jnp.float32), dt, Bmat, Cmat, A, h0)
+    else:
+        xf = xi.astype(jnp.float32)
+        if cache is not None:
+            # fold initial state in by running scan from cache["state"]
+            y, h_final = _ssm_scan_from(cache["state"], xf, dt, Bmat, Cmat, A)
+        else:
+            y, h_final = _ssm_scan_ref(xf, dt, Bmat, Cmat, A)
+
+    y = y + xf_d(p["D"], xi)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = linear(y.astype(x.dtype), p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "state": h_final}
+    return out, new_cache
+
+
+def xf_d(D, xi):
+    return D * xi.astype(jnp.float32)
+
+
+def _ssm_scan_from(h0, x, dt, B, C, A):
+    """Selective scan starting from carried state ``h0`` [Bt, Di, N]."""
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * A)
+        db = dt_t[..., None] * b_t[:, None, :]
+        h = da * h + db * x_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_final

@@ -1,0 +1,94 @@
+"""Subgraph retrievers: G-Retriever-style (PCST-lite) and GRAG-style (ego-nets).
+
+Both follow the paper's App. A.2 configuration:
+* G-Retriever: top-k nodes and top-k edges by query similarity (k=3,
+  edge cost 0.5), connected into a subgraph (prize-collecting Steiner
+  tree approximated by similarity-weighted BFS joins).
+* GRAG: top-k 2-hop ego networks around the highest-scoring entities,
+  pruned to the top-10 entities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.subgraph import Subgraph
+from repro.rag.text_encoder import TextEncoder
+from repro.rag.textgraph import TextGraph
+
+
+@dataclasses.dataclass
+class RetrieverIndex:
+    graph: TextGraph
+    encoder: TextEncoder
+    node_vecs: np.ndarray            # [N, dim]
+    edge_vecs: np.ndarray            # [E, dim]
+
+    @staticmethod
+    def build(graph: TextGraph, encoder: TextEncoder) -> "RetrieverIndex":
+        node_vecs = encoder.encode(graph.node_text)
+        edge_vecs = encoder.encode([graph.edge_text(e) for e in graph.edges])
+        return RetrieverIndex(graph, encoder, node_vecs, edge_vecs)
+
+
+class GRetrieverRetriever:
+    """Top-k node/edge retrieval + connectivity repair (PCST-lite)."""
+
+    def __init__(self, index: RetrieverIndex, top_k: int = 3,
+                 edge_cost: float = 0.5):
+        self.index = index
+        self.top_k = top_k
+        self.edge_cost = edge_cost
+
+    def retrieve(self, query: str) -> Subgraph:
+        g = self.index.graph
+        qv = self.index.encoder.encode_one(query)
+        node_scores = self.index.node_vecs @ qv
+        edge_scores = self.index.edge_vecs @ qv
+
+        top_nodes = np.argsort(-node_scores)[: self.top_k].tolist()
+        top_edge_idx = np.argsort(-edge_scores)[: self.top_k]
+        edges = [g.edges[i] for i in top_edge_idx
+                 if edge_scores[i] > self.edge_cost * max(1e-9, edge_scores.max())]
+        if not edges:                       # always keep the best edge
+            edges = [g.edges[int(top_edge_idx[0])]]
+
+        nodes = set(top_nodes)
+        for s, _, d in edges:
+            nodes.update((s, d))
+        # connectivity repair: join prize nodes to the best edge's endpoints
+        anchor = edges[0][0]
+        extra = []
+        for n in top_nodes:
+            if n != anchor:
+                extra.extend(g.bfs_path(anchor, n))
+        all_edges = list(edges) + extra
+        for s, _, d in extra:
+            nodes.update((s, d))
+        return Subgraph.from_lists(nodes, all_edges)
+
+
+class GRAGRetriever:
+    """Top-k 2-hop ego networks pruned to the top entities."""
+
+    def __init__(self, index: RetrieverIndex, top_k: int = 3, hops: int = 2,
+                 top_entities: int = 10):
+        self.index = index
+        self.top_k = top_k
+        self.hops = hops
+        self.top_entities = top_entities
+
+    def retrieve(self, query: str) -> Subgraph:
+        g = self.index.graph
+        qv = self.index.encoder.encode_one(query)
+        node_scores = self.index.node_vecs @ qv
+        centers = np.argsort(-node_scores)[: self.top_k].tolist()
+        whitelist = set(np.argsort(-node_scores)[: self.top_entities].tolist())
+        whitelist.update(centers)
+        sub = None
+        for c in centers:
+            ego = g.ego_subgraph(int(c), self.hops, node_whitelist=whitelist)
+            sub = ego if sub is None else sub.union(ego)
+        return sub if sub is not None else Subgraph.from_lists(centers, [])

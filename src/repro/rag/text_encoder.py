@@ -1,0 +1,53 @@
+"""SentenceBERT stand-in: deterministic hashed bag-of-words text encoder.
+
+Plays SentenceBERT's role in the pipeline (App. A.2): embeds node/edge
+attribute strings and queries into a shared vector space for retrieval
+scoring and GNN input features.  Implementation: each word hashes to a
+fixed Gaussian direction (stable across processes via blake2), texts are
+mean-pooled and L2-normalized.  Lexically similar texts land close —
+sufficient for the retrieval substrate, with zero external weights.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import List, Sequence
+
+import numpy as np
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+")
+
+
+class TextEncoder:
+    def __init__(self, dim: int = 128):
+        self.dim = dim
+        self._cache: dict = {}
+
+    def _word_vec(self, word: str) -> np.ndarray:
+        v = self._cache.get(word)
+        if v is None:
+            seed = int.from_bytes(
+                hashlib.blake2b(word.encode(), digest_size=8).digest(), "little")
+            rng = np.random.default_rng(seed)
+            v = rng.standard_normal(self.dim).astype(np.float32)
+            v /= np.linalg.norm(v) + 1e-8
+            self._cache[word] = v
+        return v
+
+    def encode(self, texts: Sequence[str]) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            words = _TOKEN_RE.findall(t.lower())
+            if not words:
+                continue
+            v = np.mean([self._word_vec(w) for w in words], axis=0)
+            n = np.linalg.norm(v)
+            out[i] = v / (n + 1e-8)
+        return out
+
+    def encode_one(self, text: str) -> np.ndarray:
+        return self.encode([text])[0]
+
+
+def cosine_scores(query_vec: np.ndarray, mat: np.ndarray) -> np.ndarray:
+    return mat @ query_vec

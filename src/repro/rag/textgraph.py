@@ -1,0 +1,89 @@
+"""Textual graph: the external knowledge source of graph-based RAG."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.core.subgraph import Edge, Subgraph
+
+
+@dataclasses.dataclass
+class TextGraph:
+    node_text: List[str]                 # node attribute strings
+    edges: List[Edge]                    # (src, rel_text, dst)
+
+    def __post_init__(self):
+        self._adj: Dict[int, List[Tuple[int, str, int]]] = {}
+        for e in self.edges:
+            s, r, d = e
+            self._adj.setdefault(s, []).append(e)
+            self._adj.setdefault(d, []).append(e)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.node_text)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges)
+
+    def incident_edges(self, node: int) -> List[Edge]:
+        return self._adj.get(node, [])
+
+    def neighbors(self, node: int) -> Set[int]:
+        out = set()
+        for s, _, d in self.incident_edges(node):
+            out.add(d if s == node else s)
+        return out
+
+    def ego_subgraph(self, center: int, hops: int,
+                     node_whitelist: Set[int] | None = None) -> Subgraph:
+        """k-hop ego network around ``center`` (GRAG-style retrieval unit)."""
+        frontier = {center}
+        nodes = {center}
+        edges: Set[Edge] = set()
+        for _ in range(hops):
+            nxt = set()
+            for n in frontier:
+                for e in self.incident_edges(n):
+                    s, _, d = e
+                    other = d if s == n else s
+                    if node_whitelist is not None and other not in node_whitelist:
+                        continue
+                    edges.add(e)
+                    if other not in nodes:
+                        nxt.add(other)
+            nodes |= nxt
+            frontier = nxt
+        return Subgraph.from_lists(nodes, edges)
+
+    def bfs_path(self, src: int, dst: int) -> List[Edge]:
+        """Shortest path edge list (for PCST-lite connectivity repair)."""
+        if src == dst:
+            return []
+        prev: Dict[int, Edge] = {}
+        seen = {src}
+        queue = [src]
+        while queue:
+            cur = queue.pop(0)
+            for e in self.incident_edges(cur):
+                s, _, d = e
+                other = d if s == cur else s
+                if other in seen:
+                    continue
+                seen.add(other)
+                prev[other] = e
+                if other == dst:
+                    path = []
+                    node = dst
+                    while node != src:
+                        e2 = prev[node]
+                        path.append(e2)
+                        node = e2[0] if e2[2] == node else e2[2]
+                    return list(reversed(path))
+                queue.append(other)
+        return []
+
+    def edge_text(self, e: Edge) -> str:
+        s, r, d = e
+        return f"{self.node_text[s]} {r} {self.node_text[d]}"

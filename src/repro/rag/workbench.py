@@ -1,0 +1,192 @@
+"""Workbench: dataset + tokenizer + trained small backbone + pipeline.
+
+All paper-table benchmarks share this substrate.  The backbone is a small
+llama-family model trained ON the RAG task (graph prompt + question ->
+answer), then FROZEN — matching the paper's inference-only setting where
+the LLM is frozen and G-Retriever/GRAG condition it on retrieved
+subgraphs.  Training prompts mix per-query subgraphs with merged
+(representative-style) subgraphs so neither serving mode is favored.
+Checkpoints cache to results/ so benchmarks re-run instantly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.subgraph import Subgraph, merge_subgraphs, textualize
+from repro.data.oag import generate_oag
+from repro.data.scenegraph import QAItem, generate_scene_graph
+from repro.data.tokenizer import EOS, Tokenizer
+from repro.gnn.gat import apply_gat, init_gat
+from repro.gnn.graph_transformer import (apply_graph_transformer,
+                                         init_graph_transformer)
+from repro.gnn.projector import init_projector
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.rag.pipeline import GraphRAGPipeline
+from repro.rag.retriever import (GRAGRetriever, GRetrieverRetriever,
+                                 RetrieverIndex)
+from repro.rag.text_encoder import TextEncoder
+from repro.serving.engine import ServingEngine
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+from repro.training.train_loop import train as run_train
+
+GNN_DIM = 64
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def backbone_config(vocab_size: int) -> ModelConfig:
+    return ModelConfig(
+        name="paper-small", family="dense", num_layers=4, d_model=192,
+        num_heads=6, num_kv_heads=2, head_dim=32, d_ff=512,
+        vocab_size=vocab_size, dtype="float32", tie_embeddings=True,
+        scan_layers=False)
+
+
+@dataclasses.dataclass
+class Workbench:
+    dataset: str
+    graph: object
+    queries: List[QAItem]
+    tokenizer: Tokenizer
+    cfg: ModelConfig
+    params: dict
+    index: RetrieverIndex
+    gnn_params: dict
+    gnn_apply: object
+    proj_params: dict
+
+    def pipeline(self, retriever: str = "gretriever",
+                 max_new_tokens: int = 8,
+                 use_soft_prompt: bool = True) -> GraphRAGPipeline:
+        if retriever == "gretriever":
+            ret = GRetrieverRetriever(self.index)
+        elif retriever == "grag":
+            ret = GRAGRetriever(self.index)
+        else:
+            raise ValueError(retriever)
+        eng = ServingEngine(self.params, self.cfg, self.tokenizer,
+                            max_cache_len=4096,
+                            max_new_tokens=max_new_tokens)
+        return GraphRAGPipeline(
+            index=self.index, retriever=ret, engine=eng,
+            tokenizer=self.tokenizer, gnn_params=self.gnn_params,
+            gnn_apply=self.gnn_apply, proj_params=self.proj_params,
+            use_soft_prompt=use_soft_prompt)
+
+
+def _dataset(name: str):
+    if name == "scene":
+        return generate_scene_graph()
+    if name == "oag":
+        # compact OAG keeps CPU retrieval + training fast while preserving
+        # the heterogeneous structure (paper uses 1071 nodes / 3434 qs)
+        return generate_oag(num_papers=160, num_authors=80, num_queries=800)
+    raise ValueError(name)
+
+
+def _make_training_batches(graph, items, tok: Tokenizer, index,
+                           retriever, rng: np.random.Generator,
+                           batch_size: int, seq_len: int, num_steps: int):
+    """Prompt/answer LM batches; 30% use merged multi-query subgraphs."""
+    subs = [retriever.retrieve(q.question) for q in items]
+
+    def sample():
+        i = int(rng.integers(0, len(items)))
+        it = items[i]
+        u = rng.random()
+        if u < 0.5:
+            sg = subs[i]
+        else:
+            # representative-style merged prompts (up to 8-way) so the
+            # backbone is in-distribution for SubGCache cluster prompts
+            hi = 4 if u < 0.8 else 9
+            js = rng.integers(0, len(items), size=int(rng.integers(2, hi)))
+            sg = merge_subgraphs([subs[i]] + [subs[int(j)] for j in js])
+        prompt = (f"graph :\n{textualize(sg, graph.node_text)} "
+                  f"question : {it.question} answer :")
+        p_ids = tok.encode(prompt, bos=True)
+        a_ids = tok.encode(" " + it.answer, eos=True)
+        ids = (p_ids + a_ids)[:seq_len]
+        labels = [0] * len(ids)
+        mask = [0.0] * len(ids)
+        for j in range(max(0, len(p_ids) - 1),
+                       min(len(ids) - 1, len(p_ids) + len(a_ids) - 1)):
+            labels[j] = ids[j + 1]
+            mask[j] = 1.0
+        pad = seq_len - len(ids)
+        return (ids + [0] * pad, labels + [0] * pad, mask + [0.0] * pad)
+
+    for _ in range(num_steps):
+        rows = [sample() for _ in range(batch_size)]
+        yield {
+            "tokens": jnp.asarray([r[0] for r in rows], jnp.int32),
+            "labels": jnp.asarray([r[1] for r in rows], jnp.int32),
+            "mask": jnp.asarray([r[2] for r in rows], jnp.float32),
+        }
+
+
+def build_workbench(dataset: str = "scene", train_steps: int = 300,
+                    seed: int = 0, force_retrain: bool = False,
+                    log_fn=print) -> Workbench:
+    graph, queries = _dataset(dataset)
+    full_graph_text = textualize(
+        Subgraph.from_lists(range(graph.num_nodes), graph.edges),
+        graph.node_text)
+    corpus = [full_graph_text, "graph : question : answer :"]
+    corpus += [q.question + " " + q.answer for q in queries]
+    tok = Tokenizer.train(corpus, max_vocab=8192)
+    cfg = backbone_config(tok.vocab_size)
+
+    enc = TextEncoder(GNN_DIM)
+    index = RetrieverIndex.build(graph, enc)
+    gnn_key = jax.random.PRNGKey(7)
+    if dataset == "oag":
+        gnn_params = init_gat(gnn_key, GNN_DIM, GNN_DIM, 4, 4)
+        gnn_apply = apply_gat
+    else:
+        gnn_params = init_graph_transformer(gnn_key, GNN_DIM, GNN_DIM, 4, 4)
+        gnn_apply = apply_graph_transformer
+    proj = init_projector(jax.random.PRNGKey(8), GNN_DIM, cfg.d_model, 1)
+
+    path = os.path.join(RESULTS_DIR, f"backbone_{dataset}.npz")
+    params_like = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(seed), cfg))
+    if os.path.exists(path) and not force_retrain:
+        params, meta = ckpt.load(path, params_like)
+        log_fn(f"[workbench] loaded cached backbone {path} "
+               f"(loss {meta.get('final_loss'):.3f})")
+    else:
+        params = M.init_params(jax.random.PRNGKey(seed), cfg)
+        rng = np.random.default_rng(seed)
+        ret = GRetrieverRetriever(index)
+        train_items = queries[: max(64, len(queries) // 2)]
+        batches = _make_training_batches(
+            graph, train_items, tok, index, ret, rng,
+            batch_size=8, seq_len=576, num_steps=train_steps)
+        ocfg = opt.AdamWConfig(learning_rate=3e-3, weight_decay=0.01,
+                               warmup_steps=20)
+        params, hist = run_train(params, cfg, ocfg, batches, train_steps,
+                                 log_every=50, log_fn=log_fn)
+        ckpt.save(path, params,
+                  {"final_loss": hist[-1]["loss"] if hist else None,
+                   "dataset": dataset, "steps": train_steps})
+        log_fn(f"[workbench] saved backbone to {path}")
+    return Workbench(dataset=dataset, graph=graph, queries=queries,
+                     tokenizer=tok, cfg=cfg, params=params, index=index,
+                     gnn_params=gnn_params, gnn_apply=gnn_apply,
+                     proj_params=proj)
+
+
+def test_items(wb: Workbench, n: int = 100, seed: int = 123) -> List[QAItem]:
+    """Held-out in-batch query sample (paper: random 100 test queries)."""
+    rng = np.random.default_rng(seed)
+    pool = wb.queries[len(wb.queries) // 2:]
+    idx = rng.choice(len(pool), size=min(n, len(pool)), replace=False)
+    return [pool[int(i)] for i in idx]

@@ -1,0 +1,265 @@
+"""Batched serving engine with SubGCache prefix-state reuse.
+
+Execution paths:
+  * ``prefill_prefix``      — compute the representative prefix state once
+                              (batch 1), paper §3.4 step 1.
+  * ``generate_with_prefix``— broadcast the prefix state over the member
+                              batch and run ONE batched suffix prefill +
+                              greedy decode (TPU adaptation; the paper
+                              loops members sequentially).
+  * ``generate``            — vanilla per-query path (the baseline).
+
+Shapes are bucketed (suffix length to multiples of ``bucket``, batch to
+powers of two) so a handful of compiled executables serve any workload —
+lengths are data, not shapes (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import CacheStats, ClusterCacheManager, PrefixState
+from repro.data.tokenizer import EOS, PAD, Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def _bucket_len(n: int, bucket: int) -> int:
+    return max(bucket, ((n + bucket - 1) // bucket) * bucket)
+
+
+def _bucket_batch(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, tokenizer: Tokenizer, *,
+                 max_cache_len: int = 768, max_new_tokens: int = 32,
+                 bucket: int = 32):
+        self.params = params
+        self.cfg = cfg
+        self.tok = tokenizer
+        self.max_cache_len = max_cache_len
+        self.max_new_tokens = max_new_tokens
+        self.bucket = bucket
+        self.cache_mgr = ClusterCacheManager()
+        self._prefill_jit = functools.lru_cache(maxsize=64)(self._make_prefill)
+        self._decode_jit = functools.lru_cache(maxsize=16)(self._make_decode)
+        # Recurrent mixers (Mamba / RG-LRU) carry state through every
+        # consumed token — right-padding would corrupt it (attention masks
+        # padded slots; scans cannot).  Such archs get length-exact
+        # processing: no pad tokens ever enter the scan.
+        from repro.models.config import MAMBA, RGLRU
+        self._stateful = any(s.mixer in (MAMBA, RGLRU)
+                             for s in cfg.layer_specs())
+
+    # ------------------------------------------------------------------
+    # jitted building blocks (cached per shape bucket)
+    # ------------------------------------------------------------------
+    def _make_prefill(self, batch: int, seqlen: int):
+        cfg = self.cfg
+
+        def prefill(params, embeds, positions, valid, cache):
+            hidden, cache, _ = M.forward(params, cfg, embeds, positions,
+                                         cache=cache, valid=valid)
+            lengths = jnp.sum(valid.astype(jnp.int32), axis=1)      # [B]
+            last = jnp.take_along_axis(
+                hidden, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
+            logits = M.unembed(params, cfg, last)[:, 0]             # [B, V]
+            return cache, logits, lengths
+
+        return jax.jit(prefill, donate_argnums=(4,))
+
+    def _make_decode(self, batch: int):
+        cfg = self.cfg
+        steps = self.max_new_tokens - 1
+
+        def decode(params, first_token, lengths, cache):
+            def body(carry, _):
+                cache, tok, pos, done = carry
+                emb = M.embed_tokens(params, tok[:, None])
+                hidden, cache, _ = M.forward(params, cfg, emb, pos[:, None],
+                                             cache=cache)
+                logits = M.unembed(params, cfg, hidden)[:, 0]
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                done = done | (tok == EOS)
+                nxt = jnp.where(done, EOS, nxt)
+                return (cache, nxt, pos + 1, done), nxt
+
+            init = (cache, first_token, lengths,
+                    jnp.zeros((batch,), bool))
+            (cache, _, _, _), toks = jax.lax.scan(body, init, None,
+                                                  length=steps)
+            return jnp.concatenate([first_token[:, None], toks.T], axis=1)
+
+        return jax.jit(decode, donate_argnums=(3,))
+
+    # ------------------------------------------------------------------
+    # embedding helpers
+    # ------------------------------------------------------------------
+    def _embed_padded(self, token_lists: Sequence[List[int]],
+                      soft: Optional[np.ndarray], pos_offset: int,
+                      pad_to: Optional[int] = None):
+        """Right-pad token lists (+ optional shared soft-prompt embeds
+        prepended) into (embeds [B,T,D], positions [B,T], valid [B,T])."""
+        n_soft = 0 if soft is None else soft.shape[0]
+        lens = [len(t) + n_soft for t in token_lists]
+        t_pad = pad_to or _bucket_len(max(lens), self.bucket)
+        b = len(token_lists)
+        ids = np.full((b, t_pad), PAD, np.int32)
+        valid = np.zeros((b, t_pad), bool)
+        for i, toks in enumerate(token_lists):
+            ids[i, n_soft:n_soft + len(toks)] = toks
+            valid[i, :lens[i]] = True
+        embeds = M.embed_tokens(self.params, jnp.asarray(ids))
+        if soft is not None:
+            embeds = embeds.at[:, :n_soft].set(
+                jnp.asarray(soft)[None].astype(embeds.dtype))
+        positions = pos_offset + jnp.arange(t_pad, dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(positions, (b, t_pad))
+        return embeds, positions, jnp.asarray(valid), np.asarray(lens)
+
+    # ------------------------------------------------------------------
+    # SubGCache path
+    # ------------------------------------------------------------------
+    def _capacity_for(self, prefix_len: int, suffix_headroom: int = 64) -> int:
+        """Cache capacity bucket covering prefix + suffix + decode."""
+        need = prefix_len + suffix_headroom + self.max_new_tokens + 8
+        cap = min(512, self.max_cache_len)
+        while cap < need:
+            cap *= 2
+        if cap > self.max_cache_len:
+            raise ValueError(
+                f"prompt needs cache capacity {cap} > max_cache_len "
+                f"{self.max_cache_len}; raise max_cache_len")
+        return cap
+
+    def prefill_prefix(self, prefix_tokens: List[int],
+                       soft: Optional[np.ndarray] = None,
+                       enc: Optional[np.ndarray] = None) -> Tuple[PrefixState, float]:
+        """Representative-subgraph prefix prefill at batch=1."""
+        t0 = time.perf_counter()
+        embeds, positions, valid, lens = self._embed_padded(
+            [prefix_tokens], soft, 0,
+            pad_to=None if not self._stateful else
+            len(prefix_tokens) + (0 if soft is None else soft.shape[0]))
+        capacity = self._capacity_for(int(lens[0]))
+        cache = M.init_cache(self.cfg, 1, capacity,
+                             enc_len=0 if enc is None else enc.shape[1])
+        prefill = self._prefill_jit(1, embeds.shape[1])
+        cache, _, _ = prefill(self.params, embeds, positions, valid, cache)
+        jax.block_until_ready(cache)
+        dt = time.perf_counter() - t0
+        state = PrefixState(cache=cache, prefix_len=int(lens[0]),
+                            capacity=capacity,
+                            enc_len=0 if enc is None else enc.shape[1])
+        return state, dt
+
+    def generate_with_prefix(self, state: PrefixState,
+                             suffix_token_lists: Sequence[List[int]]
+                             ) -> Tuple[List[List[int]], dict]:
+        """Batched suffix prefill over the shared prefix + greedy decode.
+
+        Stateful (recurrent) archs are served in equal-length sub-batches
+        so no pad token ever enters the scan state (exactness)."""
+        if self._stateful:
+            groups = {}
+            for i, tkl in enumerate(suffix_token_lists):
+                groups.setdefault(len(tkl), []).append(i)
+            if len(groups) > 1:
+                outs = [None] * len(suffix_token_lists)
+                agg = {"prefill_s": 0.0, "decode_s": 0.0, "batch": 0}
+                for length, idxs in sorted(groups.items()):
+                    sub, t = self.generate_with_prefix(
+                        state, [suffix_token_lists[i] for i in idxs])
+                    for i, o in zip(idxs, sub):
+                        outs[i] = o
+                    agg["prefill_s"] += t["prefill_s"]
+                    agg["decode_s"] += t["decode_s"]
+                    agg["batch"] = max(agg["batch"], t["batch"])
+                return outs, agg
+        n = len(suffix_token_lists)
+        b = _bucket_batch(n)
+        pads = [list(t) for t in suffix_token_lists] + \
+               [[EOS]] * (b - n)                        # batch padding rows
+        t0 = time.perf_counter()
+        template = jax.eval_shape(
+            lambda: M.init_cache(self.cfg, b, state.capacity,
+                                 enc_len=state.enc_len))
+        cache = state.broadcast(template)
+        pad_to = len(suffix_token_lists[0]) if self._stateful else None
+        if self._stateful:
+            pads = [list(t)[:pad_to] + [EOS] * (pad_to - len(t))
+                    if len(t) < pad_to else list(t) for t in pads]
+        embeds, positions, valid, lens = self._embed_padded(
+            pads, None, state.prefix_len, pad_to=pad_to)
+        prefill = self._prefill_jit(b, embeds.shape[1])
+        cache, logits, _ = prefill(self.params, embeds, positions, valid,
+                                   cache)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(first)
+        t_prefill = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        decode = self._decode_jit(b)
+        out = decode(self.params, first,
+                     jnp.asarray(state.prefix_len + lens, jnp.int32), cache)
+        out = np.asarray(jax.block_until_ready(out))
+        t_decode = time.perf_counter() - t0
+        toks = [self._cut(out[i]) for i in range(n)]
+        return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
+                      "batch": b}
+
+    # ------------------------------------------------------------------
+    # baseline path
+    # ------------------------------------------------------------------
+    def generate(self, prompt_tokens: List[int],
+                 soft: Optional[np.ndarray] = None
+                 ) -> Tuple[List[int], dict]:
+        """Vanilla single-query generation (the paper's baseline)."""
+        t0 = time.perf_counter()
+        embeds, positions, valid, lens = self._embed_padded(
+            [prompt_tokens], soft, 0,
+            pad_to=None if not self._stateful else
+            len(prompt_tokens) + (0 if soft is None else soft.shape[0]))
+        cache = M.init_cache(self.cfg, 1, self._capacity_for(int(lens[0]), suffix_headroom=0))
+        prefill = self._prefill_jit(1, embeds.shape[1])
+        cache, logits, _ = prefill(self.params, embeds, positions, valid,
+                                   cache)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(first)
+        t_prefill = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        decode = self._decode_jit(1)
+        out = decode(self.params, first, jnp.asarray(lens, jnp.int32), cache)
+        out = np.asarray(jax.block_until_ready(out))
+        t_decode = time.perf_counter() - t0
+        return self._cut(out[0]), {"prefill_s": t_prefill,
+                                   "decode_s": t_decode}
+
+    def _cut(self, ids: np.ndarray) -> List[int]:
+        out = []
+        for t in ids.tolist():
+            if t == EOS:
+                break
+            out.append(int(t))
+        return out
+
+    def warmup(self, suffix_len: int = 32, batches: Sequence[int] = (1,)):
+        """Pre-compile the common shape buckets (excluded from timings)."""
+        for b in batches:
+            dummy = [[EOS] * suffix_len for _ in range(b)]
+            if b == 1:
+                self.generate(dummy[0])
+            else:
+                st, _ = self.prefill_prefix([EOS] * suffix_len)
+                self.generate_with_prefix(st, dummy)

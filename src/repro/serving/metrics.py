@@ -1,0 +1,88 @@
+"""Latency metrics matching the paper's definitions (App. A.3).
+
+Per query (all in seconds; reported in ms):
+  RT    = end-to-end: retrieval + prompt build + prefill + full decode
+  TTFT  = up to the first generated token
+  PFTT  = the LLM prefill + first-token portion of TTFT (the part KV-cache
+          reuse directly attacks)
+
+Shared work (cluster processing, representative-prefix prefill) is
+amortized uniformly over the cluster's members, mirroring how the paper's
+per-query averages absorb shared batch work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    query: str
+    answer: str
+    generated: str
+    correct: bool
+    retrieval_s: float = 0.0
+    cluster_share_s: float = 0.0      # clustering + rep-subgraph build / members
+    prompt_build_s: float = 0.0
+    prefix_share_s: float = 0.0       # representative prefix prefill / members
+    prefill_s: float = 0.0            # own (suffix) prefill
+    first_token_s: float = 0.0
+    decode_s: float = 0.0             # tokens after the first
+    prompt_tokens: int = 0
+    cached_tokens: int = 0            # tokens served from the prefix cache
+
+    @property
+    def pftt(self) -> float:
+        return self.prefix_share_s + self.prefill_s + self.first_token_s
+
+    @property
+    def ttft(self) -> float:
+        return (self.retrieval_s + self.cluster_share_s + self.prompt_build_s
+                + self.pftt)
+
+    @property
+    def rt(self) -> float:
+        return self.ttft + self.decode_s
+
+
+@dataclasses.dataclass
+class RunSummary:
+    name: str
+    acc: float
+    rt_ms: float
+    ttft_ms: float
+    pftt_ms: float
+    num_queries: int
+    cluster_processing_ms: float = 0.0
+    prefill_savings: float = 1.0
+
+    @staticmethod
+    def from_records(name: str, records: List["QueryRecord"],
+                     cluster_processing_s: float = 0.0,
+                     prefill_savings: float = 1.0) -> "RunSummary":
+        return RunSummary(
+            name=name,
+            acc=100.0 * float(np.mean([r.correct for r in records])),
+            rt_ms=1e3 * float(np.mean([r.rt for r in records])),
+            ttft_ms=1e3 * float(np.mean([r.ttft for r in records])),
+            pftt_ms=1e3 * float(np.mean([r.pftt for r in records])),
+            num_queries=len(records),
+            cluster_processing_ms=1e3 * cluster_processing_s,
+            prefill_savings=prefill_savings,
+        )
+
+    def row(self) -> str:
+        return (f"{self.name:28s} ACC {self.acc:6.2f}  RT {self.rt_ms:8.2f}ms  "
+                f"TTFT {self.ttft_ms:8.2f}ms  PFTT {self.pftt_ms:8.2f}ms")
+
+
+def speedup(base: RunSummary, ours: RunSummary) -> dict:
+    return {
+        "acc_delta": ours.acc - base.acc,
+        "rt_x": base.rt_ms / max(ours.rt_ms, 1e-9),
+        "ttft_x": base.ttft_ms / max(ours.ttft_ms, 1e-9),
+        "pftt_x": base.pftt_ms / max(ours.pftt_ms, 1e-9),
+    }

@@ -1,0 +1,55 @@
+"""npz checkpointing with flattened key paths (sharding-agnostic).
+
+Arrays are pulled to host (fully replicated view) and restored with the
+caller's sharding applied afterwards; metadata rides along as JSON.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(params: Any) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _base(path: str) -> str:
+    return path[:-4] if path.endswith(".npz") else path
+
+
+def save(path: str, params: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    base = _base(path)
+    np.savez(base + ".npz", **flat)
+    with open(base + ".meta.json", "w") as f:
+        json.dump({"metadata": metadata or {},
+                   "keys": sorted(flat.keys())}, f, indent=2)
+
+
+def load(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a params pytree or
+    eval_shape thereof).  Returns (params, metadata)."""
+    base = _base(path)
+    data = np.load(base + ".npz")
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)["metadata"]
+    flat = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    leaves = []
+    for kp, proto in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        arr = data[key]
+        assert arr.shape == tuple(proto.shape), (key, arr.shape, proto.shape)
+        leaves.append(jnp.asarray(arr, dtype=proto.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,94 @@
+"""AdamW with decoupled weight decay and global-norm clipping (pure JAX).
+
+Matches the paper's training setup (App. A.2: AdamW, lr 1e-5, wd 0.05)
+without external optimizer deps.  Optimizer state mirrors the param tree,
+so the distributed layer shards it with the same partition rules as the
+params (ZeRO-style when params are 2D-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 1e-5
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.05
+    clip_norm: float = 1.0
+    warmup_steps: int = 0
+
+
+def init_state(params: Any) -> dict:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    lr = jnp.asarray(cfg.learning_rate, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+        lr = lr * warm
+    return lr
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: AdamWConfig,
+                  trainable: Optional[Callable[[str], bool]] = None):
+    """Returns (new_params, new_state, metrics).
+
+    ``trainable``: optional predicate on the flattened param path; frozen
+    params (e.g. the frozen LLM backbone in G-Retriever training) get
+    zero updates but keep their state entries.
+    """
+    count = state["count"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)) \
+        if cfg.clip_norm else 1.0
+    lr = schedule(cfg, state["count"])
+
+    flat_params = jax.tree_util.tree_flatten_with_path(params)[0]
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+             for kp, _ in flat_params]
+    is_trainable = [True if trainable is None else trainable(p) for p in paths]
+
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state["m"])
+    v_leaves = treedef.flatten_up_to(state["v"])
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, tr in zip(p_leaves, g_leaves, m_leaves, v_leaves,
+                              is_trainable):
+        gf = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        upd = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * upd
+        if not tr:
+            p2, m2, v2 = p.astype(jnp.float32), m, v
+        new_p.append(p2.astype(p.dtype))
+        new_m.append(m2)
+        new_v.append(v2)
+
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    state2 = {"m": jax.tree_util.tree_unflatten(treedef, new_m),
+              "v": jax.tree_util.tree_unflatten(treedef, new_v),
+              "count": count}
+    return params2, state2, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,74 @@
+"""Training loop substrate: jitted train step, grad accumulation, eval."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.AdamWConfig,
+                    trainable: Optional[Callable[[str], bool]] = None,
+                    grad_accum: int = 1):
+    """Returns jitted (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``grad_accum > 1`` the batch's leading dim is split into
+    microbatches consumed by a scan (bounds activation memory for the
+    ≥100B training shapes)."""
+
+    def loss_fn(params, batch):
+        return M.train_loss(params, cfg, batch)
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def accum(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_acc + l / grad_accum,
+                        jax.tree.map(lambda a, b: a + b / grad_accum,
+                                     grad_acc, g)), None
+
+            zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                params)
+            (loss, grads), _ = jax.lax.scan(accum, (0.0, zero), micro)
+        params, opt_state, metrics = opt.apply_updates(
+            params, grads, opt_state, opt_cfg, trainable)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1))
+
+
+def train(params: Any, cfg: ModelConfig, opt_cfg: opt.AdamWConfig,
+          batches: Iterable[dict], num_steps: int,
+          trainable: Optional[Callable[[str], bool]] = None,
+          log_every: int = 20, log_fn=print):
+    """Simple host loop; returns (params, history)."""
+    state = opt.init_state(params)
+    step_fn = make_train_step(cfg, opt_cfg, trainable)
+    history = []
+    t0 = time.perf_counter()
+    it = iter(batches)
+    for i in range(num_steps):
+        batch = next(it)
+        params, state, metrics = step_fn(params, state, batch)
+        if (i + 1) % log_every == 0 or i == 0:
+            loss = float(metrics["loss"])
+            history.append({"step": i + 1, "loss": loss,
+                            "grad_norm": float(metrics["grad_norm"])})
+            log_fn(f"step {i+1:4d}  loss {loss:.4f}  "
+                   f"gnorm {float(metrics['grad_norm']):.2f}  "
+                   f"({time.perf_counter()-t0:.1f}s)")
+    return params, history

@@ -1,0 +1,123 @@
+"""Attention cache semantics: prefix split exactness, SWA, ring buffers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+
+KEY = jax.random.PRNGKey(0)
+D_MODEL, HQ, HKV, HD = 48, 4, 2, 12
+
+
+def _params():
+    return A.init_attention(KEY, D_MODEL, HQ, HKV, HD, jnp.float32)
+
+
+def _run(p, x, positions, cache=None, **kw):
+    return A.self_attention(p, x, num_heads=HQ, num_kv_heads=HKV,
+                            head_dim=HD, rope_theta=1e4,
+                            positions=positions, cache=cache, **kw)
+
+
+def _x(b, t, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, t, D_MODEL))
+
+
+def _pos(b, t, off=0):
+    return jnp.broadcast_to(off + jnp.arange(t, dtype=jnp.int32)[None],
+                            (b, t))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 8))
+def test_prefix_split_exactness(p_len, s_len):
+    """attention(full) == prefill(prefix) then suffix over cache — the
+    invariant SubGCache's correctness rests on."""
+    p = _params()
+    b, t = 2, p_len + s_len
+    x = _x(b, t)
+    full, _ = _run(p, x, _pos(b, t))
+    cache = A.init_kv_cache(b, HKV, 32, HD, jnp.float32)
+    _, cache = _run(p, x[:, :p_len], _pos(b, p_len), cache=cache)
+    suf, _ = _run(p, x[:, p_len:], _pos(b, s_len, off=p_len), cache=cache)
+    np.testing.assert_allclose(np.asarray(full[:, p_len:]), np.asarray(suf),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_swa_equals_full_when_window_covers():
+    p = _params()
+    b, t = 2, 12
+    x = _x(b, t)
+    full, _ = _run(p, x, _pos(b, t))
+    swa, _ = _run(p, x, _pos(b, t), window=t + 5)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(swa), atol=1e-6)
+
+
+def test_swa_ring_decode_matches_windowed_full():
+    """Decoding with a window-sized ring buffer == full-cache windowed."""
+    p = _params()
+    b, t, w = 1, 20, 8
+    x = _x(b, t + 1)
+    # reference: full cache, windowed attention
+    cache_full = A.init_kv_cache(b, HKV, 64, HD, jnp.float32)
+    _, cache_full = _run(p, x[:, :t], _pos(b, t), cache=cache_full, window=w)
+    ref_out, _ = _run(p, x[:, t:], _pos(b, 1, off=t), cache=cache_full,
+                      window=w)
+    # ring: capacity == window
+    cache_ring = A.init_kv_cache(b, HKV, w, HD, jnp.float32)
+    _, cache_ring = _run(p, x[:, :t], _pos(b, t), cache=cache_ring, window=w)
+    out, _ = _run(p, x[:, t:], _pos(b, 1, off=t), cache=cache_ring, window=w,
+                  ring=True)
+    np.testing.assert_allclose(np.asarray(ref_out), np.asarray(out),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_padded_suffix_rows_are_masked():
+    """Right-padded suffix tokens must not contaminate later decode."""
+    p = _params()
+    b = 2
+    x = _x(b, 6)
+    cache = A.init_kv_cache(b, HKV, 32, HD, jnp.float32)
+    valid = jnp.array([[1, 1, 1, 1, 0, 0], [1, 1, 1, 1, 1, 1]], bool)
+    _, cache = _run(p, x, _pos(b, 6), cache=cache, valid=valid)
+    # row 0 slots 4,5 must be invalid; row 1 fully valid
+    assert cache["pos"][0, 4] == -1 and cache["pos"][0, 5] == -1
+    assert cache["pos"][1, 5] == 5
+    # decode for row 0 at position 4 (its true length)
+    xq = _x(b, 1, seed=9)
+    pos_q = jnp.array([[4], [6]], jnp.int32)
+    out, _ = _run(p, xq, pos_q, cache=cache)
+    # reference: row 0 recomputed with only its 4 valid tokens
+    cache2 = A.init_kv_cache(1, HKV, 32, HD, jnp.float32)
+    _, cache2 = _run(p, x[:1, :4], _pos(1, 4), cache=cache2)
+    want, _ = _run(p, xq[:1], pos_q[:1], cache=cache2)
+    np.testing.assert_allclose(np.asarray(out[:1]), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_cache_write_ring_wraps():
+    cache = A.init_kv_cache(1, 1, 4, 8, jnp.float32)
+    k = jnp.ones((1, 1, 1, 8))
+    for pos in range(7):
+        cache = A.cache_write(cache, k * pos, k * pos,
+                              jnp.array([[pos]]), ring=True)
+    # capacity 4: slots hold positions 4,5,6,3
+    assert sorted(np.asarray(cache["pos"][0]).tolist()) == [3, 4, 5, 6]
+
+
+def test_chunked_attend_matches_unchunked():
+    b, t, s = 1, 2048, 64
+    q = jax.random.normal(KEY, (b, HQ, t, HD))
+    k = jax.random.normal(KEY, (b, s, HKV, HD))     # seq-major cache layout
+    v = jax.random.normal(KEY, (b, s, HKV, HD))
+    q_pos = _pos(b, t)
+    k_pos = _pos(b, s)
+    full = A._attend_block(q.reshape(b, HKV, HQ // HKV, t, HD), k, v, q_pos,
+                           k_pos, causal=True, window=0, scale=HD ** -0.5)
+    full = full.reshape(b, HQ, t, HD)
+    chunked = A.attend(q, k, v, q_pos, k_pos, causal=True)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(chunked, np.float32),
+                               atol=1e-5, rtol=1e-5)

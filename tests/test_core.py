@@ -1,0 +1,173 @@
+"""SubGCache core: subgraph algebra, clustering, planner, cache manager."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import CacheStats, ClusterCacheManager, PrefixState
+from repro.core.clustering import LINKAGES, hierarchical_clustering
+from repro.core.planner import plan_batch, plan_singleton
+from repro.core.subgraph import Subgraph, merge_subgraphs, textualize
+
+# ----------------------------------------------------------------------
+# subgraph algebra (hypothesis)
+# ----------------------------------------------------------------------
+edges_st = st.lists(
+    st.tuples(st.integers(0, 15), st.sampled_from(["a", "b", "c"]),
+              st.integers(0, 15)),
+    max_size=20)
+
+
+def _sg(edges):
+    return Subgraph.from_lists([], edges)
+
+
+@settings(max_examples=50, deadline=None)
+@given(edges_st, edges_st)
+def test_union_commutative(e1, e2):
+    assert _sg(e1).union(_sg(e2)) == _sg(e2).union(_sg(e1))
+
+
+@settings(max_examples=50, deadline=None)
+@given(edges_st, edges_st, edges_st)
+def test_union_associative(e1, e2, e3):
+    a, b, c = _sg(e1), _sg(e2), _sg(e3)
+    assert a.union(b).union(c) == a.union(b.union(c))
+
+
+@settings(max_examples=50, deadline=None)
+@given(edges_st)
+def test_union_idempotent(e1):
+    a = _sg(e1)
+    assert a.union(a) == a
+    assert merge_subgraphs([a, a, a]) == a
+
+
+@settings(max_examples=30, deadline=None)
+@given(edges_st, edges_st)
+def test_members_subset_of_representative(e1, e2):
+    """Paper §3.3: the representative subgraph contains every member."""
+    a, b = _sg(e1), _sg(e2)
+    rep = merge_subgraphs([a, b])
+    assert a.nodes <= rep.nodes and a.edges <= rep.edges
+    assert b.nodes <= rep.nodes and b.edges <= rep.edges
+
+
+@settings(max_examples=30, deadline=None)
+@given(edges_st, edges_st)
+def test_jaccard_bounds(e1, e2):
+    j = _sg(e1).jaccard(_sg(e2))
+    assert 0.0 <= j <= 1.0
+    assert _sg(e1).jaccard(_sg(e1)) == 1.0
+
+
+def test_textualize_deterministic_and_order_normalized():
+    node_text = [f"name: n{i}" for i in range(6)]
+    a = Subgraph.from_lists([0, 3], [(0, "r", 3), (3, "s", 5)])
+    b = Subgraph.from_lists([3, 0], [(3, "s", 5), (0, "r", 3)])
+    assert textualize(a, node_text) == textualize(b, node_text)
+    assert "src,edge_attr,dst" in textualize(a, node_text)
+
+
+# ----------------------------------------------------------------------
+# clustering
+# ----------------------------------------------------------------------
+def _norm(labels):
+    seen, out = {}, []
+    for v in labels:
+        out.append(seen.setdefault(v, len(seen)))
+    return tuple(out)
+
+
+@pytest.mark.parametrize("linkage", ["ward", "single", "complete", "average"])
+def test_clustering_matches_scipy(linkage):
+    scipy = pytest.importorskip("scipy.cluster.hierarchy")
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        m = int(rng.integers(6, 40))
+        x = rng.normal(size=(m, 8))
+        c = int(rng.integers(2, 6))
+        ours = _norm(hierarchical_clustering(x, c, linkage))
+        Z = scipy.linkage(x, method=linkage, metric="euclidean")
+        sp = _norm(scipy.fcluster(Z, c, criterion="maxclust"))
+        assert ours == sp, (linkage, m, c)
+
+
+def test_clustering_centroid_groups_duplicates():
+    # centroid differs from scipy on dendrogram inversions; check the
+    # partition property instead: identical points cluster together.
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(1, 8))
+    x = np.concatenate([a + 1e-6 * rng.normal(size=(10, 8)),
+                        a + 5.0 + 1e-6 * rng.normal(size=(10, 8))])
+    labels = hierarchical_clustering(x, 2, "centroid")
+    assert len(set(labels[:10])) == 1 and len(set(labels[10:])) == 1
+    assert labels[0] != labels[10]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 25), st.integers(1, 6),
+       st.sampled_from(list(LINKAGES)))
+def test_clustering_label_invariants(m, c, linkage):
+    rng = np.random.default_rng(m * 31 + c)
+    x = rng.normal(size=(m, 4))
+    labels = hierarchical_clustering(x, c, linkage)
+    assert labels.shape == (m,)
+    assert len(set(labels.tolist())) == min(c, m)
+    assert set(labels.tolist()) == set(range(min(c, m)))
+
+
+def test_clustering_one_cluster_and_m_clusters():
+    x = np.random.default_rng(0).normal(size=(12, 4))
+    assert set(hierarchical_clustering(x, 1, "ward")) == {0}
+    assert len(set(hierarchical_clustering(x, 12, "ward"))) == 12
+
+
+# ----------------------------------------------------------------------
+# planner
+# ----------------------------------------------------------------------
+def test_plan_batch_covers_all_queries_once():
+    rng = np.random.default_rng(0)
+    subs = [Subgraph.from_lists([i, i + 1], [(i, "r", i + 1)])
+            for i in range(10)]
+    emb = rng.normal(size=(10, 8))
+    plan = plan_batch(subs, emb, num_clusters=3)
+    seen = sorted(i for c in plan.clusters for i in c.member_indices)
+    assert seen == list(range(10))
+    for c in plan.clusters:
+        for i in c.member_indices:
+            assert subs[i].nodes <= c.representative.nodes
+
+
+def test_plan_singleton_degenerates_to_vanilla():
+    subs = [Subgraph.from_lists([i], []) for i in range(5)]
+    plan = plan_singleton(subs)
+    assert len(plan.clusters) == 5
+    assert all(len(c.member_indices) == 1 for c in plan.clusters)
+    assert plan.reuse_factor == 1.0
+
+
+# ----------------------------------------------------------------------
+# cache manager
+# ----------------------------------------------------------------------
+def test_cluster_cache_policy_enforced():
+    import jax.numpy as jnp
+    mgr = ClusterCacheManager()
+    s1 = PrefixState(cache={"k": jnp.zeros((1, 4))}, prefix_len=4,
+                     capacity=16)
+    with mgr.cluster(s1):
+        assert mgr.live_state is s1
+        with pytest.raises(AssertionError):
+            with mgr.cluster(s1):
+                pass
+    assert mgr.live_state is None      # released
+
+
+def test_cache_stats_accounting():
+    st_ = CacheStats()
+    st_.record_cluster(prefix_len=100, n_members=4)
+    for _ in range(4):
+        st_.record_member(member_prompt_len=110, suffix_len=10)
+    st_.finalize()
+    assert st_.prefill_tokens_baseline == 440
+    assert st_.prefill_tokens_cached == 100 + 40
+    assert abs(st_.prefill_savings - 440 / 140) < 1e-9

@@ -1,0 +1,146 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py jnp oracles
+(interpret mode on CPU; the kernels target TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk_qkv(b, hq, hkv, tq, s, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, tq, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,hq,hkv,tq,s,d", [
+    (1, 4, 4, 8, 32, 32),      # MHA
+    (2, 8, 2, 16, 64, 64),     # GQA
+    (2, 4, 1, 7, 40, 32),      # MQA, unaligned lengths
+    (1, 2, 2, 33, 129, 16),    # prime-ish padding path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefix_attention_sweep(b, hq, hkv, tq, s, d, dtype):
+    q, k, v = _mk_qkv(b, hq, hkv, tq, s, d, dtype)
+    prefix = s // 2
+    k_pos = jnp.where(jnp.arange(s)[None] < prefix + tq,
+                      jnp.arange(s)[None], -1)
+    k_pos = jnp.broadcast_to(k_pos, (b, s))
+    q_pos = jnp.broadcast_to(prefix + jnp.arange(tq)[None], (b, tq))
+    out = ops.prefix_attention(q, k, v, q_pos, k_pos, block_q=8, block_k=16)
+    want = ref.prefix_attention_ref(q, k, v, q_pos, k_pos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("window", [4, 16, 0])
+def test_prefix_attention_window(window):
+    q, k, v = _mk_qkv(2, 4, 2, 12, 48, 32, jnp.float32)
+    k_pos = jnp.broadcast_to(jnp.arange(48)[None], (2, 48))
+    q_pos = jnp.broadcast_to(36 + jnp.arange(12)[None], (2, 12))
+    out = ops.prefix_attention(q, k, v, q_pos, k_pos, window=window,
+                               block_q=8, block_k=16)
+    want = ref.prefix_attention_ref(q, k, v, q_pos, k_pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_prefix_attention_fully_masked_rows_zero():
+    """Padded queries whose every key is masked must output 0, not NaN."""
+    q, k, v = _mk_qkv(1, 2, 2, 4, 16, 16, jnp.float32)
+    k_pos = jnp.full((1, 16), -1, jnp.int32)         # nothing valid
+    q_pos = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+    out = ops.prefix_attention(q, k, v, q_pos, k_pos, block_q=4, block_k=8)
+    assert bool(jnp.all(out == 0.0))
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 4, 4, 32, 32), (2, 8, 2, 64, 64), (3, 6, 1, 100, 32),
+])
+def test_decode_gqa_sweep(b, hq, hkv, s, d):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, hkv, s, d))
+    v = jax.random.normal(ks[2], (b, hkv, s, d))
+    q_pos = jnp.arange(b) * 3 + s // 2
+    k_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out = ops.decode_gqa(q, k, v, q_pos, k_pos, block_k=16)
+    want = ref.decode_gqa_ref(q, k, v, q_pos, k_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_decode_gqa_ring_buffer_order_invariance():
+    """Slot order must not matter — only stored positions."""
+    b, hq, hkv, s, d = 1, 4, 2, 16, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, hkv, s, d))
+    v = jax.random.normal(ks[2], (b, hkv, s, d))
+    k_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q_pos = jnp.array([s])
+    base = ops.decode_gqa(q, k, v, q_pos, k_pos, block_k=8)
+    perm = jax.random.permutation(KEY, s)
+    out = ops.decode_gqa(q, k[:, :, perm], v[:, :, perm], q_pos,
+                         k_pos[:, perm], block_k=8)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(out), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("bt,t,di,n,bd,btk", [
+    (1, 16, 32, 8, 16, 8), (2, 37, 64, 16, 32, 16), (2, 64, 128, 8, 64, 64),
+])
+def test_ssm_scan_sweep(bt, t, di, n, bd, btk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (bt, t, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, t, di))) * 0.1
+    B = jax.random.normal(ks[2], (bt, t, n))
+    C = jax.random.normal(ks[3], (bt, t, n))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, n)))
+    h0 = jax.random.normal(KEY, (bt, di, n))
+    y, hT = ops.ssm_scan(x, dt, B, C, A, h0, block_d=bd, block_t=btk)
+    yr, hTr = ref.ssm_scan_ref(x, dt, B, C, A, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTr), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssm_scan_chunked_equals_onechunk():
+    """State carry across time-chunk grid steps must be exact."""
+    bt, t, di, n = 1, 64, 32, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (bt, t, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, t, di))) * 0.1
+    B = jax.random.normal(ks[2], (bt, t, n))
+    C = jax.random.normal(ks[3], (bt, t, n))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, n)))
+    y1, h1 = ops.ssm_scan(x, dt, B, C, A, block_d=32, block_t=64)
+    y2, h2 = ops.ssm_scan(x, dt, B, C, A, block_d=32, block_t=8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,t,w,bw,btk", [
+    (1, 16, 32, 16, 8), (2, 37, 48, 16, 16), (2, 64, 128, 64, 32),
+])
+def test_rglru_scan_sweep(b, t, w, bw, btk):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (b, t, w))
+    a_log = -jax.nn.softplus(jax.random.normal(ks[1], (b, t, w)))
+    h0 = jax.random.normal(KEY, (b, w))
+    y, hT = ops.rglru_scan(x, a_log, h0, block_w=bw, block_t=btk)
+    yr, hTr = ref.rglru_scan_ref(x, a_log, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTr), atol=1e-5,
+                               rtol=1e-5)

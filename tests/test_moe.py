@@ -1,0 +1,58 @@
+"""MoE sort-dispatch vs dense oracle; capacity semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe as moe_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("b,s,d,e,k,f", [
+    (1, 8, 16, 4, 1, 32), (2, 17, 32, 4, 2, 64), (3, 5, 16, 8, 2, 32),
+    (2, 1, 16, 4, 2, 32),          # decode shape S=1
+])
+def test_moe_matches_dense_oracle(b, s, d, e, k, f):
+    p = moe_lib.init_moe(KEY, d, f, e, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(b * 7 + s), (b, s, d))
+    out, aux = moe_lib.apply_moe(p, x, top_k=k, capacity_factor=float(e))
+    ref = moe_lib.apply_moe_dense_oracle(p, x, top_k=k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_dense_residual():
+    p = moe_lib.init_moe(KEY, 16, 32, 4, jnp.float32, dense_residual_d_ff=24)
+    x = jax.random.normal(KEY, (2, 6, 16))
+    out, _ = moe_lib.apply_moe(p, x, top_k=2, capacity_factor=4.0)
+    ref = moe_lib.apply_moe_dense_oracle(p, x, top_k=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_moe_capacity_drops_reduce_output():
+    """With capacity 0-ish factor, overflow tokens are dropped (output 0
+    contribution), never corrupted."""
+    d, e, f = 16, 4, 32
+    p = moe_lib.init_moe(KEY, d, f, e, jnp.float32)
+    x = jax.random.normal(KEY, (1, 64, d))
+    tight, _ = moe_lib.apply_moe(p, x, top_k=2, capacity_factor=0.05)
+    loose, _ = moe_lib.apply_moe(p, x, top_k=2, capacity_factor=8.0)
+    assert np.all(np.isfinite(np.asarray(tight)))
+    # tight capacity must zero-out some tokens' expert contributions
+    diff = np.abs(np.asarray(tight) - np.asarray(loose)).max()
+    assert diff > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 12))
+def test_moe_aux_loss_bounds(b, s):
+    p = moe_lib.init_moe(KEY, 8, 16, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(s), (b, s, 8))
+    _, aux = moe_lib.apply_moe(p, x, top_k=2)
+    # Switch aux loss: >= 1 at perfect balance... actually >= it is ~1 when
+    # uniform; bounded by E when fully collapsed
+    assert 0.0 < float(aux) <= 4.0 + 1e-6

@@ -1,0 +1,52 @@
+"""Recurrent-state architectures in the serving engine: prefix-state
+reuse must be exact (no pad token may enter the scan state)."""
+import jax
+import pytest
+
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a b c d e f g shared prefix question answer"])
+
+
+def _engine(cfg, tok):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return ServingEngine(params, cfg, tok, max_cache_len=512,
+                         max_new_tokens=6)
+
+
+@pytest.mark.parametrize("family_kw", [
+    dict(family="ssm", num_layers=2, d_model=64, num_heads=0,
+         num_kv_heads=0, d_ff=0, ssm_state=8),
+    dict(family="hybrid", num_layers=3, d_model=64, num_heads=4,
+         num_kv_heads=1, d_ff=128,
+         block_pattern=("rglru", "rglru", "attn_local"), local_window=16),
+])
+def test_stateful_prefix_reuse_exact(family_kw, tok):
+    cfg = ModelConfig(name="t", vocab_size=tok.vocab_size, dtype="float32",
+                      **family_kw)
+    eng = _engine(cfg, tok)
+    assert eng._stateful
+    prefix = tok.encode("shared prefix a b c d e f g", bos=True)
+    suffixes = [tok.encode("question the quick answer"),
+                tok.encode("question lazy answer"),          # ragged length
+                tok.encode("question brown fox jumps answer")]
+    state, _ = eng.prefill_prefix(prefix)
+    outs, _ = eng.generate_with_prefix(state, suffixes)
+    for sfx, got in zip(suffixes, outs):
+        ref, _ = eng.generate(prefix + sfx)
+        assert ref == got, (tok.decode(sfx), tok.decode(ref), tok.decode(got))
+
+
+def test_attention_arch_not_stateful(tok):
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=tok.vocab_size, dtype="float32")
+    eng = _engine(cfg, tok)
+    assert not eng._stateful
