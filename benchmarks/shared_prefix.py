@@ -1,0 +1,153 @@
+"""Broadcast vs shared-prefix cascade serving across member batch sizes.
+
+Measures what the split prefix/suffix cache actually changes (DESIGN.md
+§5), per member batch size B:
+
+  * ``cache_bytes``        — HBM allocated for KV slots while serving one
+                             cluster (prefix state + member cache).
+                             Broadcast pays B×(P+S) slots, cascade pays
+                             P + B×S.
+  * ``prefix_read_bytes``  — prefix KV bytes streamed per suffix-prefill
+                             layer pass: broadcast re-reads the
+                             replicated prefix B times, cascade reads the
+                             batch-1 buffers once per kv-head group.
+  * ``prefill_s`` / ``decode_s`` — measured wall time (post-warmup).
+
+Writes ``BENCH_shared_prefix.json`` at the repo root to seed the perf
+trajectory.  Runs on CPU in interpret-free XLA mode; no workbench
+training needed (timing is backbone-agnostic, so random weights do).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine, _bucket_len
+
+
+def bench_config(vocab_size: int) -> ModelConfig:
+    """Small attention-only GQA stack (llama-family shape)."""
+    return ModelConfig(name="bench-cascade", family="dense", num_layers=4,
+                       d_model=128, num_heads=8, num_kv_heads=2, head_dim=16,
+                       d_ff=256, vocab_size=vocab_size, dtype="float32")
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _kv_bytes_per_layer(cfg: ModelConfig, batch: int, capacity: int) -> int:
+    """K+V bytes of one layer's cache block (the HBM the attention pass
+    must stream)."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return 2 * batch * capacity * cfg.num_kv_heads * cfg.head_dim_ * itemsize
+
+
+def run(batch_sizes=(2, 4, 8, 16), prefix_len: int = 192,
+        suffix_len: int = 24, max_new_tokens: int = 8, repeats: int = 3,
+        log_fn=print):
+    rng = np.random.default_rng(0)
+    tok = Tokenizer.train(["a b c d e f g h"])
+    cfg = bench_config(max(64, tok.vocab_size))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    n_layers = len(cfg.layer_specs())
+
+    engines = {
+        "cascade": ServingEngine(params, cfg, tok, max_cache_len=1024,
+                                 max_new_tokens=max_new_tokens),
+        "broadcast": ServingEngine(params, cfg, tok, max_cache_len=1024,
+                                   max_new_tokens=max_new_tokens,
+                                   split_prefix=False),
+    }
+    assert engines["cascade"].use_split_prefix
+    assert not engines["broadcast"].use_split_prefix
+
+    prefix = [int(t) for t in rng.integers(4, cfg.vocab_size,
+                                           size=prefix_len)]
+    rows = []
+    for b in batch_sizes:
+        suffixes = [[int(t) for t in rng.integers(4, cfg.vocab_size,
+                                                  size=suffix_len)]
+                    for _ in range(b)]
+        row = {"batch": b, "prefix_len": prefix_len,
+               "suffix_len": suffix_len}
+        for mode, eng in engines.items():
+            state, _ = eng.prefill_prefix(prefix, _record=False)
+            eng.generate_with_prefix(state, suffixes,
+                                     _record=False)        # compile warmup
+            best = {"prefill_s": float("inf"), "decode_s": float("inf")}
+            for _ in range(repeats):
+                state, _ = eng.prefill_prefix(prefix)
+                _, t = eng.generate_with_prefix(state, suffixes)
+                best["prefill_s"] = min(best["prefill_s"], t["prefill_s"])
+                best["decode_s"] = min(best["decode_s"], t["decode_s"])
+
+            # prefix-read accounting uses prefix TOKENS on both sides
+            # (not each mode's capacity bucket) so the ratio is the
+            # honest "once per member vs once": exactly B
+            if mode == "cascade":
+                suffix_cap = eng._suffix_capacity_for(
+                    _bucket_len(suffix_len, eng.bucket))
+                member_cache = jax.eval_shape(
+                    lambda e=eng, c=suffix_cap:
+                    M.init_suffix_cache(e.cfg, b, c))
+                # batch-1 prefix buffers read once per kv-head group
+                prefix_read = n_layers * _kv_bytes_per_layer(
+                    cfg, 1, state.prefix_len)
+            else:
+                member_cache = jax.eval_shape(
+                    lambda e=eng, s=state: M.init_cache(e.cfg, b, s.capacity))
+                # replicated prefix re-streamed once per member
+                prefix_read = n_layers * _kv_bytes_per_layer(
+                    cfg, b, state.prefix_len)
+            row[mode] = {
+                "cache_bytes": _tree_bytes(state.cache)
+                               + _tree_bytes(member_cache),
+                "prefix_read_bytes_per_prefill": prefix_read,
+                "prefill_s": round(best["prefill_s"], 6),
+                "decode_s": round(best["decode_s"], 6),
+            }
+        c, br = row["cascade"], row["broadcast"]
+        row["cache_bytes_ratio"] = round(br["cache_bytes"]
+                                         / c["cache_bytes"], 3)
+        row["prefix_read_ratio"] = round(
+            br["prefix_read_bytes_per_prefill"]
+            / c["prefix_read_bytes_per_prefill"], 3)
+        row["prefill_speedup"] = round(br["prefill_s"] / c["prefill_s"], 3)
+        log_fn(f"B={b:3d}: cache {br['cache_bytes']/2**20:7.1f}MiB -> "
+               f"{c['cache_bytes']/2**20:7.1f}MiB (x{row['cache_bytes_ratio']:.2f})"
+               f" | prefix-read x{row['prefix_read_ratio']:.2f}"
+               f" | prefill {br['prefill_s']*1e3:8.2f}ms -> "
+               f"{c['prefill_s']*1e3:8.2f}ms (x{row['prefill_speedup']:.2f})")
+        rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[2, 4, 8, 16])
+    ap.add_argument("--prefix-len", type=int, default=192)
+    ap.add_argument("--suffix-len", type=int, default=24)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_shared_prefix.json"))
+    args = ap.parse_args()
+    rows = run(tuple(args.sizes), prefix_len=args.prefix_len,
+               suffix_len=args.suffix_len)
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "shared_prefix_cascade_vs_broadcast",
+                   "config": "bench-cascade (4L d128 GQA 8:2, f32)",
+                   "rows": rows}, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import argparse
 
-from repro.rag.workbench import build_workbench, test_items
+from repro.rag.workbench import build_workbench, serving_report, test_items
 from repro.serving.metrics import speedup
 
 
@@ -18,11 +18,14 @@ def run(sizes=(25, 50, 100), dataset: str = "scene", num_clusters: int = 2,
         rb, sb = pipe.run_baseline(items)
         _, ss, _, stats = pipe.run_subgcache(items, num_clusters=num_clusters)
         sp = speedup(sb, ss)
+        rep = serving_report(pipe)
         log_fn(f"batch {n:4d}: base ACC {sb.acc:6.2f} TTFT {sb.ttft_ms:8.2f}"
                f" | ours ACC {ss.acc:6.2f} TTFT {ss.ttft_ms:8.2f}"
                f" | dACC {sp['acc_delta']:+5.2f} TTFT x{sp['ttft_x']:.2f}"
-               f" PFTT x{sp['pftt_x']:.2f}")
-        out.append({"batch": n, **sp})
+               f" PFTT x{sp['pftt_x']:.2f}"
+               f" | prefill savings x{rep['prefill_savings']:.2f}"
+               f" ({'cascade' if rep['split_prefix'] else 'broadcast'})")
+        out.append({"batch": n, **sp, **rep})
     return out
 
 

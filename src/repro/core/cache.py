@@ -11,9 +11,13 @@ frees them after the cluster is served.  TPU adaptation (DESIGN.md §3):
   ``max_prefix_len`` and each cluster overwrites it (donated arg on TPU),
   so memory is bounded by ONE representative prompt at all times —
   the same bound the paper argues for, without allocator churn.
-* member queries run as ONE batched suffix prefill; the prefix state is
-  computed at batch=1 and broadcast over the member batch dimension
-  (beyond-paper optimization; the paper loops members sequentially).
+* member queries run as ONE batched suffix prefill (beyond-paper
+  optimization; the paper loops members sequentially).  Attention-only
+  stacks keep the prefix at batch=1 end to end: the engine's split
+  prefix/suffix cascade (DESIGN.md §5) attends the live buffers in
+  place, so ``broadcast`` survives only as the fallback for stateful
+  (Mamba / RG-LRU) and cross-attention stacks whose per-member state
+  is tiny.
 """
 from __future__ import annotations
 
@@ -35,6 +39,12 @@ class PrefixState:
     def broadcast(self, template: Any) -> Any:
         """Broadcast the batch-1 prefix state onto ``template`` shapes
         (the member-batch cache structure, e.g. from ``jax.eval_shape``).
+
+        Fallback path only: attention-only stacks serve members via the
+        split prefix/suffix cascade without replicating the prefix KV
+        (engine ``use_split_prefix``); this materialized copy remains for
+        recurrent (Mamba / RG-LRU) and cross-attention state, which is
+        O(d_state), not O(prefix_len).
 
         KV buffers and recurrent states after an identical prefix are
         identical across members, so this is exact, not approximate.
@@ -59,6 +69,7 @@ class CacheStats:
     """
     num_queries: int = 0
     num_clusters: int = 0
+    clusters_split: int = 0      # clusters served via the cascade (vs broadcast)
     cache_hits: int = 0
     prefill_tokens_baseline: int = 0
     prefill_tokens_cached: int = 0
@@ -71,11 +82,23 @@ class CacheStats:
             return 1.0
         return self.prefill_tokens_baseline / self.prefill_tokens_cached
 
-    def record_cluster(self, prefix_len: int, n_members: int) -> None:
+    def record_prefix(self, prefix_len: int, split: bool = False) -> None:
+        """One representative-prefix prefill (call when the prefix is
+        COMPUTED, not when it is served: a state reused across several
+        serve calls still cost one prefill)."""
         self.num_clusters += 1
+        self.prefix_tokens_computed += prefix_len
+        if split:
+            self.clusters_split += 1
+
+    def record_served(self, n_members: int) -> None:
         self.num_queries += n_members
         self.cache_hits += n_members
-        self.prefix_tokens_computed += prefix_len
+
+    def record_cluster(self, prefix_len: int, n_members: int,
+                       split: bool = False) -> None:
+        self.record_prefix(prefix_len, split=split)
+        self.record_served(n_members)
 
     def record_member(self, member_prompt_len: int, suffix_len: int) -> None:
         self.prefill_tokens_baseline += member_prompt_len
@@ -99,6 +122,12 @@ class ClusterCacheManager:
     def __init__(self) -> None:
         self._live: Optional[PrefixState] = None
         self.stats = CacheStats()
+
+    def reset_stats(self) -> CacheStats:
+        """Start a fresh accounting window (e.g. per benchmark run);
+        returns the new live ``CacheStats`` the engine records into."""
+        self.stats = CacheStats()
+        return self.stats
 
     def cluster(self, state: PrefixState):
         mgr = self

@@ -10,6 +10,7 @@ import jax
 from repro.kernels import decode_gqa as _decode
 from repro.kernels import prefix_attention as _prefix
 from repro.kernels import rglru_scan as _rglru
+from repro.kernels import shared_prefix as _shared
 from repro.kernels import ssm_scan as _ssm
 
 
@@ -22,6 +23,29 @@ def prefix_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
     return _prefix.prefix_attention(
         q, k, v, q_pos, k_pos, causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+def attention_partial(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                      block_q=128, block_k=128):
+    """Partial (online-softmax) attention; KV batch may be 1 (shared
+    prefix, read once per kv-head group) or the query batch."""
+    return _shared.attention_partial(
+        q, k, v, q_pos, k_pos, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window=0, block_k=128):
+    """Single-token decode attention in partial form (decode-shaped
+    [group, d] q tiles; KV batch may be 1 = shared prefix)."""
+    return _shared.decode_gqa_partial(q, k, v, q_pos, k_pos, window=window,
+                                      block_k=block_k,
+                                      interpret=_interpret())
+
+
+def merge_partials(o1, m1, l1, o2, m2, l2, *, block_q=128):
+    """Exact LSE-merge of two attention partials over disjoint keys."""
+    return _shared.merge_partials(o1, m1, l1, o2, m2, l2, block_q=block_q,
+                                  interpret=_interpret())
 
 
 def decode_gqa(q, k, v, q_pos, k_pos, *, window=0, block_k=128):

@@ -40,6 +40,66 @@ def prefix_attention_ref(q, k, v, q_pos, k_pos, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def attention_partial_ref(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                          window: int = 0):
+    """Partial masked GQA attention in online-softmax form (oracle).
+
+    q: [B, Hq, Tq, D]; k, v: [Bk, Hkv, S, D] with Bk in (1, B) — Bk == 1
+    is the SubGCache shared-prefix case (every member attends the same
+    representative KV); q_pos: [B, Tq]; k_pos: [Bk, S] (-1 = empty slot).
+
+    Returns (out [B,Hq,Tq,D] f32 normalized, m [B,Hq,Tq], l [B,Hq,Tq])
+    such that ``merge_partials_ref`` over disjoint key sets reproduces
+    full softmax attention exactly.  Partials stay f32 (one rounding to
+    the model dtype, after the merge).  Fully-masked rows give out=0,
+    m=NEG_INF, l=0.
+    """
+    b, hq, tq, d = q.shape
+    bk, hkv = k.shape[0], k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, tq, d).astype(jnp.float32)
+    if bk == 1:          # shared KV: contract against the single batch row
+        scores = jnp.einsum("bhgtd,hsd->bhgts", qg, k[0].astype(jnp.float32))
+    else:
+        scores = jnp.einsum("bhgtd,bhsd->bhgts", qg, k.astype(jnp.float32))
+    scores = scores * (d ** -0.5)
+    mask = k_pos[:, None, :] >= 0                        # [Bk, 1, S]
+    if causal:
+        mask = mask & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    mask = jnp.broadcast_to(mask[:, None, None, :, :],
+                            scores.shape)                # [B,Hkv,G,Tq,S]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                         # [B,Hkv,G,Tq]
+    p = jnp.where(mask, jnp.exp(scores - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    vv = v.astype(jnp.float32)
+    if bk == 1:
+        out = jnp.einsum("bhgts,hsd->bhgtd", p, vv[0])
+    else:
+        out = jnp.einsum("bhgts,bhsd->bhgtd", p, vv)
+    out = out / jnp.where(l > 0, l, 1.0)[..., None]
+    return (out.reshape(b, hq, tq, d),
+            m.reshape(b, hq, tq), l.reshape(b, hq, tq))
+
+
+def merge_partials_ref(o1, m1, l1, o2, m2, l2):
+    """LSE-merge of two online-softmax partials over disjoint key sets.
+
+    o*: [B, Hq, Tq, D] normalized partial outputs; m*, l*: [B, Hq, Tq].
+    Returns merged (out, m, l); exact (not approximate) flash-style merge.
+    """
+    m = jnp.maximum(m1, m2)
+    w1 = jnp.exp(m1 - m) * l1
+    w2 = jnp.exp(m2 - m) * l2
+    l = w1 + w2
+    safe = jnp.where(l > 0, l, 1.0)
+    out = (o1.astype(jnp.float32) * w1[..., None]
+           + o2.astype(jnp.float32) * w2[..., None]) / safe[..., None]
+    return out.astype(o1.dtype), m, l
+
+
 def decode_gqa_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
     """Single-token GQA decode oracle.
 

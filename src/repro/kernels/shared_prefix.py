@@ -1,0 +1,312 @@
+"""Pallas TPU kernels for shared-prefix cascade attention.
+
+SubGCache serves a whole cluster against ONE representative-prefix KV.
+The broadcast path replicates that KV over the member batch before
+attending; these kernels instead let batched queries ``[B, Hq, Tq, D]``
+attend over a **batch-1 shared prefix KV** ``[1, Hkv, P, D]`` directly —
+each prefix KV tile is streamed HBM->VMEM once per kv-head group, never
+per member.  The result is a *partial* attention ``(out, m, l)`` in
+online-softmax form; a second (elementwise) kernel merges it with the
+per-member suffix partial, which is numerically exact: softmax over
+``[prefix ++ suffix]`` equals the LSE-merge of the two partials.
+
+``attention_partial`` also accepts per-member KV (kv batch == q batch),
+so the suffix side of the cascade uses the same kernel.
+
+Tiling mirrors ``prefix_attention.py``: grid (B, Hq, nq, nk), KV minor,
+online-softmax scratch in VMEM persisting across the nk loop; the merge
+kernel is a pure-VPU elementwise pass on (B, Hq, nq) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _partial_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+                    o_ref, m_out_ref, l_out_ref,
+                    acc_ref, m_ref, l_ref, *, causal: bool, window: int,
+                    nk: int, scale: float):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    qp = qpos_ref[0]                                     # [bq] int32
+    kp = kpos_ref[0]                                     # [bk] int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = kp[None, :] >= 0
+    if causal:
+        mask = mask & (kp[None, :] <= qp[:, None])
+    if window:
+        mask = mask & (qp[:, None] - kp[None, :] < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                                 # [bq]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)                          # kill exp(NEG_INF-m)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+    l_ref[:, 0] = l_new
+
+    @pl.when(j == nk - 1)
+    def _done():
+        l = l_ref[:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+        m_out_ref[0, 0] = m_ref[:, 0]
+        l_out_ref[0, 0] = l
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def attention_partial(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                      window: int = 0, block_q: int = 128,
+                      block_k: int = 128, interpret: bool = True):
+    """Partial masked GQA attention in online-softmax form.
+
+    q: [B, Hq, Tq, D]; k, v: [Bk, Hkv, S, D] with ``Bk in (1, B)`` —
+    ``Bk == 1`` is the shared-prefix case where every member attends the
+    same KV and each KV tile is read once per kv-head group, not once
+    per member.  q_pos: [B, Tq]; k_pos: [Bk, S] (-1 marks empty slots).
+
+    Returns ``(out [B,Hq,Tq,D] f32, m [B,Hq,Tq] f32, l [B,Hq,Tq] f32)``
+    where ``out`` is already normalized by ``l`` (zero for fully masked
+    rows).  Partials stay f32 so the cascade merge rounds to the model
+    dtype exactly once, like single-pass attention; cast after merging.
+    """
+    b, hq, tq, d = q.shape
+    bk_b, hkv, s_len = k.shape[0], k.shape[1], k.shape[2]
+    assert bk_b in (1, b), (bk_b, b)
+    shared = bk_b == 1
+    group = hq // hkv
+    scale = d ** -0.5
+
+    bq = min(block_q, tq)
+    bk = min(block_k, s_len)
+    tq_p = ((tq + bq - 1) // bq) * bq
+    s_p = ((s_len + bk - 1) // bk) * bk
+    if tq_p != tq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, tq_p - tq), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, tq_p - tq)), constant_values=0)
+    if s_p != s_len:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, s_p - s_len)), constant_values=-1)
+
+    nq, nk = tq_p // bq, s_p // bk
+    grid = (b, hq, nq, nk)
+    kv_b = (lambda b_: 0) if shared else (lambda b_: b_)
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_partial_kernel, causal=causal, window=window,
+                          nk=nk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b_, h, i, j: (b_, i)),          # q_pos
+            pl.BlockSpec((1, bk), lambda b_, h, i, j: (kv_b(b_), j)),    # k_pos
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (kv_b(b_), h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (kv_b(b_), h // group, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, i, j: (b_, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, i, j: (b_, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, tq_p, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),     # acc
+            pltpu.VMEM((bq, 1), jnp.float32),     # m
+            pltpu.VMEM((bq, 1), jnp.float32),     # l
+        ],
+        interpret=interpret,
+    )(q_pos, k_pos, q, k, v)
+    return out[:, :, :tq, :], m[:, :, :tq], l[:, :, :tq]
+
+
+def _decode_partial_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+                           o_ref, m_out_ref, l_out_ref,
+                           acc_ref, m_ref, l_ref, *, window: int, nk: int,
+                           scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [g, d]
+    k = k_ref[0, 0].astype(jnp.float32)                    # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    qp = qpos_ref[0, 0]                                    # scalar int32
+    kp = kpos_ref[0]                                       # [bk]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[:, 0] = alpha * l_ref[:, 0] + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(j == nk - 1)
+    def _done():
+        l = l_ref[:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = acc_ref[...] / safe[:, None]
+        m_out_ref[0, 0] = m_ref[:, 0]
+        l_out_ref[0, 0] = l
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
+def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window: int = 0,
+                       block_k: int = 128, interpret: bool = True):
+    """Single-token GQA decode attention in partial form.
+
+    Same decode-shaped tiling as ``decode_gqa`` — grid (B, Hkv, nk) with
+    a [group, d] q tile so the whole q-head group shares one KV stream —
+    but emitting ``(out [B,Hq,D] f32, m [B,Hq], l [B,Hq])`` for the
+    cascade merge.  k, v: [Bk, Hkv, S, D] with ``Bk in (1, B)``;
+    ``Bk == 1`` is the shared prefix (read once per kv-head, not per
+    member).  Causal masking is always applied (a decode query is at or
+    past every cached position, so it is correct for both sides).
+    """
+    b, hq, d = q.shape
+    bk_b, hkv, s_len = k.shape[0], k.shape[1], k.shape[2]
+    assert bk_b in (1, b), (bk_b, b)
+    shared = bk_b == 1
+    group = hq // hkv
+    scale = d ** -0.5
+
+    bk = min(block_k, s_len)
+    s_p = ((s_len + bk - 1) // bk) * bk
+    if s_p != s_len:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, s_p - s_len)), constant_values=-1)
+    nk = s_p // bk
+    kv_b = (lambda b_: 0) if shared else (lambda b_: b_)
+
+    qg = q.reshape(b, hkv, group, d)
+    qp2 = q_pos.reshape(b, 1).astype(jnp.int32)
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_decode_partial_kernel, window=window, nk=nk,
+                          scale=scale),
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h, j: (b_, 0)),            # q_pos
+            pl.BlockSpec((1, bk), lambda b_, h, j: (kv_b(b_), j)),     # k_pos
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (kv_b(b_), h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (kv_b(b_), h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, group), lambda b_, h, j: (b_, h, 0)),
+            pl.BlockSpec((1, 1, group), lambda b_, h, j: (b_, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, group, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp2, k_pos, qg, k, v)
+    return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
+
+
+def _merge_kernel(o1_ref, m1_ref, l1_ref, o2_ref, m2_ref, l2_ref,
+                  o_ref, m_out_ref, l_out_ref):
+    o1 = o1_ref[0, 0].astype(jnp.float32)                # [bq, d]
+    o2 = o2_ref[0, 0].astype(jnp.float32)
+    m1, l1 = m1_ref[0, 0], l1_ref[0, 0]                  # [bq]
+    m2, l2 = m2_ref[0, 0], l2_ref[0, 0]
+
+    m = jnp.maximum(m1, m2)
+    w1 = jnp.exp(m1 - m) * l1                            # un-normalized masses
+    w2 = jnp.exp(m2 - m) * l2
+    l = w1 + w2
+    safe = jnp.where(l > 0, l, 1.0)
+    o = (o1 * w1[:, None] + o2 * w2[:, None]) / safe[:, None]
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+    m_out_ref[0, 0] = m
+    l_out_ref[0, 0] = l
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def merge_partials(o1, m1, l1, o2, m2, l2, *, block_q: int = 128,
+                   interpret: bool = True):
+    """LSE-merge two partial attentions over disjoint key sets.
+
+    o*: [B, Hq, Tq, D] (normalized partial outputs); m*, l*: [B, Hq, Tq]
+    online-softmax stats.  Returns the merged ``(out, m, l)``; merging is
+    associative so cascades deeper than prefix+suffix can chain it.
+    """
+    b, hq, tq, d = o1.shape
+    bq = min(block_q, tq)
+    tq_p = ((tq + bq - 1) // bq) * bq
+    if tq_p != tq:
+        pad4 = ((0, 0), (0, 0), (0, tq_p - tq), (0, 0))
+        pad3 = ((0, 0), (0, 0), (0, tq_p - tq))
+        o1, o2 = jnp.pad(o1, pad4), jnp.pad(o2, pad4)
+        m1 = jnp.pad(m1, pad3, constant_values=NEG_INF)
+        m2 = jnp.pad(m2, pad3, constant_values=NEG_INF)
+        l1, l2 = jnp.pad(l1, pad3), jnp.pad(l2, pad3)
+
+    nq = tq_p // bq
+    spec4 = pl.BlockSpec((1, 1, bq, d), lambda b_, h, i: (b_, h, i, 0))
+    spec3 = pl.BlockSpec((1, 1, bq), lambda b_, h, i: (b_, h, i))
+    out, m, l = pl.pallas_call(
+        _merge_kernel,
+        grid=(b, hq, nq),
+        in_specs=[spec4, spec3, spec3, spec4, spec3, spec3],
+        out_specs=[spec4, spec3, spec3],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, tq_p, d), o1.dtype),
+            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(o1, m1.astype(jnp.float32), l1.astype(jnp.float32),
+      o2, m2.astype(jnp.float32), l2.astype(jnp.float32))
+    return out[:, :, :tq, :], m[:, :, :tq], l[:, :, :tq]

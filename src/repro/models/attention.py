@@ -62,6 +62,8 @@ def init_kv_cache(batch: int, num_kv_heads: int, capacity: int, head_dim: int,
     }
 
 
+
+
 # ----------------------------------------------------------------------
 # core attend
 # ----------------------------------------------------------------------
@@ -111,21 +113,10 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     scale = d ** -0.5
 
     if tq >= ATTEND_CHUNK_MIN_T and tq % ATTEND_CHUNK == 0:
-        nc = tq // ATTEND_CHUNK
-        qc = jnp.moveaxis(
-            qg.reshape(b, hkv, g, nc, ATTEND_CHUNK, d), 3, 0)   # [nc,B,H,G,c,D]
-        pc = jnp.moveaxis(
-            q_pos.reshape(b, nc, ATTEND_CHUNK), 1, 0)           # [nc,B,c]
-
-        def one(args):
-            qi, pi = args
-            return _attend_block(qi, k, v, pi, k_pos, causal=causal,
-                                 window=window, scale=scale)
-
-        if UNROLL_CHUNKS:
-            out = jnp.stack([one((qc[i], pc[i])) for i in range(nc)])
-        else:
-            out = jax.lax.map(one, (qc, pc))                    # [nc,B,H,G,c,D]
+        out = _map_q_chunks(
+            lambda qi, pi: _attend_block(qi, k, v, pi, k_pos, causal=causal,
+                                         window=window, scale=scale),
+            qg, q_pos)                                          # [nc,B,H,G,c,D]
         out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, tq, d)
     else:
         out = _attend_block(qg, k, v, q_pos, k_pos, causal=causal,
@@ -133,21 +124,193 @@ def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.reshape(b, hq, tq, d).astype(q.dtype)
 
 
+def _map_q_chunks(block_fn, qg, q_pos):
+    """Apply ``block_fn(q_chunk [B,Hkv,G,c,D], q_pos_chunk [B,c])`` over
+    ATTEND_CHUNK-sized q-blocks; returns the stacked result pytree with
+    a leading chunk dim.  Honors the ``UNROLL_CHUNKS`` dry-run knob
+    (exact HLO flop accounting) for every chunked attention variant."""
+    b, hkv, g, tq, d = qg.shape
+    nc = tq // ATTEND_CHUNK
+    qc = jnp.moveaxis(
+        qg.reshape(b, hkv, g, nc, ATTEND_CHUNK, d), 3, 0)       # [nc,B,H,G,c,D]
+    pc = jnp.moveaxis(q_pos.reshape(b, nc, ATTEND_CHUNK), 1, 0)  # [nc,B,c]
+
+    def one(args):
+        return block_fn(args[0], args[1])
+
+    if UNROLL_CHUNKS:
+        outs = [one((qc[i], pc[i])) for i in range(nc)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return jax.lax.map(one, (qc, pc))
+
+
+# ----------------------------------------------------------------------
+# shared-prefix cascade attention (split prefix/suffix cache, DESIGN.md §5)
+# ----------------------------------------------------------------------
+def _attend_partial_block(qg, k, v, q_pos, k_pos, *, causal, window, scale):
+    """qg: [B, Hkv, G, Tq, D]; k, v: [Bk, Tk, Hkv, D] seq-major."""
+    b, hkv, g, tq, d = qg.shape
+    bk = k.shape[0]
+    if bk == 1:
+        scores = jnp.einsum("bhgtd,shd->bhgts", qg, k[0],
+                            preferred_element_type=jnp.float32) * scale
+    else:
+        scores = jnp.einsum("bhgtd,bshd->bhgts", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+    mask = k_pos[:, None, :] >= 0                              # [Bk, 1, Tk]
+    if causal:
+        mask = mask & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    mask = jnp.broadcast_to(mask[:, None, None, :, :], scores.shape)
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                               # [B,Hkv,G,Tq]
+    p = jnp.where(mask, jnp.exp(scores - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    # probs follow _attend_block's PV-input precision convention (cast to
+    # v.dtype, f32 accumulation) so XLA split == XLA broadcast at any
+    # model dtype; the partial stats (out/m/l) themselves stay f32.
+    if bk == 1:
+        out = jnp.einsum("bhgts,shd->bhgtd", p.astype(v.dtype), v[0],
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhgts,bshd->bhgtd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    out = out / jnp.where(l > 0, l, 1.0)[..., None]
+    return (out.reshape(b, hkv * g, tq, d), m.reshape(b, hkv * g, tq),
+            l.reshape(b, hkv * g, tq))
+
+
+def attend_partial(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                   *, causal: bool, window: int = 0):
+    """Masked GQA attention in partial (online-softmax) form — XLA path.
+
+    q: [B, Hq, Tq, D]; k, v: [Bk, Tk, Hkv, D] seq-major with ``Bk in
+    (1, B)``.  ``Bk == 1`` is the shared-prefix case: the einsum carries
+    no member batch dim on the KV side, so XLA reads the prefix KV once
+    per kv-head group instead of once per member.
+
+    Long queries are processed in q-blocks (same flash-style chunking
+    and thresholds as ``attend``) so the [Tq, Tk] score tensor never
+    fully materializes; the partials are per-query-row, so chunks are
+    independent.
+
+    Returns ``(out [B,Hq,Tq,D] f32 normalized, m [B,Hq,Tq], l
+    [B,Hq,Tq])``; fully-masked rows give out=0, m=NEG_INF, l=0 which
+    ``merge_attend`` treats as "no mass".
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, tq, d)
+    scale = d ** -0.5
+
+    if tq >= ATTEND_CHUNK_MIN_T and tq % ATTEND_CHUNK == 0:
+        o, m, l = _map_q_chunks(
+            lambda qi, pi: _attend_partial_block(
+                qi, k, v, pi, k_pos, causal=causal, window=window,
+                scale=scale),
+            qg, q_pos)                                          # [nc,B,Hq,c,*]
+        out = jnp.moveaxis(o, 0, 2).reshape(b, hq, tq, d)
+        return (out, jnp.moveaxis(m, 0, 2).reshape(b, hq, tq),
+                jnp.moveaxis(l, 0, 2).reshape(b, hq, tq))
+    return _attend_partial_block(qg, k, v, q_pos, k_pos, causal=causal,
+                                 window=window, scale=scale)
+
+
+def merge_attend(o1, m1, l1, o2, m2, l2):
+    """Exact LSE-merge of two attention partials over disjoint key sets:
+    softmax over [keys1 ++ keys2] == merge(partial1, partial2).
+
+    Delegates to the kernel oracle so there is exactly one copy of the
+    exactness-critical merge math (the Pallas merge kernel is tested
+    against the same function)."""
+    from repro.kernels.ref import merge_partials_ref
+    return merge_partials_ref(o1, m1, l1, o2, m2, l2)
+
+
+def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix: dict,
+                  k_suf: jnp.ndarray, v_suf: jnp.ndarray,
+                  suf_pos: jnp.ndarray, *, window: int = 0,
+                  impl: str = "xla") -> jnp.ndarray:
+    """Cascade attention over [batch-1 shared prefix ++ per-member suffix].
+
+    q: [B, Hq, Tq, D]; prefix: {"k","v","pos"} seq-major batch-1 cache
+    (the live PrefixState buffers, unreplicated); k_suf, v_suf:
+    [B, Ts, Hkv, D]; suf_pos: [B, Ts].  The prefix side needs no causal
+    mask — every cached prefix position is strictly past every query —
+    so only validity (pos >= 0) and the optional sliding window apply.
+    Numerically exact vs. attending the concatenated KV.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        pk = prefix["k"].transpose(0, 2, 1, 3)       # head-major for MXU
+        pv = prefix["v"].transpose(0, 2, 1, 3)
+        sk = k_suf.transpose(0, 2, 1, 3)
+        sv = v_suf.transpose(0, 2, 1, 3)
+        if q.shape[2] == 1:
+            # decode: keep the decode-shaped [group, d] q tiling (one KV
+            # stream per kv-head group) instead of 1-row prefill tiles;
+            # the elementwise merge stays in XLA (fuses, nothing to tile)
+            o1, m1, l1 = kops.decode_gqa_partial(
+                q[:, :, 0], pk, pv, q_pos[:, 0], prefix["pos"],
+                window=window)
+            o2, m2, l2 = kops.decode_gqa_partial(
+                q[:, :, 0], sk, sv, q_pos[:, 0], suf_pos, window=window)
+            out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
+            return out[:, :, None].astype(q.dtype)
+        o1, m1, l1 = kops.attention_partial(q, pk, pv, q_pos, prefix["pos"],
+                                            causal=False, window=window)
+        o2, m2, l2 = kops.attention_partial(q, sk, sv, q_pos, suf_pos,
+                                            causal=True, window=window)
+        out, _, _ = kops.merge_partials(o1, m1, l1, o2, m2, l2)
+        return out.astype(q.dtype)
+    o1, m1, l1 = attend_partial(q, prefix["k"], prefix["v"], q_pos,
+                                prefix["pos"], causal=False, window=window)
+    o2, m2, l2 = attend_partial(q, k_suf, v_suf, q_pos, suf_pos,
+                                causal=True, window=window)
+    out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
+    return out.astype(q.dtype)
+
+
 def cache_write(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
                 positions: jnp.ndarray, *, ring: bool,
-                valid: Optional[jnp.ndarray] = None) -> dict:
+                valid: Optional[jnp.ndarray] = None,
+                slot_offset=0,
+                keep: Optional[jnp.ndarray] = None) -> dict:
     """Write [B,T,Hkv,D] keys/values at absolute ``positions`` [B, T].
 
     Seq-major cache layout: the write is a pure scatter on dim 1 with no
     transpose (decode perf iteration, EXPERIMENTS.md §Perf).
-    ``ring=False``: contiguous write at slot = positions (requires
-    positions < capacity; used for prefill / suffix prefill).
-    ``ring=True``: slot = positions % capacity (long-context decode).
+    ``ring=False``: contiguous write at slot = positions - slot_offset
+    (requires that to be < capacity; used for prefill / suffix prefill).
+    ``ring=True``: slot = (positions - slot_offset) % capacity
+    (long-context decode).
     ``valid`` [B, T]: padded entries get pos = -1 (masked forever).
+    ``slot_offset``: subtracted from positions to get the slot index —
+    the split prefix/suffix cache stores suffix token P+i at slot i
+    (DESIGN.md §5) while ``pos`` keeps the absolute position, so all
+    masking stays purely positional.
+    ``keep`` [B, T]: entries marked False are not written AT ALL (their
+    slot keeps its previous contents) — ring writes of right-padded
+    blocks must drop padding instead of landing it in a wrapped slot
+    that a kept token or a still-in-window entry owns.
     """
     cap = cache["k"].shape[1]
-    slots = positions % cap if ring else positions             # [B, T]
+    rel = positions - slot_offset
+    slots = rel % cap if ring else rel                         # [B, T]
     b_idx = jnp.arange(cache["k"].shape[0])[:, None]           # [B, 1]
+    if keep is not None:
+        if valid is not None:
+            keep = keep & valid          # never land padding as live keys
+        slots = jnp.where(keep, slots, cap)                    # OOB -> drop
+        k = cache["k"].at[b_idx, slots].set(
+            k_new.astype(cache["k"].dtype), mode="drop")
+        v = cache["v"].at[b_idx, slots].set(
+            v_new.astype(cache["v"].dtype), mode="drop")
+        pos = cache["pos"].at[b_idx, slots].set(positions, mode="drop")
+        return {"k": k, "v": v, "pos": pos}
     k = cache["k"].at[b_idx, slots].set(
         k_new.astype(cache["k"].dtype))
     v = cache["v"].at[b_idx, slots].set(
@@ -155,6 +318,30 @@ def cache_write(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
     written = positions if valid is None else jnp.where(valid, positions, -1)
     pos = cache["pos"].at[b_idx, slots].set(written)
     return {"k": k, "v": v, "pos": pos}
+
+
+def ring_write_window(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                      positions: jnp.ndarray,
+                      valid: Optional[jnp.ndarray],
+                      slot_offset=0) -> dict:
+    """Ring-write a multi-token block into a window-sized cache, keeping
+    each row's LAST min(len, capacity) **valid** tokens.
+
+    A column-tail write (``k_new[:, t-cap:]``) is only correct for
+    unpadded rows: with right-padding the tail columns are padding, so
+    it would drop real in-window keys and clobber live slots with
+    padding.  Masking per row fixes both (dropped columns leave their
+    slot untouched)."""
+    t = positions.shape[1]
+    cap = cache["k"].shape[1]
+    col = jnp.arange(t)[None]                                  # [1, T]
+    if valid is None:
+        keep = jnp.broadcast_to(col >= t - cap, positions.shape)
+    else:
+        lengths = jnp.sum(valid.astype(jnp.int32), axis=1, keepdims=True)
+        keep = valid & (col >= lengths - cap)
+    return cache_write(cache, k_new, v_new, positions, ring=True,
+                       slot_offset=slot_offset, keep=keep)
 
 
 # ----------------------------------------------------------------------
@@ -165,12 +352,19 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                    positions: jnp.ndarray, cache: Optional[dict] = None,
                    causal: bool = True, window: int = 0,
                    ring: bool = False, valid: Optional[jnp.ndarray] = None,
-                   impl: str = "xla"):
+                   impl: str = "xla", prefix: Optional[dict] = None,
+                   slot_offset=0):
     """x: [B, T, D_model]; positions: [B, T] absolute positions.
 
     Returns (out [B, T, D_model], new_cache or None).
     ``impl="pallas"`` routes attention through the Pallas kernels
     (prefix_attention / decode_gqa); "xla" uses the jnp reference path.
+
+    ``prefix`` enables the split prefix/suffix cascade (DESIGN.md §5):
+    a read-only batch-1 {"k","v","pos"} cache holding the shared prefix.
+    Fresh KV then goes into ``cache`` (the suffix-only cache) at slot =
+    position - ``slot_offset``, and attention runs as shared-prefix
+    partial + suffix partial + LSE merge — exact vs. the broadcast path.
     """
     if impl == "pallas":
         from repro.kernels import ops as kops
@@ -205,21 +399,42 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
         self_pos = positions if valid is None else jnp.where(valid, positions, -1)
         out = _attend(q, k, v, positions, self_pos)
         new_cache = None
+    elif prefix is not None:
+        # Split prefix/suffix cascade: fresh KV goes into the suffix-only
+        # cache; the shared batch-1 prefix buffers are attended in place.
+        self_pos = positions if valid is None else jnp.where(valid, positions, -1)
+        if window and t > 1:
+            # The window-sized suffix ring cannot hold T > capacity fresh
+            # tokens at once: attend over [suffix cache ++ fresh self-KV]
+            # and ring-write each row's last in-window valid tokens
+            # (mirrors the broadcast branch).
+            k_all = jnp.concatenate(
+                [cache["k"], k.astype(cache["k"].dtype)], axis=1)
+            v_all = jnp.concatenate(
+                [cache["v"], v.astype(cache["v"].dtype)], axis=1)
+            pos_all = jnp.concatenate([cache["pos"], self_pos], axis=1)
+            out = attend_shared(q, positions, prefix, k_all, v_all, pos_all,
+                                window=window, impl=impl)
+            new_cache = ring_write_window(cache, k, v, positions, valid,
+                                          slot_offset=slot_offset)
+        else:
+            ring_eff = ring or bool(window)
+            new_cache = cache_write(cache, k, v, positions, ring=ring_eff,
+                                    valid=valid, slot_offset=slot_offset)
+            out = attend_shared(q, positions, prefix, new_cache["k"],
+                                new_cache["v"], new_cache["pos"],
+                                window=window, impl=impl)
     elif window and t > 1:
         # Windowed multi-token (prefill / suffix prefill): the ring buffer
         # cannot hold T > capacity fresh tokens at once, so attend over
-        # [cached prefix ++ fresh self-KV] and ring-write only the tail.
-        cap = cache["k"].shape[1]
+        # [cached prefix ++ fresh self-KV] and ring-write each row's last
+        # in-window valid tokens.
         self_pos = positions if valid is None else jnp.where(valid, positions, -1)
         k_all = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
         v_all = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
         pos_all = jnp.concatenate([cache["pos"], self_pos], axis=1)
         out = _attend(q, k_all, v_all, positions, pos_all)
-        tail = min(t, cap)
-        new_cache = cache_write(
-            cache, k[:, t - tail:], v[:, t - tail:],
-            positions[:, t - tail:], ring=True,
-            valid=None if valid is None else valid[:, t - tail:])
+        new_cache = ring_write_window(cache, k, v, positions, valid)
     else:
         ring_eff = ring or bool(window)
         new_cache = cache_write(cache, k, v, positions, ring=ring_eff,

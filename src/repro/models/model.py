@@ -94,8 +94,16 @@ def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
 
 
 def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
-                cache: Optional[dict], ctx: dict):
-    """Returns (x, new_cache, aux_loss)."""
+                cache: Optional[dict], ctx: dict,
+                prefix: Optional[dict] = None):
+    """Returns (x, new_cache, aux_loss).
+
+    ``prefix`` is this layer's read-only batch-1 shared-prefix state
+    (split prefix/suffix serving, DESIGN.md §5); attention mixers run
+    cascade attention against it, recurrent mixers cannot split (their
+    state is not a set of positional slots) and must use the broadcast
+    fallback instead.
+    """
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     new_cache = dict(cache) if cache is not None else None
@@ -108,6 +116,8 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
             window = cfg.local_window
         sub = ({k: cache[k] for k in ("k", "v", "pos")}
                if cache is not None else None)
+        sub_prefix = ({k: prefix[k] for k in ("k", "v", "pos")}
+                      if prefix is not None else None)
         out, sub_new = attn_lib.self_attention(
             p["mixer"], h,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
@@ -115,10 +125,15 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
             positions=ctx["positions"], cache=sub,
             causal=ctx.get("causal", True), window=window,
             ring=ctx.get("ring", False), valid=ctx.get("valid"),
-            impl=cfg.attention_impl)
+            impl=cfg.attention_impl, prefix=sub_prefix,
+            slot_offset=ctx.get("slot_offset", 0))
         if sub_new is not None:
             new_cache.update(sub_new)
     elif spec.mixer == MAMBA:
+        if prefix is not None:
+            raise ValueError(
+                "split prefix/suffix serving does not cover Mamba mixers; "
+                "use PrefixState.broadcast (the engine gates this)")
         sub = ({k: cache[k] for k in ("conv", "state")}
                if cache is not None else None)
         out, sub_new = ssm_lib.apply_mamba(
@@ -127,6 +142,10 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
         if sub_new is not None:
             new_cache.update(sub_new)
     elif spec.mixer == RGLRU:
+        if prefix is not None:
+            raise ValueError(
+                "split prefix/suffix serving does not cover RG-LRU mixers; "
+                "use PrefixState.broadcast (the engine gates this)")
         sub = ({k: cache[k] for k in ("conv", "state")}
                if cache is not None else None)
         out, sub_new = rglru_lib.apply_rglru(p["mixer"], h, sub,
@@ -144,6 +163,11 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
                 head_dim=cfg.head_dim_)
             if new_cache is not None:
                 new_cache["cross_k"], new_cache["cross_v"] = ekv
+        elif prefix is not None:
+            raise ValueError(
+                "split prefix/suffix serving does not cover cross-attention "
+                "layers (per-state encoder KV); use PrefixState.broadcast "
+                "(the engine gates this)")
         else:
             ekv = (cache["cross_k"], cache["cross_v"])
         out = attn_lib.cross_attention(
@@ -250,6 +274,18 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
     return cache
 
 
+def init_suffix_cache(cfg: ModelConfig, batch: int,
+                      suffix_capacity: int) -> dict:
+    """Member-batch suffix+decode cache for split prefix/suffix serving.
+
+    Holds only ``suffix_capacity`` slots per member (suffix prefill +
+    decode tail); the shared prefix stays in the batch-1 PrefixState and
+    is passed to ``forward`` via ``prefix=`` instead of being broadcast.
+    Only valid for attention-only stacks (DESIGN.md §5).
+    """
+    return init_cache(cfg, batch, suffix_capacity)
+
+
 # ======================================================================
 # forward
 # ======================================================================
@@ -258,11 +294,12 @@ def _group_body(cfg: ModelConfig, gspecs, ctx):
 
     def body(carry, xs):
         x, aux = carry
-        gparams, gcache = xs
+        gparams, gcache, gprefix = xs
         new_gcache = {} if gcache is not None else None
         for j, spec in enumerate(gspecs):
             lc = gcache[str(j)] if gcache is not None else None
-            x, nc, a = apply_layer(gparams[str(j)], spec, cfg, x, lc, ctx)
+            lp = gprefix[str(j)] if gprefix is not None else None
+            x, nc, a = apply_layer(gparams[str(j)], spec, cfg, x, lc, ctx, lp)
             x = constrain(x, "layer_boundary")
             aux = aux + a
             if new_gcache is not None:
@@ -272,8 +309,14 @@ def _group_body(cfg: ModelConfig, gspecs, ctx):
 
 
 def run_stack(params: dict, cfg: ModelConfig, x: jnp.ndarray,
-              cache: Optional[dict], ctx: dict, specs=None):
-    """Run the decoder stack.  Returns (x, new_cache, aux)."""
+              cache: Optional[dict], ctx: dict, specs=None,
+              prefix: Optional[dict] = None):
+    """Run the decoder stack.  Returns (x, new_cache, aux).
+
+    ``prefix``: optional batch-1 shared-prefix cache pytree (same
+    structure as ``cache``) scanned alongside the layer stack — read,
+    never written (split prefix/suffix serving, DESIGN.md §5).
+    """
     specs = specs if specs is not None else cfg.layer_specs()
     period, n_groups, _ = stack_layout(cfg)
     aux = jnp.zeros((), jnp.float32)
@@ -285,27 +328,30 @@ def run_stack(params: dict, cfg: ModelConfig, x: jnp.ndarray,
         if cfg.remat:
             body = jax.checkpoint(body)
         gcaches = cache.get("groups") if cache is not None else None
+        gprefix = prefix.get("groups") if prefix is not None else None
         if gcaches is None:
             (x, aux), _ = jax.lax.scan(
-                lambda c, p: (body((c[0], c[1]), (p, None))[0], None),
+                lambda c, p: (body((c[0], c[1]), (p, None, None))[0], None),
                 (x, aux), params["dec"]["groups"])
         else:
+            # None is an empty pytree: scan carries it through untouched.
             (x, aux), new_g = jax.lax.scan(
-                body, (x, aux), (params["dec"]["groups"], gcaches))
+                body, (x, aux), (params["dec"]["groups"], gcaches, gprefix))
             new_cache["groups"] = new_g
 
     rest_specs = specs[n_groups * period:]
     for i, spec in enumerate(rest_specs):
         lc = cache["rest"][i] if cache is not None else None
+        lp = prefix["rest"][i] if prefix is not None else None
         p = params["dec"]["rest"][i]
 
-        def fn(p_, x_, lc_, _spec=spec):
+        def fn(p_, x_, lc_, lp_, _spec=spec):
             from repro.distributed.hints import constrain
-            x2, nc_, a_ = apply_layer(p_, _spec, cfg, x_, lc_, ctx)
+            x2, nc_, a_ = apply_layer(p_, _spec, cfg, x_, lc_, ctx, lp_)
             return constrain(x2, "layer_boundary"), nc_, a_
         if cfg.remat:
             fn = jax.checkpoint(fn)
-        x, nc, a = fn(p, x, lc)
+        x, nc, a = fn(p, x, lc, lp)
         aux = aux + a
         if new_cache is not None:
             new_cache.setdefault("rest", []).append(nc)
@@ -324,7 +370,7 @@ def run_encoder(params: dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndar
     if cfg.remat:
         body = jax.checkpoint(body)
     (x, _), _ = jax.lax.scan(
-        lambda c, p: (body((c[0], c[1]), (p, None))[0], None),
+        lambda c, p: (body((c[0], c[1]), (p, None, None))[0], None),
         (x, jnp.zeros((), jnp.float32)), params["enc"]["groups"])
     return rms_norm(x, params["enc"]["norm"], cfg.norm_eps)
 
@@ -351,14 +397,20 @@ def unembed(params: dict, cfg: ModelConfig, hidden: jnp.ndarray) -> jnp.ndarray:
 def forward(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
             positions: jnp.ndarray, cache: Optional[dict] = None,
             enc: Optional[jnp.ndarray] = None,
-            valid: Optional[jnp.ndarray] = None, ring: bool = False):
+            valid: Optional[jnp.ndarray] = None, ring: bool = False,
+            prefix: Optional[dict] = None, slot_offset=0):
     """embeds: [B, T, D] already-embedded inputs.
 
     Returns (hidden [B, T, D], new_cache, aux_loss).
+
+    Split prefix/suffix serving (DESIGN.md §5): pass the batch-1 shared
+    prefix state as ``prefix`` (read-only) and the prefix length as
+    ``slot_offset``; ``cache`` is then the suffix-only cache and suffix
+    token P+i is stored at slot i while keeping absolute positions.
     """
     ctx = {"positions": positions, "valid": valid, "ring": ring,
-           "enc": enc, "causal": True}
-    return run_stack(params, cfg, embeds, cache, ctx)
+           "enc": enc, "causal": True, "slot_offset": slot_offset}
+    return run_stack(params, cfg, embeds, cache, ctx, prefix=prefix)
 
 
 # ======================================================================

@@ -13,7 +13,6 @@ from typing import Callable, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core.cache import CacheStats
 from repro.core.embedding import embed_subgraphs, subgraph_tensors
 from repro.core.planner import BatchPlan, plan_batch
 from repro.core.subgraph import Subgraph, textualize
@@ -109,7 +108,9 @@ class GraphRAGPipeline:
                         + plan.cluster_processing_time_s)
         share = cluster_time / max(1, len(items))
 
-        stats = CacheStats()
+        # the engine records cluster/member token accounting into its
+        # cache manager as it serves; start a fresh window for this run
+        stats = self.engine.cache_mgr.reset_stats()
         records: List[QueryRecord] = [None] * len(items)  # type: ignore
         for cp in plan.clusters:
             t0 = time.perf_counter()
@@ -121,7 +122,6 @@ class GraphRAGPipeline:
 
             state, t_prefix = self.engine.prefill_prefix(prefix_tokens, soft)
             n = len(cp.member_indices)
-            stats.record_cluster(state.prefix_len, n)
 
             suffixes, builds = [], []
             for qi in cp.member_indices:
@@ -137,7 +137,6 @@ class GraphRAGPipeline:
                 it = items[qi]
                 text = self.tokenizer.decode(outs[k])
                 member_prompt = len(prefix_tokens) + len(suffixes[k])
-                stats.record_member(member_prompt, len(suffixes[k]))
                 records[qi] = QueryRecord(
                     query=it.question, answer=it.answer, generated=text,
                     correct=self._check(text, it.answer),
@@ -148,7 +147,6 @@ class GraphRAGPipeline:
                     decode_s=t["decode_s"] / n,
                     prompt_tokens=member_prompt,
                     cached_tokens=state.prefix_len)
-        stats.finalize()
         summary = RunSummary.from_records(
             f"subgcache(c={num_clusters},{linkage})", records,
             cluster_processing_s=cluster_time,

@@ -81,6 +81,28 @@ class Workbench:
             use_soft_prompt=use_soft_prompt)
 
 
+def serving_report(pipe: GraphRAGPipeline) -> dict:
+    """Engine-recorded SubGCache accounting for the pipeline's current
+    stats window (the engine updates ``cache_mgr.stats`` as it serves;
+    ``run_subgcache`` resets the window per run).  ``prefill_savings``
+    is the paper's headline ratio: tokens a vanilla pipeline would
+    prefill over tokens actually prefilled."""
+    st = pipe.engine.cache_mgr.stats
+    return {
+        "num_queries": st.num_queries,
+        "num_clusters": st.num_clusters,
+        "clusters_split": st.clusters_split,
+        "prefix_tokens_computed": st.prefix_tokens_computed,
+        "suffix_tokens_computed": st.suffix_tokens_computed,
+        "prefill_tokens_baseline": st.prefill_tokens_baseline,
+        "prefill_savings": round(st.prefill_savings, 4),
+        # observed path, not engine capability: True only when every
+        # recorded cluster actually took the cascade
+        "split_prefix": (st.num_clusters > 0
+                         and st.clusters_split == st.num_clusters),
+    }
+
+
 def _dataset(name: str):
     if name == "scene":
         return generate_scene_graph()

@@ -3,10 +3,21 @@
 Execution paths:
   * ``prefill_prefix``      — compute the representative prefix state once
                               (batch 1), paper §3.4 step 1.
-  * ``generate_with_prefix``— broadcast the prefix state over the member
-                              batch and run ONE batched suffix prefill +
-                              greedy decode (TPU adaptation; the paper
-                              loops members sequentially).
+  * ``generate_with_prefix``— serve all cluster members as ONE batched
+                              suffix prefill + greedy decode (TPU
+                              adaptation; the paper loops members
+                              sequentially).  Attention-only stacks use
+                              the **split prefix/suffix cascade**
+                              (DESIGN.md §5): members get a suffix+decode
+                              cache only, and the live batch-1 prefix
+                              buffers are attended in place — HBM for a
+                              B-member cluster is P + B×S slots instead
+                              of B×(P+S), and prefix KV bytes are read
+                              once per kv-head group, not once per
+                              member.  Stateful (Mamba / RG-LRU) and
+                              cross-attention stacks fall back to
+                              ``PrefixState.broadcast`` (their recurrent
+                              states are tiny).
   * ``generate``            — vanilla per-query path (the baseline).
 
 Shapes are bucketed (suffix length to multiples of ``bucket``, batch to
@@ -23,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import CacheStats, ClusterCacheManager, PrefixState
+from repro.core.cache import ClusterCacheManager, PrefixState
 from repro.data.tokenizer import EOS, PAD, Tokenizer
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -43,7 +54,7 @@ def _bucket_batch(n: int) -> int:
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, tokenizer: Tokenizer, *,
                  max_cache_len: int = 768, max_new_tokens: int = 32,
-                 bucket: int = 32):
+                 bucket: int = 32, split_prefix: Optional[bool] = None):
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer
@@ -60,16 +71,32 @@ class ServingEngine:
         from repro.models.config import MAMBA, RGLRU
         self._stateful = any(s.mixer in (MAMBA, RGLRU)
                              for s in cfg.layer_specs())
+        # Split prefix/suffix cascade serving (DESIGN.md §5) covers
+        # attention-only stacks: recurrent state is not a set of
+        # positional slots and cross-attention KV is per-state, so both
+        # fall back to PrefixState.broadcast.  ``split_prefix=False``
+        # forces the broadcast path (benchmark / A-B comparisons).
+        has_cross = any(s.cross_attn for s in cfg.layer_specs())
+        can_split = not self._stateful and not has_cross
+        self.use_split_prefix = (can_split if split_prefix is None
+                                 else bool(split_prefix) and can_split)
 
     # ------------------------------------------------------------------
     # jitted building blocks (cached per shape bucket)
     # ------------------------------------------------------------------
     def _make_prefill(self, batch: int, seqlen: int):
+        """One builder serves both paths: broadcast callers pass
+        ``prefix=None`` (empty pytree — same trace as before); split
+        callers pass the live batch-1 prefix buffers as an ordinary
+        non-donated argument, read in place — no replication, no copy."""
         cfg = self.cfg
 
-        def prefill(params, embeds, positions, valid, cache):
+        def prefill(params, embeds, positions, valid, cache, prefix,
+                    slot_offset):
             hidden, cache, _ = M.forward(params, cfg, embeds, positions,
-                                         cache=cache, valid=valid)
+                                         cache=cache, valid=valid,
+                                         prefix=prefix,
+                                         slot_offset=slot_offset)
             lengths = jnp.sum(valid.astype(jnp.int32), axis=1)      # [B]
             last = jnp.take_along_axis(
                 hidden, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
@@ -79,15 +106,18 @@ class ServingEngine:
         return jax.jit(prefill, donate_argnums=(4,))
 
     def _make_decode(self, batch: int):
+        """In split mode the decode scan closes over the prefix as an
+        invariant — it is never carried, donated, or copied per step."""
         cfg = self.cfg
         steps = self.max_new_tokens - 1
 
-        def decode(params, first_token, lengths, cache):
+        def decode(params, first_token, lengths, cache, prefix, slot_offset):
             def body(carry, _):
                 cache, tok, pos, done = carry
                 emb = M.embed_tokens(params, tok[:, None])
                 hidden, cache, _ = M.forward(params, cfg, emb, pos[:, None],
-                                             cache=cache)
+                                             cache=cache, prefix=prefix,
+                                             slot_offset=slot_offset)
                 logits = M.unembed(params, cfg, hidden)[:, 0]
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 done = done | (tok == EOS)
@@ -130,32 +160,61 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # SubGCache path
     # ------------------------------------------------------------------
-    def _capacity_for(self, prefix_len: int, suffix_headroom: int = 64) -> int:
-        """Cache capacity bucket covering prefix + suffix + decode."""
-        need = prefix_len + suffix_headroom + self.max_new_tokens + 8
-        cap = min(512, self.max_cache_len)
+    def _bucket_capacity(self, need: int, floor: int, kind: str) -> int:
+        """Power-of-two capacity bucket >= ``need``, starting at
+        ``floor``, bounded by ``max_cache_len``."""
+        cap = min(floor, self.max_cache_len)
         while cap < need:
             cap *= 2
         if cap > self.max_cache_len:
             raise ValueError(
-                f"prompt needs cache capacity {cap} > max_cache_len "
+                f"{kind} needs cache capacity {cap} > max_cache_len "
                 f"{self.max_cache_len}; raise max_cache_len")
         return cap
 
+    def _capacity_for(self, prefix_len: int, suffix_headroom: int = 64) -> int:
+        """Cache capacity bucket covering prefix + suffix + decode."""
+        return self._bucket_capacity(
+            prefix_len + suffix_headroom + self.max_new_tokens + 8, 512,
+            "prompt")
+
+    def _prefix_capacity_for(self, prefix_len: int) -> int:
+        """Capacity bucket for a split-mode prefix state: prefix tokens
+        only — suffix and decode live in the per-member suffix cache."""
+        return self._bucket_capacity(prefix_len, 128, "prefix")
+
+    def _suffix_capacity_for(self, suffix_len: int) -> int:
+        """Capacity bucket for the per-member suffix+decode cache."""
+        return self._bucket_capacity(
+            suffix_len + self.max_new_tokens + 8, 64, "suffix")
+
     def prefill_prefix(self, prefix_tokens: List[int],
                        soft: Optional[np.ndarray] = None,
-                       enc: Optional[np.ndarray] = None) -> Tuple[PrefixState, float]:
-        """Representative-subgraph prefix prefill at batch=1."""
+                       enc: Optional[np.ndarray] = None,
+                       _record: bool = True) -> Tuple[PrefixState, float]:
+        """Representative-subgraph prefix prefill at batch=1.
+
+        Split mode sizes the state for the prefix alone (suffix + decode
+        slots live in the per-member suffix cache); broadcast mode keeps
+        headroom for the suffix prefill + decode that run in this cache.
+        """
         t0 = time.perf_counter()
         embeds, positions, valid, lens = self._embed_padded(
             [prefix_tokens], soft, 0,
             pad_to=None if not self._stateful else
             len(prefix_tokens) + (0 if soft is None else soft.shape[0]))
-        capacity = self._capacity_for(int(lens[0]))
+        use_split = self.use_split_prefix and enc is None
+        capacity = (self._prefix_capacity_for(int(lens[0])) if use_split
+                    else self._capacity_for(int(lens[0])))
+        if _record:
+            # prefix cost accrues when COMPUTED: a state reused across
+            # several generate_with_prefix calls still cost one prefill
+            self.cache_mgr.stats.record_prefix(int(lens[0]), split=use_split)
         cache = M.init_cache(self.cfg, 1, capacity,
                              enc_len=0 if enc is None else enc.shape[1])
         prefill = self._prefill_jit(1, embeds.shape[1])
-        cache, _, _ = prefill(self.params, embeds, positions, valid, cache)
+        cache, _, _ = prefill(self.params, embeds, positions, valid, cache,
+                              None, 0)
         jax.block_until_ready(cache)
         dt = time.perf_counter() - t0
         state = PrefixState(cache=cache, prefix_len=int(lens[0]),
@@ -164,21 +223,42 @@ class ServingEngine:
         return state, dt
 
     def generate_with_prefix(self, state: PrefixState,
-                             suffix_token_lists: Sequence[List[int]]
+                             suffix_token_lists: Sequence[List[int]],
+                             _record: bool = True
                              ) -> Tuple[List[List[int]], dict]:
         """Batched suffix prefill over the shared prefix + greedy decode.
 
-        Stateful (recurrent) archs are served in equal-length sub-batches
-        so no pad token ever enters the scan state (exactness)."""
+        Attention-only stacks take the split prefix/suffix cascade: a
+        suffix+decode cache of B × suffix_capacity slots is allocated and
+        the live batch-1 prefix buffers are passed through prefill and
+        the decode scan unreplicated (``PrefixState.broadcast`` is never
+        called).  Stateful (recurrent) archs fall back to broadcast and
+        are served in equal-length sub-batches so no pad token ever
+        enters the scan state (exactness)."""
+        outs, timing = self._serve_with_prefix(state, suffix_token_lists)
+        if _record:
+            # members count only once actually served: a capacity error
+            # above must not inflate prefill_savings
+            stats = self.cache_mgr.stats
+            stats.record_served(len(suffix_token_lists))
+            for tkl in suffix_token_lists:
+                stats.record_member(state.prefix_len + len(tkl), len(tkl))
+            stats.finalize()
+        return outs, timing
+
+    def _serve_with_prefix(self, state: PrefixState,
+                           suffix_token_lists: Sequence[List[int]]
+                           ) -> Tuple[List[List[int]], dict]:
         if self._stateful:
             groups = {}
             for i, tkl in enumerate(suffix_token_lists):
                 groups.setdefault(len(tkl), []).append(i)
             if len(groups) > 1:
                 outs = [None] * len(suffix_token_lists)
-                agg = {"prefill_s": 0.0, "decode_s": 0.0, "batch": 0}
+                agg = {"prefill_s": 0.0, "decode_s": 0.0, "batch": 0,
+                       "split_prefix": False}
                 for length, idxs in sorted(groups.items()):
-                    sub, t = self.generate_with_prefix(
+                    sub, t = self._serve_with_prefix(
                         state, [suffix_token_lists[i] for i in idxs])
                     for i, o in zip(idxs, sub):
                         outs[i] = o
@@ -190,33 +270,42 @@ class ServingEngine:
         b = _bucket_batch(n)
         pads = [list(t) for t in suffix_token_lists] + \
                [[EOS]] * (b - n)                        # batch padding rows
+        use_split = self.use_split_prefix and state.enc_len == 0
         t0 = time.perf_counter()
-        template = jax.eval_shape(
-            lambda: M.init_cache(self.cfg, b, state.capacity,
-                                 enc_len=state.enc_len))
-        cache = state.broadcast(template)
         pad_to = len(suffix_token_lists[0]) if self._stateful else None
         if self._stateful:
             pads = [list(t)[:pad_to] + [EOS] * (pad_to - len(t))
                     if len(t) < pad_to else list(t) for t in pads]
         embeds, positions, valid, lens = self._embed_padded(
             pads, None, state.prefix_len, pad_to=pad_to)
+        if use_split:
+            # Split cascade: B members cost prefix_capacity + B×suffix
+            # slots of HBM; the prefix KV is attended in place.
+            cache = M.init_suffix_cache(
+                self.cfg, b, self._suffix_capacity_for(embeds.shape[1]))
+            prefix, offset = state.cache, jnp.int32(state.prefix_len)
+        else:
+            template = jax.eval_shape(
+                lambda: M.init_cache(self.cfg, b, state.capacity,
+                                     enc_len=state.enc_len))
+            cache = state.broadcast(template)
+            prefix, offset = None, 0
         prefill = self._prefill_jit(b, embeds.shape[1])
         cache, logits, _ = prefill(self.params, embeds, positions, valid,
-                                   cache)
+                                   cache, prefix, offset)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(first)
         t_prefill = time.perf_counter() - t0
 
         t0 = time.perf_counter()
+        lengths = jnp.asarray(state.prefix_len + lens, jnp.int32)
         decode = self._decode_jit(b)
-        out = decode(self.params, first,
-                     jnp.asarray(state.prefix_len + lens, jnp.int32), cache)
+        out = decode(self.params, first, lengths, cache, prefix, offset)
         out = np.asarray(jax.block_until_ready(out))
         t_decode = time.perf_counter() - t0
         toks = [self._cut(out[i]) for i in range(n)]
         return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
-                      "batch": b}
+                      "batch": b, "split_prefix": use_split}
 
     # ------------------------------------------------------------------
     # baseline path
@@ -233,14 +322,15 @@ class ServingEngine:
         cache = M.init_cache(self.cfg, 1, self._capacity_for(int(lens[0]), suffix_headroom=0))
         prefill = self._prefill_jit(1, embeds.shape[1])
         cache, logits, _ = prefill(self.params, embeds, positions, valid,
-                                   cache)
+                                   cache, None, 0)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(first)
         t_prefill = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         decode = self._decode_jit(1)
-        out = decode(self.params, first, jnp.asarray(lens, jnp.int32), cache)
+        out = decode(self.params, first, jnp.asarray(lens, jnp.int32), cache,
+                     None, 0)
         out = np.asarray(jax.block_until_ready(out))
         t_decode = time.perf_counter() - t0
         return self._cut(out[0]), {"prefill_s": t_prefill,
@@ -255,11 +345,13 @@ class ServingEngine:
         return out
 
     def warmup(self, suffix_len: int = 32, batches: Sequence[int] = (1,)):
-        """Pre-compile the common shape buckets (excluded from timings)."""
+        """Pre-compile the common shape buckets (excluded from timings).
+        Warmup traffic is not real serving: keep it out of CacheStats."""
         for b in batches:
             dummy = [[EOS] * suffix_len for _ in range(b)]
             if b == 1:
                 self.generate(dummy[0])
             else:
-                st, _ = self.prefill_prefix([EOS] * suffix_len)
-                self.generate_with_prefix(st, dummy)
+                st, _ = self.prefill_prefix([EOS] * suffix_len,
+                                            _record=False)
+                self.generate_with_prefix(st, dummy, _record=False)

@@ -1,6 +1,9 @@
 """SubGCache core: subgraph algebra, clustering, planner, cache manager."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis; "
+                           "pip install -e '.[test]'")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache import CacheStats, ClusterCacheManager, PrefixState

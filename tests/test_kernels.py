@@ -61,6 +61,117 @@ def test_prefix_attention_fully_masked_rows_zero():
     assert bool(jnp.all(out == 0.0))
 
 
+# ----------------------------------------------------------------------
+# shared-prefix cascade: partial attention + LSE merge
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kv_batch", ["shared", "member"])
+@pytest.mark.parametrize("b,hq,hkv,tq,s,d", [
+    (2, 4, 4, 8, 32, 32),      # MHA
+    (3, 8, 2, 7, 40, 32),      # GQA, unaligned lengths
+    (2, 4, 1, 33, 129, 16),    # MQA, prime-ish padding path
+])
+def test_attention_partial_sweep(kv_batch, b, hq, hkv, tq, s, d):
+    bk = 1 if kv_batch == "shared" else b
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, tq, d))
+    k = jax.random.normal(ks[1], (bk, hkv, s, d))
+    v = jax.random.normal(ks[2], (bk, hkv, s, d))
+    k_pos = jnp.where(jnp.arange(s)[None] < s - 3, jnp.arange(s)[None], -1)
+    k_pos = jnp.broadcast_to(k_pos, (bk, s))
+    q_pos = jnp.broadcast_to(s + jnp.arange(tq)[None], (b, tq))
+    out, m, l = ops.attention_partial(q, k, v, q_pos, k_pos, causal=False,
+                                      block_q=8, block_k=16)
+    out_r, m_r, l_r = ref.attention_partial_ref(q, k, v, q_pos, k_pos,
+                                                causal=False)
+    for got, want in ((out, out_r), (m, m_r), (l, l_r)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("kv_batch", ["shared", "member"])
+@pytest.mark.parametrize("window", [0, 6])
+def test_decode_gqa_partial_cascade(kv_batch, window):
+    """Decode-shaped partials (prefix + suffix) merged must equal decode
+    over the concatenated KV."""
+    b, hq, hkv, p_len, s_len, d = 2, 8, 2, 24, 10, 32
+    bk = 1 if kv_batch == "shared" else b
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    pk = jax.random.normal(ks[1], (bk, hkv, p_len, d))
+    pv = jax.random.normal(ks[2], (bk, hkv, p_len, d))
+    sk = jax.random.normal(ks[3], (b, hkv, s_len, d))
+    sv = jax.random.normal(ks[4], (b, hkv, s_len, d))
+    p_pos = jnp.broadcast_to(jnp.arange(p_len)[None], (bk, p_len))
+    s_pos = jnp.broadcast_to(p_len + jnp.arange(s_len)[None], (b, s_len))
+    q_pos = jnp.full((b,), p_len + s_len - 1, jnp.int32)
+
+    o1 = ops.decode_gqa_partial(q, pk, pv, q_pos, p_pos, window=window,
+                                block_k=16)
+    o2 = ops.decode_gqa_partial(q, sk, sv, q_pos, s_pos, window=window,
+                                block_k=8)
+    got, _, _ = ref.merge_partials_ref(*o1, *o2)
+
+    k_all = jnp.concatenate([jnp.broadcast_to(pk, (b,) + pk.shape[1:]), sk], 2)
+    v_all = jnp.concatenate([jnp.broadcast_to(pv, (b,) + pv.shape[1:]), sv], 2)
+    pos_all = jnp.concatenate(
+        [jnp.broadcast_to(p_pos, (b, p_len)), s_pos], 1)
+    want = ref.decode_gqa_ref(q, k_all, v_all, q_pos, pos_all, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_lse_merge_matches_ref():
+    """Kernel LSE merge vs the jnp oracle on synthetic partials."""
+    b, hq, tq, d = 2, 4, 13, 16
+    ks = jax.random.split(KEY, 6)
+    o1 = jax.random.normal(ks[0], (b, hq, tq, d))
+    o2 = jax.random.normal(ks[1], (b, hq, tq, d))
+    m1 = jax.random.normal(ks[2], (b, hq, tq)) * 3
+    m2 = jax.random.normal(ks[3], (b, hq, tq)) * 3
+    l1 = jax.nn.softplus(jax.random.normal(ks[4], (b, hq, tq)))
+    l2 = jax.nn.softplus(jax.random.normal(ks[5], (b, hq, tq)))
+    # include empty partials (fully-masked rows): l = 0, m = NEG_INF
+    l1 = l1.at[0, 0, :3].set(0.0)
+    m1 = m1.at[0, 0, :3].set(ref.NEG_INF)
+    got, gm, gl = ops.merge_partials(o1, m1, l1, o2, m2, l2, block_q=8)
+    want, wm, wl = ref.merge_partials_ref(o1, m1, l1, o2, m2, l2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(wm), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gl), np.asarray(wl), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_partial_merge_equals_full_attention():
+    """Cascade invariant: merge(prefix partial, suffix partial) must equal
+    one softmax over the concatenated KV — the exactness the split
+    serving path rests on."""
+    b, hq, hkv, tq, p_len, s_len, d = 2, 8, 2, 9, 37, 11, 32
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, hq, tq, d))
+    pk = jax.random.normal(ks[1], (1, hkv, p_len, d))
+    pv = jax.random.normal(ks[2], (1, hkv, p_len, d))
+    sk = jax.random.normal(ks[3], (b, hkv, s_len, d))
+    sv = jax.random.normal(ks[4], (b, hkv, s_len, d))
+    p_pos = jnp.arange(p_len)[None]
+    q_pos = jnp.broadcast_to(p_len + jnp.arange(tq)[None], (b, tq))
+    s_pos = jnp.broadcast_to(p_len + jnp.arange(s_len)[None], (b, s_len))
+
+    o1 = ops.attention_partial(q, pk, pv, q_pos, p_pos, causal=False,
+                               block_q=8, block_k=16)
+    o2 = ops.attention_partial(q, sk, sv, q_pos, s_pos, causal=True,
+                               block_q=8, block_k=8)
+    got, _, _ = ops.merge_partials(*o1, *o2, block_q=8)
+
+    k_all = jnp.concatenate([jnp.broadcast_to(pk, (b,) + pk.shape[1:]), sk], 2)
+    v_all = jnp.concatenate([jnp.broadcast_to(pv, (b,) + pv.shape[1:]), sv], 2)
+    pos_all = jnp.concatenate([jnp.broadcast_to(p_pos, (b, p_len)), s_pos], 1)
+    want = ref.prefix_attention_ref(q, k_all, v_all, q_pos, pos_all,
+                                    causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
 @pytest.mark.parametrize("b,hq,hkv,s,d", [
     (1, 4, 4, 32, 32), (2, 8, 2, 64, 64), (3, 6, 1, 100, 32),
 ])

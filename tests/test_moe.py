@@ -3,6 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis; "
+                           "pip install -e '.[test]'")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import moe as moe_lib

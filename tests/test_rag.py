@@ -2,6 +2,9 @@
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis; "
+                           "pip install -e '.[test]'")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.oag import generate_oag

@@ -1,0 +1,317 @@
+"""Shared-prefix cascade attention: exactness vs the broadcast path and
+the split-cache HBM accounting (DESIGN.md §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import PrefixState
+from repro.data.tokenizer import Tokenizer
+from repro.models import attention as A
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------------------
+# attend_shared vs broadcast-then-attend (unit level)
+# ----------------------------------------------------------------------
+def _mk(b, hq, hkv, tq, p, s, d):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, hq, tq, d))
+    pk = jax.random.normal(ks[1], (1, p, hkv, d))        # seq-major
+    pv = jax.random.normal(ks[2], (1, p, hkv, d))
+    sk = jax.random.normal(ks[3], (b, s, hkv, d))
+    sv = jax.random.normal(ks[4], (b, s, hkv, d))
+    return q, pk, pv, sk, sv
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (6, 1)])  # MHA/GQA/MQA
+@pytest.mark.parametrize("plen,tq", [
+    (9, 5),          # small, nothing aligned
+    (128, 7),        # prefix exactly one attention block
+    (129, 33),       # prefix + suffix both straddle block boundaries
+])
+def test_attend_shared_matches_broadcast(hq, hkv, plen, tq):
+    b, d = 3, 16
+    p_cap, s_cap = plen + 6, tq + 9                      # capacity > used
+    q, pk, pv, sk, sv = _mk(b, hq, hkv, tq, p_cap, s_cap, d)
+    slots = jnp.arange(p_cap)[None]
+    p_pos = jnp.where(slots < plen, slots, -1)           # empty tail slots
+    q_pos = jnp.broadcast_to(plen + jnp.arange(tq)[None], (b, tq))
+    s_slots = jnp.arange(s_cap)[None]
+    s_pos = jnp.broadcast_to(
+        jnp.where(s_slots < tq, plen + s_slots, -1), (b, s_cap))
+
+    prefix = {"k": pk, "v": pv, "pos": p_pos}
+    got = A.attend_shared(q, q_pos, prefix, sk, sv, s_pos)
+
+    # broadcast path: replicate the prefix KV and attend the concat
+    k_all = jnp.concatenate([jnp.broadcast_to(pk, (b,) + pk.shape[1:]), sk], 1)
+    v_all = jnp.concatenate([jnp.broadcast_to(pv, (b,) + pv.shape[1:]), sv], 1)
+    pos_all = jnp.concatenate([jnp.broadcast_to(p_pos, (b, p_cap)), s_pos], 1)
+    want = A.attend(q, k_all, v_all, q_pos, pos_all, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("window", [3, 8, 64])
+def test_attend_shared_window(window):
+    """Sliding windows that end inside the prefix, straddle the
+    prefix/suffix seam, and cover everything."""
+    b, hq, hkv, tq, plen, d = 2, 4, 2, 6, 20, 16
+    q, pk, pv, sk, sv = _mk(b, hq, hkv, tq, plen, tq, d)
+    p_pos = jnp.arange(plen)[None]
+    q_pos = jnp.broadcast_to(plen + jnp.arange(tq)[None], (b, tq))
+    s_pos = jnp.broadcast_to(plen + jnp.arange(tq)[None], (b, tq))
+
+    got = A.attend_shared(q, q_pos, {"k": pk, "v": pv, "pos": p_pos},
+                          sk, sv, s_pos, window=window)
+    k_all = jnp.concatenate([jnp.broadcast_to(pk, (b,) + pk.shape[1:]), sk], 1)
+    v_all = jnp.concatenate([jnp.broadcast_to(pv, (b,) + pv.shape[1:]), sv], 1)
+    pos_all = jnp.concatenate([jnp.broadcast_to(p_pos, (b, plen)), s_pos], 1)
+    want = A.attend(q, k_all, v_all, q_pos, pos_all, causal=True,
+                    window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_self_attention_split_cache_matches_broadcast():
+    """Full layer: suffix prefill + a decode step through the split
+    cache equal the broadcast cache, including the suffix slot_offset
+    remapping (token P+i at slot i)."""
+    d_model, hq, hkv, hd = 48, 4, 2, 12
+    p = A.init_attention(KEY, d_model, hq, hkv, hd, jnp.float32)
+    b, plen, slen = 2, 10, 4
+
+    def run(x, pos, cache=None, **kw):
+        return A.self_attention(p, x, num_heads=hq, num_kv_heads=hkv,
+                                head_dim=hd, rope_theta=1e4, positions=pos,
+                                cache=cache, **kw)
+
+    xp = jax.random.normal(jax.random.PRNGKey(1), (1, plen, d_model))
+    xs = jax.random.normal(jax.random.PRNGKey(2), (b, slen, d_model))
+    xd = jax.random.normal(jax.random.PRNGKey(3), (b, 1, d_model))
+    pos_p = jnp.arange(plen)[None]
+    pos_s = jnp.broadcast_to(plen + jnp.arange(slen)[None], (b, slen))
+    pos_d = jnp.full((b, 1), plen + slen, jnp.int32)
+
+    # batch-1 prefix cache
+    pc = A.init_kv_cache(1, hkv, 16, hd, jnp.float32)
+    _, pc = run(xp, pos_p, cache=pc)
+
+    # broadcast reference: replicated prefix in a big cache
+    bc = {k: jnp.broadcast_to(v, (b,) + v.shape[1:]) for k, v in
+          A.init_kv_cache(b, hkv, 32, hd, jnp.float32).items()}
+    _, bc = run(jnp.broadcast_to(xp, (b, plen, d_model)),
+                jnp.broadcast_to(pos_p, (b, plen)), cache=bc)
+    want_s, bc = run(xs, pos_s, cache=bc)
+    want_d, _ = run(xd, pos_d, cache=bc)
+
+    # split path: suffix-only cache + live prefix
+    sc = A.init_kv_cache(b, hkv, 8, hd, jnp.float32)
+    got_s, sc = run(xs, pos_s, cache=sc, prefix=pc, slot_offset=plen)
+    got_d, sc = run(xd, pos_d, cache=sc, prefix=pc, slot_offset=plen)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               atol=1e-5, rtol=1e-5)
+    # suffix token P+i must sit at slot i with its absolute position
+    assert int(sc["pos"][0, 0]) == plen
+    assert int(sc["pos"][0, slen]) == plen + slen
+
+
+def test_windowed_padded_suffix_keeps_real_keys():
+    """Regression (pre-existing in the broadcast tail-write, surfaced by
+    the cascade review): a right-padded member's real suffix keys must
+    survive the window-sized ring write — a column-tail write would
+    drop them and land padding in live slots.  Reference: each row
+    served length-exact at batch 1."""
+    d_model, hq, hkv, hd, w = 48, 4, 2, 12, 8
+    p = A.init_attention(KEY, d_model, hq, hkv, hd, jnp.float32)
+    plen, t_pad = 10, 12                       # suffix block padded to 12
+    row_lens = [2, 12]                         # row 0 heavily padded
+
+    def run(x, pos, cache=None, **kw):
+        return A.self_attention(p, x, num_heads=hq, num_kv_heads=hkv,
+                                head_dim=hd, rope_theta=1e4, positions=pos,
+                                cache=cache, window=w, **kw)
+
+    xp = jax.random.normal(jax.random.PRNGKey(1), (1, plen, d_model))
+    xs = jax.random.normal(jax.random.PRNGKey(2), (2, t_pad, d_model))
+    pos_p = jnp.arange(plen)[None]
+    pos_s = jnp.broadcast_to(plen + jnp.arange(t_pad)[None], (2, t_pad))
+    valid = jnp.stack([jnp.arange(t_pad) < n for n in row_lens])
+
+    pc = A.init_kv_cache(1, hkv, w, hd, jnp.float32)      # window-sized ring
+    _, pc = run(xp, pos_p, cache=pc)
+    sc = A.init_kv_cache(2, hkv, w, hd, jnp.float32)
+    _, sc = run(xs, pos_s, cache=sc, valid=valid, prefix=pc,
+                slot_offset=plen)
+
+    for r, n in enumerate(row_lens):
+        # reference: this row alone, unpadded, full-capacity cache
+        cr = A.init_kv_cache(1, hkv, 64, hd, jnp.float32)
+        _, cr = run(xp, pos_p, cache=cr)
+        _, cr = run(xs[r:r + 1, :n], pos_s[r:r + 1, :n], cache=cr)
+        xd = jax.random.normal(jax.random.PRNGKey(7), (1, 1, d_model))
+        pos_d = jnp.full((1, 1), plen + n, jnp.int32)
+        want, _ = run(xd, pos_d, cache=cr)
+        got, _ = run(xd, pos_d, cache=jax.tree.map(lambda a: a[r:r + 1], sc),
+                     prefix=pc, slot_offset=plen)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5,
+                                   err_msg=f"row {r} len {n}")
+
+
+# ----------------------------------------------------------------------
+# engine end-to-end: cascade == broadcast, with the HBM bound asserted
+# ----------------------------------------------------------------------
+def _tinyllama_cfg(vocab: int) -> ModelConfig:
+    """Scaled-down TinyLlama (dense GQA llama-2 arch, 4:1 head grouping)."""
+    return ModelConfig(name="tinyllama-test", family="dense", num_layers=3,
+                       d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+                       d_ff=160, vocab_size=vocab, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def engines():
+    tok = Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                           "a graph of nodes and edges answers questions"])
+    cfg = _tinyllama_cfg(tok.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    split = ServingEngine(params, cfg, tok, max_cache_len=512,
+                          max_new_tokens=6)
+    bcast = ServingEngine(params, cfg, tok, max_cache_len=512,
+                          max_new_tokens=6, split_prefix=False)
+    return tok, split, bcast
+
+
+def test_split_mode_is_auto_enabled(engines):
+    tok, split, bcast = engines
+    assert split.use_split_prefix
+    assert not bcast.use_split_prefix
+
+
+def test_generate_with_prefix_matches_broadcast_end_to_end(engines):
+    """Acceptance: cascade outputs == seed broadcast outputs (f32)."""
+    tok, split, bcast = engines
+    prefix = tok.encode("the quick brown fox jumps over the lazy dog",
+                        bos=True)
+    suffixes = [tok.encode("a graph of nodes"),
+                tok.encode("and edges"),
+                tok.encode("answers questions a graph")]
+    st_s, _ = split.prefill_prefix(prefix)
+    st_b, _ = bcast.prefill_prefix(prefix)
+    out_s, t_s = split.generate_with_prefix(st_s, suffixes)
+    out_b, t_b = bcast.generate_with_prefix(st_b, suffixes)
+    assert t_s["split_prefix"] and not t_b["split_prefix"]
+    assert out_s == out_b
+
+
+def test_split_never_broadcasts_and_allocates_p_plus_bs(engines, monkeypatch):
+    """Acceptance: on attention-only configs generate_with_prefix never
+    calls PrefixState.broadcast, and allocated KV slots are
+    prefix_capacity + B × suffix_capacity (pytree shape inspection)."""
+    tok, split, _ = engines
+    prefix = tok.encode("the quick brown fox", bos=True)
+    suffixes = [tok.encode("lazy dog"), tok.encode("nodes and edges")]
+
+    def boom(self, template):
+        raise AssertionError("split path must not broadcast the prefix")
+    monkeypatch.setattr(PrefixState, "broadcast", boom)
+
+    allocated = []
+    real_init = M.init_suffix_cache
+
+    def spy(cfg, batch, capacity):
+        cache = real_init(cfg, batch, capacity)
+        allocated.append(cache)
+        return cache
+    monkeypatch.setattr("repro.serving.engine.M.init_suffix_cache", spy)
+
+    state, _ = split.prefill_prefix(prefix)
+    outs, _ = split.generate_with_prefix(state, suffixes)
+    assert len(outs) == len(suffixes)
+
+    def kv_slots(cache) -> int:
+        """Total KV slots in a cache pytree = sum of ``pos`` elements
+        (each pos entry marks one [Hkv, D] KV slot), across stacked
+        layer groups."""
+        leaves = [x for path, x in
+                  jax.tree_util.tree_flatten_with_path(cache)[0]
+                  if getattr(path[-1], "key", None) == "pos"]
+        return sum(int(np.prod(x.shape)) for x in leaves)
+
+    b = 2                                   # bucketed member batch
+    n_attn_layers = len(split.cfg.layer_specs())
+    # the prefix state holds prefix_capacity slots at batch 1
+    assert kv_slots(state.cache) == n_attn_layers * 1 * state.capacity
+    # the ONLY member-side allocation is the suffix cache: B × suffix_cap
+    assert len(allocated) == 1
+    suffix_slots = kv_slots(allocated[0])
+    suffix_cap = suffix_slots // (n_attn_layers * b)
+    assert suffix_slots == n_attn_layers * b * suffix_cap
+    assert suffix_cap < state.capacity      # members never pay prefix HBM
+
+
+def test_swa_config_split_matches_broadcast():
+    """Sliding-window stack through the engine: cascade == broadcast."""
+    tok = Tokenizer.train(["alpha beta gamma delta epsilon zeta eta theta"])
+    cfg = ModelConfig(name="swa-test", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+                      d_ff=64, vocab_size=tok.vocab_size, dtype="float32",
+                      sliding_window=8)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    split = ServingEngine(params, cfg, tok, max_cache_len=256,
+                          max_new_tokens=4)
+    bcast = ServingEngine(params, cfg, tok, max_cache_len=256,
+                          max_new_tokens=4, split_prefix=False)
+    assert split.use_split_prefix
+    prefix = tok.encode("alpha beta gamma delta epsilon", bos=True)
+    suffixes = [tok.encode("zeta eta"), tok.encode("theta")]
+    st_s, _ = split.prefill_prefix(prefix)
+    st_b, _ = bcast.prefill_prefix(prefix)
+    out_s, _ = split.generate_with_prefix(st_s, suffixes)
+    out_b, _ = bcast.generate_with_prefix(st_b, suffixes)
+    assert out_s == out_b
+
+
+def test_pallas_bf16_split_matches_broadcast():
+    """Pallas cascade on a bf16 config: partials stay f32 so the merge
+    rounds to bf16 exactly once, matching single-pass attention."""
+    tok = Tokenizer.train(["one two three four five six seven eight"])
+    cfg = ModelConfig(name="bf16-pallas", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+                      d_ff=64, vocab_size=tok.vocab_size, dtype="bfloat16",
+                      attention_impl="pallas")
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    split = ServingEngine(params, cfg, tok, max_cache_len=256,
+                          max_new_tokens=3)
+    bcast = ServingEngine(params, cfg, tok, max_cache_len=256,
+                          max_new_tokens=3, split_prefix=False)
+    prefix = tok.encode("one two three four", bos=True)
+    suffixes = [tok.encode("five six"), tok.encode("seven")]
+    st_s, _ = split.prefill_prefix(prefix)
+    st_b, _ = bcast.prefill_prefix(prefix)
+    out_s, _ = split.generate_with_prefix(st_s, suffixes)
+    out_b, _ = bcast.generate_with_prefix(st_b, suffixes)
+    assert out_s == out_b
+
+
+def test_engine_records_cache_stats(engines):
+    """Satellite: the engine (not the pipeline) records accounting."""
+    tok, split, _ = engines
+    stats = split.cache_mgr.reset_stats()
+    prefix = tok.encode("the quick brown fox", bos=True)
+    suffixes = [tok.encode("lazy dog"), tok.encode("nodes and edges")]
+    state, _ = split.prefill_prefix(prefix)
+    split.generate_with_prefix(state, suffixes)
+    assert stats.num_clusters == 1
+    assert stats.clusters_split == 1          # observed cascade, not capability
+    assert stats.num_queries == len(suffixes)
+    assert stats.prefix_tokens_computed == state.prefix_len
+    assert stats.suffix_tokens_computed == sum(len(s) for s in suffixes)
+    assert stats.prefill_savings > 1.0
