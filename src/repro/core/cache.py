@@ -22,10 +22,14 @@ frees them after the cluster is served.  TPU adaptation (DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+
+_UID = itertools.count()
 
 
 @dataclasses.dataclass
@@ -35,6 +39,10 @@ class PrefixState:
     prefix_len: int            # tokens in the cached prefix
     capacity: int              # allocated cache capacity
     enc_len: int = 0           # cross-attention KV length (enc-dec / VLM)
+    # process-unique identity: lets caches (e.g. the engine's stacked
+    # multi-prefix memo) key on "same state object" without holding a
+    # strong reference (id() values are recycled; uids never are)
+    uid: int = dataclasses.field(default_factory=_UID.__next__)
 
     def broadcast(self, template: Any) -> Any:
         """Broadcast the batch-1 prefix state onto ``template`` shapes
@@ -75,6 +83,11 @@ class CacheStats:
     prefill_tokens_cached: int = 0
     prefix_tokens_computed: int = 0
     suffix_tokens_computed: int = 0
+    # --- pooled online serving (core/prefix_pool.py, DESIGN.md §7) ---
+    pool_hits: int = 0           # get() found a live PrefixState
+    pool_misses: int = 0         # get() missed (cold or evicted)
+    pool_evictions: int = 0      # states dropped to fit the byte budget
+    pool_reprefills: int = 0     # readmissions after an eviction
 
     @property
     def prefill_savings(self) -> float:
@@ -103,6 +116,19 @@ class CacheStats:
     def record_member(self, member_prompt_len: int, suffix_len: int) -> None:
         self.prefill_tokens_baseline += member_prompt_len
         self.suffix_tokens_computed += suffix_len
+
+    def record_pool(self, *, hits: int = 0, misses: int = 0,
+                    evictions: int = 0, reprefills: int = 0) -> None:
+        """Pooled-serving accounting (called by ``PrefixPool``)."""
+        self.pool_hits += hits
+        self.pool_misses += misses
+        self.pool_evictions += evictions
+        self.pool_reprefills += reprefills
+
+    @property
+    def pool_hit_rate(self) -> float:
+        total = self.pool_hits + self.pool_misses
+        return self.pool_hits / total if total else 0.0
 
     def finalize(self) -> None:
         self.prefill_tokens_cached = (self.prefix_tokens_computed

@@ -26,6 +26,9 @@ from repro.core.subgraph import Subgraph, merge_subgraphs
 
 @dataclasses.dataclass
 class ClusterPlan:
+    """One cluster of the batch plan: who belongs to it and the
+    union-merged representative subgraph whose textualization becomes
+    the shared prompt prefix (paper §3.3)."""
     cluster_id: int
     member_indices: List[int]          # indices into the in-batch query list
     representative: Subgraph
@@ -33,6 +36,10 @@ class ClusterPlan:
 
 @dataclasses.dataclass
 class BatchPlan:
+    """Offline execution plan for one in-batch query set.  The engine
+    serves ``clusters`` sequentially; the ONLINE path instead seeds an
+    ``OnlineClusterAssigner`` from a plan (``from_plan``) or skips the
+    planner entirely (serving/scheduler.py)."""
     clusters: List[ClusterPlan]
     cluster_processing_time_s: float   # paper Fig. 4 quantity
     num_queries: int

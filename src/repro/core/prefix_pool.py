@@ -1,0 +1,200 @@
+"""Pooled, evictable prefix-state cache for online cluster serving.
+
+The offline pipeline (``GraphRAGPipeline.run_subgcache``) keeps exactly
+ONE live ``PrefixState`` and serves clusters sequentially — correct for
+a closed batch, wasteful under streaming traffic where members of the
+same cluster arrive minutes apart.  ``PrefixPool`` instead keeps every
+representative-subgraph KV cache alive under an HBM byte budget, the
+way RAGCache pools document-chunk KV for RAG serving:
+
+* **admission** — ``put`` always admits the newly prefilled state (it
+  is about to be used), then evicts cold states until the pool fits the
+  budget again;
+* **eviction** — cost-aware, by ``age × prefix_len / hits``: old, long,
+  rarely-hit prefixes go first.  Recency alone (LRU) would evict an
+  expensive-to-recompute hot prefix to keep a cheap recent one; the
+  prefix length is the re-prefill cost and the hit count is the
+  expected payoff of keeping it.
+* **pinning** — states currently serving a batch are refcounted
+  (``pin``/``release`` or the ``using`` context manager) and never
+  evicted mid-flight, even if the pool temporarily overshoots the
+  budget;
+* **accounting** — hits, misses, evictions, and re-prefills land in
+  ``CacheStats`` (``pool_*`` counters) so the serving report can show
+  the hit rate next to the paper's prefill-savings ratio.
+
+The pool stores states; it does not compute them.  On a miss the caller
+(``serving/scheduler.py``) re-prefills the representative prefix and
+re-admits it — the pool only remembers that the key was seen before so
+the readmission is counted as a re-prefill, the cost signal the byte
+budget trades against.
+
+Lifecycle of one entry (DESIGN.md §7):
+
+    prefill -> put (pooled) -> get hit* -> evicted -> get miss
+            -> re-prefill -> put (re-admitted, counted) -> ...
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Hashable, List, Optional
+
+import jax
+
+from repro.core.cache import CacheStats, PrefixState
+
+
+def state_bytes(state: PrefixState) -> int:
+    """HBM footprint of a PrefixState: sum of its cache-pytree leaves."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state.cache))
+
+
+@dataclasses.dataclass
+class PoolEntry:
+    """One pooled PrefixState plus the bookkeeping eviction needs."""
+    key: Hashable
+    state: PrefixState
+    nbytes: int
+    prefill_s: float = 0.0      # what a re-prefill costs (diagnostics)
+    hits: int = 0
+    last_used: int = 0          # logical-clock tick of the latest touch
+    refs: int = 0               # in-flight pins; > 0 blocks eviction
+
+
+class PrefixPool:
+    """Capacity-bounded pool of live ``PrefixState``s.
+
+    ``budget_bytes``: HBM the pooled caches may occupy.  States pinned
+    by an in-flight batch are never evicted; if pinned states alone
+    exceed the budget the pool overshoots until they are released
+    (serving correctness beats the budget for the duration of a batch).
+    """
+
+    def __init__(self, budget_bytes: int,
+                 stats: Optional[CacheStats] = None) -> None:
+        assert budget_bytes > 0, budget_bytes
+        self.budget_bytes = int(budget_bytes)
+        self.stats = stats if stats is not None else CacheStats()
+        self._entries: Dict[Hashable, PoolEntry] = {}
+        self._seen: set = set()      # keys ever admitted (re-prefill count)
+        self._clock = 0
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    @property
+    def bytes_in_use(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    @property
+    def keys(self) -> List[Hashable]:
+        return list(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entry(self, key: Hashable) -> Optional[PoolEntry]:
+        return self._entries.get(key)
+
+    # ------------------------------------------------------------------
+    # lookup / admission
+    # ------------------------------------------------------------------
+    def get(self, key: Hashable, pin: bool = False) -> Optional[PrefixState]:
+        """Return the live state for ``key`` or None (cold or evicted).
+
+        A hit bumps the entry's recency and hit count (both feed the
+        eviction score); hit/miss land in ``CacheStats``.  ``pin=True``
+        takes an in-flight reference atomically with the lookup, so a
+        later admission in the same batch cannot evict this state
+        between lookup and use (``release`` when done).
+        """
+        self._clock += 1
+        e = self._entries.get(key)
+        if e is None:
+            self.stats.record_pool(misses=1)
+            return None
+        e.hits += 1
+        e.last_used = self._clock
+        if pin:
+            e.refs += 1
+        self.stats.record_pool(hits=1)
+        return e.state
+
+    def put(self, key: Hashable, state: PrefixState,
+            prefill_s: float = 0.0, pin: bool = False) -> PrefixState:
+        """Admit a freshly prefilled state, then evict down to budget.
+
+        Admission is unconditional — the caller prefilled this state
+        because a query needs it right now, so refusing admission would
+        only move the memory to an unpooled buffer.  Re-admission of a
+        previously evicted key counts as a re-prefill.  ``pin=True``
+        admits with an in-flight reference already held, so the
+        admission's own eviction pass (or a later one in the same
+        batch) can never drop the state the caller is about to serve —
+        even when the state alone exceeds the budget.
+        """
+        self._clock += 1
+        if key in self._seen and key not in self._entries:
+            self.stats.record_pool(reprefills=1)
+        self._seen.add(key)
+        old = self._entries.pop(key, None)
+        self._entries[key] = PoolEntry(
+            key=key, state=state, nbytes=state_bytes(state),
+            prefill_s=prefill_s, last_used=self._clock,
+            hits=old.hits if old else 0,
+            refs=(old.refs if old else 0) + (1 if pin else 0))
+        # the just-admitted key is exempt from its own admission's
+        # eviction pass: a long fresh prefix would otherwise out-score
+        # every resident entry and be dropped moments after it was
+        # prefilled ("admitted" must mean it survives to be served)
+        self._evict_to_budget(protect=key)
+        return state
+
+    # ------------------------------------------------------------------
+    # pinning (in-flight protection)
+    # ------------------------------------------------------------------
+    def pin(self, key: Hashable) -> None:
+        self._entries[key].refs += 1
+
+    def release(self, key: Hashable) -> None:
+        e = self._entries.get(key)
+        if e is not None:
+            e.refs = max(0, e.refs - 1)
+        self._evict_to_budget()     # deferred evictions may now proceed
+
+    @contextlib.contextmanager
+    def using(self, keys):
+        """Pin ``keys`` for the duration of a batch; release on exit."""
+        keys = list(keys)
+        for k in keys:
+            self.pin(k)
+        try:
+            yield
+        finally:
+            for k in keys:
+                self.release(k)
+
+    # ------------------------------------------------------------------
+    # eviction
+    # ------------------------------------------------------------------
+    def _score(self, e: PoolEntry) -> float:
+        """Eviction priority: ``age × prefix_len / hits`` (RAGCache-style
+        cost-aware ranking).  Higher = evict first: stale (age), cheap
+        to lose relative to payoff (few hits), and big (prefix_len ~
+        both HBM held and re-prefill cost recovered per byte freed)."""
+        age = max(1, self._clock - e.last_used)
+        return age * e.state.prefix_len / max(1, e.hits)
+
+    def _evict_to_budget(self, protect: Optional[Hashable] = None) -> None:
+        while self.bytes_in_use > self.budget_bytes:
+            victims = [e for e in self._entries.values()
+                       if e.refs == 0 and e.key != protect]
+            if not victims:
+                return     # everything in flight / protected: overshoot
+            worst = max(victims, key=self._score)
+            del self._entries[worst.key]
+            self.stats.record_pool(evictions=1)

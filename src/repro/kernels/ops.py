@@ -25,20 +25,23 @@ def prefix_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
         block_q=block_q, block_k=block_k, interpret=_interpret())
 
 
-def attention_partial(q, k, v, q_pos, k_pos, *, causal=True, window=0,
-                      block_q=128, block_k=128):
+def attention_partial(q, k, v, q_pos, k_pos, kv_index=None, *, causal=True,
+                      window=0, block_q=128, block_k=128):
     """Partial (online-softmax) attention; KV batch may be 1 (shared
-    prefix, read once per kv-head group) or the query batch."""
+    prefix, read once per kv-head group), the query batch, or — with
+    ``kv_index`` [B] — a pool of NP stacked prefixes (multi-prefix)."""
     return _shared.attention_partial(
-        q, k, v, q_pos, k_pos, causal=causal, window=window,
+        q, k, v, q_pos, k_pos, kv_index, causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=_interpret())
 
 
-def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window=0, block_k=128):
+def decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index=None, *, window=0,
+                       block_k=128):
     """Single-token decode attention in partial form (decode-shaped
-    [group, d] q tiles; KV batch may be 1 = shared prefix)."""
-    return _shared.decode_gqa_partial(q, k, v, q_pos, k_pos, window=window,
-                                      block_k=block_k,
+    [group, d] q tiles; KV batch may be 1 = shared prefix, or a pool of
+    NP stacked prefixes selected per row via ``kv_index`` [B])."""
+    return _shared.decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index,
+                                      window=window, block_k=block_k,
                                       interpret=_interpret())
 
 

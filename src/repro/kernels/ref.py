@@ -40,13 +40,16 @@ def prefix_attention_ref(q, k, v, q_pos, k_pos, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
-def attention_partial_ref(q, k, v, q_pos, k_pos, *, causal: bool = True,
-                          window: int = 0):
+def attention_partial_ref(q, k, v, q_pos, k_pos, kv_index=None, *,
+                          causal: bool = True, window: int = 0):
     """Partial masked GQA attention in online-softmax form (oracle).
 
     q: [B, Hq, Tq, D]; k, v: [Bk, Hkv, S, D] with Bk in (1, B) — Bk == 1
     is the SubGCache shared-prefix case (every member attends the same
     representative KV); q_pos: [B, Tq]; k_pos: [Bk, S] (-1 = empty slot).
+    ``kv_index`` [B] int32 (optional, multi-prefix pooling): k/v carry a
+    pool batch Bk = NP and query row b attends pool row kv_index[b] —
+    the oracle simply gathers; the kernel steers DMA instead.
 
     Returns (out [B,Hq,Tq,D] f32 normalized, m [B,Hq,Tq], l [B,Hq,Tq])
     such that ``merge_partials_ref`` over disjoint key sets reproduces
@@ -54,6 +57,8 @@ def attention_partial_ref(q, k, v, q_pos, k_pos, *, causal: bool = True,
     the model dtype, after the merge).  Fully-masked rows give out=0,
     m=NEG_INF, l=0.
     """
+    if kv_index is not None:
+        k, v, k_pos = k[kv_index], v[kv_index], k_pos[kv_index]
     b, hq, tq, d = q.shape
     bk, hkv = k.shape[0], k.shape[1]
     g = hq // hkv

@@ -13,6 +13,15 @@ per-member suffix partial, which is numerically exact: softmax over
 ``attention_partial`` also accepts per-member KV (kv batch == q batch),
 so the suffix side of the cascade uses the same kernel.
 
+**Multi-prefix (pooled) serving:** both partial kernels additionally
+accept ``kv_index`` ``[B] int32`` with KV shaped ``[NP, Hkv, S, D]`` — a
+*pool* of stacked prefix caches.  Query row ``b`` then attends KV row
+``kv_index[b]``, so one batch can mix members of several clusters
+(DESIGN.md §7).  The row index is fed through
+``pltpu.PrefetchScalarGridSpec`` so the BlockSpec index maps steer the
+HBM->VMEM DMA directly: no gather of the pooled KV is ever
+materialized, and rows sharing a prefix still stream the same tiles.
+
 Tiling mirrors ``prefix_attention.py``: grid (B, Hq, nq, nk), KV minor,
 online-softmax scratch in VMEM persisting across the nk loop; the merge
 kernel is a pure-VPU elementwise pass on (B, Hq, nq) tiles.
@@ -75,9 +84,17 @@ def _partial_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
         m_out_ref[0, 0] = m_ref[:, 0]
         l_out_ref[0, 0] = l
 
+def _indexed_partial_kernel(idx_ref, *refs, **kw):
+    """Scalar-prefetch wrapper: ``idx_ref`` only steers the BlockSpec
+    index maps (which KV batch row each query row DMAs); the attention
+    math is identical."""
+    _partial_kernel(*refs, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
-def attention_partial(q, k, v, q_pos, k_pos, *, causal: bool = True,
+def attention_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
+                      causal: bool = True,
                       window: int = 0, block_q: int = 128,
                       block_k: int = 128, interpret: bool = True):
     """Partial masked GQA attention in online-softmax form.
@@ -87,6 +104,11 @@ def attention_partial(q, k, v, q_pos, k_pos, *, causal: bool = True,
     same KV and each KV tile is read once per kv-head group, not once
     per member.  q_pos: [B, Tq]; k_pos: [Bk, S] (-1 marks empty slots).
 
+    ``kv_index`` [B] int32 (optional): multi-prefix mode.  k/v may then
+    carry any pool batch ``Bk = NP`` and query row ``b`` attends KV row
+    ``kv_index[b]`` — the index is scalar-prefetched so the BlockSpec
+    index maps DMA the right pool row per grid step (no gather).
+
     Returns ``(out [B,Hq,Tq,D] f32, m [B,Hq,Tq] f32, l [B,Hq,Tq] f32)``
     where ``out`` is already normalized by ``l`` (zero for fully masked
     rows).  Partials stay f32 so the cascade merge rounds to the model
@@ -94,8 +116,11 @@ def attention_partial(q, k, v, q_pos, k_pos, *, causal: bool = True,
     """
     b, hq, tq, d = q.shape
     bk_b, hkv, s_len = k.shape[0], k.shape[1], k.shape[2]
-    assert bk_b in (1, b), (bk_b, b)
-    shared = bk_b == 1
+    if kv_index is None:
+        assert bk_b in (1, b), (bk_b, b)
+    else:
+        assert kv_index.shape == (b,), (kv_index.shape, b)
+    shared = bk_b == 1 and kv_index is None
     group = hq // hkv
     scale = d ** -0.5
 
@@ -113,11 +138,57 @@ def attention_partial(q, k, v, q_pos, k_pos, *, causal: bool = True,
 
     nq, nk = tq_p // bq, s_p // bk
     grid = (b, hq, nq, nk)
-    kv_b = (lambda b_: 0) if shared else (lambda b_: b_)
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hq, tq_p, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
+        jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((bq, d), jnp.float32),     # acc
+        pltpu.VMEM((bq, 1), jnp.float32),     # m
+        pltpu.VMEM((bq, 1), jnp.float32),     # l
+    ]
+    kern = functools.partial(_partial_kernel, causal=causal, window=window,
+                             nk=nk, scale=scale)
 
+    if kv_index is not None:
+        # index maps under PrefetchScalarGridSpec get the prefetched
+        # scalar ref as a trailing argument
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq), lambda b_, h, i, j, ix: (b_, i)),
+                pl.BlockSpec((1, bk), lambda b_, h, i, j, ix: (ix[b_], j)),
+                pl.BlockSpec((1, 1, bq, d),
+                             lambda b_, h, i, j, ix: (b_, h, i, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h, i, j, ix: (ix[b_], h // group,
+                                                      j, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h, i, j, ix: (ix[b_], h // group,
+                                                      j, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, bq, d),
+                             lambda b_, h, i, j, ix: (b_, h, i, 0)),
+                pl.BlockSpec((1, 1, bq), lambda b_, h, i, j, ix: (b_, h, i)),
+                pl.BlockSpec((1, 1, bq), lambda b_, h, i, j, ix: (b_, h, i)),
+            ],
+            scratch_shapes=scratch_shapes,
+        )
+        out, m, l = pl.pallas_call(
+            functools.partial(_indexed_partial_kernel, causal=causal,
+                              window=window, nk=nk, scale=scale),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(kv_index.astype(jnp.int32), q_pos, k_pos, q, k, v)
+        return out[:, :, :tq, :], m[:, :, :tq], l[:, :, :tq]
+
+    kv_b = (lambda b_: 0) if shared else (lambda b_: b_)
     out, m, l = pl.pallas_call(
-        functools.partial(_partial_kernel, causal=causal, window=window,
-                          nk=nk, scale=scale),
+        kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq), lambda b_, h, i, j: (b_, i)),          # q_pos
@@ -133,16 +204,8 @@ def attention_partial(q, k, v, q_pos, k_pos, *, causal: bool = True,
             pl.BlockSpec((1, 1, bq), lambda b_, h, i, j: (b_, h, i)),
             pl.BlockSpec((1, 1, bq), lambda b_, h, i, j: (b_, h, i)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, hq, tq_p, d), jnp.float32),
-            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
-            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bq, d), jnp.float32),     # acc
-            pltpu.VMEM((bq, 1), jnp.float32),     # m
-            pltpu.VMEM((bq, 1), jnp.float32),     # l
-        ],
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(q_pos, k_pos, q, k, v)
     return out[:, :, :tq, :], m[:, :, :tq], l[:, :, :tq]
@@ -191,9 +254,16 @@ def _decode_partial_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
         l_out_ref[0, 0] = l
 
 
+def _indexed_decode_partial_kernel(idx_ref, *refs, **kw):
+    """Scalar-prefetch wrapper for multi-prefix decode (see
+    ``_indexed_partial_kernel``)."""
+    _decode_partial_kernel(*refs, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "block_k",
                                              "interpret"))
-def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window: int = 0,
+def decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
+                       window: int = 0,
                        block_k: int = 128, interpret: bool = True):
     """Single-token GQA decode attention in partial form.
 
@@ -202,13 +272,20 @@ def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window: int = 0,
     but emitting ``(out [B,Hq,D] f32, m [B,Hq], l [B,Hq])`` for the
     cascade merge.  k, v: [Bk, Hkv, S, D] with ``Bk in (1, B)``;
     ``Bk == 1`` is the shared prefix (read once per kv-head, not per
-    member).  Causal masking is always applied (a decode query is at or
-    past every cached position, so it is correct for both sides).
+    member).  ``kv_index`` [B] int32 (optional) enables multi-prefix
+    mode: ``Bk = NP`` pooled rows, decode row ``b`` attends pool row
+    ``kv_index[b]`` via scalar-prefetched index maps — one decode step
+    serves members of several clusters.  Causal masking is always
+    applied (a decode query is at or past every cached position, so it
+    is correct for both sides).
     """
     b, hq, d = q.shape
     bk_b, hkv, s_len = k.shape[0], k.shape[1], k.shape[2]
-    assert bk_b in (1, b), (bk_b, b)
-    shared = bk_b == 1
+    if kv_index is None:
+        assert bk_b in (1, b), (bk_b, b)
+    else:
+        assert kv_index.shape == (b,), (kv_index.shape, b)
+    shared = bk_b == 1 and kv_index is None
     group = hq // hkv
     scale = d ** -0.5
 
@@ -219,11 +296,52 @@ def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window: int = 0,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, s_p - s_len), (0, 0)))
         k_pos = jnp.pad(k_pos, ((0, 0), (0, s_p - s_len)), constant_values=-1)
     nk = s_p // bk
-    kv_b = (lambda b_: 0) if shared else (lambda b_: b_)
 
     qg = q.reshape(b, hkv, group, d)
     qp2 = q_pos.reshape(b, 1).astype(jnp.int32)
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hkv, group, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
+        jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((group, d), jnp.float32),
+        pltpu.VMEM((group, 1), jnp.float32),
+        pltpu.VMEM((group, 1), jnp.float32),
+    ]
 
+    if kv_index is not None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda b_, h, j, ix: (b_, 0)),
+                pl.BlockSpec((1, bk), lambda b_, h, j, ix: (ix[b_], j)),
+                pl.BlockSpec((1, 1, group, d),
+                             lambda b_, h, j, ix: (b_, h, 0, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h, j, ix: (ix[b_], h, j, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h, j, ix: (ix[b_], h, j, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, group, d),
+                             lambda b_, h, j, ix: (b_, h, 0, 0)),
+                pl.BlockSpec((1, 1, group), lambda b_, h, j, ix: (b_, h, 0)),
+                pl.BlockSpec((1, 1, group), lambda b_, h, j, ix: (b_, h, 0)),
+            ],
+            scratch_shapes=scratch_shapes,
+        )
+        out, m, l = pl.pallas_call(
+            functools.partial(_indexed_decode_partial_kernel, window=window,
+                              nk=nk, scale=scale),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(kv_index.astype(jnp.int32), qp2, k_pos, qg, k, v)
+        return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
+
+    kv_b = (lambda b_: 0) if shared else (lambda b_: b_)
     out, m, l = pl.pallas_call(
         functools.partial(_decode_partial_kernel, window=window, nk=nk,
                           scale=scale),
@@ -240,16 +358,8 @@ def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window: int = 0,
             pl.BlockSpec((1, 1, group), lambda b_, h, j: (b_, h, 0)),
             pl.BlockSpec((1, 1, group), lambda b_, h, j: (b_, h, 0)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, hkv, group, d), jnp.float32),
-            jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
-            jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((group, d), jnp.float32),
-            pltpu.VMEM((group, 1), jnp.float32),
-            pltpu.VMEM((group, 1), jnp.float32),
-        ],
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(qp2, k_pos, qg, k, v)
     return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))

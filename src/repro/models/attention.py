@@ -233,8 +233,9 @@ def merge_attend(o1, m1, l1, o2, m2, l2):
 def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix: dict,
                   k_suf: jnp.ndarray, v_suf: jnp.ndarray,
                   suf_pos: jnp.ndarray, *, window: int = 0,
-                  impl: str = "xla") -> jnp.ndarray:
-    """Cascade attention over [batch-1 shared prefix ++ per-member suffix].
+                  impl: str = "xla",
+                  prefix_idx: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Cascade attention over [shared prefix ++ per-member suffix].
 
     q: [B, Hq, Tq, D]; prefix: {"k","v","pos"} seq-major batch-1 cache
     (the live PrefixState buffers, unreplicated); k_suf, v_suf:
@@ -242,11 +243,18 @@ def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix: dict,
     mask — every cached prefix position is strictly past every query —
     so only validity (pos >= 0) and the optional sliding window apply.
     Numerically exact vs. attending the concatenated KV.
+
+    ``prefix_idx`` [B] int32 enables multi-prefix (pooled) serving:
+    ``prefix`` then stacks NP prefix caches ([NP, P, Hkv, D]) and query
+    row ``b`` attends prefix row ``prefix_idx[b]`` — one batch mixes
+    members of several clusters (DESIGN.md §7).  The Pallas path steers
+    the per-row DMA via scalar prefetch; the XLA path gathers.
     """
+    pk_, pv_, ppos_ = prefix["k"], prefix["v"], prefix["pos"]
     if impl == "pallas":
         from repro.kernels import ops as kops
-        pk = prefix["k"].transpose(0, 2, 1, 3)       # head-major for MXU
-        pv = prefix["v"].transpose(0, 2, 1, 3)
+        pk = pk_.transpose(0, 2, 1, 3)               # head-major for MXU
+        pv = pv_.transpose(0, 2, 1, 3)
         sk = k_suf.transpose(0, 2, 1, 3)
         sv = v_suf.transpose(0, 2, 1, 3)
         if q.shape[2] == 1:
@@ -254,20 +262,26 @@ def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix: dict,
             # stream per kv-head group) instead of 1-row prefill tiles;
             # the elementwise merge stays in XLA (fuses, nothing to tile)
             o1, m1, l1 = kops.decode_gqa_partial(
-                q[:, :, 0], pk, pv, q_pos[:, 0], prefix["pos"],
+                q[:, :, 0], pk, pv, q_pos[:, 0], ppos_, prefix_idx,
                 window=window)
             o2, m2, l2 = kops.decode_gqa_partial(
                 q[:, :, 0], sk, sv, q_pos[:, 0], suf_pos, window=window)
             out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
             return out[:, :, None].astype(q.dtype)
-        o1, m1, l1 = kops.attention_partial(q, pk, pv, q_pos, prefix["pos"],
-                                            causal=False, window=window)
+        o1, m1, l1 = kops.attention_partial(q, pk, pv, q_pos, ppos_,
+                                            prefix_idx, causal=False,
+                                            window=window)
         o2, m2, l2 = kops.attention_partial(q, sk, sv, q_pos, suf_pos,
                                             causal=True, window=window)
         out, _, _ = kops.merge_partials(o1, m1, l1, o2, m2, l2)
         return out.astype(q.dtype)
-    o1, m1, l1 = attend_partial(q, prefix["k"], prefix["v"], q_pos,
-                                prefix["pos"], causal=False, window=window)
+    if prefix_idx is not None:
+        # XLA multi-prefix: gather each row's pool entry, then run the
+        # ordinary per-member partial (exact; the kernel path avoids the
+        # materialized gather via index-map DMA)
+        pk_, pv_, ppos_ = pk_[prefix_idx], pv_[prefix_idx], ppos_[prefix_idx]
+    o1, m1, l1 = attend_partial(q, pk_, pv_, q_pos,
+                                ppos_, causal=False, window=window)
     o2, m2, l2 = attend_partial(q, k_suf, v_suf, q_pos, suf_pos,
                                 causal=True, window=window)
     out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
@@ -291,14 +305,19 @@ def cache_write(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
     ``slot_offset``: subtracted from positions to get the slot index —
     the split prefix/suffix cache stores suffix token P+i at slot i
     (DESIGN.md §5) while ``pos`` keeps the absolute position, so all
-    masking stays purely positional.
+    masking stays purely positional.  A scalar applies to every row; a
+    [B] array gives each row its own offset (multi-prefix serving, where
+    members of different clusters sit behind different prefix lengths).
     ``keep`` [B, T]: entries marked False are not written AT ALL (their
     slot keeps its previous contents) — ring writes of right-padded
     blocks must drop padding instead of landing it in a wrapped slot
     that a kept token or a still-in-window entry owns.
     """
     cap = cache["k"].shape[1]
-    rel = positions - slot_offset
+    off = jnp.asarray(slot_offset)
+    if off.ndim == 1:
+        off = off[:, None]                                     # [B, 1]
+    rel = positions - off
     slots = rel % cap if ring else rel                         # [B, T]
     b_idx = jnp.arange(cache["k"].shape[0])[:, None]           # [B, 1]
     if keep is not None:
@@ -353,7 +372,7 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                    causal: bool = True, window: int = 0,
                    ring: bool = False, valid: Optional[jnp.ndarray] = None,
                    impl: str = "xla", prefix: Optional[dict] = None,
-                   slot_offset=0):
+                   slot_offset=0, prefix_idx: Optional[jnp.ndarray] = None):
     """x: [B, T, D_model]; positions: [B, T] absolute positions.
 
     Returns (out [B, T, D_model], new_cache or None).
@@ -365,6 +384,10 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
     Fresh KV then goes into ``cache`` (the suffix-only cache) at slot =
     position - ``slot_offset``, and attention runs as shared-prefix
     partial + suffix partial + LSE merge — exact vs. the broadcast path.
+
+    ``prefix_idx`` [B] int32 (with a stacked [NP, ...] ``prefix``) is
+    the pooled multi-prefix variant (DESIGN.md §7): row ``b`` attends
+    prefix row ``prefix_idx[b]``; ``slot_offset`` is then per-row [B].
     """
     if impl == "pallas":
         from repro.kernels import ops as kops
@@ -414,7 +437,8 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                 [cache["v"], v.astype(cache["v"].dtype)], axis=1)
             pos_all = jnp.concatenate([cache["pos"], self_pos], axis=1)
             out = attend_shared(q, positions, prefix, k_all, v_all, pos_all,
-                                window=window, impl=impl)
+                                window=window, impl=impl,
+                                prefix_idx=prefix_idx)
             new_cache = ring_write_window(cache, k, v, positions, valid,
                                           slot_offset=slot_offset)
         else:
@@ -423,7 +447,8 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                                     valid=valid, slot_offset=slot_offset)
             out = attend_shared(q, positions, prefix, new_cache["k"],
                                 new_cache["v"], new_cache["pos"],
-                                window=window, impl=impl)
+                                window=window, impl=impl,
+                                prefix_idx=prefix_idx)
     elif window and t > 1:
         # Windowed multi-token (prefill / suffix prefill): the ring buffer
         # cannot hold T > capacity fresh tokens at once, so attend over

@@ -126,7 +126,8 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
             causal=ctx.get("causal", True), window=window,
             ring=ctx.get("ring", False), valid=ctx.get("valid"),
             impl=cfg.attention_impl, prefix=sub_prefix,
-            slot_offset=ctx.get("slot_offset", 0))
+            slot_offset=ctx.get("slot_offset", 0),
+            prefix_idx=ctx.get("prefix_idx"))
         if sub_new is not None:
             new_cache.update(sub_new)
     elif spec.mixer == MAMBA:
@@ -286,6 +287,57 @@ def init_suffix_cache(cfg: ModelConfig, batch: int,
     return init_cache(cfg, batch, suffix_capacity)
 
 
+def _kv_axes(path) -> tuple:
+    """(seq_axis, batch_axis) for an attention-cache leaf, found from its
+    trailing pytree key.  k/v leaves are [..., B, C, Hkv, D]; pos leaves
+    are [..., B, C] (scanned layer groups add leading stack dims, hence
+    the negative indexing).  Non-attention leaves (recurrent state,
+    cross-attention KV) have no positional slots to pad or stack — the
+    split/pooled path never covers them, so they are rejected."""
+    key = getattr(path[-1], "key", None) if path else None
+    if key in ("k", "v"):
+        return -3, -4
+    if key == "pos":
+        return -1, -2
+    raise ValueError(
+        f"prefix pooling covers attention KV caches only; got leaf {path}")
+
+
+def pad_prefix_cache(cache: dict, capacity: int) -> dict:
+    """Pad every attention-cache leaf of a prefix pytree to ``capacity``
+    slots along the sequence axis (k/v with zeros, pos with -1 = empty).
+
+    Pooled multi-prefix serving stacks PrefixStates of different
+    capacity buckets into one [NP, ...] pytree; padding to the common
+    capacity first keeps the stack rectangular, and the -1 positions
+    keep the extra slots masked (DESIGN.md §2: masking is positional).
+    """
+    def pad(path, x):
+        seq_axis, _ = _kv_axes(path)
+        extra = capacity - x.shape[seq_axis]
+        if extra < 0:
+            raise ValueError(f"cannot shrink cache leaf {path} to {capacity}")
+        if extra == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[seq_axis % x.ndim] = (0, extra)
+        fill = -1 if getattr(path[-1], "key", None) == "pos" else 0
+        return jnp.pad(x, widths, constant_values=fill)
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def stack_prefix_caches(caches) -> dict:
+    """Concatenate same-capacity prefix cache pytrees along the batch
+    axis: NP batch-1 PrefixState caches become one pooled [NP, ...]
+    pytree that ``forward(prefix=..., prefix_idx=...)`` serves from
+    (DESIGN.md §7).  Use ``pad_prefix_cache`` first if capacities
+    differ.  Attention-only (the split path's domain)."""
+    def cat(path, *xs):
+        _, batch_axis = _kv_axes(path)
+        return jnp.concatenate(xs, axis=batch_axis % xs[0].ndim)
+    return jax.tree_util.tree_map_with_path(cat, *caches)
+
+
 # ======================================================================
 # forward
 # ======================================================================
@@ -398,18 +450,27 @@ def forward(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
             positions: jnp.ndarray, cache: Optional[dict] = None,
             enc: Optional[jnp.ndarray] = None,
             valid: Optional[jnp.ndarray] = None, ring: bool = False,
-            prefix: Optional[dict] = None, slot_offset=0):
-    """embeds: [B, T, D] already-embedded inputs.
+            prefix: Optional[dict] = None, slot_offset=0,
+            prefix_idx: Optional[jnp.ndarray] = None):
+    """Run the decoder stack in any serving mode.
 
-    Returns (hidden [B, T, D], new_cache, aux_loss).
+    embeds: [B, T, D] already-embedded inputs; positions: [B, T]
+    absolute token positions.  Returns (hidden [B, T, D], new_cache,
+    aux_loss).
 
     Split prefix/suffix serving (DESIGN.md §5): pass the batch-1 shared
     prefix state as ``prefix`` (read-only) and the prefix length as
     ``slot_offset``; ``cache`` is then the suffix-only cache and suffix
     token P+i is stored at slot i while keeping absolute positions.
+
+    Multi-prefix pooled serving (DESIGN.md §7): ``prefix`` stacks NP
+    prefix caches (see ``stack_prefix_caches``), ``prefix_idx`` [B]
+    selects each row's prefix, and ``slot_offset`` is per-row [B]
+    (each cluster's own prefix length).
     """
     ctx = {"positions": positions, "valid": valid, "ring": ring,
-           "enc": enc, "causal": True, "slot_offset": slot_offset}
+           "enc": enc, "causal": True, "slot_offset": slot_offset,
+           "prefix_idx": prefix_idx}
     return run_stack(params, cfg, embeds, cache, ctx, prefix=prefix)
 
 

@@ -1,8 +1,19 @@
 """End-to-end graph-based RAG pipeline with optional SubGCache.
 
-Baseline mode reproduces G-Retriever / GRAG single-query processing;
-SubGCache mode implements the paper's cluster -> representative subgraph
--> prefix-reuse loop on top of the same retriever, GNN, and engine.
+Three serving modes over the same retriever, GNN, and engine:
+
+* ``run_baseline``  — per-query processing (paper's G-Retriever / GRAG
+  baseline): every query prefills its own full prompt.
+* ``run_subgcache`` — the paper's OFFLINE method: all queries present up
+  front, one dendrogram cut (``plan_batch``), clusters served one at a
+  time against a single live ``PrefixState``.
+* ``serve_stream``  — ONLINE serving (DESIGN.md §7): queries arrive on
+  a timeline, an ``ArrivalQueue`` drains them into slot-limited
+  micro-batches, each query is assigned to a cluster incrementally
+  (``OnlineClusterAssigner``), representative prefix states live in a
+  byte-budgeted ``PrefixPool``, and one multi-prefix batched
+  prefill/decode serves members of several clusters at once.  TTFT per
+  query includes the arrival-queue wait.
 """
 from __future__ import annotations
 
@@ -30,6 +41,11 @@ ANSWER_HEADER = "answer :"
 
 @dataclasses.dataclass
 class GraphRAGPipeline:
+    """Composition root: retriever + GNN encoder + serving engine +
+    tokenizer, with the three serving modes as methods (see module
+    docstring).  ``gnn_params``/``gnn_apply`` drive both the clustering
+    embeddings and (with ``proj_params``) the soft graph prompt;
+    without them clustering falls back to pooled text vectors."""
     index: RetrieverIndex
     retriever: object                   # GRetrieverRetriever | GRAGRetriever
     engine: ServingEngine
@@ -41,12 +57,18 @@ class GraphRAGPipeline:
 
     # ------------------------------------------------------------------
     def prefix_text(self, sg: Subgraph) -> str:
+        """The cached prompt prefix: textualized (representative)
+        subgraph.  Order-normalized so equal subgraphs give the
+        identical string (the cached unit must be exact)."""
         return f"{PREFIX_HEADER}\n{textualize(sg, self.index.graph.node_text)}"
 
     def suffix_text(self, question: str) -> str:
+        """The per-member prompt suffix appended after the prefix."""
         return f"{QUESTION_HEADER} {question} {ANSWER_HEADER}"
 
     def soft_prompt(self, sg: Subgraph) -> Optional[np.ndarray]:
+        """[n_soft, D] GNN soft-prompt embeddings for ``sg`` (or None
+        when soft prompting is disabled / no projector is loaded)."""
         if not (self.use_soft_prompt and self.proj_params is not None):
             return None
         x, snd, rcv, ef = subgraph_tensors(self.index, sg)
@@ -60,6 +82,8 @@ class GraphRAGPipeline:
 
     # ------------------------------------------------------------------
     def retrieve_all(self, items: Sequence[QAItem]):
+        """Retrieve one subgraph per query; returns (subgraphs,
+        per-query retrieval seconds)."""
         subgraphs, times = [], []
         for it in items:
             t0 = time.perf_counter()
@@ -90,19 +114,23 @@ class GraphRAGPipeline:
         return records, summary
 
     # ------------------------------------------------------------------
+    def embed_for_clustering(self, subgraphs: Sequence[Subgraph]) -> np.ndarray:
+        """[m, dim] clustering embeddings: the pretrained GNN when
+        available (paper §3.2), else text-space pooled node vectors."""
+        if self.gnn_params is not None:
+            return embed_subgraphs(self.index, subgraphs, self.gnn_params,
+                                   self.gnn_apply)
+        return np.stack([
+            np.mean(self.index.node_vecs[sorted(sg.nodes)], axis=0)
+            for sg in subgraphs])
+
     def run_subgcache(self, items: Sequence[QAItem], num_clusters: int,
                       linkage: str = "ward") -> tuple:
         """Cluster-wise prefix-cache processing (the paper's method)."""
         subgraphs, ret_times = self.retrieve_all(items)
 
         t0 = time.perf_counter()
-        if self.gnn_params is not None:
-            emb = embed_subgraphs(self.index, subgraphs, self.gnn_params,
-                                  self.gnn_apply)
-        else:  # fall back to text-space pooled embeddings
-            emb = np.stack([
-                np.mean(self.index.node_vecs[sorted(sg.nodes)], axis=0)
-                for sg in subgraphs])
+        emb = self.embed_for_clustering(subgraphs)
         plan = plan_batch(subgraphs, emb, num_clusters, linkage)
         cluster_time = (time.perf_counter() - t0
                         + plan.cluster_processing_time_s)
@@ -137,14 +165,18 @@ class GraphRAGPipeline:
                 it = items[qi]
                 text = self.tokenizer.decode(outs[k])
                 member_prompt = len(prefix_tokens) + len(suffixes[k])
+                # per-member shares come from the engine: the stateful
+                # fallback serves equal-length SUB-batches, so dividing
+                # the summed prefill/decode time by the cluster size n
+                # would misattribute cost across sub-batches
                 records[qi] = QueryRecord(
                     query=it.question, answer=it.answer, generated=text,
                     correct=self._check(text, it.answer),
                     retrieval_s=ret_times[qi], cluster_share_s=share,
                     prompt_build_s=builds[k] + t_build_prefix / n,
                     prefix_share_s=t_prefix / n,
-                    prefill_s=t["prefill_s"] / n,
-                    decode_s=t["decode_s"] / n,
+                    prefill_s=t["prefill_share"][k],
+                    decode_s=t["decode_share"][k],
                     prompt_tokens=member_prompt,
                     cached_tokens=state.prefix_len)
         summary = RunSummary.from_records(
@@ -152,3 +184,97 @@ class GraphRAGPipeline:
             cluster_processing_s=cluster_time,
             prefill_savings=stats.prefill_savings)
         return records, summary, plan, stats
+
+    # ------------------------------------------------------------------
+    def _prefix_payload(self, sg: Subgraph):
+        """(prefix tokens, soft-prompt embeds or None) for a cluster
+        representative — the closure ``OnlineScheduler`` prefills with."""
+        toks = self.tokenizer.encode(self.prefix_text(sg), bos=True)
+        return toks, self.soft_prompt(sg)
+
+    def serve_stream(self, items: Sequence[QAItem],
+                     arrivals: Sequence[float], *,
+                     max_batch: int = 8,
+                     pool_budget_bytes: int = 1 << 30,
+                     threshold: float = float("inf"),
+                     max_clusters: Optional[int] = None,
+                     scheduler=None) -> tuple:
+        """Online micro-batched serving of a streaming query trace.
+
+        ``items[i]`` arrives at ``arrivals[i]`` seconds (any order).  A
+        discrete-event loop drains the arrival queue into micro-batches
+        of at most ``max_batch`` queries: the virtual clock jumps to the
+        next arrival when idle and advances by the measured wall time of
+        each served batch, so ``queue_wait_s`` reflects real service
+        times.  Per batch: retrieve, embed, assign each query to a
+        cluster (spawning at distance > ``threshold``), materialize
+        prefix states through the byte-budgeted pool, and serve all
+        members in one multi-prefix batched prefill + decode.
+
+        Pass ``scheduler`` (a previous call's return value) to keep the
+        cluster population and prefix pool warm across traces.  Returns
+        ``(records, summary, scheduler)``; pool hit/miss/eviction
+        counters live in ``scheduler.pool.stats``.
+        """
+        from repro.core.prefix_pool import PrefixPool
+        from repro.serving.scheduler import (ArrivalQueue,
+                                             OnlineClusterAssigner,
+                                             OnlineScheduler)
+        assert len(items) == len(arrivals)
+        stats = self.engine.cache_mgr.reset_stats()
+        if scheduler is None:
+            # OnlineScheduler owns the stats wiring: it points the
+            # pool's counters at the engine's (just-reset) window
+            scheduler = OnlineScheduler(
+                self.engine,
+                OnlineClusterAssigner(threshold=threshold,
+                                      max_clusters=max_clusters),
+                PrefixPool(pool_budget_bytes),
+                self._prefix_payload)
+        else:
+            scheduler.pool.stats = stats    # fresh accounting window
+
+        queue = ArrivalQueue()
+        for i, t_arr in enumerate(arrivals):
+            queue.push(t_arr, i)
+        records: List[QueryRecord] = [None] * len(items)  # type: ignore
+        clock = 0.0
+        while len(queue):
+            now = max(clock, queue.next_arrival())
+            batch = queue.drain(now, max_batch)
+            idxs = [a.payload for a in batch]
+            t_batch0 = time.perf_counter()
+            subgraphs, ret_times = self.retrieve_all(
+                [items[i] for i in idxs])
+            t0 = time.perf_counter()
+            emb = self.embed_for_clustering(subgraphs)
+            suffixes, builds = [], []
+            for i in idxs:
+                t1 = time.perf_counter()
+                suffixes.append(self.tokenizer.encode(
+                    self.suffix_text(items[i].question)))
+                builds.append(time.perf_counter() - t1)
+            served = scheduler.serve_batch(list(emb), subgraphs, suffixes)
+            t_serve = time.perf_counter() - t0
+            # embedding/assignment/pool overhead not already attributed
+            # to a query by the engine, spread uniformly over the batch
+            engine_s = sum(s.prefix_share_s + s.prefill_s + s.decode_s
+                           for s in served)
+            share = max(0.0, t_serve - engine_s - sum(builds)) / len(batch)
+            for k, (a, i, sq) in enumerate(zip(batch, idxs, served)):
+                it = items[i]
+                text = self.tokenizer.decode(sq.tokens)
+                records[i] = QueryRecord(
+                    query=it.question, answer=it.answer, generated=text,
+                    correct=self._check(text, it.answer),
+                    retrieval_s=ret_times[k], queue_wait_s=now - a.time_s,
+                    cluster_share_s=share, prompt_build_s=builds[k],
+                    prefix_share_s=sq.prefix_share_s,
+                    prefill_s=sq.prefill_s, decode_s=sq.decode_s,
+                    prompt_tokens=sq.prefix_len + len(suffixes[k]),
+                    cached_tokens=sq.prefix_len if sq.pool_hit else 0)
+            clock = now + (time.perf_counter() - t_batch0)
+        summary = RunSummary.from_records(
+            f"online(b={max_batch})", records,
+            prefill_savings=stats.prefill_savings)
+        return records, summary, scheduler

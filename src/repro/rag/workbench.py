@@ -100,6 +100,12 @@ def serving_report(pipe: GraphRAGPipeline) -> dict:
         # recorded cluster actually took the cascade
         "split_prefix": (st.num_clusters > 0
                          and st.clusters_split == st.num_clusters),
+        # pooled online serving (zeros for the offline pipeline)
+        "pool_hits": st.pool_hits,
+        "pool_misses": st.pool_misses,
+        "pool_evictions": st.pool_evictions,
+        "pool_reprefills": st.pool_reprefills,
+        "pool_hit_rate": round(st.pool_hit_rate, 4),
     }
 
 

@@ -18,7 +18,22 @@ Execution paths:
                               cross-attention stacks fall back to
                               ``PrefixState.broadcast`` (their recurrent
                               states are tiny).
+  * ``generate_multi_prefix``— pooled ONLINE serving (DESIGN.md §7): one
+                              batch mixes members of SEVERAL clusters.
+                              The per-cluster ``PrefixState``s are
+                              padded to a common capacity and stacked
+                              into an [NP, ...] pool; every row carries
+                              a prefix index and its own slot offset,
+                              so a single prefill + decode step serves
+                              all clusters at once — no idling between
+                              clusters.  Bit-identical to serving each
+                              cluster separately through the cascade.
   * ``generate``            — vanilla per-query path (the baseline).
+
+Timing dicts returned by the serving calls carry aggregate
+``prefill_s``/``decode_s`` plus per-member ``prefill_share``/
+``decode_share`` lists — sub-batched serving (stateful fallback) costs
+each member its OWN sub-batch's share, not a global average.
 
 Shapes are bucketed (suffix length to multiples of ``bucket``, batch to
 powers of two) so a handful of compiled executables serve any workload —
@@ -41,10 +56,12 @@ from repro.models.config import ModelConfig
 
 
 def _bucket_len(n: int, bucket: int) -> int:
+    """Round a sequence length up to the next multiple of ``bucket``."""
     return max(bucket, ((n + bucket - 1) // bucket) * bucket)
 
 
 def _bucket_batch(n: int) -> int:
+    """Round a batch (or pool) size up to the next power of two."""
     b = 1
     while b < n:
         b *= 2
@@ -52,6 +69,23 @@ def _bucket_batch(n: int) -> int:
 
 
 class ServingEngine:
+    """Executes serving traffic for one model (see module docstring).
+
+    Owns the jitted prefill/decode builders (lru-cached per shape
+    bucket), the ``ClusterCacheManager`` that accounts ``CacheStats``,
+    and the split-vs-broadcast policy decision.  Tensor conventions
+    follow ``kernels/``: embeddings ``[B, T, D]``, positions/valid
+    ``[B, T]``, KV caches seq-major ``{"k","v": [B, C, Hkv, Dh],
+    "pos": [B, C]}`` with pooled prefixes adding a leading NP dim.
+
+    ``max_cache_len``: hard capacity ceiling per sequence.
+    ``max_new_tokens``: greedy-decode budget (EOS stops earlier).
+    ``bucket``: suffix-length bucket (lengths are data, shapes are
+    buckets — DESIGN.md §3).  ``split_prefix``: force-disable the split
+    cascade with ``False`` (A/B comparisons); default auto-enables it
+    on attention-only stacks.
+    """
+
     def __init__(self, params, cfg: ModelConfig, tokenizer: Tokenizer, *,
                  max_cache_len: int = 768, max_new_tokens: int = 32,
                  bucket: int = 32, split_prefix: Optional[bool] = None):
@@ -64,6 +98,9 @@ class ServingEngine:
         self.cache_mgr = ClusterCacheManager()
         self._prefill_jit = functools.lru_cache(maxsize=64)(self._make_prefill)
         self._decode_jit = functools.lru_cache(maxsize=16)(self._make_decode)
+        # last stacked multi-prefix pool, keyed on the identity of the
+        # stacked states (see _serve_multi_pooled)
+        self._pool_stack: Optional[tuple] = None
         # Recurrent mixers (Mamba / RG-LRU) carry state through every
         # consumed token — right-padding would corrupt it (attention masks
         # padded slots; scans cannot).  Such archs get length-exact
@@ -85,18 +122,21 @@ class ServingEngine:
     # jitted building blocks (cached per shape bucket)
     # ------------------------------------------------------------------
     def _make_prefill(self, batch: int, seqlen: int):
-        """One builder serves both paths: broadcast callers pass
+        """One builder serves all paths: broadcast callers pass
         ``prefix=None`` (empty pytree — same trace as before); split
         callers pass the live batch-1 prefix buffers as an ordinary
-        non-donated argument, read in place — no replication, no copy."""
+        non-donated argument, read in place — no replication, no copy;
+        pooled callers pass the stacked [NP, ...] pool plus a per-row
+        ``prefix_idx`` [B] and per-row ``slot_offset`` [B]."""
         cfg = self.cfg
 
         def prefill(params, embeds, positions, valid, cache, prefix,
-                    slot_offset):
+                    slot_offset, prefix_idx):
             hidden, cache, _ = M.forward(params, cfg, embeds, positions,
                                          cache=cache, valid=valid,
                                          prefix=prefix,
-                                         slot_offset=slot_offset)
+                                         slot_offset=slot_offset,
+                                         prefix_idx=prefix_idx)
             lengths = jnp.sum(valid.astype(jnp.int32), axis=1)      # [B]
             last = jnp.take_along_axis(
                 hidden, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
@@ -106,18 +146,21 @@ class ServingEngine:
         return jax.jit(prefill, donate_argnums=(4,))
 
     def _make_decode(self, batch: int):
-        """In split mode the decode scan closes over the prefix as an
-        invariant — it is never carried, donated, or copied per step."""
+        """In split mode the decode scan closes over the prefix (and the
+        pooled ``prefix_idx``) as invariants — never carried, donated,
+        or copied per step."""
         cfg = self.cfg
         steps = self.max_new_tokens - 1
 
-        def decode(params, first_token, lengths, cache, prefix, slot_offset):
+        def decode(params, first_token, lengths, cache, prefix, slot_offset,
+                   prefix_idx):
             def body(carry, _):
                 cache, tok, pos, done = carry
                 emb = M.embed_tokens(params, tok[:, None])
                 hidden, cache, _ = M.forward(params, cfg, emb, pos[:, None],
                                              cache=cache, prefix=prefix,
-                                             slot_offset=slot_offset)
+                                             slot_offset=slot_offset,
+                                             prefix_idx=prefix_idx)
                 logits = M.unembed(params, cfg, hidden)[:, 0]
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 done = done | (tok == EOS)
@@ -136,10 +179,15 @@ class ServingEngine:
     # embedding helpers
     # ------------------------------------------------------------------
     def _embed_padded(self, token_lists: Sequence[List[int]],
-                      soft: Optional[np.ndarray], pos_offset: int,
+                      soft: Optional[np.ndarray], pos_offset,
                       pad_to: Optional[int] = None):
         """Right-pad token lists (+ optional shared soft-prompt embeds
-        prepended) into (embeds [B,T,D], positions [B,T], valid [B,T])."""
+        prepended) into (embeds [B,T,D], positions [B,T], valid [B,T]).
+
+        ``pos_offset`` shifts the absolute positions: a scalar applies
+        to every row (single shared prefix); a [B] array gives each row
+        its own start (multi-prefix serving — each row sits behind its
+        own cluster's prefix length)."""
         n_soft = 0 if soft is None else soft.shape[0]
         lens = [len(t) + n_soft for t in token_lists]
         t_pad = pad_to or _bucket_len(max(lens), self.bucket)
@@ -153,7 +201,9 @@ class ServingEngine:
         if soft is not None:
             embeds = embeds.at[:, :n_soft].set(
                 jnp.asarray(soft)[None].astype(embeds.dtype))
-        positions = pos_offset + jnp.arange(t_pad, dtype=jnp.int32)[None]
+        off = jnp.asarray(pos_offset, jnp.int32)
+        off = off[:, None] if off.ndim == 1 else off[None, None]
+        positions = off + jnp.arange(t_pad, dtype=jnp.int32)[None]
         positions = jnp.broadcast_to(positions, (b, t_pad))
         return embeds, positions, jnp.asarray(valid), np.asarray(lens)
 
@@ -214,7 +264,7 @@ class ServingEngine:
                              enc_len=0 if enc is None else enc.shape[1])
         prefill = self._prefill_jit(1, embeds.shape[1])
         cache, _, _ = prefill(self.params, embeds, positions, valid, cache,
-                              None, 0)
+                              None, 0, None)
         jax.block_until_ready(cache)
         dt = time.perf_counter() - t0
         state = PrefixState(cache=cache, prefix_len=int(lens[0]),
@@ -246,6 +296,145 @@ class ServingEngine:
             stats.finalize()
         return outs, timing
 
+    def generate_multi_prefix(self, states: Sequence[PrefixState],
+                              prefix_ids: Sequence[int],
+                              suffix_token_lists: Sequence[List[int]],
+                              _record: bool = True
+                              ) -> Tuple[List[List[int]], dict]:
+        """Serve ONE batch whose rows belong to SEVERAL clusters.
+
+        ``states``: the NP distinct cluster ``PrefixState``s this batch
+        touches; ``prefix_ids[i]`` indexes the state row ``i`` is served
+        against; ``suffix_token_lists[i]`` is row ``i``'s suffix.
+
+        The states are padded to their max capacity and stacked into an
+        [NP, ...] pool pytree; each row carries its prefix index (fed to
+        the kernels via scalar prefetch) and its own slot offset (its
+        cluster's prefix length), so one suffix prefill + one decode
+        scan serve every cluster at once (DESIGN.md §7).  Exact: each
+        row's math is identical to single-prefix cascade serving.
+
+        Stateful (Mamba / RG-LRU) and cross-attention stacks cannot
+        split a positional prefix, so they fall back to per-cluster
+        ``generate_with_prefix`` calls with stitched per-member timing.
+
+        Returns ``(outputs, timing)`` like ``generate_with_prefix``,
+        with ``timing["num_prefixes"] = NP``.
+        """
+        n = len(suffix_token_lists)
+        assert len(prefix_ids) == n, (len(prefix_ids), n)
+        assert all(0 <= p < len(states) for p in prefix_ids)
+        if self._stateful or any(st.enc_len for st in states) \
+                or not self.use_split_prefix:
+            outs, timing = self._serve_multi_grouped(states, prefix_ids,
+                                                     suffix_token_lists)
+        elif len(states) == 1:
+            # single-cluster micro-batch (common under temporally
+            # clustered traffic): the batch-1 prefix buffers are served
+            # in place — no stacked device copy, and the single-prefix
+            # compiled executables are reused
+            outs, timing = self._serve_with_prefix(states[0],
+                                                   suffix_token_lists)
+            timing["num_prefixes"] = 1
+        else:
+            outs, timing = self._serve_multi_pooled(states, prefix_ids,
+                                                    suffix_token_lists)
+        if _record:
+            stats = self.cache_mgr.stats
+            stats.record_served(n)
+            for pid, tkl in zip(prefix_ids, suffix_token_lists):
+                stats.record_member(states[pid].prefix_len + len(tkl),
+                                    len(tkl))
+            stats.finalize()
+        return outs, timing
+
+    def _serve_multi_pooled(self, states: Sequence[PrefixState],
+                            prefix_ids: Sequence[int],
+                            suffix_token_lists: Sequence[List[int]]
+                            ) -> Tuple[List[List[int]], dict]:
+        """Split-cascade multi-prefix path (attention-only stacks)."""
+        n = len(suffix_token_lists)
+        t0 = time.perf_counter()
+        # NP is a SHAPE (the pool's stacked batch dim), so bucket it to
+        # powers of two like every other serving shape (DESIGN.md §3):
+        # pad with repeats of state 0 — rows no prefix_idx points at,
+        # so they only bound the number of compiled executables.
+        np_true = len(states)
+        states = list(states)
+        states += [states[0]] * (_bucket_batch(np_true) - np_true)
+        common = max(st.capacity for st in states)
+        # the stacked pool is a device copy of every prefix KV, so
+        # rebuilding it per micro-batch would cost O(sum prefix bytes)
+        # even on 100% pool hits — memoize the last stack, keyed on the
+        # states' process-unique uids (a re-prefilled or different state
+        # set is a new PrefixState -> new uid -> rebuild).  The memo is
+        # one stack deep: HBM held beyond any PrefixPool budget is
+        # bounded by a single NP-bucketed stacked copy, and it holds no
+        # references to the states themselves, so pool evictions free
+        # their buffers immediately.
+        stack_key = (tuple(st.uid for st in states), common)
+        if self._pool_stack is not None and self._pool_stack[0] == stack_key:
+            pool = self._pool_stack[1]
+        else:
+            pool = M.stack_prefix_caches(
+                [M.pad_prefix_cache(st.cache, common) for st in states])
+            self._pool_stack = (stack_key, pool)
+        b = _bucket_batch(n)
+        pads = [list(t) for t in suffix_token_lists] + \
+               [[EOS]] * (b - n)                        # batch padding rows
+        pid = list(prefix_ids) + [0] * (b - n)
+        offs = np.asarray([states[p].prefix_len for p in pid], np.int32)
+        embeds, positions, valid, lens = self._embed_padded(pads, None, offs)
+        cache = M.init_suffix_cache(
+            self.cfg, b, self._suffix_capacity_for(embeds.shape[1]))
+        pidx = jnp.asarray(pid, jnp.int32)
+        offj = jnp.asarray(offs)
+        prefill = self._prefill_jit(b, embeds.shape[1])
+        cache, logits, _ = prefill(self.params, embeds, positions, valid,
+                                   cache, pool, offj, pidx)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(first)
+        t_prefill = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        lengths = jnp.asarray(offs + lens, jnp.int32)
+        decode = self._decode_jit(b)
+        out = decode(self.params, first, lengths, cache, pool, offj, pidx)
+        out = np.asarray(jax.block_until_ready(out))
+        t_decode = time.perf_counter() - t0
+        toks = [self._cut(out[i]) for i in range(n)]
+        return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
+                      "batch": b, "split_prefix": True,
+                      "num_prefixes": np_true,
+                      "prefill_share": [t_prefill / n] * n,
+                      "decode_share": [t_decode / n] * n}
+
+    def _serve_multi_grouped(self, states: Sequence[PrefixState],
+                             prefix_ids: Sequence[int],
+                             suffix_token_lists: Sequence[List[int]]
+                             ) -> Tuple[List[List[int]], dict]:
+        """Fallback: serve each cluster's members as their own
+        ``generate_with_prefix`` sub-batch (stateful / cross-attention
+        stacks, where the prefix is not a set of positional KV slots).
+        Per-member shares come from each member's own sub-batch."""
+        m = len(suffix_token_lists)
+        outs = [None] * m
+        agg = {"prefill_s": 0.0, "decode_s": 0.0, "batch": 0,
+               "split_prefix": False, "num_prefixes": len(states),
+               "prefill_share": [0.0] * m, "decode_share": [0.0] * m}
+        for p in sorted(set(prefix_ids)):
+            idxs = [i for i, q in enumerate(prefix_ids) if q == p]
+            sub, t = self._serve_with_prefix(
+                states[p], [suffix_token_lists[i] for i in idxs])
+            for j, i in enumerate(idxs):
+                outs[i] = sub[j]
+                agg["prefill_share"][i] = t["prefill_share"][j]
+                agg["decode_share"][i] = t["decode_share"][j]
+            agg["prefill_s"] += t["prefill_s"]
+            agg["decode_s"] += t["decode_s"]
+            agg["batch"] = max(agg["batch"], t["batch"])
+        return outs, agg
+
     def _serve_with_prefix(self, state: PrefixState,
                            suffix_token_lists: Sequence[List[int]]
                            ) -> Tuple[List[List[int]], dict]:
@@ -254,14 +443,22 @@ class ServingEngine:
             for i, tkl in enumerate(suffix_token_lists):
                 groups.setdefault(len(tkl), []).append(i)
             if len(groups) > 1:
-                outs = [None] * len(suffix_token_lists)
+                m = len(suffix_token_lists)
+                outs = [None] * m
                 agg = {"prefill_s": 0.0, "decode_s": 0.0, "batch": 0,
-                       "split_prefix": False}
+                       "split_prefix": False,
+                       "prefill_share": [0.0] * m,
+                       "decode_share": [0.0] * m}
                 for length, idxs in sorted(groups.items()):
                     sub, t = self._serve_with_prefix(
                         state, [suffix_token_lists[i] for i in idxs])
-                    for i, o in zip(idxs, sub):
-                        outs[i] = o
+                    # per-member attribution: each member pays its OWN
+                    # sub-batch's share — dividing the summed time by m
+                    # would bill short-suffix members for long ones
+                    for j, i in enumerate(idxs):
+                        outs[i] = sub[j]
+                        agg["prefill_share"][i] = t["prefill_share"][j]
+                        agg["decode_share"][i] = t["decode_share"][j]
                     agg["prefill_s"] += t["prefill_s"]
                     agg["decode_s"] += t["decode_s"]
                     agg["batch"] = max(agg["batch"], t["batch"])
@@ -292,7 +489,7 @@ class ServingEngine:
             prefix, offset = None, 0
         prefill = self._prefill_jit(b, embeds.shape[1])
         cache, logits, _ = prefill(self.params, embeds, positions, valid,
-                                   cache, prefix, offset)
+                                   cache, prefix, offset, None)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(first)
         t_prefill = time.perf_counter() - t0
@@ -300,12 +497,14 @@ class ServingEngine:
         t0 = time.perf_counter()
         lengths = jnp.asarray(state.prefix_len + lens, jnp.int32)
         decode = self._decode_jit(b)
-        out = decode(self.params, first, lengths, cache, prefix, offset)
+        out = decode(self.params, first, lengths, cache, prefix, offset, None)
         out = np.asarray(jax.block_until_ready(out))
         t_decode = time.perf_counter() - t0
         toks = [self._cut(out[i]) for i in range(n)]
         return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
-                      "batch": b, "split_prefix": use_split}
+                      "batch": b, "split_prefix": use_split,
+                      "prefill_share": [t_prefill / n] * n,
+                      "decode_share": [t_decode / n] * n}
 
     # ------------------------------------------------------------------
     # baseline path
@@ -322,7 +521,7 @@ class ServingEngine:
         cache = M.init_cache(self.cfg, 1, self._capacity_for(int(lens[0]), suffix_headroom=0))
         prefill = self._prefill_jit(1, embeds.shape[1])
         cache, logits, _ = prefill(self.params, embeds, positions, valid,
-                                   cache, None, 0)
+                                   cache, None, 0, None)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(first)
         t_prefill = time.perf_counter() - t0
@@ -330,7 +529,7 @@ class ServingEngine:
         t0 = time.perf_counter()
         decode = self._decode_jit(1)
         out = decode(self.params, first, jnp.asarray(lens, jnp.int32), cache,
-                     None, 0)
+                     None, 0, None)
         out = np.asarray(jax.block_until_ready(out))
         t_decode = time.perf_counter() - t0
         return self._cut(out[0]), {"prefill_s": t_prefill,
@@ -355,3 +554,24 @@ class ServingEngine:
                 st, _ = self.prefill_prefix([EOS] * suffix_len,
                                             _record=False)
                 self.generate_with_prefix(st, dummy, _record=False)
+
+    def warmup_pooled(self, prefix_len: int, suffix_len: int = 32,
+                      batches: Sequence[int] = (1, 2, 4),
+                      num_prefixes: Sequence[int] = (1, 2, 4)):
+        """Pre-compile the multi-prefix (batch, NP) bucket grid for
+        pooled online serving: micro-batch composition depends on
+        arrival dynamics, so an online trace can touch any combination
+        of member-batch and pool-size buckets at any moment — compile
+        them up front so no trace lands in a timed region.
+        ``prefix_len`` should match the expected representative length
+        (it selects the prefix-capacity bucket).  Not recorded."""
+        states = []
+        for _ in range(max(num_prefixes)):
+            st, _ = self.prefill_prefix([EOS] * prefix_len, _record=False)
+            states.append(st)
+        for np_ in num_prefixes:
+            for b in batches:
+                dummy = [[EOS] * suffix_len for _ in range(b)]
+                pids = [i % np_ for i in range(b)]
+                self.generate_multi_prefix(states[:np_], pids, dummy,
+                                           _record=False)

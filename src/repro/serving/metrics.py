@@ -9,6 +9,11 @@ Per query (all in seconds; reported in ms):
 Shared work (cluster processing, representative-prefix prefill) is
 amortized uniformly over the cluster's members, mirroring how the paper's
 per-query averages absorb shared batch work.
+
+Online serving adds ``queue_wait_s`` — the time a request sat in the
+arrival queue before its micro-batch started (zero for the offline
+pipeline, where every query is present at t=0 by construction).  It
+counts toward TTFT: a streaming user experiences the wait.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ class QueryRecord:
     generated: str
     correct: bool
     retrieval_s: float = 0.0
+    queue_wait_s: float = 0.0         # arrival-queue wait (online serving)
     cluster_share_s: float = 0.0      # clustering + rep-subgraph build / members
     prompt_build_s: float = 0.0
     prefix_share_s: float = 0.0       # representative prefix prefill / members
@@ -40,8 +46,8 @@ class QueryRecord:
 
     @property
     def ttft(self) -> float:
-        return (self.retrieval_s + self.cluster_share_s + self.prompt_build_s
-                + self.pftt)
+        return (self.queue_wait_s + self.retrieval_s + self.cluster_share_s
+                + self.prompt_build_s + self.pftt)
 
     @property
     def rt(self) -> float:

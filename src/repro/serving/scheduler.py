@@ -1,0 +1,315 @@
+"""Online cluster-serving scheduler: streaming queries -> pooled prefixes.
+
+The offline planner (``core/planner.py::plan_batch``) needs every query
+embedding up front: it cuts one dendrogram and the engine serves the
+clusters one at a time.  Under streaming traffic queries arrive one by
+one, so this module replaces the one-shot cut with three online pieces
+(DESIGN.md §7):
+
+* ``OnlineClusterAssigner`` — incremental nearest-representative
+  assignment.  Each arriving query joins the cluster whose
+  representative centroid is nearest if that distance is within
+  ``threshold``; otherwise it SPAWNS a new cluster (whose
+  representative subgraph is the query's own retrieved subgraph, and
+  whose prefix must be prefilled once).  ``threshold=inf`` never
+  spawns after the first cluster exists; ``max_clusters`` caps the
+  population, after which every query joins its nearest cluster.
+* ``ArrivalQueue`` — a time-ordered arrival buffer that the serving
+  loop drains into slot-limited micro-batches (``drain``): take every
+  query that has arrived by ``now``, up to ``max_slots``.
+* ``OnlineScheduler`` — glues assigner + ``PrefixPool`` + engine: for a
+  drained micro-batch it assigns every query, materializes each
+  cluster's ``PrefixState`` through the pool (hit = reuse, miss =
+  prefill + admit, possibly re-prefill after an eviction), and serves
+  the whole mixed batch in ONE multi-prefix prefill/decode
+  (``engine.generate_multi_prefix``) — the decode batch mixes members
+  of different clusters instead of idling between clusters.
+
+Exactness contract: the pooled multi-prefix path produces bit-identical
+outputs to serving each cluster separately through the single-prefix
+cascade (tests/test_scheduler.py); only scheduling changes, never math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.planner import BatchPlan
+from repro.core.prefix_pool import PrefixPool
+from repro.core.subgraph import Subgraph
+
+
+# ======================================================================
+# online cluster assignment
+# ======================================================================
+@dataclasses.dataclass
+class OnlineCluster:
+    """A live cluster: frozen representative + assignment centroid."""
+    cluster_id: int
+    centroid: np.ndarray        # [dim] assignment anchor (frozen at spawn
+                                # or seeded from an offline plan)
+    representative: Subgraph    # subgraph whose textualization is the prefix
+    members: int = 0
+
+
+@dataclasses.dataclass
+class Assignment:
+    """Result of assigning one query embedding."""
+    cluster_id: int
+    is_new: bool                # True = this query spawned the cluster
+    distance: float             # Euclidean distance to the joined centroid
+
+
+class OnlineClusterAssigner:
+    """Incremental nearest-representative cluster assignment.
+
+    The centroid of a cluster is FROZEN once the cluster exists: its
+    representative prefix KV is already prefilled, so drifting the
+    anchor would decouple "what the query matched" from "what prefix it
+    is served with".  Spawning is the adaptation mechanism — a query
+    farther than ``threshold`` from every centroid opens a new cluster
+    (and pays one representative prefill).
+
+    ``threshold``: spawn distance (Euclidean, same metric as the
+    offline dendrogram).  ``math.inf`` disables spawning once at least
+    one cluster exists.  ``max_clusters``: hard cap; at the cap every
+    query joins its nearest cluster regardless of distance (mirrors the
+    offline planner's fixed ``num_clusters`` cut).
+    """
+
+    def __init__(self, threshold: float = math.inf,
+                 max_clusters: Optional[int] = None) -> None:
+        assert threshold >= 0.0, threshold
+        self.threshold = float(threshold)
+        self.max_clusters = max_clusters
+        self.clusters: List[OnlineCluster] = []
+        self._centroids: Optional[np.ndarray] = None   # [C, dim] cache
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_plan(cls, plan: BatchPlan, embeddings: np.ndarray,
+                  threshold: float = math.inf,
+                  max_clusters: Optional[int] = None
+                  ) -> "OnlineClusterAssigner":
+        """Seed the online assigner from an offline ``plan_batch`` cut:
+        one cluster per plan entry, centroid = mean member embedding,
+        representative = the plan's union-merged subgraph.  This is the
+        warm-start path (bootstrap from yesterday's traffic) and the
+        bridge the offline-vs-online equivalence test walks."""
+        a = cls(threshold=threshold, max_clusters=max_clusters)
+        for cp in plan.clusters:
+            centroid = np.mean(np.asarray(embeddings)[cp.member_indices],
+                               axis=0)
+            a.clusters.append(OnlineCluster(
+                cluster_id=len(a.clusters), centroid=centroid,
+                representative=cp.representative,
+                members=len(cp.member_indices)))
+        return a
+
+    # ------------------------------------------------------------------
+    def _centroid_matrix(self) -> np.ndarray:
+        """[C, dim] stacked centroids; centroids are frozen, so the
+        stack is invalidated only when a cluster spawns (the per-query
+        hot path stays one vectorized norm, not an O(C) Python loop)."""
+        if self._centroids is None or len(self._centroids) != len(
+                self.clusters):
+            self._centroids = np.stack([c.centroid for c in self.clusters])
+        return self._centroids
+
+    def nearest(self, embedding: np.ndarray) -> Tuple[int, float]:
+        """(cluster_id, distance) of the nearest live centroid."""
+        assert self.clusters, "no clusters yet"
+        emb = np.asarray(embedding, dtype=np.float64)
+        dists = np.linalg.norm(self._centroid_matrix() - emb[None, :], axis=1)
+        i = int(np.argmin(dists))
+        return self.clusters[i].cluster_id, float(dists[i])
+
+    def assign(self, embedding: np.ndarray,
+               subgraph: Optional[Subgraph] = None) -> Assignment:
+        """Assign one query; may spawn a cluster (see class docstring).
+
+        ``subgraph`` is the query's retrieved subgraph — required only
+        when a spawn is possible (it becomes the new representative).
+        """
+        emb = np.asarray(embedding, dtype=np.float64)
+        if self.clusters:
+            cid, dist = self.nearest(emb)
+            at_cap = (self.max_clusters is not None
+                      and len(self.clusters) >= self.max_clusters)
+            if dist <= self.threshold or at_cap:
+                c = self.clusters[cid]
+                c.members += 1
+                return Assignment(cluster_id=cid, is_new=False,
+                                  distance=dist)
+        if subgraph is None:
+            raise ValueError("spawning a cluster requires the query's "
+                             "subgraph (it becomes the representative)")
+        c = OnlineCluster(cluster_id=len(self.clusters), centroid=emb,
+                          representative=subgraph, members=1)
+        self.clusters.append(c)
+        return Assignment(cluster_id=c.cluster_id, is_new=True,
+                          distance=0.0)
+
+    def representative(self, cluster_id: int) -> Subgraph:
+        return self.clusters[cluster_id].representative
+
+
+# ======================================================================
+# arrival queue / micro-batching
+# ======================================================================
+@dataclasses.dataclass(order=True)
+class Arrival:
+    """One queued request: ordered by (arrival time, sequence number)."""
+    time_s: float
+    seq: int
+    payload: Any = dataclasses.field(compare=False)
+
+
+class ArrivalQueue:
+    """Time-ordered arrival buffer drained into slot-limited batches.
+
+    ``push`` enqueues a request with its arrival timestamp; ``drain``
+    pops every request that has arrived by ``now``, oldest first, up to
+    ``max_slots`` — the micro-batch the scheduler serves next.  FIFO
+    within equal timestamps (the sequence number breaks ties), so no
+    request can starve.
+    """
+
+    def __init__(self) -> None:
+        self._heap: List[Arrival] = []
+        self._seq = 0
+
+    def push(self, time_s: float, payload: Any) -> None:
+        heapq.heappush(self._heap, Arrival(float(time_s), self._seq, payload))
+        self._seq += 1
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def next_arrival(self) -> Optional[float]:
+        """Timestamp of the oldest queued request (None when empty)."""
+        return self._heap[0].time_s if self._heap else None
+
+    def drain(self, now: float, max_slots: int) -> List[Arrival]:
+        """Pop up to ``max_slots`` requests with ``time_s <= now``."""
+        out: List[Arrival] = []
+        while self._heap and len(out) < max_slots \
+                and self._heap[0].time_s <= now:
+            out.append(heapq.heappop(self._heap))
+        return out
+
+
+# ======================================================================
+# the scheduler: assigner + pool + engine
+# ======================================================================
+@dataclasses.dataclass
+class ServedQuery:
+    """Per-query outcome of one scheduled micro-batch."""
+    tokens: List[int]           # generated token ids
+    cluster_id: int
+    prefix_len: int             # tokens in the cluster prefix it reused
+    pool_hit: bool              # prefix served from the pool
+    spawned: bool               # this query opened the cluster
+    prefix_share_s: float       # share of any prefix prefill this batch paid
+    prefill_s: float            # this member's share of the batched prefill
+    decode_s: float             # this member's share of the batched decode
+
+
+class OnlineScheduler:
+    """Serve micro-batches of streaming queries from a prefix pool.
+
+    Composition root of the online path: ``assigner`` decides which
+    cluster a query belongs to, ``pool`` owns the live ``PrefixState``s
+    under the byte budget, ``engine.generate_multi_prefix`` serves one
+    mixed batch against all the prefixes it touches at once.
+
+    ``prefix_tokens_fn(representative) -> List[int]`` builds the prefix
+    token ids for a cluster representative (the pipeline passes its
+    textualize+tokenize closure, keeping this module free of tokenizer
+    and retriever dependencies).
+    """
+
+    def __init__(self, engine, assigner: OnlineClusterAssigner,
+                 pool: PrefixPool,
+                 prefix_tokens_fn: Callable[[Subgraph], List[int]]) -> None:
+        self.engine = engine
+        self.assigner = assigner
+        self.pool = pool
+        self.prefix_tokens_fn = prefix_tokens_fn
+        # pool accounting flows into the engine's serving stats window
+        self.pool.stats = engine.cache_mgr.stats
+
+    # ------------------------------------------------------------------
+    def ensure_state(self, cluster_id: int, pin: bool = False):
+        """Pool lookup with miss handling: (state, hit, prefill_s).
+
+        Miss (cold cluster or evicted entry) re-prefills the
+        representative prefix and re-admits it; the pool counts the
+        readmission as a re-prefill when the key was evicted before.
+        ``pin=True`` acquires the state with an in-flight reference
+        held atomically (materialize-and-pin), so a later admission in
+        the same batch can never evict a state this batch already
+        claimed — the caller must ``pool.release`` it after serving.
+        """
+        state = self.pool.get(cluster_id, pin=pin)
+        if state is not None:
+            return state, True, 0.0
+        payload = self.prefix_tokens_fn(
+            self.assigner.representative(cluster_id))
+        # the pipeline may return (tokens, soft_prompt_embeds)
+        toks, soft = payload if isinstance(payload, tuple) else (payload, None)
+        state, dt = self.engine.prefill_prefix(toks, soft)
+        self.pool.put(cluster_id, state, prefill_s=dt, pin=pin)
+        return state, False, dt
+
+    def serve_batch(self, embeddings: Sequence[np.ndarray],
+                    subgraphs: Sequence[Subgraph],
+                    suffix_token_lists: Sequence[List[int]]
+                    ) -> List[ServedQuery]:
+        """Assign, materialize prefixes, and serve one micro-batch.
+
+        All queries are served in ONE multi-prefix batched prefill +
+        decode; members of different clusters share the decode step.
+        Prefix-prefill cost is attributed to the queries of the cluster
+        that caused it (uniform share), batched prefill/decode to every
+        member of its sub-batch share.
+        """
+        n = len(suffix_token_lists)
+        assert len(embeddings) == n and len(subgraphs) == n
+        assigns = [self.assigner.assign(e, sg)
+                   for e, sg in zip(embeddings, subgraphs)]
+        order = sorted(set(a.cluster_id for a in assigns))
+        states, hits, prefill_costs = {}, {}, {}
+        pinned = []
+        try:
+            # materialize-and-pin: each state is pinned the moment it is
+            # acquired, so a later cluster's admission in this same loop
+            # cannot evict a state this batch already claimed
+            for cid in order:
+                st, hit, dt = self.ensure_state(cid, pin=True)
+                pinned.append(cid)
+                states[cid], hits[cid], prefill_costs[cid] = st, hit, dt
+            prefix_ids = [order.index(a.cluster_id) for a in assigns]
+            outs, t = self.engine.generate_multi_prefix(
+                [states[cid] for cid in order], prefix_ids,
+                suffix_token_lists)
+        finally:
+            for cid in pinned:
+                self.pool.release(cid)
+        members_of = {cid: sum(1 for a in assigns if a.cluster_id == cid)
+                      for cid in order}
+        served = []
+        for i, a in enumerate(assigns):
+            share = prefill_costs[a.cluster_id] / members_of[a.cluster_id]
+            served.append(ServedQuery(
+                tokens=outs[i], cluster_id=a.cluster_id,
+                prefix_len=states[a.cluster_id].prefix_len,
+                pool_hit=hits[a.cluster_id], spawned=a.is_new,
+                prefix_share_s=share,
+                prefill_s=t["prefill_share"][i],
+                decode_s=t["decode_share"][i]))
+        return served

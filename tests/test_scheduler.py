@@ -1,0 +1,393 @@
+"""Online cluster serving: incremental assignment vs the offline planner,
+pooled eviction under a byte budget, and multi-prefix batched serving
+exactness vs per-cluster cascade serving (DESIGN.md §7)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheStats, PrefixState
+from repro.core.planner import plan_batch
+from repro.core.prefix_pool import PrefixPool, state_bytes
+from repro.core.subgraph import Subgraph
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import (ArrivalQueue, OnlineClusterAssigner,
+                                     OnlineScheduler)
+
+
+def _blobs(rng, centers, per, spread=0.05):
+    """Well-separated gaussian blobs -> (embeddings [m,d], labels [m])."""
+    emb, labels = [], []
+    for c, ctr in enumerate(centers):
+        emb.append(ctr + spread * rng.standard_normal((per, len(ctr))))
+        labels += [c] * per
+    return np.concatenate(emb), np.array(labels)
+
+
+def _sg(i):
+    return Subgraph.from_lists([i], [])
+
+
+# ----------------------------------------------------------------------
+# online assignment
+# ----------------------------------------------------------------------
+def test_online_assignment_matches_offline_plan():
+    """Seeded from an offline plan_batch cut with threshold=inf, online
+    nearest-representative assignment reproduces the offline labels on
+    the same batch, and the cluster count stays respected (no spawn)."""
+    rng = np.random.default_rng(0)
+    centers = [np.array([0.0, 0.0]), np.array([10.0, 0.0]),
+               np.array([0.0, 10.0])]
+    emb, _ = _blobs(rng, centers, per=5)
+    subs = [_sg(i) for i in range(len(emb))]
+    plan = plan_batch(subs, emb, num_clusters=3)
+
+    a = OnlineClusterAssigner.from_plan(plan, emb, threshold=math.inf)
+    assert len(a.clusters) == 3
+    offline_label = {}
+    for j, cp in enumerate(plan.clusters):
+        for i in cp.member_indices:
+            offline_label[i] = j
+    for i in range(len(emb)):
+        asg = a.assign(emb[i])
+        assert not asg.is_new
+        assert asg.cluster_id == offline_label[i], i
+    assert len(a.clusters) == 3          # threshold=inf never spawns
+
+
+def test_online_spawn_threshold_and_cap():
+    rng = np.random.default_rng(1)
+    centers = [np.array([0.0, 0.0]), np.array([10.0, 0.0]),
+               np.array([0.0, 10.0])]
+    emb, labels = _blobs(rng, centers, per=4)
+    order = rng.permutation(len(emb))
+
+    a = OnlineClusterAssigner(threshold=1.0)
+    spawned = {}
+    for i in order:
+        asg = a.assign(emb[i], _sg(int(i)))
+        if asg.is_new:
+            spawned[labels[i]] = asg.cluster_id
+        else:                      # joined the cluster its blob spawned
+            assert asg.cluster_id == spawned[labels[i]]
+            assert asg.distance <= 1.0
+    assert len(a.clusters) == 3    # exactly one spawn per blob
+
+    # capped: the third blob cannot spawn and joins its nearest cluster
+    b = OnlineClusterAssigner(threshold=1.0, max_clusters=2)
+    for i in order:
+        b.assign(emb[i], _sg(int(i)))
+    assert len(b.clusters) == 2
+
+    # spawning without a subgraph is an error (nothing to represent)
+    c = OnlineClusterAssigner(threshold=1.0)
+    with pytest.raises(ValueError):
+        c.assign(np.zeros(2))
+
+
+# ----------------------------------------------------------------------
+# arrival queue
+# ----------------------------------------------------------------------
+def test_arrival_queue_drains_by_time_and_slots():
+    q = ArrivalQueue()
+    for t, name in [(0.3, "c"), (0.1, "a"), (0.2, "b"), (0.9, "d")]:
+        q.push(t, name)
+    assert q.next_arrival() == pytest.approx(0.1)
+    got = q.drain(now=0.35, max_slots=2)
+    assert [a.payload for a in got] == ["a", "b"]       # oldest first
+    got = q.drain(now=0.35, max_slots=8)
+    assert [a.payload for a in got] == ["c"]            # d not arrived yet
+    assert len(q) == 1
+    assert q.drain(now=1.0, max_slots=8)[0].payload == "d"
+    assert q.next_arrival() is None
+
+
+# ----------------------------------------------------------------------
+# prefix pool
+# ----------------------------------------------------------------------
+def _state(prefix_len, n_floats=1024):
+    cache = {"k": jnp.zeros((n_floats,), jnp.float32)}
+    return PrefixState(cache=cache, prefix_len=prefix_len,
+                       capacity=prefix_len)
+
+
+def test_pool_respects_byte_budget_and_counts():
+    one = state_bytes(_state(8))
+    stats = CacheStats()
+    pool = PrefixPool(budget_bytes=2 * one, stats=stats)
+    assert pool.get("a") is None                        # cold miss
+    pool.put("a", _state(8))
+    pool.put("b", _state(8))
+    assert pool.get("a") is not None                    # hit bumps 'a'
+    pool.put("c", _state(8))                            # over budget
+    assert pool.bytes_in_use <= pool.budget_bytes
+    assert len(pool) == 2
+    # 'b' was the coldest (no hits, oldest touch) -> evicted
+    assert "b" not in pool and "a" in pool and "c" in pool
+    assert stats.pool_evictions == 1
+    assert stats.pool_hits == 1 and stats.pool_misses == 1
+    # readmission after eviction counts as a re-prefill
+    pool.put("b", _state(8))
+    assert stats.pool_reprefills == 1
+
+
+def test_pool_eviction_is_cost_aware():
+    """A long stale prefix outranks a short equally-stale one for
+    eviction (score ~ age * prefix_len / hits), and hits protect."""
+    one = state_bytes(_state(8, 1024))
+    pool = PrefixPool(budget_bytes=3 * one)
+    pool.put("long", _state(64, 1024))
+    pool.put("short", _state(8, 1024))
+    pool.get("long")                   # equal recency, then both idle
+    pool.get("short")
+    pool.put("x", _state(8, 1024))
+    pool.put("y", _state(8, 1024))     # forces one eviction
+    assert "long" not in pool          # big and no hotter -> first out
+    assert "short" in pool
+
+
+def test_pool_admission_survives_its_own_eviction_pass():
+    """Regression: a long fresh prefix out-scores every resident entry
+    (score ~ prefix_len), but an admission must never evict ITSELF —
+    the caller prefilled it because a query needs it right now."""
+    one = state_bytes(_state(8, 1024))
+    pool = PrefixPool(budget_bytes=3 * one)
+    for k in ("a", "b", "c"):
+        pool.put(k, _state(8, 1024))
+    pool.put("big", _state(512, 1024))      # highest eviction score
+    assert "big" in pool
+    assert pool.bytes_in_use <= pool.budget_bytes
+    assert len(pool) == 3                   # one short resident evicted
+
+
+def test_pool_never_evicts_in_flight():
+    one = state_bytes(_state(8))
+    pool = PrefixPool(budget_bytes=one)     # room for a single state
+    pool.put("a", _state(8))
+    with pool.using(["a"]):
+        pool.put("b", _state(8))            # over budget while 'a' pinned
+        assert "a" in pool                  # pinned survives ...
+        assert "b" not in pool or pool.bytes_in_use > pool.budget_bytes
+    # after release the budget is enforced again
+    pool.put("c", _state(8))
+    assert pool.bytes_in_use <= pool.budget_bytes
+    assert "a" not in pool                  # released -> evictable
+
+
+# ----------------------------------------------------------------------
+# multi-prefix batched serving: exact vs per-cluster cascade
+# ----------------------------------------------------------------------
+def _gqa_cfg(vocab, dtype="float32", impl="xla"):
+    return ModelConfig(name="sched-test", family="dense", num_layers=3,
+                       d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+                       d_ff=160, vocab_size=vocab, dtype=dtype,
+                       attention_impl=impl)
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a graph of nodes and edges answers questions"])
+
+
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+def test_generate_multi_prefix_exact_vs_per_cluster(tok, dtype, impl):
+    """One mixed batch over TWO pooled prefixes (different lengths, so
+    different capacity buckets -> the pad+stack path) must reproduce
+    per-cluster cascade serving token for token — GQA, and the bf16
+    Pallas kernel path."""
+    cfg = _gqa_cfg(tok.vocab_size, dtype, impl)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=5)
+    assert eng.use_split_prefix
+    p_short = tok.encode("a graph of nodes", bos=True)
+    p_long = tok.encode("the quick brown fox jumps over the lazy dog "
+                        + "a graph of nodes and edges " * 24, bos=True)
+    st0, _ = eng.prefill_prefix(p_short)
+    st1, _ = eng.prefill_prefix(p_long)
+    assert st0.capacity != st1.capacity      # exercises pad_prefix_cache
+
+    sfx = [tok.encode("answers questions"), tok.encode("and edges"),
+           tok.encode("lazy dog jumps"), tok.encode("the quick")]
+    pids = [0, 1, 1, 0]
+    multi, t = eng.generate_multi_prefix([st0, st1], pids, sfx)
+    assert t["split_prefix"] and t["num_prefixes"] == 2
+
+    ref = [None] * 4
+    o0, _ = eng.generate_with_prefix(st0, [sfx[0], sfx[3]])
+    o1, _ = eng.generate_with_prefix(st1, [sfx[1], sfx[2]])
+    ref[0], ref[3] = o0
+    ref[1], ref[2] = o1
+    assert multi == ref
+
+
+def test_generate_multi_prefix_stateful_fallback(tok):
+    """Recurrent stacks cannot split a positional prefix: the pooled
+    call must group per cluster and still match single-cluster serving."""
+    cfg = ModelConfig(name="ssm-t", family="ssm", num_layers=2, d_model=64,
+                      num_heads=0, num_kv_heads=0, d_ff=0, ssm_state=8,
+                      vocab_size=tok.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=4)
+    assert eng._stateful
+    st0, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True))
+    st1, _ = eng.prefill_prefix(tok.encode("the lazy dog", bos=True))
+    sfx = [tok.encode("answers questions"), tok.encode("and edges go"),
+           tok.encode("the quick")]
+    pids = [0, 1, 0]
+    multi, t = eng.generate_multi_prefix([st0, st1], pids, sfx)
+    assert not t["split_prefix"]
+    ref = [None] * 3
+    o0, _ = eng.generate_with_prefix(st0, [sfx[0], sfx[2]])
+    o1, _ = eng.generate_with_prefix(st1, [sfx[1]])
+    ref[0], ref[2] = o0
+    ref[1] = o1[0]
+    assert multi == ref
+
+
+def test_stateful_subbatch_timing_attribution(tok):
+    """Bugfix regression: ragged suffix lengths on a stateful arch are
+    served as equal-length sub-batches; each member's share must come
+    from its OWN sub-batch and the shares must add up to the totals."""
+    cfg = ModelConfig(name="ssm-t2", family="ssm", num_layers=2, d_model=64,
+                      num_heads=0, num_kv_heads=0, d_ff=0, ssm_state=8,
+                      vocab_size=tok.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=4)
+    sfx = [tok.encode("answers questions a graph of nodes and edges"),
+           tok.encode("dog"),
+           tok.encode("dog")]                 # two length groups
+    state, _ = eng.prefill_prefix(tok.encode("the quick brown", bos=True))
+    _, t = eng.generate_with_prefix(state, sfx)
+    assert len(t["prefill_share"]) == 3 and len(t["decode_share"]) == 3
+    assert sum(t["prefill_share"]) == pytest.approx(t["prefill_s"])
+    assert sum(t["decode_share"]) == pytest.approx(t["decode_s"])
+    # the two short members sat in the same sub-batch -> equal shares
+    assert t["prefill_share"][1] == pytest.approx(t["prefill_share"][2])
+    # members of different sub-batches are NOT billed a global average
+    assert t["prefill_share"][0] != pytest.approx(t["prefill_share"][1])
+
+
+# ----------------------------------------------------------------------
+# scheduler end-to-end (assign + pool + engine)
+# ----------------------------------------------------------------------
+def test_scheduler_serves_mixed_batches_with_pool_hits(tok):
+    cfg = _gqa_cfg(tok.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=4)
+    stats = eng.cache_mgr.reset_stats()
+    reps = {0: tok.encode("a graph of nodes and edges", bos=True),
+            1: tok.encode("the quick brown fox", bos=True)}
+    sched = OnlineScheduler(
+        eng, OnlineClusterAssigner(threshold=1.0),
+        PrefixPool(budget_bytes=1 << 30),
+        lambda sg: reps[min(sg.nodes)])
+    emb = {0: np.array([0.0, 0.0]), 1: np.array([10.0, 0.0])}
+
+    # batch 1: both clusters spawn (2 misses), members mix in one batch
+    served = sched.serve_batch(
+        [emb[0], emb[1], emb[0]], [_sg(0), _sg(1), _sg(0)],
+        [tok.encode("answers"), tok.encode("lazy dog"), tok.encode("jumps")])
+    assert [s.cluster_id for s in served] == [0, 1, 0]
+    assert [s.spawned for s in served] == [True, True, False]
+    assert not any(s.pool_hit for s in served)
+    assert stats.pool_misses == 2 and stats.pool_hits == 0
+
+    # batch 2: same clusters -> pure pool hits, no prefix prefill cost
+    served = sched.serve_batch(
+        [emb[1], emb[0]], [_sg(1), _sg(0)],
+        [tok.encode("the quick"), tok.encode("and edges")])
+    assert all(s.pool_hit for s in served)
+    assert all(s.prefix_share_s == 0.0 for s in served)
+    assert stats.pool_hits == 2
+    # outputs match direct single-cluster serving against pooled states
+    o_direct, _ = eng.generate_with_prefix(
+        sched.pool.get(1), [tok.encode("the quick")], _record=False)
+    assert served[0].tokens == o_direct[0]
+
+
+def test_scheduler_survives_budget_smaller_than_batch(tok):
+    """Regression: a batch touching more prefix bytes than the pool
+    budget must still serve — states are pinned the moment they are
+    acquired (materialize-and-pin), so a later admission in the same
+    batch can neither evict them nor crash the pin; the budget is
+    enforced again once the batch releases."""
+    cfg = _gqa_cfg(tok.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(5), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=3)
+    reps = {0: tok.encode("a graph of nodes and edges", bos=True),
+            1: tok.encode("the quick brown fox", bos=True)}
+    pool = PrefixPool(budget_bytes=1)          # nothing fits unpinned
+    sched = OnlineScheduler(
+        eng, OnlineClusterAssigner(threshold=1.0), pool,
+        lambda sg: reps[min(sg.nodes)])
+    served = sched.serve_batch(
+        [np.array([0.0, 0.0]), np.array([10.0, 0.0])],
+        [_sg(0), _sg(1)],
+        [tok.encode("answers"), tok.encode("lazy dog")])
+    assert [s.cluster_id for s in served] == [0, 1]
+    assert all(s.tokens for s in served)
+    assert len(pool) == 0                      # released -> evicted
+
+
+def test_pipeline_serve_stream_end_to_end():
+    """Streaming trace through the full RAG pipeline: every query is
+    answered, queue waits are non-negative and feed TTFT, pool
+    accounting is consistent, and a warm scheduler keeps its clusters."""
+    from repro.data.scenegraph import generate_scene_graph
+    from repro.rag.pipeline import GraphRAGPipeline
+    from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+    from repro.rag.text_encoder import TextEncoder
+
+    graph, queries = generate_scene_graph()
+    tok2 = Tokenizer.train([q.question + " " + q.answer
+                            for q in queries] + graph.node_text,
+                           max_vocab=2048)
+    cfg = ModelConfig(name="stream-t", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=tok2.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(32))
+    pipe = GraphRAGPipeline(
+        index=index, retriever=GRetrieverRetriever(index),
+        engine=ServingEngine(params, cfg, tok2, max_cache_len=512,
+                             max_new_tokens=3),
+        tokenizer=tok2, use_soft_prompt=False)
+
+    items = queries[:6]
+    arrivals = [0.0, 0.0, 0.1, 0.1, 5.0, 5.0]     # two bursts
+    recs, summary, sched = pipe.serve_stream(items, arrivals, max_batch=4,
+                                             threshold=0.25,
+                                             pool_budget_bytes=1 << 26)
+    assert all(r is not None and r.generated is not None for r in recs)
+    assert all(r.queue_wait_s >= 0 for r in recs)
+    assert summary.num_queries == 6
+    stats = sched.pool.stats
+    assert stats.pool_hits + stats.pool_misses >= len(
+        sched.assigner.clusters)
+    assert stats.num_queries == 6                  # engine-side accounting
+    # ttft includes the queue wait
+    r = recs[0]
+    assert r.ttft == pytest.approx(
+        r.queue_wait_s + r.retrieval_s + r.cluster_share_s
+        + r.prompt_build_s + r.prefix_share_s + r.prefill_s
+        + r.first_token_s)
+
+    # a warm scheduler is reusable: clusters persist, pool hits accrue
+    n_clusters = len(sched.assigner.clusters)
+    _, _, sched2 = pipe.serve_stream(items[:2], [0.0, 0.0],
+                                     max_batch=4, scheduler=sched)
+    assert sched2 is sched
+    assert len(sched.assigner.clusters) >= n_clusters
+    assert sched.pool.stats.pool_hits >= 1        # fresh window, warm pool
