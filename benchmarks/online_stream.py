@@ -129,13 +129,19 @@ def run(num_queries: int = 16, max_batch: int = 4, gap_s: float = 0.05,
     # micro-batch composition depends on arrival dynamics, so a single
     # replay would miss buckets the faster post-compile run touches —
     # then each mode replays the identical trace once, timings discarded.
-    rep_len = len(pipe.tokenizer.encode(
-        pipe.prefix_text(pipe.retriever.retrieve(items[0].question)),
-        bos=True))
+    # every representative length the trace can serve: on the paged
+    # backend each page-table WIDTH bucket is its own compiled shape,
+    # so a single max-length warmup would leave narrower tables cold
+    rep_lens = sorted({len(pipe.tokenizer.encode(
+        pipe.prefix_text(pipe.retriever.retrieve(it.question)), bos=True))
+        for it in items})
     bs = tuple(sorted({1, 2, max_batch}))
-    pipe.engine.warmup_pooled(rep_len, batches=bs, num_prefixes=bs)
-    pipe.serve_stream(items, arrivals, max_batch=max_batch,
-                      threshold=threshold, pool_budget_bytes=1 << 26)
+    pipe.engine.warmup_pooled(rep_lens, batches=bs, num_prefixes=bs)
+    # two untimed replays: micro-batch composition depends on measured
+    # service times, so the drain pattern only settles once post-compile
+    for _ in range(2):
+        pipe.serve_stream(items, arrivals, max_batch=max_batch,
+                          threshold=threshold, pool_budget_bytes=1 << 26)
     serve_nocache(pipe, items, arrivals)
     pipe.run_subgcache(items, num_clusters=num_clusters)
 

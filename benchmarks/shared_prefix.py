@@ -30,7 +30,8 @@ import numpy as np
 from repro.data.tokenizer import Tokenizer
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.serving.engine import ServingEngine, _bucket_len
+from repro.serving.bucketing import bucket_len
+from repro.serving.engine import ServingEngine
 
 
 def bench_config(vocab_size: int) -> ModelConfig:
@@ -61,8 +62,11 @@ def run(batch_sizes=(2, 4, 8, 16), prefix_len: int = 192,
     n_layers = len(cfg.layer_specs())
 
     engines = {
+        # paged=False: this benchmark isolates the DENSE cascade vs
+        # broadcast (paged serving has its own bench, paged_serving.py)
         "cascade": ServingEngine(params, cfg, tok, max_cache_len=1024,
-                                 max_new_tokens=max_new_tokens),
+                                 max_new_tokens=max_new_tokens,
+                                 paged=False),
         "broadcast": ServingEngine(params, cfg, tok, max_cache_len=1024,
                                    max_new_tokens=max_new_tokens,
                                    split_prefix=False),
@@ -95,7 +99,7 @@ def run(batch_sizes=(2, 4, 8, 16), prefix_len: int = 192,
             # honest "once per member vs once": exactly B
             if mode == "cascade":
                 suffix_cap = eng._suffix_capacity_for(
-                    _bucket_len(suffix_len, eng.bucket))
+                    bucket_len(suffix_len, eng.bucket))
                 member_cache = jax.eval_shape(
                     lambda e=eng, c=suffix_cap:
                     M.init_suffix_cache(e.cfg, b, c))

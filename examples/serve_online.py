@@ -48,13 +48,16 @@ def main():
     rng = np.random.default_rng(0)
     arrivals = np.cumsum(rng.exponential(0.05, size=len(items)))
 
-    # compile the full (batch, pool-size) bucket grid up front — online
-    # micro-batch composition depends on arrival dynamics, so a single
-    # throwaway trace would miss buckets and a multi-second XLA compile
-    # would land inside a reported TTFT (EXPERIMENTS.md protocol)
-    rep_len = len(tok.encode(
-        pipe.prefix_text(retriever.retrieve(items[0].question)), bos=True))
-    engine.warmup_pooled(rep_len, batches=(1, 2, 4), num_prefixes=(1, 2, 4))
+    # compile the full (batch, page-width) bucket grid up front — online
+    # micro-batch composition depends on arrival dynamics, and on the
+    # paged backend every page-table width bucket is its own compiled
+    # shape, so warm one representative per width the trace spans or a
+    # multi-second XLA compile lands inside a reported TTFT
+    # (EXPERIMENTS.md protocol)
+    rep_lens = sorted({len(tok.encode(
+        pipe.prefix_text(retriever.retrieve(it.question)), bos=True))
+        for it in items})
+    engine.warmup_pooled(rep_lens, batches=(1, 2, 4), num_prefixes=(1, 2, 4))
     pipe.serve_stream(items[:8], [0.0] * 8, max_batch=4, threshold=0.25,
                       pool_budget_bytes=1 << 26)
 

@@ -28,41 +28,76 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.paged import KVBlockPool, PageTable
+
 
 _UID = itertools.count()
 
 
 @dataclasses.dataclass
 class PrefixState:
-    """Model sequence-state after consuming a shared prefix."""
-    cache: Any                 # model cache pytree (batch dim = 1)
+    """Model sequence-state after consuming a shared prefix.
+
+    Two storage backends (one API — DESIGN.md §8):
+
+    * **dense** — ``cache`` holds the batch-1 cache pytree (split
+      cascade / broadcast fallback serving);
+    * **paged** — ``page`` maps the prefix into ``block_pool``'s block
+      arena and ``cache`` is None: the state is a thin view over
+      refcounted block allocations, shared by every member's page table
+      for free.  ``release()`` drops the state's block references
+      (eviction / cluster release); blocks return to the free list only
+      when the last in-flight reader also releases.
+    """
+    cache: Any                 # dense cache pytree (None when paged)
     prefix_len: int            # tokens in the cached prefix
-    capacity: int              # allocated cache capacity
+    capacity: int              # allocated / bucketed cache capacity
     enc_len: int = 0           # cross-attention KV length (enc-dec / VLM)
-    # process-unique identity: lets caches (e.g. the engine's stacked
-    # multi-prefix memo) key on "same state object" without holding a
-    # strong reference (id() values are recycled; uids never are)
+    page: Optional[PageTable] = None
+    block_pool: Optional[KVBlockPool] = None
+    # process-unique identity: lets caches key on "same state object"
+    # without holding a strong reference (id() values are recycled;
+    # uids never are)
     uid: int = dataclasses.field(default_factory=_UID.__next__)
+
+    @property
+    def is_paged(self) -> bool:
+        return self.page is not None
+
+    def release(self) -> None:
+        """Drop this state's block references (idempotent; no-op for
+        dense states, which the garbage collector owns)."""
+        if self.page is not None and self.block_pool is not None:
+            self.block_pool.decref(self.page.blocks)
+            self.page = None
 
     def broadcast(self, template: Any) -> Any:
         """Broadcast the batch-1 prefix state onto ``template`` shapes
         (the member-batch cache structure, e.g. from ``jax.eval_shape``).
 
         Fallback path only: attention-only stacks serve members via the
-        split prefix/suffix cascade without replicating the prefix KV
-        (engine ``use_split_prefix``); this materialized copy remains for
-        recurrent (Mamba / RG-LRU) and cross-attention state, which is
-        O(d_state), not O(prefix_len).
+        split/paged cascade without replicating the prefix KV; this
+        materialized copy remains for recurrent (Mamba / RG-LRU) and
+        cross-attention state, which is O(d_state), not O(prefix_len).
 
         KV buffers and recurrent states after an identical prefix are
         identical across members, so this is exact, not approximate.
         Works regardless of where the batch dim sits (scanned layer
         stacks put a group dim in front)."""
+        assert self.cache is not None, \
+            "paged states hold no dense cache to broadcast"
+
         def bc(x, t):
-            # jnp.copy: broadcast_to may alias the live prefix buffers
-            # (no-op when batch == 1) and the engine's prefill donates its
-            # cache argument — reuse across clusters requires a fresh copy.
-            return jnp.copy(jnp.broadcast_to(x, t.shape)).astype(t.dtype)
+            if x.shape == t.shape and x.dtype == t.dtype:
+                # broadcast_to is a no-op here and would ALIAS the live
+                # prefix buffers, which the engine's prefill donates —
+                # reuse across clusters requires a real copy.
+                return jnp.copy(x)
+            # shape or dtype changes: broadcast_to/astype already
+            # materialize a fresh buffer — a second copy on top (the
+            # pre-fix behavior) doubled the write traffic of every
+            # stateful-fallback broadcast for nothing.
+            return jnp.broadcast_to(x, t.shape).astype(t.dtype)
         return jax.tree.map(bc, self.cache, template)
 
 
@@ -88,6 +123,12 @@ class CacheStats:
     pool_misses: int = 0         # get() missed (cold or evicted)
     pool_evictions: int = 0      # states dropped to fit the byte budget
     pool_reprefills: int = 0     # readmissions after an eviction
+    # --- paged block pool (core/paged.py, DESIGN.md §8) ---
+    blocks_total: int = 0        # usable blocks in the arena
+    blocks_in_use: int = 0       # gauge: blocks allocated at last observe
+    blocks_peak: int = 0         # high-water mark of blocks_in_use
+    block_tokens: int = 0        # tokens stored at last observe
+    block_size: int = 0          # slots per block
 
     @property
     def prefill_savings(self) -> float:
@@ -130,6 +171,28 @@ class CacheStats:
         total = self.pool_hits + self.pool_misses
         return self.pool_hits / total if total else 0.0
 
+    def record_blocks(self, pool) -> None:
+        """Observe a ``KVBlockPool``'s occupancy (called by the engine
+        after each paged serve; the peak is the HBM high-water mark)."""
+        self.blocks_total = pool.allocator.num_usable
+        self.blocks_in_use = pool.blocks_in_use
+        self.blocks_peak = max(self.blocks_peak, pool.blocks_in_use)
+        self.block_tokens = pool.tokens_stored
+        self.block_size = pool.block_size
+
+    @property
+    def block_occupancy(self) -> float:
+        """Fraction of arena blocks allocated at last observation."""
+        return self.blocks_in_use / self.blocks_total \
+            if self.blocks_total else 0.0
+
+    @property
+    def block_fragmentation(self) -> float:
+        """Fraction of allocated KV slots holding no token — the waste a
+        padded-to-capacity pool would bake into every entry."""
+        slots = self.blocks_in_use * self.block_size
+        return 1.0 - self.block_tokens / slots if slots else 0.0
+
     def finalize(self) -> None:
         self.prefill_tokens_cached = (self.prefix_tokens_computed
                                       + self.suffix_tokens_computed)
@@ -167,6 +230,7 @@ class ClusterCacheManager:
 
             def __exit__(self, *exc):
                 mgr._live = None       # buffer slot reusable by next cluster
+                state.release()        # paged blocks back to the free list
                 return False
 
         return _Ctx()

@@ -1,0 +1,381 @@
+"""Paged KV cache: one block-pool address space for prefixes and
+suffixes (DESIGN.md §8).
+
+SubGCache's asset is a representative-prefix KV cache reused across
+cluster members.  Through PR 2 that asset lived in three incompatible
+layouts (live batch-1 buffers, broadcast copies, a padded [NP, ...]
+stacked pool) plus a fourth contiguous per-request suffix cache.  This
+module collapses them into ONE block-granular, reference-counted
+address space, the way RAGCache pools document-chunk KV:
+
+* ``KVBlockPool`` — the physical arena: per attention layer one
+  ``[num_blocks, block_size, Hkv, D]`` K/V buffer (plus a
+  ``[num_blocks, block_size]`` position buffer) under a fixed HBM byte
+  budget.  Block 0 is the permanently-empty NULL block (positions -1,
+  refcount pinned) — page tables pad with it, so out-of-range table
+  entries are masked by the same positional rule as every other empty
+  slot.
+* ``BlockAllocator`` — host-side free list + per-block reference
+  counts.  A prefix shared by a whole cluster is one set of blocks with
+  refcount = (pool resident) + (in-flight readers); eviction and batch
+  completion are ``decref``s, and a block returns to the free list only
+  when the last reference drops — an evicted-but-in-flight prefix can
+  never be reallocated under a running batch.
+* ``PageTable`` — a request's logical->physical map: an ordered block
+  list plus the token length.  Every member of a cluster maps the SAME
+  representative-prefix blocks (sharing is free); only suffix blocks
+  are private.
+* **Copy-on-write** — ``KVBlockPool.cow`` returns a block safe to
+  write: the block itself when uniquely referenced, otherwise a fresh
+  copy (refcount on the original dropped by one).  Writers (prefix
+  extension, re-prefill into a partially shared run) never mutate KV
+  that another page table still reads.
+
+The pool stores and copies KV; it never computes attention.  The
+compute side is ``models/attention.py`` (``attend_paged`` /
+``cache_write_paged``) and the paged Pallas kernels in
+``kernels/shared_prefix.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.bucketing import blocks_for
+
+NULL_BLOCK = 0
+
+
+class OutOfBlocks(RuntimeError):
+    """The arena has no free blocks left (after any reclaim attempt)."""
+
+
+# ======================================================================
+# host-side allocation
+# ======================================================================
+class BlockAllocator:
+    """Free-list block allocator with per-block reference counts.
+
+    Block ``NULL_BLOCK`` (= 0) is reserved and permanently referenced.
+    ``reclaim_hook(n)`` — optionally installed by ``PrefixPool`` — is
+    called when an allocation finds fewer than ``n`` free blocks; it
+    should evict cold pooled prefixes (dropping their references) and
+    return, after which the allocation retries once.
+    """
+
+    def __init__(self, num_blocks: int) -> None:
+        assert num_blocks >= 2, "need at least the null block + one usable"
+        self.num_blocks = int(num_blocks)
+        self._refs = np.zeros(num_blocks, np.int32)
+        self._refs[NULL_BLOCK] = 1          # never allocatable
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self.reclaim_hook: Optional[Callable[[int], None]] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def num_usable(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_usable - len(self._free)
+
+    def refcount(self, bid: int) -> int:
+        return int(self._refs[bid])
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` blocks (refcount 1 each).  On shortage, asks the
+        ``reclaim_hook`` to evict pooled prefixes once, then raises
+        ``OutOfBlocks`` if still short — the caller sized the arena."""
+        if len(self._free) < n and self.reclaim_hook is not None:
+            self.reclaim_hook(n)
+        if len(self._free) < n:
+            raise OutOfBlocks(
+                f"need {n} blocks, {len(self._free)} free of "
+                f"{self.num_usable} (evicted-but-in-flight blocks free "
+                "when their batch releases; raise arena_blocks otherwise)")
+        out = [self._free.pop() for _ in range(n)]
+        self._refs[out] = 1
+        return out
+
+    def incref(self, bids: Sequence[int]) -> None:
+        for b in bids:
+            assert self._refs[b] > 0, f"incref on free block {b}"
+            self._refs[b] += 1
+
+    def decref(self, bids: Sequence[int]) -> List[int]:
+        """Drop one reference per block; blocks reaching zero return to
+        the free list.  Returns the freed block ids."""
+        freed = []
+        for b in bids:
+            assert b != NULL_BLOCK and self._refs[b] > 0, \
+                f"decref on {'null' if b == NULL_BLOCK else 'free'} block {b}"
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
+                freed.append(b)
+        return freed
+
+
+# ======================================================================
+# page tables
+# ======================================================================
+@dataclasses.dataclass
+class PageTable:
+    """One request's logical->physical block map.
+
+    ``blocks[i]`` holds tokens ``[i * block_size, (i+1) * block_size)``
+    of the sequence this table describes; ``length`` is the number of
+    tokens actually stored.  ``row(width)`` pads with the NULL block —
+    masked positionally, never read as live KV.
+    """
+    blocks: List[int]
+    length: int
+
+    def row(self, width: int) -> np.ndarray:
+        assert len(self.blocks) <= width, (len(self.blocks), width)
+        out = np.full(width, NULL_BLOCK, np.int32)
+        out[:len(self.blocks)] = self.blocks
+        return out
+
+
+# ======================================================================
+# device arena
+# ======================================================================
+def _leaf_axes(path) -> tuple:
+    """(seq_axis, block_axis) for an arena/cache leaf (negative; leading
+    scanned-group dims allowed)."""
+    key = getattr(path[-1], "key", None) if path else None
+    if key in ("k", "v"):
+        return -3, -4
+    if key == "pos":
+        return -1, -2
+    raise ValueError(f"paged arenas hold attention KV only; got {path}")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("n", "block_size"))
+def _scatter_prefix(arena, dense, bids, *, n: int, block_size: int):
+    """Copy the first ``n * block_size`` sequence slots of a batch-1
+    dense cache into arena blocks ``bids`` (donated, in place)."""
+    want = n * block_size
+
+    def scat(path, a, d):
+        seq_ax, blk_ax = _leaf_axes(path)
+        d = jnp.moveaxis(d, blk_ax, 0)[0]   # drop batch-1 dim (seq_ax holds)
+        d = jnp.moveaxis(d, seq_ax, 0)      # seq to front
+        if d.shape[0] < want:               # windowed dense cache is shorter
+            fill = -1 if getattr(path[-1], "key", None) == "pos" else 0
+            pad = [(0, want - d.shape[0])] + [(0, 0)] * (d.ndim - 1)
+            d = jnp.pad(d, pad, constant_values=fill)
+        d = d[:want].reshape((n, block_size) + d.shape[1:])
+        d = jnp.moveaxis(d, 1, seq_ax)      # in-block slots at the seq axis
+        a = jnp.moveaxis(a, blk_ax, 0)
+        a = a.at[bids].set(d.astype(a.dtype))
+        return jnp.moveaxis(a, 0, blk_ax)
+    return jax.tree_util.tree_map_with_path(scat, arena, dense)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _reset_pos(arena, bids):
+    """Mark blocks ``bids`` empty (pos = -1).  Freed blocks are recycled
+    with stale contents; resetting positions is what guarantees a fresh
+    suffix allocation exposes no previous request's keys."""
+    def f(path, x):
+        if getattr(path[-1], "key", None) != "pos":
+            return x
+        _, blk_ax = _leaf_axes(path)
+        x = jnp.moveaxis(x, blk_ax, 0)
+        x = x.at[bids].set(-1)
+        return jnp.moveaxis(x, 0, blk_ax)
+    return jax.tree_util.tree_map_with_path(f, arena)
+
+
+@jax.jit
+def _extract_blocks(arena, bids):
+    """Gather arena rows ``bids`` into a compact sub-arena (read-only;
+    see ``KVBlockPool.extract``)."""
+    def f(path, x):
+        _, blk_ax = _leaf_axes(path)
+        xb = jnp.moveaxis(x, blk_ax, 0)[bids]
+        return jnp.moveaxis(xb, 0, blk_ax)
+    return jax.tree_util.tree_map_with_path(f, arena)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_block(arena, src, dst):
+    """Duplicate one block row (copy-on-write)."""
+    def f(path, x):
+        _, blk_ax = _leaf_axes(path)
+        x = jnp.moveaxis(x, blk_ax, 0)
+        x = x.at[dst].set(x[src])
+        return jnp.moveaxis(x, 0, blk_ax)
+    return jax.tree_util.tree_map_with_path(f, arena)
+
+
+class KVBlockPool:
+    """The paged-KV physical address space for one model (see module
+    docstring).  Attention-only stacks; ``arena`` leaves are
+    ``init_block_arena`` shapes and flow through ``forward`` exactly
+    like a dense cache whose batch dim is ``num_blocks`` and capacity is
+    ``block_size`` — jits donate it, callers reassign ``pool.arena``.
+    """
+
+    def __init__(self, cfg, num_blocks: int, block_size: int) -> None:
+        from repro.models import model as M
+        assert num_blocks >= 2 and block_size >= 1
+        self.cfg = cfg
+        self.block_size = int(block_size)
+        self.num_blocks = int(num_blocks)
+        self.arena = M.init_block_arena(cfg, num_blocks, block_size)
+        self.allocator = BlockAllocator(num_blocks)
+        # tokens actually stored per block (internal-fragmentation stat)
+        self._block_tokens = np.zeros(num_blocks, np.int64)
+
+    # ------------------------------------------------------------------
+    # geometry / accounting
+    # ------------------------------------------------------------------
+    @staticmethod
+    def block_bytes_for(cfg, block_size: int) -> int:
+        """HBM bytes one block costs across all attention layers."""
+        from repro.models.layers import dtype_of
+        itemsize = jnp.dtype(dtype_of(cfg.dtype)).itemsize
+        n_attn = len(cfg.layer_specs())
+        kv = 2 * block_size * cfg.num_kv_heads * cfg.head_dim_ * itemsize
+        pos = block_size * 4
+        return n_attn * (kv + pos)
+
+    @classmethod
+    def from_budget(cls, cfg, budget_bytes: int,
+                    block_size: int) -> "KVBlockPool":
+        """Largest arena fitting ``budget_bytes`` (plus the null block)."""
+        per = cls.block_bytes_for(cfg, block_size)
+        return cls(cfg, max(2, budget_bytes // per + 1), block_size)
+
+    @property
+    def block_bytes(self) -> int:
+        return self.block_bytes_for(self.cfg, self.block_size)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.allocator.blocks_in_use
+
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.free_blocks
+
+    @property
+    def tokens_stored(self) -> int:
+        return int(self._block_tokens.sum())
+
+    @property
+    def fragmentation(self) -> float:
+        """Fraction of in-use KV slots holding no token (pad waste a
+        padded-to-capacity pool would hide inside every entry)."""
+        slots = self.blocks_in_use * self.block_size
+        return 1.0 - self.tokens_stored / slots if slots else 0.0
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    # ------------------------------------------------------------------
+    # allocation / sharing
+    # ------------------------------------------------------------------
+    def alloc(self, n_blocks: int) -> List[int]:
+        return self.allocator.alloc(n_blocks)
+
+    def incref(self, bids: Sequence[int]) -> None:
+        self.allocator.incref(bids)
+
+    def decref(self, bids: Sequence[int]) -> List[int]:
+        freed = self.allocator.decref(bids)
+        if freed:
+            self._block_tokens[freed] = 0
+        return freed
+
+    def note_tokens(self, bids: Sequence[int], n_tokens: int) -> None:
+        """Record how many tokens an allocation actually stores (fills
+        blocks in order; feeds the fragmentation counter)."""
+        left = n_tokens
+        for b in bids:
+            self._block_tokens[b] = min(left, self.block_size)
+            left = max(0, left - self.block_size)
+
+    # ------------------------------------------------------------------
+    # device ops
+    # ------------------------------------------------------------------
+    def write_prefix(self, dense_cache, prefix_len: int) -> PageTable:
+        """Copy a batch-1 dense prefix cache into freshly allocated
+        blocks; returns the page table (refcount 1, caller-owned)."""
+        n = self.blocks_needed(prefix_len)
+        bids = self.alloc(n)
+        self.arena = _scatter_prefix(self.arena, dense_cache,
+                                     jnp.asarray(bids, jnp.int32),
+                                     n=n, block_size=self.block_size)
+        self.note_tokens(bids, prefix_len)
+        return PageTable(blocks=bids, length=prefix_len)
+
+    def alloc_suffix(self, n_blocks: int) -> List[int]:
+        """Fresh private blocks for a request's suffix+decode tail,
+        positions reset so no stale keys from a previous tenant leak."""
+        bids = self.alloc(n_blocks)
+        self.arena = _reset_pos(self.arena, jnp.asarray(bids, jnp.int32))
+        return bids
+
+    def cow(self, bid: int) -> int:
+        """Return a block safe to WRITE: ``bid`` itself when uniquely
+        referenced, else a fresh copy (dropping one reference on the
+        original).  Callers holding a shared page table swap the copied
+        id into their own table only — other readers are untouched."""
+        if self.allocator.refcount(bid) <= 1:
+            return bid
+        [new] = self.alloc(1)
+        self.arena = _copy_block(self.arena, bid, new)
+        self._block_tokens[new] = self._block_tokens[bid]
+        self.allocator.decref([bid])
+        return new
+
+    def extract(self, bids: Sequence[int]):
+        """Compact sub-arena holding just blocks ``bids`` (result row i
+        = block ``bids[i]``; same per-layer leaf structure as ``arena``
+        with the block dim shrunk to ``len(bids)``).
+
+        Decode-time optimization: the decode scan writes ONLY its
+        batch's suffix blocks, so it carries this extraction (plus a
+        remapped suffix table) instead of the whole arena — which a
+        backend that cannot alias the donated carry would otherwise
+        copy once per generated token.  Prefix blocks stay in the main
+        arena and are read as a scan invariant.  The extraction is
+        discarded after decode (suffix blocks free with the batch), so
+        nothing is scattered back."""
+        return _extract_blocks(self.arena, jnp.asarray(bids, jnp.int32))
+
+    def gather(self, rows: np.ndarray):
+        """Densify page-table ``rows`` [B, W] into a [B, W*block_size]
+        cache pytree (tests / debugging; serving never materializes
+        this — the XLA path gathers inside jit, the Pallas path DMAs
+        per block)."""
+        rows = jnp.asarray(rows, jnp.int32)
+        b, w = rows.shape
+
+        def g(path, x):
+            _, blk_ax = _leaf_axes(path)
+            lead = x.ndim + blk_ax          # leading scanned-group dims
+            xb = jnp.moveaxis(x, blk_ax, 0)[rows]  # [B, W, lead.., bs, tail]
+            xb = jnp.moveaxis(xb, 1, 1 + lead)     # W next to the slot dim
+            s = list(xb.shape)
+            i = 1 + lead
+            s[i:i + 2] = [w * self.block_size]
+            xb = xb.reshape(s)                     # [B, lead.., W*bs, tail]
+            return jnp.moveaxis(xb, 0, lead)       # dense layout: lead, B
+        return jax.tree_util.tree_map_with_path(g, self.arena)

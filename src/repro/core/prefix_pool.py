@@ -29,6 +29,14 @@ re-admits it — the pool only remembers that the key was seen before so
 the readmission is counted as a re-prefill, the cost signal the byte
 budget trades against.
 
+Paged backend (DESIGN.md §8): when ``attach_block_pool`` wires this
+pool to the engine's ``KVBlockPool``, entries are thin views over
+refcounted block allocations — a resident prefix costs exactly its
+blocks (no pad-to-capacity waste), eviction is a refcount drop
+(``PrefixState.release``) that cannot recycle blocks under an in-flight
+batch, and arena exhaustion reclaims cold entries through the same
+eviction scoring before an allocation may fail.
+
 Lifecycle of one entry (DESIGN.md §7):
 
     prefill -> put (pooled) -> get hit* -> evicted -> get miss
@@ -46,7 +54,13 @@ from repro.core.cache import CacheStats, PrefixState
 
 
 def state_bytes(state: PrefixState) -> int:
-    """HBM footprint of a PrefixState: sum of its cache-pytree leaves."""
+    """HBM footprint of a PrefixState.
+
+    Paged states cost exactly their blocks (``ceil(P / block_size) ×
+    block_bytes`` — no pad-to-capacity waste); dense states cost the
+    sum of their cache-pytree leaves (the full capacity bucket)."""
+    if state.is_paged:
+        return len(state.page.blocks) * state.block_pool.block_bytes
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state.cache))
 
 
@@ -79,6 +93,58 @@ class PrefixPool:
         self._entries: Dict[Hashable, PoolEntry] = {}
         self._seen: set = set()      # keys ever admitted (re-prefill count)
         self._clock = 0
+
+    # ------------------------------------------------------------------
+    # paged backend wiring
+    # ------------------------------------------------------------------
+    def attach_block_pool(self, block_pool) -> None:
+        """Wire this pool to a ``KVBlockPool``: when the allocator runs
+        out of blocks mid-allocation, it asks the pool to evict cold
+        (unpinned) prefixes first — admission pressure and HBM pressure
+        become the same page-table operation.  Eviction under the paged
+        backend is a refcount drop (``PrefixState.release``): blocks
+        still walked by an in-flight batch stay alive until that batch
+        releases its own references.
+
+        One block pool serves one PrefixPool at a time: attaching a new
+        pool (a fresh serving window replacing a discarded scheduler)
+        ``clear()``s the previous one — without this, the abandoned
+        pool's resident entries would hold their block references
+        forever (nothing else ever releases them) and the arena would
+        shrink by one working set per replaced pool."""
+        import weakref
+        prev = getattr(block_pool, "_attached_pool", None)
+        prev = prev() if prev is not None else None
+        if prev is not None and prev is not self:
+            prev.clear()
+        block_pool._attached_pool = weakref.ref(self)
+        self._block_pool = block_pool
+        block_pool.allocator.reclaim_hook = self._reclaim_blocks
+
+    def clear(self) -> None:
+        """Drop every entry, releasing paged states' block references
+        (no eviction accounting — this is teardown, not budget
+        pressure).  Entry-level pins are ignored: they protect against
+        *eviction scoring*, while in-flight batches hold their own
+        block-level references, so serving correctness is unaffected."""
+        for e in self._entries.values():
+            e.state.release()
+        self._entries.clear()
+
+    def _reclaim_blocks(self, n_needed: int) -> None:
+        """Evict unpinned entries (worst score first) until the block
+        allocator has ``n_needed`` free blocks or nothing is evictable."""
+        bp = getattr(self, "_block_pool", None)
+        if bp is None:
+            return
+        while bp.free_blocks < n_needed:
+            victims = [e for e in self._entries.values() if e.refs == 0]
+            if not victims:
+                return
+            worst = max(victims, key=self._score)
+            del self._entries[worst.key]
+            worst.state.release()
+            self.stats.record_pool(evictions=1)
 
     # ------------------------------------------------------------------
     # introspection
@@ -142,6 +208,8 @@ class PrefixPool:
             self.stats.record_pool(reprefills=1)
         self._seen.add(key)
         old = self._entries.pop(key, None)
+        if old is not None and old.state is not state:
+            old.state.release()      # replaced entry frees its blocks
         self._entries[key] = PoolEntry(
             key=key, state=state, nbytes=state_bytes(state),
             prefill_s=prefill_s, last_used=self._clock,
@@ -197,4 +265,7 @@ class PrefixPool:
                 return     # everything in flight / protected: overshoot
             worst = max(victims, key=self._score)
             del self._entries[worst.key]
+            # paged backend: eviction is a refcount drop — blocks free
+            # now, or when the last in-flight reader releases
+            worst.state.release()
             self.stats.record_pool(evictions=1)

@@ -101,3 +101,21 @@ def decode_gqa(q, k, v, q_pos, k_pos, *, window: int = 0, block_k: int = 128,
         interpret=interpret,
     )(qp2, k_pos, qg, k, v)
     return out.reshape(b, hq, d)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_gqa(q, k, v, q_pos, k_pos, page_table, *, window: int = 0,
+                     interpret: bool = True):
+    """Single-token GQA decode over ONE paged KV stream.
+
+    q: [B, Hq, D]; k, v: [NB, Hkv, bs, D] block arena; k_pos: [NB, bs];
+    page_table: [B, NP] int32 (NULL-block padded rows).  The partial
+    kernel's output is already l-normalized, and with a single key
+    stream there is nothing to merge — this is the whole decode.  Used
+    when a request's entire KV (no prefix/suffix split) lives in the
+    block arena; the cascade path merges two partials instead.
+    """
+    from repro.kernels.shared_prefix import paged_decode_gqa_partial
+    out, _, _ = paged_decode_gqa_partial(q, k, v, q_pos, k_pos, page_table,
+                                         window=window, interpret=interpret)
+    return out.astype(q.dtype)

@@ -25,24 +25,48 @@ def prefix_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
         block_q=block_q, block_k=block_k, interpret=_interpret())
 
 
-def attention_partial(q, k, v, q_pos, k_pos, kv_index=None, *, causal=True,
+def attention_partial(q, k, v, q_pos, k_pos, *, causal=True,
                       window=0, block_q=128, block_k=128):
     """Partial (online-softmax) attention; KV batch may be 1 (shared
-    prefix, read once per kv-head group), the query batch, or — with
-    ``kv_index`` [B] — a pool of NP stacked prefixes (multi-prefix)."""
+    prefix, read once per kv-head group) or the query batch.  Paged
+    multi-prefix batches use ``paged_attention_partial`` instead."""
     return _shared.attention_partial(
-        q, k, v, q_pos, k_pos, kv_index, causal=causal, window=window,
+        q, k, v, q_pos, k_pos, causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=_interpret())
 
 
-def decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index=None, *, window=0,
-                       block_k=128):
+def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window=0, block_k=128):
     """Single-token decode attention in partial form (decode-shaped
-    [group, d] q tiles; KV batch may be 1 = shared prefix, or a pool of
-    NP stacked prefixes selected per row via ``kv_index`` [B])."""
-    return _shared.decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index,
+    [group, d] q tiles; KV batch may be 1 = shared prefix).  Paged
+    multi-prefix decode uses ``paged_decode_gqa_partial`` instead."""
+    return _shared.decode_gqa_partial(q, k, v, q_pos, k_pos,
                                       window=window, block_k=block_k,
                                       interpret=_interpret())
+
+
+def paged_attention_partial(q, k, v, q_pos, k_pos, page_table, *,
+                            causal=False, window=0, block_q=128):
+    """Partial attention over a paged KV arena [NB, Hkv, bs, D]: the
+    scalar-prefetched ``page_table`` [B, NP] steers one-block-per-step
+    DMA (DESIGN.md §8); no gather is materialized."""
+    return _shared.paged_attention_partial(
+        q, k, v, q_pos, k_pos, page_table, causal=causal, window=window,
+        block_q=block_q, interpret=_interpret())
+
+
+def paged_decode_gqa_partial(q, k, v, q_pos, k_pos, page_table, *,
+                             window=0):
+    """Single-token decode partial over a paged KV arena (decode-shaped
+    [group, d] q tiles; the KV loop walks ``page_table`` [B, NP])."""
+    return _shared.paged_decode_gqa_partial(
+        q, k, v, q_pos, k_pos, page_table, window=window,
+        interpret=_interpret())
+
+
+def paged_decode_gqa(q, k, v, q_pos, k_pos, page_table, *, window=0):
+    """Normalized single-stream paged decode (see decode_gqa.py)."""
+    return _decode.paged_decode_gqa(q, k, v, q_pos, k_pos, page_table,
+                                    window=window, interpret=_interpret())
 
 
 def merge_partials(o1, m1, l1, o2, m2, l2, *, block_q=128):

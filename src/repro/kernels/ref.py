@@ -40,16 +40,14 @@ def prefix_attention_ref(q, k, v, q_pos, k_pos, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
-def attention_partial_ref(q, k, v, q_pos, k_pos, kv_index=None, *,
+def attention_partial_ref(q, k, v, q_pos, k_pos, *,
                           causal: bool = True, window: int = 0):
     """Partial masked GQA attention in online-softmax form (oracle).
 
     q: [B, Hq, Tq, D]; k, v: [Bk, Hkv, S, D] with Bk in (1, B) — Bk == 1
     is the SubGCache shared-prefix case (every member attends the same
     representative KV); q_pos: [B, Tq]; k_pos: [Bk, S] (-1 = empty slot).
-    ``kv_index`` [B] int32 (optional, multi-prefix pooling): k/v carry a
-    pool batch Bk = NP and query row b attends pool row kv_index[b] —
-    the oracle simply gathers; the kernel steers DMA instead.
+    Paged multi-prefix batches use ``paged_attention_partial_ref``.
 
     Returns (out [B,Hq,Tq,D] f32 normalized, m [B,Hq,Tq], l [B,Hq,Tq])
     such that ``merge_partials_ref`` over disjoint key sets reproduces
@@ -57,8 +55,6 @@ def attention_partial_ref(q, k, v, q_pos, k_pos, kv_index=None, *,
     the model dtype, after the merge).  Fully-masked rows give out=0,
     m=NEG_INF, l=0.
     """
-    if kv_index is not None:
-        k, v, k_pos = k[kv_index], v[kv_index], k_pos[kv_index]
     b, hq, tq, d = q.shape
     bk, hkv = k.shape[0], k.shape[1]
     g = hq // hkv
@@ -87,6 +83,38 @@ def attention_partial_ref(q, k, v, q_pos, k_pos, kv_index=None, *,
     out = out / jnp.where(l > 0, l, 1.0)[..., None]
     return (out.reshape(b, hq, tq, d),
             m.reshape(b, hq, tq), l.reshape(b, hq, tq))
+
+
+def paged_attention_partial_ref(q, k, v, q_pos, k_pos, page_table, *,
+                                causal: bool = False, window: int = 0):
+    """Partial masked GQA attention over a paged KV arena (oracle).
+
+    q: [B, Hq, Tq, D]; k, v: [NB, Hkv, bs, D] block arena; k_pos:
+    [NB, bs]; page_table: [B, NP] int32 (NULL-block padded).  The
+    oracle gathers each row's blocks into a dense [Tb, Hkv, NP*bs, D]
+    sequence and delegates to ``attention_partial_ref`` — the kernel
+    walks the table with per-block DMA instead.  Key order is
+    page-table order, so kernel and oracle see identical sequences.
+    A [1, NP] table is the shared walk (every query row attends the
+    same blocks; the dense delegate's Bk == 1 branch).
+    """
+    tb, np_ = page_table.shape
+    hkv, bs, d = k.shape[1], k.shape[2], k.shape[3]
+    kk = jnp.moveaxis(k[page_table], 1, 2).reshape(tb, hkv, np_ * bs, d)
+    vv = jnp.moveaxis(v[page_table], 1, 2).reshape(tb, hkv, np_ * bs, d)
+    kp = k_pos[page_table].reshape(tb, np_ * bs)
+    return attention_partial_ref(q, kk, vv, q_pos, kp, causal=causal,
+                                 window=window)
+
+
+def paged_decode_gqa_partial_ref(q, k, v, q_pos, k_pos, page_table, *,
+                                 window: int = 0):
+    """Single-token paged GQA decode partial (oracle): gather the page
+    walk dense, then the causal decode partial.  q: [B, Hq, D]."""
+    out, m, l = paged_attention_partial_ref(
+        q[:, :, None, :], k, v, q_pos[:, None], k_pos, page_table,
+        causal=True, window=window)
+    return out[:, :, 0, :], m[:, :, 0], l[:, :, 0]
 
 
 def merge_partials_ref(o1, m1, l1, o2, m2, l2):

@@ -13,14 +13,20 @@ per-member suffix partial, which is numerically exact: softmax over
 ``attention_partial`` also accepts per-member KV (kv batch == q batch),
 so the suffix side of the cascade uses the same kernel.
 
-**Multi-prefix (pooled) serving:** both partial kernels additionally
-accept ``kv_index`` ``[B] int32`` with KV shaped ``[NP, Hkv, S, D]`` — a
-*pool* of stacked prefix caches.  Query row ``b`` then attends KV row
-``kv_index[b]``, so one batch can mix members of several clusters
-(DESIGN.md §7).  The row index is fed through
-``pltpu.PrefetchScalarGridSpec`` so the BlockSpec index maps steer the
-HBM->VMEM DMA directly: no gather of the pooled KV is ever
-materialized, and rows sharing a prefix still stream the same tiles.
+**Paged serving (DESIGN.md §8):** ``paged_attention_partial`` /
+``paged_decode_gqa_partial`` generalize the same scalar-prefetch
+mechanism from "which stacked prefix row" to "which block": KV is a
+block arena ``[num_blocks, Hkv, block_size, D]`` and a *page table*
+``[B, NP] int32`` is prefetched; grid step ``j`` of query row ``b``
+DMAs arena block ``page_table[b, j]``.  One KV tile = one block, so the
+kernel loop IS the page walk — no gather, no padded stacked pool, and
+rows of one cluster walking the same prefix blocks stream the same
+tiles (a [1, NP] table is the fully shared walk).  Table rows pad with
+the NULL block (positions -1), which the positional mask kills like
+any other empty slot.  (The page table generalizes PR 2's
+``kv_index`` stacked-pool prefetch from "which stacked prefix row" to
+"which block"; the kv_index variants were deleted with the stacked
+pool itself.)
 
 Tiling mirrors ``prefix_attention.py``: grid (B, Hq, nq, nk), KV minor,
 online-softmax scratch in VMEM persisting across the nk loop; the merge
@@ -93,8 +99,7 @@ def _indexed_partial_kernel(idx_ref, *refs, **kw):
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
-def attention_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
-                      causal: bool = True,
+def attention_partial(q, k, v, q_pos, k_pos, *, causal: bool = True,
                       window: int = 0, block_q: int = 128,
                       block_k: int = 128, interpret: bool = True):
     """Partial masked GQA attention in online-softmax form.
@@ -103,11 +108,8 @@ def attention_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
     ``Bk == 1`` is the shared-prefix case where every member attends the
     same KV and each KV tile is read once per kv-head group, not once
     per member.  q_pos: [B, Tq]; k_pos: [Bk, S] (-1 marks empty slots).
-
-    ``kv_index`` [B] int32 (optional): multi-prefix mode.  k/v may then
-    carry any pool batch ``Bk = NP`` and query row ``b`` attends KV row
-    ``kv_index[b]`` — the index is scalar-prefetched so the BlockSpec
-    index maps DMA the right pool row per grid step (no gather).
+    (Multi-prefix batches use the paged variant below: page tables over
+    the block arena replaced the PR 2 stacked pool.)
 
     Returns ``(out [B,Hq,Tq,D] f32, m [B,Hq,Tq] f32, l [B,Hq,Tq] f32)``
     where ``out`` is already normalized by ``l`` (zero for fully masked
@@ -116,11 +118,8 @@ def attention_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
     """
     b, hq, tq, d = q.shape
     bk_b, hkv, s_len = k.shape[0], k.shape[1], k.shape[2]
-    if kv_index is None:
-        assert bk_b in (1, b), (bk_b, b)
-    else:
-        assert kv_index.shape == (b,), (kv_index.shape, b)
-    shared = bk_b == 1 and kv_index is None
+    assert bk_b in (1, b), (bk_b, b)
+    shared = bk_b == 1
     group = hq // hkv
     scale = d ** -0.5
 
@@ -150,41 +149,6 @@ def attention_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
     ]
     kern = functools.partial(_partial_kernel, causal=causal, window=window,
                              nk=nk, scale=scale)
-
-    if kv_index is not None:
-        # index maps under PrefetchScalarGridSpec get the prefetched
-        # scalar ref as a trailing argument
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, bq), lambda b_, h, i, j, ix: (b_, i)),
-                pl.BlockSpec((1, bk), lambda b_, h, i, j, ix: (ix[b_], j)),
-                pl.BlockSpec((1, 1, bq, d),
-                             lambda b_, h, i, j, ix: (b_, h, i, 0)),
-                pl.BlockSpec((1, 1, bk, d),
-                             lambda b_, h, i, j, ix: (ix[b_], h // group,
-                                                      j, 0)),
-                pl.BlockSpec((1, 1, bk, d),
-                             lambda b_, h, i, j, ix: (ix[b_], h // group,
-                                                      j, 0)),
-            ],
-            out_specs=[
-                pl.BlockSpec((1, 1, bq, d),
-                             lambda b_, h, i, j, ix: (b_, h, i, 0)),
-                pl.BlockSpec((1, 1, bq), lambda b_, h, i, j, ix: (b_, h, i)),
-                pl.BlockSpec((1, 1, bq), lambda b_, h, i, j, ix: (b_, h, i)),
-            ],
-            scratch_shapes=scratch_shapes,
-        )
-        out, m, l = pl.pallas_call(
-            functools.partial(_indexed_partial_kernel, causal=causal,
-                              window=window, nk=nk, scale=scale),
-            grid_spec=grid_spec,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(kv_index.astype(jnp.int32), q_pos, k_pos, q, k, v)
-        return out[:, :, :tq, :], m[:, :, :tq], l[:, :, :tq]
 
     kv_b = (lambda b_: 0) if shared else (lambda b_: b_)
     out, m, l = pl.pallas_call(
@@ -262,8 +226,7 @@ def _indexed_decode_partial_kernel(idx_ref, *refs, **kw):
 
 @functools.partial(jax.jit, static_argnames=("window", "block_k",
                                              "interpret"))
-def decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
-                       window: int = 0,
+def decode_gqa_partial(q, k, v, q_pos, k_pos, *, window: int = 0,
                        block_k: int = 128, interpret: bool = True):
     """Single-token GQA decode attention in partial form.
 
@@ -272,20 +235,14 @@ def decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
     but emitting ``(out [B,Hq,D] f32, m [B,Hq], l [B,Hq])`` for the
     cascade merge.  k, v: [Bk, Hkv, S, D] with ``Bk in (1, B)``;
     ``Bk == 1`` is the shared prefix (read once per kv-head, not per
-    member).  ``kv_index`` [B] int32 (optional) enables multi-prefix
-    mode: ``Bk = NP`` pooled rows, decode row ``b`` attends pool row
-    ``kv_index[b]`` via scalar-prefetched index maps — one decode step
-    serves members of several clusters.  Causal masking is always
-    applied (a decode query is at or past every cached position, so it
-    is correct for both sides).
+    member; multi-prefix batches use ``paged_decode_gqa_partial``).
+    Causal masking is always applied (a decode query is at or past
+    every cached position, so it is correct for both sides).
     """
     b, hq, d = q.shape
     bk_b, hkv, s_len = k.shape[0], k.shape[1], k.shape[2]
-    if kv_index is None:
-        assert bk_b in (1, b), (bk_b, b)
-    else:
-        assert kv_index.shape == (b,), (kv_index.shape, b)
-    shared = bk_b == 1 and kv_index is None
+    assert bk_b in (1, b), (bk_b, b)
+    shared = bk_b == 1
     group = hq // hkv
     scale = d ** -0.5
 
@@ -310,37 +267,6 @@ def decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
         pltpu.VMEM((group, 1), jnp.float32),
     ]
 
-    if kv_index is not None:
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(b, hkv, nk),
-            in_specs=[
-                pl.BlockSpec((1, 1), lambda b_, h, j, ix: (b_, 0)),
-                pl.BlockSpec((1, bk), lambda b_, h, j, ix: (ix[b_], j)),
-                pl.BlockSpec((1, 1, group, d),
-                             lambda b_, h, j, ix: (b_, h, 0, 0)),
-                pl.BlockSpec((1, 1, bk, d),
-                             lambda b_, h, j, ix: (ix[b_], h, j, 0)),
-                pl.BlockSpec((1, 1, bk, d),
-                             lambda b_, h, j, ix: (ix[b_], h, j, 0)),
-            ],
-            out_specs=[
-                pl.BlockSpec((1, 1, group, d),
-                             lambda b_, h, j, ix: (b_, h, 0, 0)),
-                pl.BlockSpec((1, 1, group), lambda b_, h, j, ix: (b_, h, 0)),
-                pl.BlockSpec((1, 1, group), lambda b_, h, j, ix: (b_, h, 0)),
-            ],
-            scratch_shapes=scratch_shapes,
-        )
-        out, m, l = pl.pallas_call(
-            functools.partial(_indexed_decode_partial_kernel, window=window,
-                              nk=nk, scale=scale),
-            grid_spec=grid_spec,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(kv_index.astype(jnp.int32), qp2, k_pos, qg, k, v)
-        return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
-
     kv_b = (lambda b_: 0) if shared else (lambda b_: b_)
     out, m, l = pl.pallas_call(
         functools.partial(_decode_partial_kernel, window=window, nk=nk,
@@ -362,6 +288,150 @@ def decode_gqa_partial(q, k, v, q_pos, k_pos, kv_index=None, *,
         scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(qp2, k_pos, qg, k, v)
+    return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "interpret"))
+def paged_attention_partial(q, k, v, q_pos, k_pos, page_table, *,
+                            causal: bool = False, window: int = 0,
+                            block_q: int = 128, interpret: bool = True):
+    """Partial masked GQA attention over a paged KV arena.
+
+    q: [B, Hq, Tq, D]; k, v: [NB, Hkv, bs, D] — the block arena, one
+    row per physical block of ``bs`` slots; k_pos: [NB, bs] absolute
+    positions (-1 = empty slot); page_table: [B, NP] int32 — query row
+    ``b``'s sequence is the concatenation of blocks
+    ``page_table[b, 0..NP)``, short rows padded with the NULL block.
+    A [1, NP] table is the SHARED walk (single-cluster batch): every
+    query row walks the same blocks, so each tile is streamed once per
+    kv-head group, never per member — the paged twin of the batch-1
+    dense cascade.
+
+    The page table is scalar-prefetched; grid step ``j`` DMAs block
+    ``page_table[b, j]``, so the KV-minor loop walks the page table and
+    the attention math is byte-identical to the dense cascade over the
+    gathered sequence.  Returns ``(out [B,Hq,Tq,D] f32 normalized,
+    m [B,Hq,Tq], l [B,Hq,Tq])`` for ``merge_partials``.
+    """
+    b, hq, tq, d = q.shape
+    hkv, bs = k.shape[1], k.shape[2]
+    tb, n_pages = page_table.shape
+    assert tb in (1, b), (page_table.shape, b)
+    row = (lambda b_: 0) if tb == 1 else (lambda b_: b_)
+    group = hq // hkv
+    scale = d ** -0.5
+
+    bq = min(block_q, tq)
+    tq_p = ((tq + bq - 1) // bq) * bq
+    if tq_p != tq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, tq_p - tq), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, tq_p - tq)), constant_values=0)
+    nq = tq_p // bq
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hq, nq, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b_, h, i, j, pt: (b_, i)),
+            pl.BlockSpec((1, bs),
+                         lambda b_, h, i, j, pt: (pt[row(b_), j], 0)),
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, i, j, pt: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, i, j, pt: (pt[row(b_), j],
+                                                  h // group, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, i, j, pt: (pt[row(b_), j],
+                                                  h // group, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, i, j, pt: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, i, j, pt: (b_, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, i, j, pt: (b_, h, i)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        functools.partial(_indexed_partial_kernel, causal=causal,
+                          window=window, nk=n_pages, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, tq_p, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q_pos, k_pos, q, k, v)
+    return out[:, :, :tq, :], m[:, :, :tq], l[:, :, :tq]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_gqa_partial(q, k, v, q_pos, k_pos, page_table, *,
+                             window: int = 0, interpret: bool = True):
+    """Single-token GQA decode attention over a paged KV arena.
+
+    Decode-shaped tiling (grid (B, Hkv, NP), [group, d] q tile) like
+    ``decode_gqa_partial``, but the KV-minor loop walks the
+    scalar-prefetched ``page_table`` [B, NP]: step ``j`` DMAs arena
+    block ``page_table[b, j]`` from k, v [NB, Hkv, bs, D].  A [1, NP]
+    table is the SHARED walk (every row reads the same blocks once per
+    kv-head group).  Causal masking always applies (a decode query is
+    at or past every cached position).  Returns ``(out [B,Hq,D] f32,
+    m [B,Hq], l [B,Hq])``.
+    """
+    b, hq, d = q.shape
+    hkv, bs = k.shape[1], k.shape[2]
+    tb, n_pages = page_table.shape
+    assert tb in (1, b), (page_table.shape, b)
+    row = (lambda b_: 0) if tb == 1 else (lambda b_: b_)
+    group = hq // hkv
+    scale = d ** -0.5
+
+    qg = q.reshape(b, hkv, group, d)
+    qp2 = q_pos.reshape(b, 1).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h, j, pt: (b_, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda b_, h, j, pt: (pt[row(b_), j], 0)),
+            pl.BlockSpec((1, 1, group, d),
+                         lambda b_, h, j, pt: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, j, pt: (pt[row(b_), j], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, j, pt: (pt[row(b_), j], h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda b_, h, j, pt: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, group), lambda b_, h, j, pt: (b_, h, 0)),
+            pl.BlockSpec((1, 1, group), lambda b_, h, j, pt: (b_, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        functools.partial(_indexed_decode_partial_kernel, window=window,
+                          nk=n_pages, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, group, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), qp2, k_pos, qg, k, v)
     return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
 
 

@@ -233,8 +233,7 @@ def merge_attend(o1, m1, l1, o2, m2, l2):
 def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix: dict,
                   k_suf: jnp.ndarray, v_suf: jnp.ndarray,
                   suf_pos: jnp.ndarray, *, window: int = 0,
-                  impl: str = "xla",
-                  prefix_idx: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                  impl: str = "xla") -> jnp.ndarray:
     """Cascade attention over [shared prefix ++ per-member suffix].
 
     q: [B, Hq, Tq, D]; prefix: {"k","v","pos"} seq-major batch-1 cache
@@ -244,11 +243,10 @@ def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix: dict,
     so only validity (pos >= 0) and the optional sliding window apply.
     Numerically exact vs. attending the concatenated KV.
 
-    ``prefix_idx`` [B] int32 enables multi-prefix (pooled) serving:
-    ``prefix`` then stacks NP prefix caches ([NP, P, Hkv, D]) and query
-    row ``b`` attends prefix row ``prefix_idx[b]`` — one batch mixes
-    members of several clusters (DESIGN.md §7).  The Pallas path steers
-    the per-row DMA via scalar prefetch; the XLA path gathers.
+    This is the DENSE cascade (single shared prefix at batch 1).
+    Multi-prefix batches go through the paged path instead
+    (``attend_paged``, DESIGN.md §8), where every row walks its own
+    page table over the block arena.
     """
     pk_, pv_, ppos_ = prefix["k"], prefix["v"], prefix["pos"]
     if impl == "pallas":
@@ -262,28 +260,94 @@ def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix: dict,
             # stream per kv-head group) instead of 1-row prefill tiles;
             # the elementwise merge stays in XLA (fuses, nothing to tile)
             o1, m1, l1 = kops.decode_gqa_partial(
-                q[:, :, 0], pk, pv, q_pos[:, 0], ppos_, prefix_idx,
-                window=window)
+                q[:, :, 0], pk, pv, q_pos[:, 0], ppos_, window=window)
             o2, m2, l2 = kops.decode_gqa_partial(
                 q[:, :, 0], sk, sv, q_pos[:, 0], suf_pos, window=window)
             out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
             return out[:, :, None].astype(q.dtype)
         o1, m1, l1 = kops.attention_partial(q, pk, pv, q_pos, ppos_,
-                                            prefix_idx, causal=False,
-                                            window=window)
+                                            causal=False, window=window)
         o2, m2, l2 = kops.attention_partial(q, sk, sv, q_pos, suf_pos,
                                             causal=True, window=window)
         out, _, _ = kops.merge_partials(o1, m1, l1, o2, m2, l2)
         return out.astype(q.dtype)
-    if prefix_idx is not None:
-        # XLA multi-prefix: gather each row's pool entry, then run the
-        # ordinary per-member partial (exact; the kernel path avoids the
-        # materialized gather via index-map DMA)
-        pk_, pv_, ppos_ = pk_[prefix_idx], pv_[prefix_idx], ppos_[prefix_idx]
     o1, m1, l1 = attend_partial(q, pk_, pv_, q_pos,
                                 ppos_, causal=False, window=window)
     o2, m2, l2 = attend_partial(q, k_suf, v_suf, q_pos, suf_pos,
                                 causal=True, window=window)
+    out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
+    return out.astype(q.dtype)
+
+
+def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
+                 prefix_arena: dict, prefix_pages: jnp.ndarray,
+                 suffix_arena: dict, suffix_pages: jnp.ndarray,
+                 *, window: int = 0, impl: str = "xla") -> jnp.ndarray:
+    """Cascade attention over a paged KV arena (DESIGN.md §8).
+
+    q: [B, Hq, Tq, D]; prefix_arena / suffix_arena: {"k","v","pos"}
+    block-arena leaves (k/v [NB, bs, Hkv, D] seq-major, pos [NB, bs]);
+    prefix_pages / suffix_pages: [B or 1, NBP] / [B, NBS] int32 page
+    tables (NULL-block padded; a [1, NBP] prefix table is the shared
+    walk).  Row ``b`` attends the concatenation of its prefix blocks
+    (shared by every member of its cluster — the same physical rows,
+    never replicated) and its private suffix blocks.  The prefix side
+    needs no causal mask (every prefix position precedes every query);
+    the suffix side is causal; the LSE merge makes the cascade exact.
+    Rows with an all-NULL prefix table (no cached prefix) degrade to
+    pure suffix attention — the masked prefix partial carries no mass.
+
+    The two arenas are usually the SAME object (prefill: one address
+    space).  Decode passes the main arena as ``prefix_arena`` (a scan
+    invariant — prefix blocks are read-only during decode) and a
+    compact extraction of the batch's suffix blocks as
+    ``suffix_arena`` (the only blocks decode writes; carrying the full
+    arena through the scan would copy it per step on backends where
+    donation cannot alias).
+
+    The Pallas path walks the page tables with one-block-per-grid-step
+    scalar-prefetch DMA; the XLA path gathers the blocks (exact, and
+    what CPU validation runs).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        pka = prefix_arena["k"].transpose(0, 2, 1, 3)  # head-major (MXU)
+        pva = prefix_arena["v"].transpose(0, 2, 1, 3)
+        ska = suffix_arena["k"].transpose(0, 2, 1, 3)
+        sva = suffix_arena["v"].transpose(0, 2, 1, 3)
+        ppos, spos = prefix_arena["pos"], suffix_arena["pos"]
+        if q.shape[2] == 1:
+            o1, m1, l1 = kops.paged_decode_gqa_partial(
+                q[:, :, 0], pka, pva, q_pos[:, 0], ppos, prefix_pages,
+                window=window)
+            o2, m2, l2 = kops.paged_decode_gqa_partial(
+                q[:, :, 0], ska, sva, q_pos[:, 0], spos, suffix_pages,
+                window=window)
+            out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
+            return out[:, :, None].astype(q.dtype)
+        o1, m1, l1 = kops.paged_attention_partial(
+            q, pka, pva, q_pos, ppos, prefix_pages, causal=False,
+            window=window)
+        o2, m2, l2 = kops.paged_attention_partial(
+            q, ska, sva, q_pos, spos, suffix_pages, causal=True,
+            window=window)
+        out, _, _ = kops.merge_partials(o1, m1, l1, o2, m2, l2)
+        return out.astype(q.dtype)
+
+    def gathered(arena, pages):
+        kk = arena["k"][pages]                     # [Bk, W, bs, Hkv, D]
+        bk, w, bs, hkv, d = kk.shape
+        kk = kk.reshape(bk, w * bs, hkv, d)
+        vv = arena["v"][pages].reshape(bk, w * bs, hkv, d)
+        pp = arena["pos"][pages].reshape(bk, w * bs)
+        return kk, vv, pp
+
+    pk, pv, pp = gathered(prefix_arena, prefix_pages)
+    sk, sv, sp = gathered(suffix_arena, suffix_pages)
+    o1, m1, l1 = attend_partial(q, pk, pv, q_pos, pp, causal=False,
+                                window=window)
+    o2, m2, l2 = attend_partial(q, sk, sv, q_pos, sp, causal=True,
+                                window=window)
     out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
     return out.astype(q.dtype)
 
@@ -339,6 +403,45 @@ def cache_write(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
     return {"k": k, "v": v, "pos": pos}
 
 
+def cache_write_paged(arena: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                      positions: jnp.ndarray, pages: jnp.ndarray, *,
+                      slot_offset=0,
+                      valid: Optional[jnp.ndarray] = None) -> dict:
+    """Write [B,T,Hkv,D] keys/values into a paged block arena.
+
+    arena: {"k","v","pos"} block-arena leaves (k/v [NB, bs, Hkv, D],
+    pos [NB, bs]); pages: [B, NBS] int32 — each row's private suffix
+    page table.  Token at absolute position ``p`` lands in block
+    ``pages[b, (p - slot_offset) // bs]`` slot ``(p - slot_offset) %
+    bs`` — the page-table generalization of the dense split cache's
+    "suffix token P+i at slot i" rule, so ``pos`` keeps absolute
+    positions and all masking stays positional.  ``slot_offset`` may be
+    per-row [B] (each cluster's own prefix length).  Tokens that are
+    padding (``valid`` False) or map past the table are NOT written at
+    all (OOB-drop scatter): their target slots keep pos = -1 from the
+    allocation-time reset, and no row can ever touch another row's
+    blocks — page tables are disjoint by construction.
+    """
+    bs = arena["k"].shape[1]
+    off = jnp.asarray(slot_offset)
+    if off.ndim == 1:
+        off = off[:, None]                                     # [B, 1]
+    rel = positions - off                                      # [B, T]
+    blk_col = rel // bs
+    width = pages.shape[1]
+    bid = jnp.take_along_axis(pages, jnp.clip(blk_col, 0, width - 1), axis=1)
+    ok = (rel >= 0) & (blk_col < width)
+    if valid is not None:
+        ok = ok & valid
+    slot = jnp.where(ok, rel % bs, bs)                         # OOB -> drop
+    k = arena["k"].at[bid, slot].set(
+        k_new.astype(arena["k"].dtype), mode="drop")
+    v = arena["v"].at[bid, slot].set(
+        v_new.astype(arena["v"].dtype), mode="drop")
+    pos = arena["pos"].at[bid, slot].set(positions, mode="drop")
+    return {"k": k, "v": v, "pos": pos}
+
+
 def ring_write_window(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
                       positions: jnp.ndarray,
                       valid: Optional[jnp.ndarray],
@@ -372,22 +475,30 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                    causal: bool = True, window: int = 0,
                    ring: bool = False, valid: Optional[jnp.ndarray] = None,
                    impl: str = "xla", prefix: Optional[dict] = None,
-                   slot_offset=0, prefix_idx: Optional[jnp.ndarray] = None):
+                   slot_offset=0,
+                   prefix_pages: Optional[jnp.ndarray] = None,
+                   suffix_pages: Optional[jnp.ndarray] = None):
     """x: [B, T, D_model]; positions: [B, T] absolute positions.
 
     Returns (out [B, T, D_model], new_cache or None).
     ``impl="pallas"`` routes attention through the Pallas kernels
     (prefix_attention / decode_gqa); "xla" uses the jnp reference path.
 
-    ``prefix`` enables the split prefix/suffix cascade (DESIGN.md §5):
-    a read-only batch-1 {"k","v","pos"} cache holding the shared prefix.
-    Fresh KV then goes into ``cache`` (the suffix-only cache) at slot =
-    position - ``slot_offset``, and attention runs as shared-prefix
-    partial + suffix partial + LSE merge — exact vs. the broadcast path.
+    ``prefix`` enables the dense split prefix/suffix cascade
+    (DESIGN.md §5): a read-only batch-1 {"k","v","pos"} cache holding
+    the shared prefix.  Fresh KV then goes into ``cache`` (the
+    suffix-only cache) at slot = position - ``slot_offset``, and
+    attention runs as shared-prefix partial + suffix partial + LSE
+    merge — exact vs. the broadcast path.
 
-    ``prefix_idx`` [B] int32 (with a stacked [NP, ...] ``prefix``) is
-    the pooled multi-prefix variant (DESIGN.md §7): row ``b`` attends
-    prefix row ``prefix_idx[b]``; ``slot_offset`` is then per-row [B].
+    ``suffix_pages`` [B, NBS] (+ ``prefix_pages`` [B, NBP]) switches to
+    the PAGED path (DESIGN.md §8): ``cache`` is then the block arena
+    (k/v [NB, bs, Hkv, D]); fresh KV is scattered into each row's
+    private suffix blocks at slot = position - ``slot_offset`` (per-row
+    [B]), and attention cascades over [prefix blocks ++ suffix blocks].
+    A window-sized ring never exists here — suffix pages hold the full
+    suffix+decode tail, and sliding windows mask positionally — so the
+    windowed-prefill special case of the dense paths disappears.
     """
     if impl == "pallas":
         from repro.kernels import ops as kops
@@ -422,6 +533,19 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
         self_pos = positions if valid is None else jnp.where(valid, positions, -1)
         out = _attend(q, k, v, positions, self_pos)
         new_cache = None
+    elif suffix_pages is not None:
+        # Paged cascade: fresh KV scatters into the row's private suffix
+        # blocks; attention walks the page tables.  ``cache`` is the
+        # arena holding the suffix blocks; the prefix blocks live in
+        # ``prefix`` when given (decode: the main arena as a read-only
+        # scan invariant) or in the same ``cache`` (prefill: one
+        # address space).
+        new_cache = cache_write_paged(cache, k, v, positions, suffix_pages,
+                                      slot_offset=slot_offset, valid=valid)
+        prefix_src = prefix if prefix is not None else new_cache
+        out = attend_paged(q, positions, prefix_src, prefix_pages,
+                           new_cache, suffix_pages, window=window,
+                           impl=impl)
     elif prefix is not None:
         # Split prefix/suffix cascade: fresh KV goes into the suffix-only
         # cache; the shared batch-1 prefix buffers are attended in place.
@@ -437,8 +561,7 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                 [cache["v"], v.astype(cache["v"].dtype)], axis=1)
             pos_all = jnp.concatenate([cache["pos"], self_pos], axis=1)
             out = attend_shared(q, positions, prefix, k_all, v_all, pos_all,
-                                window=window, impl=impl,
-                                prefix_idx=prefix_idx)
+                                window=window, impl=impl)
             new_cache = ring_write_window(cache, k, v, positions, valid,
                                           slot_offset=slot_offset)
         else:
@@ -447,8 +570,7 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                                     valid=valid, slot_offset=slot_offset)
             out = attend_shared(q, positions, prefix, new_cache["k"],
                                 new_cache["v"], new_cache["pos"],
-                                window=window, impl=impl,
-                                prefix_idx=prefix_idx)
+                                window=window, impl=impl)
     elif window and t > 1:
         # Windowed multi-token (prefill / suffix prefill): the ring buffer
         # cannot hold T > capacity fresh tokens at once, so attend over

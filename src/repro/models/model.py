@@ -127,13 +127,14 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
             ring=ctx.get("ring", False), valid=ctx.get("valid"),
             impl=cfg.attention_impl, prefix=sub_prefix,
             slot_offset=ctx.get("slot_offset", 0),
-            prefix_idx=ctx.get("prefix_idx"))
+            prefix_pages=ctx.get("prefix_pages"),
+            suffix_pages=ctx.get("suffix_pages"))
         if sub_new is not None:
             new_cache.update(sub_new)
     elif spec.mixer == MAMBA:
-        if prefix is not None:
+        if prefix is not None or ctx.get("suffix_pages") is not None:
             raise ValueError(
-                "split prefix/suffix serving does not cover Mamba mixers; "
+                "split/paged prefix serving does not cover Mamba mixers; "
                 "use PrefixState.broadcast (the engine gates this)")
         sub = ({k: cache[k] for k in ("conv", "state")}
                if cache is not None else None)
@@ -143,9 +144,9 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
         if sub_new is not None:
             new_cache.update(sub_new)
     elif spec.mixer == RGLRU:
-        if prefix is not None:
+        if prefix is not None or ctx.get("suffix_pages") is not None:
             raise ValueError(
-                "split prefix/suffix serving does not cover RG-LRU mixers; "
+                "split/paged prefix serving does not cover RG-LRU mixers; "
                 "use PrefixState.broadcast (the engine gates this)")
         sub = ({k: cache[k] for k in ("conv", "state")}
                if cache is not None else None)
@@ -287,55 +288,43 @@ def init_suffix_cache(cfg: ModelConfig, batch: int,
     return init_cache(cfg, batch, suffix_capacity)
 
 
-def _kv_axes(path) -> tuple:
-    """(seq_axis, batch_axis) for an attention-cache leaf, found from its
-    trailing pytree key.  k/v leaves are [..., B, C, Hkv, D]; pos leaves
-    are [..., B, C] (scanned layer groups add leading stack dims, hence
-    the negative indexing).  Non-attention leaves (recurrent state,
-    cross-attention KV) have no positional slots to pad or stack — the
-    split/pooled path never covers them, so they are rejected."""
-    key = getattr(path[-1], "key", None) if path else None
-    if key in ("k", "v"):
-        return -3, -4
-    if key == "pos":
-        return -1, -2
-    raise ValueError(
-        f"prefix pooling covers attention KV caches only; got leaf {path}")
+def init_block_arena(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> dict:
+    """One [num_blocks, block_size, Hkv, D] K/V block arena per
+    attention layer — the physical address space of the paged KV cache
+    (DESIGN.md §8).  Structurally identical to ``init_cache`` with
+    batch = num_blocks and capacity = block_size, EXCEPT that windowed
+    layers are NOT clamped: every block has uniform geometry (a block is
+    a unit of allocation, not a per-layer ring), and sliding windows are
+    enforced positionally at attention time like every other mask.
 
-
-def pad_prefix_cache(cache: dict, capacity: int) -> dict:
-    """Pad every attention-cache leaf of a prefix pytree to ``capacity``
-    slots along the sequence axis (k/v with zeros, pos with -1 = empty).
-
-    Pooled multi-prefix serving stacks PrefixStates of different
-    capacity buckets into one [NP, ...] pytree; padding to the common
-    capacity first keeps the stack rectangular, and the -1 positions
-    keep the extra slots masked (DESIGN.md §2: masking is positional).
+    Attention-only stacks only: recurrent / cross-attention state has no
+    positional slots to page (the engine keeps those dense behind the
+    same request facade).
     """
-    def pad(path, x):
-        seq_axis, _ = _kv_axes(path)
-        extra = capacity - x.shape[seq_axis]
-        if extra < 0:
-            raise ValueError(f"cannot shrink cache leaf {path} to {capacity}")
-        if extra == 0:
-            return x
-        widths = [(0, 0)] * x.ndim
-        widths[seq_axis % x.ndim] = (0, extra)
-        fill = -1 if getattr(path[-1], "key", None) == "pos" else 0
-        return jnp.pad(x, widths, constant_values=fill)
-    return jax.tree_util.tree_map_with_path(pad, cache)
+    dt = dtype_of(cfg.dtype)
+    specs = cfg.layer_specs()
+    for s in specs:
+        if s.mixer not in (ATTN, ATTN_SWA, ATTN_LOCAL) or s.cross_attn:
+            raise ValueError(
+                "paged KV arenas cover attention-only stacks; "
+                f"got mixer {s.mixer} (cross_attn={s.cross_attn})")
+    period, n_groups, _ = stack_layout(cfg)
 
+    def one() -> dict:
+        return attn_lib.init_kv_cache(num_blocks, cfg.num_kv_heads,
+                                      block_size, cfg.head_dim_, dt)
 
-def stack_prefix_caches(caches) -> dict:
-    """Concatenate same-capacity prefix cache pytrees along the batch
-    axis: NP batch-1 PrefixState caches become one pooled [NP, ...]
-    pytree that ``forward(prefix=..., prefix_idx=...)`` serves from
-    (DESIGN.md §7).  Use ``pad_prefix_cache`` first if capacities
-    differ.  Attention-only (the split path's domain)."""
-    def cat(path, *xs):
-        _, batch_axis = _kv_axes(path)
-        return jnp.concatenate(xs, axis=batch_axis % xs[0].ndim)
-    return jax.tree_util.tree_map_with_path(cat, *caches)
+    arena = {}
+    if n_groups:
+        one_group = {str(j): one() for j in range(period)}
+        arena["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(),
+            one_group)
+    rest_specs = specs[n_groups * period:]
+    if rest_specs:
+        arena["rest"] = [one() for _ in rest_specs]
+    return arena
 
 
 # ======================================================================
@@ -451,26 +440,31 @@ def forward(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
             enc: Optional[jnp.ndarray] = None,
             valid: Optional[jnp.ndarray] = None, ring: bool = False,
             prefix: Optional[dict] = None, slot_offset=0,
-            prefix_idx: Optional[jnp.ndarray] = None):
+            prefix_pages: Optional[jnp.ndarray] = None,
+            suffix_pages: Optional[jnp.ndarray] = None):
     """Run the decoder stack in any serving mode.
 
     embeds: [B, T, D] already-embedded inputs; positions: [B, T]
     absolute token positions.  Returns (hidden [B, T, D], new_cache,
     aux_loss).
 
-    Split prefix/suffix serving (DESIGN.md §5): pass the batch-1 shared
-    prefix state as ``prefix`` (read-only) and the prefix length as
-    ``slot_offset``; ``cache`` is then the suffix-only cache and suffix
-    token P+i is stored at slot i while keeping absolute positions.
+    Dense split prefix/suffix serving (DESIGN.md §5): pass the batch-1
+    shared prefix state as ``prefix`` (read-only) and the prefix length
+    as ``slot_offset``; ``cache`` is then the suffix-only cache and
+    suffix token P+i is stored at slot i while keeping absolute
+    positions.
 
-    Multi-prefix pooled serving (DESIGN.md §7): ``prefix`` stacks NP
-    prefix caches (see ``stack_prefix_caches``), ``prefix_idx`` [B]
-    selects each row's prefix, and ``slot_offset`` is per-row [B]
-    (each cluster's own prefix length).
+    Paged serving (DESIGN.md §8): ``cache`` is the block arena
+    (``init_block_arena``), ``prefix_pages`` [B, NBP] maps each row to
+    its cluster's shared prefix blocks, ``suffix_pages`` [B, NBS] to
+    its private suffix blocks, and ``slot_offset`` is per-row [B] (each
+    cluster's own prefix length).  One batch mixes members of any
+    number of clusters — sharing is a page-table fact, not a tensor
+    layout.
     """
     ctx = {"positions": positions, "valid": valid, "ring": ring,
            "enc": enc, "causal": True, "slot_offset": slot_offset,
-           "prefix_idx": prefix_idx}
+           "prefix_pages": prefix_pages, "suffix_pages": suffix_pages}
     return run_stack(params, cfg, embeds, cache, ctx, prefix=prefix)
 
 

@@ -106,6 +106,11 @@ def serving_report(pipe: GraphRAGPipeline) -> dict:
         "pool_evictions": st.pool_evictions,
         "pool_reprefills": st.pool_reprefills,
         "pool_hit_rate": round(st.pool_hit_rate, 4),
+        # paged block pool (zeros when the dense backend served)
+        "blocks_total": st.blocks_total,
+        "blocks_peak": st.blocks_peak,
+        "block_occupancy": round(st.block_occupancy, 4),
+        "block_fragmentation": round(st.block_fragmentation, 4),
     }
 
 

@@ -1,0 +1,55 @@
+"""Shape bucketing for the serving engine (DESIGN.md §3).
+
+Lengths are data, shapes are buckets: every serving shape — suffix
+length, member batch, cache capacity, page-table width — is rounded up
+to a small family of buckets so a handful of compiled executables serve
+any workload.  One module owns all of the rounding rules; the engine,
+the paged KV pool, and the benchmarks import from here instead of
+keeping private copies (three of which had drifted apart by PR 2).
+
+Buckets:
+
+* ``bucket_len``     — sequence lengths: next multiple of ``bucket``.
+* ``bucket_pow2``    — batch / pool / page-table widths: next power of
+                       two (compiled-executable count stays O(log n)).
+* ``bucket_capacity``— KV capacities: power-of-two doubling from a
+                       ``floor``, bounded by a hard ``limit``.
+* ``blocks_for``     — paged KV: blocks needed to hold ``n_tokens``
+                       (ceil division; the page-table WIDTH is then
+                       ``bucket_pow2(blocks_for(...))`` so the block
+                       count stays data while the table shape is a
+                       bucket).
+"""
+from __future__ import annotations
+
+
+def bucket_len(n: int, bucket: int) -> int:
+    """Round a sequence length up to the next multiple of ``bucket``."""
+    return max(bucket, ((n + bucket - 1) // bucket) * bucket)
+
+
+def bucket_pow2(n: int) -> int:
+    """Round a batch / pool / page-table width up to a power of two."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def bucket_capacity(need: int, floor: int, limit: int, kind: str) -> int:
+    """Power-of-two capacity bucket >= ``need``, starting at ``floor``,
+    bounded by ``limit`` (raises ValueError past the bound)."""
+    cap = min(floor, limit)
+    while cap < need:
+        cap *= 2
+    if cap > limit:
+        raise ValueError(
+            f"{kind} needs cache capacity {cap} > max_cache_len "
+            f"{limit}; raise max_cache_len")
+    return cap
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` KV slots (>= 1: even an empty
+    allocation owns one block so a page table is never width 0)."""
+    return max(1, (n_tokens + block_size - 1) // block_size)

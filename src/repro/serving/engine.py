@@ -1,46 +1,48 @@
-"""Batched serving engine with SubGCache prefix-state reuse.
+"""Batched serving engine with SubGCache prefix reuse over a paged KV
+block pool.
 
-Execution paths:
-  * ``prefill_prefix``      — compute the representative prefix state once
-                              (batch 1), paper §3.4 step 1.
-  * ``generate_with_prefix``— serve all cluster members as ONE batched
-                              suffix prefill + greedy decode (TPU
-                              adaptation; the paper loops members
-                              sequentially).  Attention-only stacks use
-                              the **split prefix/suffix cascade**
-                              (DESIGN.md §5): members get a suffix+decode
-                              cache only, and the live batch-1 prefix
-                              buffers are attended in place — HBM for a
-                              B-member cluster is P + B×S slots instead
-                              of B×(P+S), and prefix KV bytes are read
-                              once per kv-head group, not once per
-                              member.  Stateful (Mamba / RG-LRU) and
-                              cross-attention stacks fall back to
-                              ``PrefixState.broadcast`` (their recurrent
-                              states are tiny).
-  * ``generate_multi_prefix``— pooled ONLINE serving (DESIGN.md §7): one
-                              batch mixes members of SEVERAL clusters.
-                              The per-cluster ``PrefixState``s are
-                              padded to a common capacity and stacked
-                              into an [NP, ...] pool; every row carries
-                              a prefix index and its own slot offset,
-                              so a single prefill + decode step serves
-                              all clusters at once — no idling between
-                              clusters.  Bit-identical to serving each
-                              cluster separately through the cascade.
-  * ``generate``            — vanilla per-query path (the baseline).
+The serving API is one call (DESIGN.md §8)::
 
-Timing dicts returned by the serving calls carry aggregate
-``prefill_s``/``decode_s`` plus per-member ``prefill_share``/
-``decode_share`` lists — sub-batched serving (stateful fallback) costs
-each member its OWN sub-batch's share, not a global average.
+    requests = [Request(suffix_tokens=..., prefix=state_or_None), ...]
+    outputs, timing = engine.serve(requests)
 
-Shapes are bucketed (suffix length to multiples of ``bucket``, batch to
-powers of two) so a handful of compiled executables serve any workload —
-lengths are data, not shapes (DESIGN.md §3).
+Every request carries its own (optional) ``PrefixState``; one batch may
+mix members of any number of clusters.  Backends:
+
+  * **paged** (attention-only stacks, the default) — prefixes and
+    suffixes live in ONE refcounted block arena (``core/paged.py``).
+    ``serve`` builds two page tables per row: the prefix table maps the
+    row onto its cluster's shared prefix blocks (members share
+    physically — no replication, no padded stacking), the suffix table
+    onto freshly allocated private blocks.  One suffix prefill + one
+    greedy decode serve the whole batch; attention cascades over
+    [prefix pages ++ suffix pages] with an exact LSE merge, walking the
+    tables via scalar-prefetch DMA on the Pallas path and a gather on
+    the XLA path.  Suffix blocks free when the batch completes.
+  * **dense** (stateful / cross-attention stacks, or ``paged=False``) —
+    requests group by prefix and each group is served through the
+    dense split cascade (DESIGN.md §5) or, for recurrent state, the
+    ``PrefixState.broadcast`` fallback in equal-length sub-batches.
+    Same ``serve`` facade: callers never branch on architecture.
+
+``generate_with_prefix`` / ``generate_multi_prefix`` remain as thin
+wrappers that build ``Request`` lists; ``generate`` is the vanilla
+no-cache baseline.  ``prefill_prefix`` computes the representative
+prefix at batch 1 and (paged backend) immediately re-homes it into
+arena blocks — the returned ``PrefixState`` is a page table, not a
+buffer.
+
+Timing dicts carry aggregate ``prefill_s``/``decode_s`` plus per-member
+``prefill_share``/``decode_share`` lists — sub-batched serving (dense
+fallback) costs each member its OWN sub-batch's share.
+
+Shapes are bucketed (``serving/bucketing.py``): suffix lengths to
+multiples of ``bucket``, batches and page-table widths to powers of
+two — lengths are data, not shapes (DESIGN.md §3).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import List, Optional, Sequence, Tuple
@@ -50,45 +52,54 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import ClusterCacheManager, PrefixState
+from repro.core.paged import NULL_BLOCK, KVBlockPool
 from repro.data.tokenizer import EOS, PAD, Tokenizer
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serving.bucketing import (blocks_for, bucket_capacity, bucket_len,
+                                     bucket_pow2)
 
 
-def _bucket_len(n: int, bucket: int) -> int:
-    """Round a sequence length up to the next multiple of ``bucket``."""
-    return max(bucket, ((n + bucket - 1) // bucket) * bucket)
-
-
-def _bucket_batch(n: int) -> int:
-    """Round a batch (or pool) size up to the next power of two."""
-    b = 1
-    while b < n:
-        b *= 2
-    return b
+@dataclasses.dataclass
+class Request:
+    """One serving request: a suffix to prefill+decode behind an
+    optional shared-prefix state (None = no cached prefix; the row
+    attends nothing but its own tokens)."""
+    suffix_tokens: List[int]
+    prefix: Optional[PrefixState] = None
 
 
 class ServingEngine:
     """Executes serving traffic for one model (see module docstring).
 
     Owns the jitted prefill/decode builders (lru-cached per shape
-    bucket), the ``ClusterCacheManager`` that accounts ``CacheStats``,
-    and the split-vs-broadcast policy decision.  Tensor conventions
-    follow ``kernels/``: embeddings ``[B, T, D]``, positions/valid
-    ``[B, T]``, KV caches seq-major ``{"k","v": [B, C, Hkv, Dh],
-    "pos": [B, C]}`` with pooled prefixes adding a leading NP dim.
+    bucket), the ``KVBlockPool`` block arena (paged backend), the
+    ``ClusterCacheManager`` that accounts ``CacheStats``, and the
+    backend policy decision.  Tensor conventions follow ``kernels/``:
+    embeddings ``[B, T, D]``, positions/valid ``[B, T]``, KV caches
+    seq-major ``{"k","v": [B, C, Hkv, Dh], "pos": [B, C]}``; the block
+    arena is the same layout with ``B = num_blocks`` and
+    ``C = block_size``.
 
     ``max_cache_len``: hard capacity ceiling per sequence.
     ``max_new_tokens``: greedy-decode budget (EOS stops earlier).
-    ``bucket``: suffix-length bucket (lengths are data, shapes are
-    buckets — DESIGN.md §3).  ``split_prefix``: force-disable the split
-    cascade with ``False`` (A/B comparisons); default auto-enables it
-    on attention-only stacks.
+    ``bucket``: suffix-length bucket.  ``split_prefix``: force-disable
+    the dense split cascade with ``False`` (A/B comparisons).
+    ``paged``: force-disable the paged backend with ``False`` (the
+    dense cascade then serves; A/B + exactness tests); default
+    auto-enables it on attention-only stacks.  ``block_size``: arena
+    block granularity (must divide the capacity buckets, i.e. be a
+    power of two <= 128 in practice).  ``arena_blocks``: usable blocks
+    in the arena (defaults to a generous multiple of
+    ``max_cache_len``); together with ``block_size`` this IS the paged
+    HBM byte budget.
     """
 
     def __init__(self, params, cfg: ModelConfig, tokenizer: Tokenizer, *,
                  max_cache_len: int = 768, max_new_tokens: int = 32,
-                 bucket: int = 32, split_prefix: Optional[bool] = None):
+                 bucket: int = 32, split_prefix: Optional[bool] = None,
+                 paged: Optional[bool] = None, block_size: int = 64,
+                 arena_blocks: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer
@@ -98,9 +109,6 @@ class ServingEngine:
         self.cache_mgr = ClusterCacheManager()
         self._prefill_jit = functools.lru_cache(maxsize=64)(self._make_prefill)
         self._decode_jit = functools.lru_cache(maxsize=16)(self._make_decode)
-        # last stacked multi-prefix pool, keyed on the identity of the
-        # stacked states (see _serve_multi_pooled)
-        self._pool_stack: Optional[tuple] = None
         # Recurrent mixers (Mamba / RG-LRU) carry state through every
         # consumed token — right-padding would corrupt it (attention masks
         # padded slots; scans cannot).  Such archs get length-exact
@@ -108,35 +116,51 @@ class ServingEngine:
         from repro.models.config import MAMBA, RGLRU
         self._stateful = any(s.mixer in (MAMBA, RGLRU)
                              for s in cfg.layer_specs())
-        # Split prefix/suffix cascade serving (DESIGN.md §5) covers
-        # attention-only stacks: recurrent state is not a set of
-        # positional slots and cross-attention KV is per-state, so both
-        # fall back to PrefixState.broadcast.  ``split_prefix=False``
-        # forces the broadcast path (benchmark / A-B comparisons).
+        # Prefix-cascade serving covers attention-only stacks: recurrent
+        # state is not a set of positional slots and cross-attention KV
+        # is per-state, so both fall back to PrefixState.broadcast.
         has_cross = any(s.cross_attn for s in cfg.layer_specs())
         can_split = not self._stateful and not has_cross
         self.use_split_prefix = (can_split if split_prefix is None
                                  else bool(split_prefix) and can_split)
+        # Paged backend: the cascade generalized to page tables over one
+        # block arena (DESIGN.md §8).  Subsumes the dense split path for
+        # serving; the dense path remains for A/B and as the oracle the
+        # paged exactness tests compare against.
+        self.use_paged = (self.use_split_prefix if paged is None
+                          else bool(paged) and self.use_split_prefix)
+        self.block_size = block_size
+        if self.use_paged:
+            assert max_cache_len % block_size == 0, (
+                "block_size must divide max_cache_len so capacity "
+                "buckets are whole blocks")
+            if arena_blocks is None:
+                arena_blocks = 8 * max_cache_len // block_size + 32
+            self.block_pool: Optional[KVBlockPool] = KVBlockPool(
+                cfg, arena_blocks + 1, block_size)    # +1: NULL block
+        else:
+            self.block_pool = None
 
     # ------------------------------------------------------------------
     # jitted building blocks (cached per shape bucket)
     # ------------------------------------------------------------------
     def _make_prefill(self, batch: int, seqlen: int):
-        """One builder serves all paths: broadcast callers pass
-        ``prefix=None`` (empty pytree — same trace as before); split
-        callers pass the live batch-1 prefix buffers as an ordinary
-        non-donated argument, read in place — no replication, no copy;
-        pooled callers pass the stacked [NP, ...] pool plus a per-row
-        ``prefix_idx`` [B] and per-row ``slot_offset`` [B]."""
+        """One builder serves all backends: broadcast callers pass
+        ``prefix=None`` and no page tables; dense split callers pass the
+        live batch-1 prefix buffers as an ordinary non-donated argument,
+        read in place; paged callers pass the (donated) block arena as
+        ``cache`` plus per-row prefix/suffix page tables and per-row
+        ``slot_offset``."""
         cfg = self.cfg
 
         def prefill(params, embeds, positions, valid, cache, prefix,
-                    slot_offset, prefix_idx):
+                    slot_offset, prefix_pages, suffix_pages):
             hidden, cache, _ = M.forward(params, cfg, embeds, positions,
                                          cache=cache, valid=valid,
                                          prefix=prefix,
                                          slot_offset=slot_offset,
-                                         prefix_idx=prefix_idx)
+                                         prefix_pages=prefix_pages,
+                                         suffix_pages=suffix_pages)
             lengths = jnp.sum(valid.astype(jnp.int32), axis=1)      # [B]
             last = jnp.take_along_axis(
                 hidden, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
@@ -146,21 +170,25 @@ class ServingEngine:
         return jax.jit(prefill, donate_argnums=(4,))
 
     def _make_decode(self, batch: int):
-        """In split mode the decode scan closes over the prefix (and the
-        pooled ``prefix_idx``) as invariants — never carried, donated,
-        or copied per step."""
+        """The decode scan closes over the prefix source / page tables
+        as invariants — never carried, donated, or copied per step.
+        The carry is only what decode WRITES: the dense member cache,
+        or (paged) the compact suffix sub-arena extracted for this
+        batch — the main arena rides in ``prefix`` read-only, so the
+        scan never copies it."""
         cfg = self.cfg
         steps = self.max_new_tokens - 1
 
         def decode(params, first_token, lengths, cache, prefix, slot_offset,
-                   prefix_idx):
+                   prefix_pages, suffix_pages):
             def body(carry, _):
                 cache, tok, pos, done = carry
                 emb = M.embed_tokens(params, tok[:, None])
                 hidden, cache, _ = M.forward(params, cfg, emb, pos[:, None],
                                              cache=cache, prefix=prefix,
                                              slot_offset=slot_offset,
-                                             prefix_idx=prefix_idx)
+                                             prefix_pages=prefix_pages,
+                                             suffix_pages=suffix_pages)
                 logits = M.unembed(params, cfg, hidden)[:, 0]
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 done = done | (tok == EOS)
@@ -171,7 +199,8 @@ class ServingEngine:
                     jnp.zeros((batch,), bool))
             (cache, _, _, _), toks = jax.lax.scan(body, init, None,
                                                   length=steps)
-            return jnp.concatenate([first_token[:, None], toks.T], axis=1)
+            return jnp.concatenate([first_token[:, None], toks.T],
+                                   axis=1), cache
 
         return jax.jit(decode, donate_argnums=(3,))
 
@@ -190,7 +219,7 @@ class ServingEngine:
         own cluster's prefix length)."""
         n_soft = 0 if soft is None else soft.shape[0]
         lens = [len(t) + n_soft for t in token_lists]
-        t_pad = pad_to or _bucket_len(max(lens), self.bucket)
+        t_pad = pad_to or bucket_len(max(lens), self.bucket)
         b = len(token_lists)
         ids = np.full((b, t_pad), PAD, np.int32)
         valid = np.zeros((b, t_pad), bool)
@@ -208,45 +237,40 @@ class ServingEngine:
         return embeds, positions, jnp.asarray(valid), np.asarray(lens)
 
     # ------------------------------------------------------------------
-    # SubGCache path
+    # capacity buckets
     # ------------------------------------------------------------------
-    def _bucket_capacity(self, need: int, floor: int, kind: str) -> int:
-        """Power-of-two capacity bucket >= ``need``, starting at
-        ``floor``, bounded by ``max_cache_len``."""
-        cap = min(floor, self.max_cache_len)
-        while cap < need:
-            cap *= 2
-        if cap > self.max_cache_len:
-            raise ValueError(
-                f"{kind} needs cache capacity {cap} > max_cache_len "
-                f"{self.max_cache_len}; raise max_cache_len")
-        return cap
-
     def _capacity_for(self, prefix_len: int, suffix_headroom: int = 64) -> int:
         """Cache capacity bucket covering prefix + suffix + decode."""
-        return self._bucket_capacity(
+        return bucket_capacity(
             prefix_len + suffix_headroom + self.max_new_tokens + 8, 512,
-            "prompt")
+            self.max_cache_len, "prompt")
 
     def _prefix_capacity_for(self, prefix_len: int) -> int:
         """Capacity bucket for a split-mode prefix state: prefix tokens
         only — suffix and decode live in the per-member suffix cache."""
-        return self._bucket_capacity(prefix_len, 128, "prefix")
+        return bucket_capacity(prefix_len, 128, self.max_cache_len, "prefix")
 
     def _suffix_capacity_for(self, suffix_len: int) -> int:
         """Capacity bucket for the per-member suffix+decode cache."""
-        return self._bucket_capacity(
-            suffix_len + self.max_new_tokens + 8, 64, "suffix")
+        return bucket_capacity(
+            suffix_len + self.max_new_tokens + 8, 64, self.max_cache_len,
+            "suffix")
 
+    # ------------------------------------------------------------------
+    # prefix prefill
+    # ------------------------------------------------------------------
     def prefill_prefix(self, prefix_tokens: List[int],
                        soft: Optional[np.ndarray] = None,
                        enc: Optional[np.ndarray] = None,
                        _record: bool = True) -> Tuple[PrefixState, float]:
         """Representative-subgraph prefix prefill at batch=1.
 
-        Split mode sizes the state for the prefix alone (suffix + decode
-        slots live in the per-member suffix cache); broadcast mode keeps
-        headroom for the suffix prefill + decode that run in this cache.
+        Paged backend: the dense batch-1 result is immediately re-homed
+        into ``ceil(P / block_size)`` arena blocks and the dense buffer
+        dropped — the returned state is a page table (refcount 1,
+        caller-owned; ``release()`` or pool eviction frees it).  Dense
+        backends size the state for the cascade (prefix only) or for
+        broadcast mode (prefix + suffix + decode headroom).
         """
         t0 = time.perf_counter()
         embeds, positions, valid, lens = self._embed_padded(
@@ -258,13 +282,20 @@ class ServingEngine:
                     else self._capacity_for(int(lens[0])))
         if _record:
             # prefix cost accrues when COMPUTED: a state reused across
-            # several generate_with_prefix calls still cost one prefill
+            # several serve calls still cost one prefill
             self.cache_mgr.stats.record_prefix(int(lens[0]), split=use_split)
         cache = M.init_cache(self.cfg, 1, capacity,
                              enc_len=0 if enc is None else enc.shape[1])
         prefill = self._prefill_jit(1, embeds.shape[1])
         cache, _, _ = prefill(self.params, embeds, positions, valid, cache,
-                              None, 0, None)
+                              None, 0, None, None)
+        if self.use_paged and enc is None:
+            page = self.block_pool.write_prefix(cache, int(lens[0]))
+            jax.block_until_ready(self.block_pool.arena)
+            dt = time.perf_counter() - t0
+            return PrefixState(cache=None, prefix_len=int(lens[0]),
+                               capacity=capacity, page=page,
+                               block_pool=self.block_pool), dt
         jax.block_until_ready(cache)
         dt = time.perf_counter() - t0
         state = PrefixState(cache=cache, prefix_len=int(lens[0]),
@@ -272,160 +303,210 @@ class ServingEngine:
                             enc_len=0 if enc is None else enc.shape[1])
         return state, dt
 
-    def generate_with_prefix(self, state: PrefixState,
-                             suffix_token_lists: Sequence[List[int]],
-                             _record: bool = True
-                             ) -> Tuple[List[List[int]], dict]:
-        """Batched suffix prefill over the shared prefix + greedy decode.
+    # ------------------------------------------------------------------
+    # the serving API
+    # ------------------------------------------------------------------
+    def serve(self, requests: Sequence[Request], _record: bool = True
+              ) -> Tuple[List[List[int]], dict]:
+        """Serve one batch of requests; THE serving path (DESIGN.md §8).
 
-        Attention-only stacks take the split prefix/suffix cascade: a
-        suffix+decode cache of B × suffix_capacity slots is allocated and
-        the live batch-1 prefix buffers are passed through prefill and
-        the decode scan unreplicated (``PrefixState.broadcast`` is never
-        called).  Stateful (recurrent) archs fall back to broadcast and
-        are served in equal-length sub-batches so no pad token ever
-        enters the scan state (exactness)."""
-        outs, timing = self._serve_with_prefix(state, suffix_token_lists)
+        Rows may reference any mix of prefix states (or none, paged
+        backend).  Attention-only stacks run the paged backend; stateful
+        and cross-attention stacks transparently take the dense fallback
+        — callers never branch on architecture.
+        """
+        n = len(requests)
+        assert n > 0, "serve() needs at least one request"
+        if self.use_paged and not any(
+                r.prefix is not None and r.prefix.enc_len for r in requests):
+            outs, timing = self._serve_paged(requests)
+        else:
+            outs, timing = self._serve_dense(requests)
         if _record:
             # members count only once actually served: a capacity error
             # above must not inflate prefill_savings
             stats = self.cache_mgr.stats
-            stats.record_served(len(suffix_token_lists))
-            for tkl in suffix_token_lists:
-                stats.record_member(state.prefix_len + len(tkl), len(tkl))
+            stats.record_served(n)
+            for r in requests:
+                plen = r.prefix.prefix_len if r.prefix is not None else 0
+                stats.record_member(plen + len(r.suffix_tokens),
+                                    len(r.suffix_tokens))
             stats.finalize()
         return outs, timing
+
+    def generate_with_prefix(self, state: PrefixState,
+                             suffix_token_lists: Sequence[List[int]],
+                             _record: bool = True
+                             ) -> Tuple[List[List[int]], dict]:
+        """All members of ONE cluster behind one shared prefix state
+        (thin wrapper over ``serve``)."""
+        return self.serve([Request(suffix_tokens=list(t), prefix=state)
+                           for t in suffix_token_lists], _record=_record)
 
     def generate_multi_prefix(self, states: Sequence[PrefixState],
                               prefix_ids: Sequence[int],
                               suffix_token_lists: Sequence[List[int]],
                               _record: bool = True
                               ) -> Tuple[List[List[int]], dict]:
-        """Serve ONE batch whose rows belong to SEVERAL clusters.
-
-        ``states``: the NP distinct cluster ``PrefixState``s this batch
-        touches; ``prefix_ids[i]`` indexes the state row ``i`` is served
-        against; ``suffix_token_lists[i]`` is row ``i``'s suffix.
-
-        The states are padded to their max capacity and stacked into an
-        [NP, ...] pool pytree; each row carries its prefix index (fed to
-        the kernels via scalar prefetch) and its own slot offset (its
-        cluster's prefix length), so one suffix prefill + one decode
-        scan serve every cluster at once (DESIGN.md §7).  Exact: each
-        row's math is identical to single-prefix cascade serving.
-
-        Stateful (Mamba / RG-LRU) and cross-attention stacks cannot
-        split a positional prefix, so they fall back to per-cluster
-        ``generate_with_prefix`` calls with stitched per-member timing.
-
-        Returns ``(outputs, timing)`` like ``generate_with_prefix``,
-        with ``timing["num_prefixes"] = NP``.
-        """
+        """One batch mixing members of SEVERAL clusters:
+        ``prefix_ids[i]`` indexes the state row ``i`` is served against
+        (thin wrapper over ``serve``)."""
         n = len(suffix_token_lists)
         assert len(prefix_ids) == n, (len(prefix_ids), n)
         assert all(0 <= p < len(states) for p in prefix_ids)
-        if self._stateful or any(st.enc_len for st in states) \
-                or not self.use_split_prefix:
-            outs, timing = self._serve_multi_grouped(states, prefix_ids,
-                                                     suffix_token_lists)
-        elif len(states) == 1:
-            # single-cluster micro-batch (common under temporally
-            # clustered traffic): the batch-1 prefix buffers are served
-            # in place — no stacked device copy, and the single-prefix
-            # compiled executables are reused
-            outs, timing = self._serve_with_prefix(states[0],
-                                                   suffix_token_lists)
-            timing["num_prefixes"] = 1
-        else:
-            outs, timing = self._serve_multi_pooled(states, prefix_ids,
-                                                    suffix_token_lists)
-        if _record:
-            stats = self.cache_mgr.stats
-            stats.record_served(n)
-            for pid, tkl in zip(prefix_ids, suffix_token_lists):
-                stats.record_member(states[pid].prefix_len + len(tkl),
-                                    len(tkl))
-            stats.finalize()
-        return outs, timing
+        return self.serve(
+            [Request(suffix_tokens=list(t), prefix=states[p])
+             for p, t in zip(prefix_ids, suffix_token_lists)],
+            _record=_record)
 
-    def _serve_multi_pooled(self, states: Sequence[PrefixState],
-                            prefix_ids: Sequence[int],
-                            suffix_token_lists: Sequence[List[int]]
-                            ) -> Tuple[List[List[int]], dict]:
-        """Split-cascade multi-prefix path (attention-only stacks)."""
-        n = len(suffix_token_lists)
-        t0 = time.perf_counter()
-        # NP is a SHAPE (the pool's stacked batch dim), so bucket it to
-        # powers of two like every other serving shape (DESIGN.md §3):
-        # pad with repeats of state 0 — rows no prefix_idx points at,
-        # so they only bound the number of compiled executables.
-        np_true = len(states)
-        states = list(states)
-        states += [states[0]] * (_bucket_batch(np_true) - np_true)
-        common = max(st.capacity for st in states)
-        # the stacked pool is a device copy of every prefix KV, so
-        # rebuilding it per micro-batch would cost O(sum prefix bytes)
-        # even on 100% pool hits — memoize the last stack, keyed on the
-        # states' process-unique uids (a re-prefilled or different state
-        # set is a new PrefixState -> new uid -> rebuild).  The memo is
-        # one stack deep: HBM held beyond any PrefixPool budget is
-        # bounded by a single NP-bucketed stacked copy, and it holds no
-        # references to the states themselves, so pool evictions free
-        # their buffers immediately.
-        stack_key = (tuple(st.uid for st in states), common)
-        if self._pool_stack is not None and self._pool_stack[0] == stack_key:
-            pool = self._pool_stack[1]
-        else:
-            pool = M.stack_prefix_caches(
-                [M.pad_prefix_cache(st.cache, common) for st in states])
-            self._pool_stack = (stack_key, pool)
-        b = _bucket_batch(n)
-        pads = [list(t) for t in suffix_token_lists] + \
-               [[EOS]] * (b - n)                        # batch padding rows
-        pid = list(prefix_ids) + [0] * (b - n)
-        offs = np.asarray([states[p].prefix_len for p in pid], np.int32)
-        embeds, positions, valid, lens = self._embed_padded(pads, None, offs)
-        cache = M.init_suffix_cache(
-            self.cfg, b, self._suffix_capacity_for(embeds.shape[1]))
-        pidx = jnp.asarray(pid, jnp.int32)
-        offj = jnp.asarray(offs)
-        prefill = self._prefill_jit(b, embeds.shape[1])
-        cache, logits, _ = prefill(self.params, embeds, positions, valid,
-                                   cache, pool, offj, pidx)
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        jax.block_until_ready(first)
-        t_prefill = time.perf_counter() - t0
+    # ------------------------------------------------------------------
+    # paged backend
+    # ------------------------------------------------------------------
+    def _serve_paged(self, requests: Sequence[Request]
+                     ) -> Tuple[List[List[int]], dict]:
+        """Page-table serving over the block arena (see module
+        docstring).  Builds [B, NBP] prefix and [B, NBS] suffix tables,
+        pins prefix blocks for the duration, runs one prefill + decode,
+        frees the suffix blocks."""
+        pool = self.block_pool
+        n = len(requests)
+        b = bucket_pow2(n)
+        suffixes = [list(r.suffix_tokens) for r in requests] \
+            + [[EOS]] * (b - n)                      # batch padding rows
+        states = [r.prefix for r in requests] + [None] * (b - n)
+        for st in states:
+            if st is not None:
+                assert st.is_paged and st.block_pool is pool, \
+                    "paged serve needs page-table states from this engine"
 
         t0 = time.perf_counter()
-        lengths = jnp.asarray(offs + lens, jnp.int32)
-        decode = self._decode_jit(b)
-        out = decode(self.params, first, lengths, cache, pool, offj, pidx)
-        out = np.asarray(jax.block_until_ready(out))
-        t_decode = time.perf_counter() - t0
+        offs = np.asarray([st.prefix_len if st else 0 for st in states],
+                          np.int32)
+        # prefix page tables: members of one cluster map the SAME blocks
+        # (rows share physically); width is a power-of-two bucket so a
+        # handful of executables cover any prefix length.  Block refs
+        # are pinned per distinct state for the duration of the batch —
+        # a pool eviction mid-flight cannot recycle them under us.  The
+        # pins happen inside the try: any failure below (suffix-capacity
+        # overflow, arena exhaustion, a compile error) must drop them,
+        # or the blocks leak phantom references forever.
+        nbp = bucket_pow2(max(1, max(
+            (len(st.page.blocks) for st in states if st is not None),
+            default=1)))
+        pinned: dict = {}
+        flat: Optional[List[int]] = None
+        try:
+            for st in states:
+                if st is not None and st.uid not in pinned:
+                    pool.incref(st.page.blocks)
+                    pinned[st.uid] = st.page.blocks
+            if len(pinned) == 1 and all(st is not None for st in states[:n]):
+                # single-cluster micro-batch (common under temporally
+                # clustered traffic): a [1, NBP] SHARED table — every row
+                # walks the same blocks, streamed once per kv-head group
+                # like the dense batch-1 cascade, not once per member.
+                # Batch-padding rows ride along (outputs discarded).
+                one = next(st for st in states if st is not None)
+                prefix_rows = one.page.row(nbp)[None]
+                offs = np.full(b, one.prefix_len, np.int32)
+            else:
+                prefix_rows = np.full((b, nbp), NULL_BLOCK, np.int32)
+                for i, st in enumerate(states):
+                    if st is not None:
+                        prefix_rows[i] = st.page.row(nbp)
+            embeds, positions, valid, lens = self._embed_padded(
+                suffixes, None, offs)
+            suffix_cap = self._suffix_capacity_for(embeds.shape[1])
+            nbs = blocks_for(suffix_cap, self.block_size)
+            flat = pool.alloc_suffix(b * nbs)        # private, pos reset
+            suffix_rows = np.asarray(flat, np.int32).reshape(b, nbs)
+            # observe the HBM high-water mark: resident prefixes + every
+            # in-flight suffix block (gauge re-read after frees below)
+            self.cache_mgr.stats.record_blocks(pool)
+            prow = jnp.asarray(prefix_rows)
+            srow = jnp.asarray(suffix_rows)
+            offj = jnp.asarray(offs)
+            prefill = self._prefill_jit(b, embeds.shape[1])
+            arena, logits, _ = self._with_arena(
+                lambda a: prefill(self.params, embeds, positions, valid,
+                                  a, None, offj, prow, srow))
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            jax.block_until_ready(first)
+            t_prefill = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            for i in range(b):
+                pool.note_tokens(suffix_rows[i],
+                                 int(lens[i]) + self.max_new_tokens)
+            lengths = jnp.asarray(offs + lens, jnp.int32)
+            decode = self._decode_jit(b)
+            # Decode writes only this batch's suffix blocks, so the
+            # scan carries a compact extraction of them (remapped
+            # table: row i owns sub-rows [i*nbs, (i+1)*nbs)); the main
+            # arena rides along READ-ONLY as the prefix source — a
+            # full-arena carry would be copied once per token on
+            # backends where donation cannot alias.  The extraction is
+            # discarded with the suffix blocks; nothing scatters back.
+            sub = pool.extract(flat)
+            sub_pages = jnp.arange(b * nbs, dtype=jnp.int32).reshape(b, nbs)
+            out, _ = decode(self.params, first, lengths, sub, pool.arena,
+                            offj, prow, sub_pages)
+            out = np.asarray(jax.block_until_ready(out))
+            t_decode = time.perf_counter() - t0
+        finally:
+            if flat is not None:
+                pool.decref(flat)                    # suffix blocks free
+            for blocks in pinned.values():
+                pool.decref(blocks)
+        self.cache_mgr.stats.record_blocks(pool)
         toks = [self._cut(out[i]) for i in range(n)]
         return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
-                      "batch": b, "split_prefix": True,
-                      "num_prefixes": np_true,
+                      "batch": b, "split_prefix": True, "paged": True,
+                      "num_prefixes": len(pinned),
                       "prefill_share": [t_prefill / n] * n,
                       "decode_share": [t_decode / n] * n}
 
-    def _serve_multi_grouped(self, states: Sequence[PrefixState],
-                             prefix_ids: Sequence[int],
-                             suffix_token_lists: Sequence[List[int]]
-                             ) -> Tuple[List[List[int]], dict]:
-        """Fallback: serve each cluster's members as their own
-        ``generate_with_prefix`` sub-batch (stateful / cross-attention
-        stacks, where the prefix is not a set of positional KV slots).
-        Per-member shares come from each member's own sub-batch."""
-        m = len(suffix_token_lists)
-        outs = [None] * m
+    def _with_arena(self, fn):
+        """Run a jitted call that consumes the (donated) block arena and
+        returns the updated arena as its FIRST output; re-home it on
+        ``block_pool`` even when the call raises.  Donation is
+        best-effort (on CPU the buffer survives un-donated), so
+        restoring the input handle on failure keeps the engine
+        servable — a None arena would brick every later paged call."""
+        pool = self.block_pool
+        arena_in, pool.arena = pool.arena, None
+        try:
+            out = fn(arena_in)
+        except BaseException:
+            pool.arena = arena_in
+            raise
+        pool.arena = out[0]
+        return out
+
+    # ------------------------------------------------------------------
+    # dense fallback backend
+    # ------------------------------------------------------------------
+    def _serve_dense(self, requests: Sequence[Request]
+                     ) -> Tuple[List[List[int]], dict]:
+        """Group rows by prefix state and serve each group through the
+        dense cascade / broadcast fallback (stateful and cross-attention
+        stacks, or ``paged=False`` engines).  Per-member shares come
+        from each member's own sub-batch."""
+        m = len(requests)
+        groups: dict = {}
+        for i, r in enumerate(requests):
+            assert r.prefix is not None, \
+                "the dense backend serves prefix-backed requests " \
+                "(use generate() for prefixless baselines)"
+            groups.setdefault(r.prefix.uid, (r.prefix, []))[1].append(i)
+        outs: List = [None] * m
         agg = {"prefill_s": 0.0, "decode_s": 0.0, "batch": 0,
-               "split_prefix": False, "num_prefixes": len(states),
+               "split_prefix": False, "paged": False,
+               "num_prefixes": len(groups),
                "prefill_share": [0.0] * m, "decode_share": [0.0] * m}
-        for p in sorted(set(prefix_ids)):
-            idxs = [i for i, q in enumerate(prefix_ids) if q == p]
+        for state, idxs in groups.values():
             sub, t = self._serve_with_prefix(
-                states[p], [suffix_token_lists[i] for i in idxs])
+                state, [requests[i].suffix_tokens for i in idxs])
             for j, i in enumerate(idxs):
                 outs[i] = sub[j]
                 agg["prefill_share"][i] = t["prefill_share"][j]
@@ -433,6 +514,7 @@ class ServingEngine:
             agg["prefill_s"] += t["prefill_s"]
             agg["decode_s"] += t["decode_s"]
             agg["batch"] = max(agg["batch"], t["batch"])
+            agg["split_prefix"] = agg["split_prefix"] or t["split_prefix"]
         return outs, agg
 
     def _serve_with_prefix(self, state: PrefixState,
@@ -464,7 +546,7 @@ class ServingEngine:
                     agg["batch"] = max(agg["batch"], t["batch"])
                 return outs, agg
         n = len(suffix_token_lists)
-        b = _bucket_batch(n)
+        b = bucket_pow2(n)
         pads = [list(t) for t in suffix_token_lists] + \
                [[EOS]] * (b - n)                        # batch padding rows
         use_split = self.use_split_prefix and state.enc_len == 0
@@ -489,7 +571,7 @@ class ServingEngine:
             prefix, offset = None, 0
         prefill = self._prefill_jit(b, embeds.shape[1])
         cache, logits, _ = prefill(self.params, embeds, positions, valid,
-                                   cache, prefix, offset, None)
+                                   cache, prefix, offset, None, None)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(first)
         t_prefill = time.perf_counter() - t0
@@ -497,7 +579,8 @@ class ServingEngine:
         t0 = time.perf_counter()
         lengths = jnp.asarray(state.prefix_len + lens, jnp.int32)
         decode = self._decode_jit(b)
-        out = decode(self.params, first, lengths, cache, prefix, offset, None)
+        out, _ = decode(self.params, first, lengths, cache, prefix, offset,
+                        None, None)
         out = np.asarray(jax.block_until_ready(out))
         t_decode = time.perf_counter() - t0
         toks = [self._cut(out[i]) for i in range(n)]
@@ -518,18 +601,20 @@ class ServingEngine:
             [prompt_tokens], soft, 0,
             pad_to=None if not self._stateful else
             len(prompt_tokens) + (0 if soft is None else soft.shape[0]))
-        cache = M.init_cache(self.cfg, 1, self._capacity_for(int(lens[0]), suffix_headroom=0))
+        cache = M.init_cache(self.cfg, 1,
+                             self._capacity_for(int(lens[0]),
+                                                suffix_headroom=0))
         prefill = self._prefill_jit(1, embeds.shape[1])
         cache, logits, _ = prefill(self.params, embeds, positions, valid,
-                                   cache, None, 0, None)
+                                   cache, None, 0, None, None)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(first)
         t_prefill = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         decode = self._decode_jit(1)
-        out = decode(self.params, first, jnp.asarray(lens, jnp.int32), cache,
-                     None, 0, None)
+        out, _ = decode(self.params, first, jnp.asarray(lens, jnp.int32),
+                        cache, None, 0, None, None)
         out = np.asarray(jax.block_until_ready(out))
         t_decode = time.perf_counter() - t0
         return self._cut(out[0]), {"prefill_s": t_prefill,
@@ -543,6 +628,9 @@ class ServingEngine:
             out.append(int(t))
         return out
 
+    # ------------------------------------------------------------------
+    # warmup (pre-compile shape buckets; excluded from timings)
+    # ------------------------------------------------------------------
     def warmup(self, suffix_len: int = 32, batches: Sequence[int] = (1,)):
         """Pre-compile the common shape buckets (excluded from timings).
         Warmup traffic is not real serving: keep it out of CacheStats."""
@@ -554,24 +642,47 @@ class ServingEngine:
                 st, _ = self.prefill_prefix([EOS] * suffix_len,
                                             _record=False)
                 self.generate_with_prefix(st, dummy, _record=False)
+                st.release()             # warmup must not hold arena blocks
 
-    def warmup_pooled(self, prefix_len: int, suffix_len: int = 32,
+    def warmup_pooled(self, prefix_len, suffix_len: int = 32,
                       batches: Sequence[int] = (1, 2, 4),
                       num_prefixes: Sequence[int] = (1, 2, 4)):
-        """Pre-compile the multi-prefix (batch, NP) bucket grid for
-        pooled online serving: micro-batch composition depends on
-        arrival dynamics, so an online trace can touch any combination
-        of member-batch and pool-size buckets at any moment — compile
+        """Pre-compile the multi-prefix (batch, page-width) bucket grid
+        for online serving: micro-batch composition depends on arrival
+        dynamics, so an online trace can touch any combination of
+        member-batch and prefix-count buckets at any moment — compile
         them up front so no trace lands in a timed region.
-        ``prefix_len`` should match the expected representative length
-        (it selects the prefix-capacity bucket).  Not recorded."""
-        states = []
-        for _ in range(max(num_prefixes)):
-            st, _ = self.prefill_prefix([EOS] * prefix_len, _record=False)
-            states.append(st)
-        for np_ in num_prefixes:
-            for b in batches:
-                dummy = [[EOS] * suffix_len for _ in range(b)]
-                pids = [i % np_ for i in range(b)]
-                self.generate_multi_prefix(states[:np_], pids, dummy,
-                                           _record=False)
+
+        ``prefix_len`` — an int, or a sequence of ints covering the
+        representative lengths the trace will serve.  On the paged
+        backend each DISTINCT page-table width bucket
+        (``bucket_pow2(ceil(P / block_size))``) is its own compiled
+        shape, so pass one length per width bucket the traffic spans
+        (a single max length only compiles the widest tables).  Not
+        recorded; paged states are released afterwards."""
+        plens = ([prefix_len] if isinstance(prefix_len, int)
+                 else list(prefix_len))
+        if self.use_paged:
+            # one representative per distinct page-width bucket
+            seen, keep = set(), []
+            for p in sorted(plens):
+                w = bucket_pow2(blocks_for(p, self.block_size))
+                if w not in seen:
+                    seen.add(w)
+                    keep.append(p)
+            plens = keep
+        for plen in plens:
+            states = []
+            for _ in range(max(num_prefixes)):
+                st, _ = self.prefill_prefix([EOS] * plen, _record=False)
+                states.append(st)
+            try:
+                for np_ in num_prefixes:
+                    for b in batches:
+                        dummy = [[EOS] * suffix_len for _ in range(b)]
+                        pids = [i % np_ for i in range(b)]
+                        self.generate_multi_prefix(states[:np_], pids,
+                                                   dummy, _record=False)
+            finally:
+                for st in states:
+                    st.release()

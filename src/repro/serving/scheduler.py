@@ -21,13 +21,16 @@ one, so this module replaces the one-shot cut with three online pieces
   drained micro-batch it assigns every query, materializes each
   cluster's ``PrefixState`` through the pool (hit = reuse, miss =
   prefill + admit, possibly re-prefill after an eviction), and serves
-  the whole mixed batch in ONE multi-prefix prefill/decode
-  (``engine.generate_multi_prefix``) — the decode batch mixes members
-  of different clusters instead of idling between clusters.
+  the whole mixed batch in ONE ``engine.serve(requests)`` call — the
+  decode batch mixes members of different clusters instead of idling
+  between clusters, each row walking its own cluster's prefix page
+  table over the shared block arena (DESIGN.md §8).  The engine picks
+  the backend (paged / dense fallback); this module never branches on
+  architecture.
 
-Exactness contract: the pooled multi-prefix path produces bit-identical
-outputs to serving each cluster separately through the single-prefix
-cascade (tests/test_scheduler.py); only scheduling changes, never math.
+Exactness contract: the multi-prefix path produces token-identical
+outputs to serving each cluster separately through the dense cascade
+(tests/test_scheduler.py); only scheduling changes, never math.
 """
 from __future__ import annotations
 
@@ -224,8 +227,8 @@ class OnlineScheduler:
 
     Composition root of the online path: ``assigner`` decides which
     cluster a query belongs to, ``pool`` owns the live ``PrefixState``s
-    under the byte budget, ``engine.generate_multi_prefix`` serves one
-    mixed batch against all the prefixes it touches at once.
+    under the byte budget, ``engine.serve`` runs one mixed batch
+    against all the prefixes it touches at once.
 
     ``prefix_tokens_fn(representative) -> List[int]`` builds the prefix
     token ids for a cluster representative (the pipeline passes its
@@ -242,6 +245,10 @@ class OnlineScheduler:
         self.prefix_tokens_fn = prefix_tokens_fn
         # pool accounting flows into the engine's serving stats window
         self.pool.stats = engine.cache_mgr.stats
+        # paged backend: block-allocator pressure evicts cold pooled
+        # prefixes (admission and HBM budget are one mechanism)
+        if getattr(engine, "block_pool", None) is not None:
+            self.pool.attach_block_pool(engine.block_pool)
 
     # ------------------------------------------------------------------
     def ensure_state(self, cluster_id: int, pin: bool = False):
@@ -272,12 +279,16 @@ class OnlineScheduler:
                     ) -> List[ServedQuery]:
         """Assign, materialize prefixes, and serve one micro-batch.
 
-        All queries are served in ONE multi-prefix batched prefill +
-        decode; members of different clusters share the decode step.
-        Prefix-prefill cost is attributed to the queries of the cluster
-        that caused it (uniform share), batched prefill/decode to every
-        member of its sub-batch share.
+        All queries are served in ONE batched prefill + decode
+        (``engine.serve``); members of different clusters share the
+        decode step, each walking its own cluster's prefix page table
+        (paged backend) — the engine, not this scheduler, decides the
+        backend, so stateful and cross-attention architectures take the
+        same code path here.  Prefix-prefill cost is attributed to the
+        queries of the cluster that caused it (uniform share), batched
+        prefill/decode to every member of its sub-batch share.
         """
+        from repro.serving.engine import Request
         n = len(suffix_token_lists)
         assert len(embeddings) == n and len(subgraphs) == n
         assigns = [self.assigner.assign(e, sg)
@@ -293,10 +304,10 @@ class OnlineScheduler:
                 st, hit, dt = self.ensure_state(cid, pin=True)
                 pinned.append(cid)
                 states[cid], hits[cid], prefill_costs[cid] = st, hit, dt
-            prefix_ids = [order.index(a.cluster_id) for a in assigns]
-            outs, t = self.engine.generate_multi_prefix(
-                [states[cid] for cid in order], prefix_ids,
-                suffix_token_lists)
+            outs, t = self.engine.serve(
+                [Request(suffix_tokens=list(s),
+                         prefix=states[a.cluster_id])
+                 for a, s in zip(assigns, suffix_token_lists)])
         finally:
             for cid in pinned:
                 self.pool.release(cid)

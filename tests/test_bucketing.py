@@ -1,0 +1,52 @@
+"""Unit tests for the consolidated shape-bucketing rules
+(serving/bucketing.py): the engine, the paged KV pool, and the
+benchmarks all import from this one module."""
+import pytest
+
+from repro.serving.bucketing import (blocks_for, bucket_capacity, bucket_len,
+                                     bucket_pow2)
+
+
+def test_bucket_len_rounds_to_multiples():
+    assert bucket_len(5, 32) == 32
+    assert bucket_len(32, 32) == 32
+    assert bucket_len(33, 32) == 64
+    assert bucket_len(0, 32) == 32          # never below one bucket
+
+
+def test_bucket_pow2():
+    assert bucket_pow2(1) == 1
+    assert bucket_pow2(2) == 2
+    assert bucket_pow2(3) == 4
+    assert bucket_pow2(5) == 8
+    assert bucket_pow2(8) == 8
+    assert bucket_pow2(9) == 16
+
+
+def test_bucket_capacity_doubles_from_floor():
+    assert bucket_capacity(100, 128, 1024, "t") == 128
+    assert bucket_capacity(129, 128, 1024, "t") == 256
+    assert bucket_capacity(300, 128, 1024, "t") == 512
+    # the floor itself is clamped to the limit
+    assert bucket_capacity(10, 128, 64, "t") == 64
+
+
+def test_bucket_capacity_raises_past_limit():
+    with pytest.raises(ValueError, match="raise max_cache_len"):
+        bucket_capacity(2000, 128, 1024, "prompt")
+
+
+def test_blocks_for_is_ceil_division():
+    assert blocks_for(1, 64) == 1
+    assert blocks_for(64, 64) == 1
+    assert blocks_for(65, 64) == 2
+    assert blocks_for(300, 64) == 5
+    assert blocks_for(0, 64) == 1           # empty allocations own a block
+
+
+def test_page_table_width_composes_blocks_and_pow2():
+    """Block-count bucketing for page tables reuses the shared helpers:
+    width = bucket_pow2(blocks_for(tokens)) — tokens stay data, the
+    table shape is a bucket."""
+    assert bucket_pow2(blocks_for(300, 64)) == 8     # 5 blocks -> width 8
+    assert bucket_pow2(blocks_for(64, 64)) == 1

@@ -1,0 +1,309 @@
+"""Paged KV-cache address space (DESIGN.md §8): block allocator
+semantics, arena scatter/gather round trips, paged Pallas kernels vs
+their jnp oracles (interpret mode — this file is the CI kernel job),
+and the serving acceptance criterion: paged prefill/decode is exact vs
+the dense cascade, f32 XLA bitwise at the kernel level and token-for-
+token end to end (bf16 Pallas included), with COW-shared prefix blocks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.paged import (NULL_BLOCK, BlockAllocator, KVBlockPool,
+                              OutOfBlocks, PageTable)
+from repro.data.tokenizer import Tokenizer
+from repro.kernels import ref as R
+from repro.kernels import shared_prefix as SP
+from repro.kernels.decode_gqa import paged_decode_gqa
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------------------
+# allocator
+# ----------------------------------------------------------------------
+def test_allocator_reserves_null_and_refcounts():
+    a = BlockAllocator(6)
+    assert a.num_usable == 5 and a.free_blocks == 5
+    got = a.alloc(3)
+    assert NULL_BLOCK not in got and len(set(got)) == 3
+    a.incref(got[:1])
+    assert a.refcount(got[0]) == 2
+    freed = a.decref(got)
+    assert freed == got[1:]              # got[0] still referenced
+    assert a.decref(got[:1]) == got[:1]
+    assert a.free_blocks == 5
+    with pytest.raises(OutOfBlocks):
+        a.alloc(6)
+    # a failed alloc must not leak partial takes
+    assert a.free_blocks == 5
+
+
+def test_allocator_reclaim_hook_retries_once():
+    a = BlockAllocator(4)
+    held = a.alloc(3)
+
+    def reclaim(n):
+        a.decref(held[:n])
+    a.reclaim_hook = reclaim
+    got = a.alloc(2)                     # triggers reclaim of 2 blocks
+    assert len(got) == 2
+
+
+def test_page_table_rows_pad_with_null():
+    pt = PageTable(blocks=[3, 1, 2], length=150)
+    row = pt.row(5)
+    np.testing.assert_array_equal(row, [3, 1, 2, NULL_BLOCK, NULL_BLOCK])
+    with pytest.raises(AssertionError):
+        pt.row(2)
+
+
+# ----------------------------------------------------------------------
+# arena scatter / gather round trip
+# ----------------------------------------------------------------------
+def _gqa_cfg(vocab=64, dtype="float32", impl="xla", window=0):
+    return ModelConfig(name="paged-test", family="dense", num_layers=3,
+                       d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+                       d_ff=160, vocab_size=vocab, dtype=dtype,
+                       attention_impl=impl, sliding_window=window)
+
+
+def test_write_prefix_round_trips_and_tracks_fragmentation():
+    cfg = _gqa_cfg()
+    pool = KVBlockPool(cfg, num_blocks=16, block_size=8)
+    P, C = 19, 32
+    dense = M.init_cache(cfg, 1, C)
+
+    def fill(path, x):
+        if path[-1].key == "pos":
+            seq = jnp.arange(x.shape[-1])
+            return jnp.broadcast_to(jnp.where(seq < P, seq, -1), x.shape)
+        return jnp.arange(x.size, dtype=x.dtype).reshape(x.shape) / x.size
+    dense = jax.tree_util.tree_map_with_path(fill, dense)
+
+    pt = pool.write_prefix(dense, P)
+    assert len(pt.blocks) == 3 and pt.length == P
+    assert pool.tokens_stored == P
+    assert pool.fragmentation == pytest.approx(1 - P / 24)
+
+    g = pool.gather(pt.row(4)[None])     # one NULL pad block
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(g["groups"]["0"][name][:, 0, :24]),
+            np.asarray(dense["groups"]["0"][name][:, 0, :24]))
+    gpos = np.asarray(g["groups"]["0"]["pos"])
+    np.testing.assert_array_equal(
+        gpos[:, 0, :24], np.asarray(dense["groups"]["0"]["pos"][:, 0, :24]))
+    assert np.all(gpos[:, 0, 24:] == -1)          # NULL block stays empty
+
+    pool.decref(pt.blocks)
+    assert pool.blocks_in_use == 0 and pool.tokens_stored == 0
+
+
+def test_alloc_suffix_resets_stale_positions():
+    cfg = _gqa_cfg()
+    pool = KVBlockPool(cfg, num_blocks=8, block_size=8)
+    dense = M.init_cache(cfg, 1, 16)
+    dense = jax.tree_util.tree_map_with_path(
+        lambda p, x: jnp.zeros_like(x) if p[-1].key != "pos"
+        else jnp.broadcast_to(jnp.arange(x.shape[-1]), x.shape), dense)
+    pt = pool.write_prefix(dense, 16)
+    pool.decref(pt.blocks)               # freed with stale pos inside
+    fresh = pool.alloc_suffix(2)
+    g = pool.gather(np.asarray([fresh]))
+    assert np.all(np.asarray(g["groups"]["0"]["pos"]) == -1)
+
+
+# ----------------------------------------------------------------------
+# paged kernels vs oracles (interpret mode; the CI kernel job)
+# ----------------------------------------------------------------------
+def _paged_fixtures(b=3, hq=8, hkv=2, tq=7, nb=9, bs=8, d=16):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, hq, tq, d))
+    k = jax.random.normal(ks[1], (nb, hkv, bs, d))
+    v = jax.random.normal(ks[2], (nb, hkv, bs, d))
+    pt = np.array([[1, 2, 3, 0], [4, 5, 0, 0], [6, 7, 8, 0]], np.int32)[:b]
+    kpos = np.full((nb, bs), -1, np.int32)
+    lens = [20, 13, 22][:b]
+    for r in range(b):
+        for j, blk in enumerate(pt[r]):
+            if blk == NULL_BLOCK:
+                continue
+            for s in range(bs):
+                t = j * bs + s
+                if t < lens[r]:
+                    kpos[blk, s] = t
+    qpos = jnp.broadcast_to(jnp.arange(30, 30 + tq)[None], (b, tq))
+    return q, k, v, qpos, jnp.asarray(kpos), jnp.asarray(pt)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (6, 1)])  # MHA/GQA/MQA
+@pytest.mark.parametrize("causal,window", [(False, 0), (True, 0), (True, 9)])
+def test_paged_attention_partial_matches_oracle(hq, hkv, causal, window):
+    q, k, v, qpos, kpos, pt = _paged_fixtures(hq=hq, hkv=hkv)
+    got = SP.paged_attention_partial(q, k, v, qpos, kpos, pt,
+                                     causal=causal, window=window,
+                                     interpret=True)
+    want = R.paged_attention_partial_ref(q, k, v, qpos, kpos, pt,
+                                         causal=causal, window=window)
+    for g, w, name in zip(got, want, ("out", "m", "l")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("window", [0, 9])
+def test_paged_decode_partial_matches_oracle(window):
+    q, k, v, _, kpos, pt = _paged_fixtures()
+    qd = q[:, :, 0]
+    qdp = jnp.asarray([25, 14, 23])
+    got = SP.paged_decode_gqa_partial(qd, k, v, qdp, kpos, pt,
+                                      window=window, interpret=True)
+    want = R.paged_decode_gqa_partial_ref(qd, k, v, qdp, kpos, pt,
+                                          window=window)
+    for g, w, name in zip(got, want, ("out", "m", "l")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+    full = paged_decode_gqa(qd, k, v, qdp, kpos, pt, window=window,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(want[0]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_oracle_is_bitwise_dense_partial_at_matched_width():
+    """Acceptance (f32 XLA): the paged oracle on a gathered page walk is
+    BITWISE the dense partial on the same dense sequence — paging is a
+    storage change, not a math change."""
+    q, k, v, qpos, kpos, pt = _paged_fixtures()
+    b, np_ = pt.shape
+    hkv, bs, d = k.shape[1], k.shape[2], k.shape[3]
+    kk = jnp.moveaxis(k[pt], 1, 2).reshape(b, hkv, np_ * bs, d)
+    vv = jnp.moveaxis(v[pt], 1, 2).reshape(b, hkv, np_ * bs, d)
+    kp = kpos[pt].reshape(b, np_ * bs)
+    got = R.paged_attention_partial_ref(q, k, v, qpos, kpos, pt,
+                                        causal=False)
+    want = R.attention_partial_ref(q, kk, vv, qpos, kp, causal=False)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_paged_pallas_bf16_close_to_oracle():
+    q, k, v, qpos, kpos, pt = _paged_fixtures()
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    got = SP.paged_attention_partial(qb, kb, vb, qpos, kpos, pt,
+                                     causal=True, interpret=True)
+    want = R.paged_attention_partial_ref(qb, kb, vb, qpos, kpos, pt,
+                                         causal=True)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=2e-2, rtol=2e-2)
+
+
+# ----------------------------------------------------------------------
+# engine acceptance: paged serving == dense cascade serving
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a graph of nodes and edges answers questions"])
+
+
+def _engines(tok, dtype="float32", impl="xla", window=0, **kw):
+    cfg = _gqa_cfg(tok.vocab_size, dtype, impl, window)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    paged = ServingEngine(params, cfg, tok, max_cache_len=512,
+                          max_new_tokens=5, **kw)
+    dense = ServingEngine(params, cfg, tok, max_cache_len=512,
+                          max_new_tokens=5, paged=False)
+    assert paged.use_paged and not dense.use_paged
+    return paged, dense
+
+
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+def test_serve_paged_exact_vs_dense_cascade(tok, dtype, impl):
+    """Acceptance: mixed-cluster paged serving reproduces the dense
+    cascade token for token (f32 XLA and bf16 Pallas), members sharing
+    prefix blocks physically."""
+    paged, dense = _engines(tok, dtype, impl)
+    prefix = tok.encode("the quick brown fox jumps over the lazy dog "
+                        + "a graph of nodes " * 40, bos=True)
+    st_p, _ = paged.prefill_prefix(prefix)
+    st_d, _ = dense.prefill_prefix(prefix)
+    assert st_p.is_paged and len(st_p.page.blocks) > 1
+    sfx = [tok.encode("answers questions"), tok.encode("and edges"),
+           tok.encode("lazy dog")]
+    out_p, t = paged.serve([Request(suffix_tokens=s, prefix=st_p)
+                            for s in sfx])
+    out_d, _ = dense.generate_with_prefix(st_d, sfx)
+    assert t["paged"]
+    assert out_p == out_d
+
+
+def test_serve_paged_windowed_matches_dense(tok):
+    """Sliding-window stack: paged suffix pages are never rung — the
+    window is masked positionally — and must still match the dense
+    ring-buffer cascade."""
+    paged, dense = _engines(tok, window=8)
+    prefix = tok.encode("a graph of nodes and edges", bos=True)
+    st_p, _ = paged.prefill_prefix(prefix)
+    st_d, _ = dense.prefill_prefix(prefix)
+    sfx = [tok.encode("answers questions a graph"), tok.encode("the quick")]
+    out_p, _ = paged.generate_with_prefix(st_p, sfx)
+    out_d, _ = dense.generate_with_prefix(st_d, sfx)
+    assert out_p == out_d
+
+
+def test_serve_paged_cow_shared_block_is_exact(tok):
+    """Acceptance: a cluster whose members walk a COW'd prefix block
+    serves identically — the copy is bit-identical, so swapping it into
+    the page table changes nothing observable."""
+    paged, dense = _engines(tok)
+    prefix = tok.encode("the quick brown fox jumps over the lazy dog "
+                        + "answers questions " * 40, bos=True)
+    st_p, _ = paged.prefill_prefix(prefix)
+    st_d, _ = dense.prefill_prefix(prefix)
+    assert len(st_p.page.blocks) >= 2
+    # another holder appears (e.g. an overlapping batch), then this
+    # state COWs its first block for a write that never happens
+    pool = paged.block_pool
+    pool.incref(st_p.page.blocks)
+    old = st_p.page.blocks[0]
+    new = pool.cow(old)
+    assert new != old
+    st_p.page.blocks[0] = new
+    sfx = [tok.encode("and edges"), tok.encode("a graph of nodes")]
+    out_p, _ = paged.generate_with_prefix(st_p, sfx)
+    out_d, _ = dense.generate_with_prefix(st_d, sfx)
+    assert out_p == out_d
+
+
+def test_serve_prefixless_rows_match_generate(tok):
+    """Rows with no prefix state (all-NULL prefix table) degrade to the
+    baseline: the masked prefix partial carries no probability mass."""
+    paged, _ = _engines(tok)
+    prompts = [tok.encode("the quick brown fox jumps", bos=True),
+               tok.encode("a graph of nodes and edges answers", bos=True)]
+    outs, t = paged.serve([Request(suffix_tokens=p) for p in prompts],
+                          _record=False)
+    assert t["num_prefixes"] == 0
+    for p, got in zip(prompts, outs):
+        want, _ = paged.generate(p)
+        assert got == want
+
+
+def test_serve_paged_frees_suffix_blocks_and_reports_stats(tok):
+    paged, _ = _engines(tok)
+    stats = paged.cache_mgr.reset_stats()
+    st, _ = paged.prefill_prefix(tok.encode("a graph of nodes", bos=True))
+    held = paged.block_pool.blocks_in_use
+    paged.generate_with_prefix(st, [tok.encode("answers questions")])
+    assert paged.block_pool.blocks_in_use == held    # suffix blocks freed
+    assert stats.blocks_peak > held                  # but counted at peak
+    assert stats.blocks_total == paged.block_pool.allocator.num_usable
+    assert 0.0 <= stats.block_occupancy <= 1.0
+    assert 0.0 <= stats.block_fragmentation < 1.0
+    st.release()
+    assert paged.block_pool.blocks_in_use == 0

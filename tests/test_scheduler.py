@@ -198,34 +198,50 @@ def tok():
 @pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
                                         ("bfloat16", "pallas")])
 def test_generate_multi_prefix_exact_vs_per_cluster(tok, dtype, impl):
-    """One mixed batch over TWO pooled prefixes (different lengths, so
-    different capacity buckets -> the pad+stack path) must reproduce
-    per-cluster cascade serving token for token — GQA, and the bf16
-    Pallas kernel path."""
+    """One mixed PAGED batch over TWO pooled prefixes (different
+    lengths, so different block counts — members share their cluster's
+    prefix blocks physically) must reproduce per-cluster DENSE cascade
+    serving token for token — GQA, and the bf16 Pallas kernel path
+    (the paged kernels walk the page tables via scalar prefetch)."""
     cfg = _gqa_cfg(tok.vocab_size, dtype, impl)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(params, cfg, tok, max_cache_len=512,
                         max_new_tokens=5)
-    assert eng.use_split_prefix
+    dense = ServingEngine(params, cfg, tok, max_cache_len=512,
+                          max_new_tokens=5, paged=False)
+    assert eng.use_paged and not dense.use_paged
     p_short = tok.encode("a graph of nodes", bos=True)
     p_long = tok.encode("the quick brown fox jumps over the lazy dog "
                         + "a graph of nodes and edges " * 24, bos=True)
     st0, _ = eng.prefill_prefix(p_short)
     st1, _ = eng.prefill_prefix(p_long)
-    assert st0.capacity != st1.capacity      # exercises pad_prefix_cache
+    assert st0.is_paged and st1.is_paged
+    assert len(st0.page.blocks) < len(st1.page.blocks)
+    # members of one cluster share the SAME physical blocks; only the
+    # two prefixes' own blocks are resident — no padded stacked copy
+    assert eng.block_pool.blocks_in_use == (len(st0.page.blocks)
+                                            + len(st1.page.blocks))
 
     sfx = [tok.encode("answers questions"), tok.encode("and edges"),
            tok.encode("lazy dog jumps"), tok.encode("the quick")]
     pids = [0, 1, 1, 0]
     multi, t = eng.generate_multi_prefix([st0, st1], pids, sfx)
-    assert t["split_prefix"] and t["num_prefixes"] == 2
+    assert t["split_prefix"] and t["paged"] and t["num_prefixes"] == 2
 
+    d0, _ = dense.prefill_prefix(p_short)
+    d1, _ = dense.prefill_prefix(p_long)
     ref = [None] * 4
-    o0, _ = eng.generate_with_prefix(st0, [sfx[0], sfx[3]])
-    o1, _ = eng.generate_with_prefix(st1, [sfx[1], sfx[2]])
+    o0, _ = dense.generate_with_prefix(d0, [sfx[0], sfx[3]])
+    o1, _ = dense.generate_with_prefix(d1, [sfx[1], sfx[2]])
     ref[0], ref[3] = o0
     ref[1], ref[2] = o1
     assert multi == ref
+    # suffix blocks freed after the batch; prefix blocks still resident
+    assert eng.block_pool.blocks_in_use == (len(st0.page.blocks)
+                                            + len(st1.page.blocks))
+    st0.release()
+    st1.release()
+    assert eng.block_pool.blocks_in_use == 0
 
 
 def test_generate_multi_prefix_stateful_fallback(tok):
@@ -275,6 +291,178 @@ def test_stateful_subbatch_timing_attribution(tok):
     assert t["prefill_share"][1] == pytest.approx(t["prefill_share"][2])
     # members of different sub-batches are NOT billed a global average
     assert t["prefill_share"][0] != pytest.approx(t["prefill_share"][1])
+
+
+# ----------------------------------------------------------------------
+# PrefixPool under the paged backend (satellite coverage)
+# ----------------------------------------------------------------------
+def _paged_engine(tok, key=7, **kw):
+    cfg = _gqa_cfg(tok.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(key), cfg)
+    return ServingEngine(params, cfg, tok, max_cache_len=512,
+                         max_new_tokens=3, **kw)
+
+
+def test_pool_paged_refcount_pins_across_inflight_batches(tok):
+    """An entry evicted while an in-flight batch still walks its blocks
+    must not free them: the batch holds its own block references, and
+    the blocks return to the free list only when it releases."""
+    eng = _paged_engine(tok)
+    bp = eng.block_pool
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True),
+                               _record=False)
+    pool = PrefixPool(budget_bytes=state_bytes(st))
+    pool.attach_block_pool(bp)
+    pool.put("a", st)
+    blocks = list(st.page.blocks)
+
+    # batch A takes in-flight references (what _serve_paged does)
+    bp.incref(blocks)
+    # overlapping admission evicts "a" (budget fits one state)
+    st_b, _ = eng.prefill_prefix(
+        tok.encode("the quick brown fox jumps over", bos=True),
+        _record=False)
+    pool.put("b", st_b)
+    assert "a" not in pool
+    # evicted, but batch A still holds the blocks -> not freed
+    assert all(bp.allocator.refcount(b) == 1 for b in blocks)
+    in_use = bp.blocks_in_use
+    bp.decref(blocks)                   # batch A completes
+    assert bp.blocks_in_use == in_use - len(blocks)
+
+
+def test_pool_paged_cow_after_shared_block_evicted(tok):
+    """Copy-on-write: after an entry whose blocks an in-flight reader
+    shares is evicted, a writer must get a COPY — the reader's KV is
+    bit-identical before and after, and the original block frees when
+    the reader releases."""
+    eng = _paged_engine(tok)
+    bp = eng.block_pool
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes and edges",
+                                          bos=True), _record=False)
+    pool = PrefixPool(budget_bytes=state_bytes(st))
+    pool.attach_block_pool(bp)
+    pool.put("a", st)
+    shared = st.page.blocks[0]
+    row = np.asarray([[shared]])
+    before = np.asarray(bp.gather(row)["groups"]["0"]["k"])
+
+    bp.incref([shared])                 # in-flight batch A
+    bp.incref([shared])                 # overlapping in-flight batch B
+    st_b, _ = eng.prefill_prefix(tok.encode("the quick brown fox jumps "
+                                            "over the lazy dog", bos=True),
+                                 _record=False)
+    pool.put("b", st_b)                 # evicts "a"; A and B's refs remain
+    assert bp.allocator.refcount(shared) == 2
+
+    # batch A wants to WRITE (e.g. extend its prefix in place): B still
+    # reads the block, so A must get a copy
+    new = bp.cow(shared)
+    assert new != shared
+    assert bp.allocator.refcount(shared) == 1   # A's ref moved to the copy
+    np.testing.assert_array_equal(
+        np.asarray(bp.gather(np.asarray([[new]]))["groups"]["0"]["k"]),
+        before)
+    # B's view untouched by whatever A writes next
+    np.testing.assert_array_equal(
+        np.asarray(bp.gather(row)["groups"]["0"]["k"]), before)
+    free_before = bp.free_blocks
+    bp.decref([shared])                 # batch B completes -> block frees
+    assert bp.free_blocks == free_before + 1
+    # a uniquely-referenced block needs no copy
+    assert bp.cow(new) == new
+
+
+def test_pool_paged_reprefill_counter(tok):
+    """Miss -> prefill -> admit -> evict -> miss -> re-prefill: the
+    readmission is counted as a re-prefill and the freed blocks are
+    recycled for the new state."""
+    eng = _paged_engine(tok)
+    stats = eng.cache_mgr.reset_stats()
+    one, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True),
+                                _record=False)
+    pool = PrefixPool(budget_bytes=state_bytes(one), stats=stats)
+    pool.attach_block_pool(eng.block_pool)
+    one.release()
+
+    def materialize(key, text):
+        st = pool.get(key)
+        if st is None:
+            st, _ = eng.prefill_prefix(tok.encode(text, bos=True),
+                                       _record=False)
+            pool.put(key, st)
+        return st
+
+    materialize("a", "a graph of nodes")
+    materialize("b", "the quick brown")          # evicts "a"
+    assert "a" not in pool and stats.pool_evictions == 1
+    materialize("a", "a graph of nodes")         # readmission
+    assert stats.pool_reprefills == 1
+    assert stats.pool_misses == 3 and stats.pool_hits == 0
+    assert pool.get("a") is not None
+    assert stats.pool_hits == 1
+    # only the resident state's blocks are held
+    resident = pool.entry("a").state
+    assert eng.block_pool.blocks_in_use == len(resident.page.blocks)
+
+
+def test_block_allocator_reclaims_from_pool_on_pressure(tok):
+    """Arena exhaustion evicts cold pooled prefixes instead of failing:
+    admission pressure and HBM pressure are one page-table operation."""
+    eng = _paged_engine(tok, arena_blocks=2)     # tiny arena
+    bp = eng.block_pool
+    pool = PrefixPool(budget_bytes=1 << 30)      # byte budget never binds
+    pool.attach_block_pool(bp)
+    texts = ["a graph of nodes", "the quick brown", "lazy dog jumps"]
+    for i, txt in enumerate(texts):
+        st, _ = eng.prefill_prefix(tok.encode(txt, bos=True),
+                                   _record=False)
+        pool.put(i, st)
+    # every prefix is 1 block and only 2 fit: the third prefill's block
+    # allocation reclaimed one resident entry instead of raising
+    assert len(pool) == 2 and 2 in pool
+    assert sum(k in pool for k in (0, 1)) == 1
+    assert pool.stats.pool_evictions == 1
+
+
+def test_replacing_a_pool_releases_the_old_pools_blocks(tok):
+    """Regression: a fresh serving window (new PrefixPool attached to
+    the same engine arena) must release the abandoned pool's resident
+    blocks — nothing else ever would, and each replaced pool would
+    otherwise shrink the arena by one working set."""
+    eng = _paged_engine(tok)
+    bp = eng.block_pool
+    pool1 = PrefixPool(budget_bytes=1 << 30)
+    pool1.attach_block_pool(bp)
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True),
+                               _record=False)
+    pool1.put("a", st)
+    assert bp.blocks_in_use > 0
+    pool2 = PrefixPool(budget_bytes=1 << 30)
+    pool2.attach_block_pool(bp)          # replaces pool1
+    assert bp.blocks_in_use == 0         # pool1's residents released
+    assert len(pool1) == 0
+    assert bp.allocator.reclaim_hook == pool2._reclaim_blocks
+
+
+def test_failed_paged_serve_drops_inflight_pins(tok):
+    """Regression: a serve that fails AFTER pinning its prefix blocks
+    (here: suffix overflows max_cache_len) must drop the pins and leave
+    the arena servable — phantom references would make the blocks
+    unfreeable forever."""
+    eng = _paged_engine(tok)
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True),
+                               _record=False)
+    base = [eng.block_pool.allocator.refcount(b) for b in st.page.blocks]
+    with pytest.raises(ValueError, match="max_cache_len"):
+        eng.generate_with_prefix(st, [[5] * 600], _record=False)
+    assert [eng.block_pool.allocator.refcount(b)
+            for b in st.page.blocks] == base
+    outs, _ = eng.generate_with_prefix(st, [tok.encode("answers")],
+                                       _record=False)
+    assert len(outs) == 1                # arena still serves
+    st.release()
+    assert eng.block_pool.blocks_in_use == 0
 
 
 # ----------------------------------------------------------------------

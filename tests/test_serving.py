@@ -13,7 +13,8 @@ from repro.models.config import ModelConfig
 from repro.rag.pipeline import GraphRAGPipeline
 from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
 from repro.rag.text_encoder import TextEncoder
-from repro.serving.engine import ServingEngine, _bucket_batch, _bucket_len
+from repro.core.cache import PrefixState
+from repro.serving.engine import ServingEngine
 
 
 @pytest.fixture(scope="module")
@@ -37,11 +38,49 @@ def setup():
     return graph, queries, pipe
 
 
-def test_buckets():
-    assert _bucket_len(5, 32) == 32
-    assert _bucket_len(33, 32) == 64
-    assert _bucket_batch(1) == 1
-    assert _bucket_batch(5) == 8
+def test_broadcast_copies_only_when_aliased(monkeypatch):
+    """Satellite regression: ``PrefixState.broadcast`` used to
+    ``jnp.copy`` EVERY leaf even when ``broadcast_to``/``astype``
+    already materialized a fresh buffer — doubling the write traffic of
+    every stateful-fallback broadcast.  Now the copy happens only when
+    the no-op broadcast would alias the (donated) source buffers."""
+    import jax.numpy as jnp
+    import repro.core.cache as cache_mod
+
+    copies = []
+    real_copy = jnp.copy
+
+    class _JnpProxy:
+        def __getattr__(self, name):
+            if name == "copy":
+                def counted(x):
+                    copies.append(x.shape)
+                    return real_copy(x)
+                return counted
+            return getattr(jnp, name)
+
+    monkeypatch.setattr(cache_mod, "jnp", _JnpProxy())
+    src = {"state": jnp.arange(8, dtype=jnp.float32).reshape(1, 8),
+           "conv": jnp.ones((1, 4), jnp.float32)}
+    st = PrefixState(cache=src, prefix_len=3, capacity=8)
+
+    # expansion to a member batch: broadcast_to materializes, NO copy
+    template = jax.eval_shape(
+        lambda: {"state": jnp.zeros((4, 8), jnp.float32),
+                 "conv": jnp.zeros((4, 4), jnp.float32)})
+    out = st.broadcast(template)
+    assert copies == [], "expanding broadcast must not add a second copy"
+    np.testing.assert_array_equal(np.asarray(out["state"]),
+                                  np.tile(np.asarray(src["state"]), (4, 1)))
+
+    # same-shape template: broadcast_to would ALIAS -> must copy
+    template1 = jax.eval_shape(
+        lambda: {"state": jnp.zeros((1, 8), jnp.float32),
+                 "conv": jnp.zeros((1, 4), jnp.float32)})
+    out1 = st.broadcast(template1)
+    assert len(copies) == 2              # one per leaf
+    assert out1["state"].unsafe_buffer_pointer() \
+        != src["state"].unsafe_buffer_pointer()
 
 
 def test_singleton_subgcache_equals_baseline(setup):

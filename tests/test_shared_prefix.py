@@ -182,8 +182,11 @@ def engines():
                            "a graph of nodes and edges answers questions"])
     cfg = _tinyllama_cfg(tok.vocab_size)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
+    # paged=False: these tests probe the DENSE split cascade internals
+    # (suffix-cache allocation, live batch-1 prefix buffers); the paged
+    # backend has its own exactness suite in tests/test_paged.py.
     split = ServingEngine(params, cfg, tok, max_cache_len=512,
-                          max_new_tokens=6)
+                          max_new_tokens=6, paged=False)
     bcast = ServingEngine(params, cfg, tok, max_cache_len=512,
                           max_new_tokens=6, split_prefix=False)
     return tok, split, bcast
@@ -258,7 +261,9 @@ def test_split_never_broadcasts_and_allocates_p_plus_bs(engines, monkeypatch):
 
 
 def test_swa_config_split_matches_broadcast():
-    """Sliding-window stack through the engine: cascade == broadcast."""
+    """Sliding-window stack through the engine: cascade == broadcast
+    (the default engine is PAGED here, so this also covers windowed
+    paged serving — windows are masked positionally, never rung)."""
     tok = Tokenizer.train(["alpha beta gamma delta epsilon zeta eta theta"])
     cfg = ModelConfig(name="swa-test", family="dense", num_layers=2,
                       d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
