@@ -1,0 +1,170 @@
+"""Continuous in-flight batching vs the drain-serve loop (DESIGN.md §9).
+
+Replays ONE Poisson arrival trace through ``serve_stream`` twice on the
+same engine substrate:
+
+  * ``drain``      — the PR 3 online path: the queue is drained into
+                     micro-batches and each batch decodes to FULL
+                     completion (every row burns the whole
+                     ``max_new_tokens`` budget; a request arriving one
+                     tick late waits out the entire batch).
+  * ``continuous`` — the persistent in-flight batch: fixed-size decode
+                     chunks, EOS retirement frees suffix blocks
+                     mid-flight, arrivals admit into free slots between
+                     chunks.
+
+Both modes produce token-identical outputs (asserted per replay — the
+continuous loop reschedules work, never changes math); the comparison
+is pure scheduling: mean/p95 TTFT and queue wait on the same trace.
+Shapes are warmed via ``warmup_stream`` (the (admission-batch,
+page-width) grid) plus two untimed replays per mode (drain-pattern
+settling out of the timed region), then timed best-of-3
+(EXPERIMENTS.md protocol — the discrete-event clock feeds measured
+service times back into admission, so single replays are noisy on CPU).
+Writes ``BENCH_continuous_stream.json`` at the repo root.  Runs on CPU.
+
+    PYTHONPATH=src python benchmarks/continuous_stream.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.data.scenegraph import generate_scene_graph
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.rag.pipeline import GraphRAGPipeline
+from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+from repro.rag.text_encoder import TextEncoder
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import trace_summary
+
+
+def bench_pipeline(max_new_tokens: int):
+    """(GraphRAGPipeline, queries) on random weights — timing is
+    backbone-agnostic; accuracy is not measured here."""
+    graph, queries = generate_scene_graph()
+    tok = Tokenizer.train([q.question + " " + q.answer for q in queries]
+                          + graph.node_text, max_vocab=2048)
+    cfg = ModelConfig(name="bench-cont", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=tok.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(64))
+    engine = ServingEngine(params, cfg, tok, max_cache_len=512,
+                           max_new_tokens=max_new_tokens)
+    pipe = GraphRAGPipeline(index=index, retriever=GRetrieverRetriever(index),
+                            engine=engine, tokenizer=tok,
+                            use_soft_prompt=False)
+    return pipe, queries
+
+
+def run(num_queries: int = 24, max_batch: int = 4, gap_s: float = 0.03,
+        threshold: float = 0.25, max_new_tokens: int = 32, chunk: int = 8,
+        seed: int = 0, log_fn=print):
+    pipe, queries = bench_pipeline(max_new_tokens)
+    items = queries[:num_queries]
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(gap_s, size=len(items)))
+
+    # tokenize-once trace geometry: the continuous loop's suffix
+    # capacity is a compiled shape sized to the longest suffix
+    max_sfx = max(len(pipe.tokenizer.encode(pipe.suffix_text(it.question)))
+                  for it in items)
+
+    def replay(mode):
+        recs, _, sched = pipe.serve_stream(
+            items, arrivals, mode=mode, max_batch=max_batch, chunk=chunk,
+            threshold=threshold, pool_budget_bytes=1 << 26,
+            max_suffix_len=max_sfx)
+        return recs, sched
+
+    # ---- warmup: compiles + drain-pattern settling, untimed ----------
+    rep_lens = sorted({len(pipe.tokenizer.encode(
+        pipe.prefix_text(pipe.retriever.retrieve(it.question)), bos=True))
+        for it in items})
+    bs = tuple(sorted({1, 2, max_batch}))
+    pipe.engine.warmup_pooled(rep_lens, batches=bs, num_prefixes=bs)
+    pipe.warmup_stream(items, max_batch=max_batch, chunk=chunk,
+                       prefix_lens=rep_lens, max_suffix_len=max_sfx)
+    for mode in ("drain", "continuous"):
+        for _ in range(2):
+            replay(mode)
+
+    # ---- timed: best-of-3 per mode, token identity asserted ----------
+    result, tokens = {}, {}
+    for mode in ("drain", "continuous"):
+        best, best_recs, best_sched = None, None, None
+        for _ in range(3):
+            recs, sched = replay(mode)
+            s = trace_summary(recs)
+            if best is None or s["mean_ttft_ms"] < best["mean_ttft_ms"]:
+                # keep the scheduler WITH its replay: hit/miss counts
+                # vary across replays and must match the reported run
+                best, best_recs, best_sched = s, recs, sched
+        tokens[mode] = [r.generated for r in best_recs]
+        best["pool_hit_rate"] = round(
+            best_sched.pool.stats.pool_hit_rate, 3)
+        result[mode] = best
+    token_identical = tokens["drain"] == tokens["continuous"]
+    assert token_identical, \
+        "continuous serving must be token-identical to the drain oracle"
+    result["token_identical"] = token_identical
+    result["speedup_mean_ttft"] = round(
+        result["drain"]["mean_ttft_ms"]
+        / result["continuous"]["mean_ttft_ms"], 3)
+    result["speedup_p95_ttft"] = round(
+        result["drain"]["p95_ttft_ms"]
+        / result["continuous"]["p95_ttft_ms"], 3)
+    result["speedup_p95_queue_wait"] = round(
+        result["drain"]["p95_queue_wait_ms"]
+        / max(result["continuous"]["p95_queue_wait_ms"], 1e-3), 3)
+    for mode in ("drain", "continuous"):
+        s = result[mode]
+        log_fn(f"{mode:10s} mean TTFT {s['mean_ttft_ms']:8.1f}ms  "
+               f"p95 {s['p95_ttft_ms']:8.1f}ms  "
+               f"wait p95 {s['p95_queue_wait_ms']:8.1f}ms  "
+               f"decode steps {s['mean_decode_steps']:5.1f}")
+    log_fn(f"continuous vs drain: mean TTFT x{result['speedup_mean_ttft']}"
+           f"  p95 queue wait x{result['speedup_p95_queue_wait']}"
+           f"  (token-identical: {token_identical})")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--gap-s", type=float, default=0.03)
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_continuous_stream.json"))
+    args = ap.parse_args()
+    result = run(num_queries=args.queries, max_batch=args.max_batch,
+                 gap_s=args.gap_s, threshold=args.threshold,
+                 max_new_tokens=args.max_new_tokens, chunk=args.chunk)
+    payload = {
+        "benchmark": "continuous_vs_drain_stream_poisson",
+        "config": "bench-cont (2L d64 GQA 4:2, f32, scene-graph RAG)",
+        "trace": {"queries": args.queries, "poisson_gap_s": args.gap_s,
+                  "max_batch": args.max_batch,
+                  "spawn_threshold": args.threshold,
+                  "max_new_tokens": args.max_new_tokens,
+                  "decode_chunk": args.chunk},
+        "result": result,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -140,15 +140,16 @@ def run(num_queries: int = 16, max_batch: int = 4, gap_s: float = 0.05,
     # two untimed replays: micro-batch composition depends on measured
     # service times, so the drain pattern only settles once post-compile
     for _ in range(2):
-        pipe.serve_stream(items, arrivals, max_batch=max_batch,
+        pipe.serve_stream(items, arrivals, mode="drain",
+                          max_batch=max_batch,
                           threshold=threshold, pool_budget_bytes=1 << 26)
     serve_nocache(pipe, items, arrivals)
     pipe.run_subgcache(items, num_clusters=num_clusters)
 
     # ---- timed runs ---------------------------------------------------
     recs_on, _, sched = pipe.serve_stream(
-        items, arrivals, max_batch=max_batch, threshold=threshold,
-        pool_budget_bytes=1 << 26)
+        items, arrivals, mode="drain", max_batch=max_batch,
+        threshold=threshold, pool_budget_bytes=1 << 26)
     stats = sched.pool.stats
     recs_nc = serve_nocache(pipe, items, arrivals)
     recs_off = serve_offline(pipe, items, arrivals, num_clusters)

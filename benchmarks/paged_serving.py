@@ -160,8 +160,9 @@ def run(num_queries: int = 16, max_batch: int = 4, gap_s: float = 0.05,
         # replay settles the drain pattern the timed replay will see
         pipe.engine.warmup_pooled(rep_lens, batches=bs, num_prefixes=bs)
         for _ in range(2):
-            pipe.serve_stream(items, arrivals, max_batch=max_batch,
-                              threshold=threshold, pool_budget_bytes=budget)
+            pipe.serve_stream(items, arrivals, mode="drain",
+                              max_batch=max_batch, threshold=threshold,
+                              pool_budget_bytes=budget)
         # best-of-3 timed replays (EXPERIMENTS.md protocol): the
         # discrete-event clock feeds measured service times back into
         # batch composition, so single replays are noisy on CPU.  Pool
@@ -170,8 +171,8 @@ def run(num_queries: int = 16, max_batch: int = 4, gap_s: float = 0.05,
         runs = []
         for _ in range(3):
             recs, _, sched = pipe.serve_stream(
-                items, arrivals, max_batch=max_batch, threshold=threshold,
-                pool_budget_bytes=budget)
+                items, arrivals, mode="drain", max_batch=max_batch,
+                threshold=threshold, pool_budget_bytes=budget)
             stats = sched.pool.stats
             summ = _summ(recs)
             summ["pool"] = {

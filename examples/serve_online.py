@@ -2,12 +2,14 @@
 
 Where ``quickstart.py`` plans one offline batch, this demo replays a
 Poisson arrival trace through ``GraphRAGPipeline.serve_stream``
-(DESIGN.md §7): queries are drained into micro-batches, assigned to
-clusters incrementally (spawning on distance > threshold), served
-against a byte-budgeted ``PrefixPool`` of representative-prefix KV
-caches, and decoded in ONE multi-prefix batch per micro-batch — members
-of different clusters share every decode step.  Reports TTFT per query
-(including arrival-queue wait) and the pool hit/miss/eviction counters.
+(DESIGN.md §7/§9): queries are assigned to clusters incrementally
+(spawning on distance > threshold) and served against a byte-budgeted
+``PrefixPool`` of representative-prefix KV caches by the CONTINUOUS
+in-flight batch (the default mode): arrivals admit into free slots
+between fixed-size decode chunks and rows retire the moment they emit
+EOS — pass ``mode="drain"`` to A/B against the drain-serve loop.
+Reports TTFT per query (including arrival-queue wait) and the pool
+hit/miss/eviction counters.
 
     PYTHONPATH=src python examples/serve_online.py
 """
@@ -58,7 +60,11 @@ def main():
         pipe.prefix_text(retriever.retrieve(it.question)), bos=True))
         for it in items})
     engine.warmup_pooled(rep_lens, batches=(1, 2, 4), num_prefixes=(1, 2, 4))
-    pipe.serve_stream(items[:8], [0.0] * 8, max_batch=4, threshold=0.25,
+    # warm the continuous-mode (admission batch, page width) grid —
+    # online composition depends on arrival dynamics, so any bucket can
+    # appear at any moment — then one untimed replay to warm the pool
+    pipe.warmup_stream(items, max_batch=4, prefix_lens=rep_lens)
+    pipe.serve_stream(items, arrivals, max_batch=4, threshold=0.25,
                       pool_budget_bytes=1 << 26)
 
     records, summary, sched = pipe.serve_stream(

@@ -50,9 +50,14 @@ class PrefixState:
       when the last in-flight reader also releases.
     """
     cache: Any                 # dense cache pytree (None when paged)
-    prefix_len: int            # tokens in the cached prefix
+    prefix_len: int            # tokens in the cached prefix (incl. n_soft)
     capacity: int              # allocated / bucketed cache capacity
     enc_len: int = 0           # cross-attention KV length (enc-dec / VLM)
+    # soft-prompt embeddings consumed ahead of the prefix text tokens;
+    # ALREADY included in prefix_len (the prefill consumed them like any
+    # other position) — kept separately so accounting can audit that
+    # prompt-token counts cover them (DESIGN.md §6)
+    n_soft: int = 0
     page: Optional[PageTable] = None
     block_pool: Optional[KVBlockPool] = None
     # process-unique identity: lets caches key on "same state object"

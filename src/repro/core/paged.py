@@ -201,6 +201,16 @@ def _reset_pos(arena, bids):
     return jax.tree_util.tree_map_with_path(f, arena)
 
 
+def reset_pos_rows(arena_like, rows) -> dict:
+    """Mark block rows ``rows`` of ``arena_like`` empty (pos = -1;
+    donated, in place).  Works on the main arena and on the compact
+    decode sub-arenas continuous serving keeps resident
+    (``KVBlockPool.sub_arena``): slot reuse is a position reset on the
+    retiring tenant's rows, never a reallocation — the arena never
+    churns (DESIGN.md §9)."""
+    return _reset_pos(arena_like, jnp.asarray(rows, jnp.int32))
+
+
 @jax.jit
 def _extract_blocks(arena, bids):
     """Gather arena rows ``bids`` into a compact sub-arena (read-only;
@@ -359,6 +369,23 @@ class KVBlockPool:
         discarded after decode (suffix blocks free with the batch), so
         nothing is scattered back."""
         return _extract_blocks(self.arena, jnp.asarray(bids, jnp.int32))
+
+    def sub_arena(self, n_rows: int):
+        """A fresh standalone block arena of ``n_rows`` rows with this
+        pool's geometry (same per-layer leaf structure, positions -1).
+
+        Continuous serving (``serving/continuous.py``, DESIGN.md §9)
+        keeps one of these resident as the decode carry: each in-flight
+        slot owns a fixed band of rows for its suffix+decode KV, so the
+        chunked decode scan carries only ``slots × blocks`` rows while
+        the main arena rides along read-only as the prefix source.
+        Rows are REUSED across tenants — retirement frees the slot's
+        main-arena reservation (``decref``) and the next admission
+        resets the rows' positions (``reset_pos_rows``); the sub-arena
+        itself is never reallocated, so slot turnover causes no arena
+        churn."""
+        from repro.models import model as M
+        return M.init_block_arena(self.cfg, n_rows, self.block_size)
 
     def gather(self, rows: np.ndarray):
         """Densify page-table ``rows`` [B, W] into a [B, W*block_size]

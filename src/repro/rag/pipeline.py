@@ -7,13 +7,16 @@ Three serving modes over the same retriever, GNN, and engine:
 * ``run_subgcache`` — the paper's OFFLINE method: all queries present up
   front, one dendrogram cut (``plan_batch``), clusters served one at a
   time against a single live ``PrefixState``.
-* ``serve_stream``  — ONLINE serving (DESIGN.md §7): queries arrive on
-  a timeline, an ``ArrivalQueue`` drains them into slot-limited
-  micro-batches, each query is assigned to a cluster incrementally
-  (``OnlineClusterAssigner``), representative prefix states live in a
-  byte-budgeted ``PrefixPool``, and one multi-prefix batched
-  prefill/decode serves members of several clusters at once.  TTFT per
-  query includes the arrival-queue wait.
+* ``serve_stream``  — ONLINE serving (DESIGN.md §7/§9): queries arrive
+  on a timeline, each is assigned to a cluster incrementally
+  (``OnlineClusterAssigner``), and representative prefix states live
+  in a byte-budgeted ``PrefixPool``.  The default loop is CONTINUOUS
+  in-flight batching (``serving/continuous.py``): arrivals admit into
+  free slots between fixed-size decode chunks and rows retire the
+  moment they emit EOS.  ``mode="drain"`` keeps the PR 3 loop —
+  slot-limited micro-batches served to full completion — as the
+  token-identical A/B oracle.  TTFT per query includes the
+  arrival-queue wait.
 """
 from __future__ import annotations
 
@@ -105,11 +108,16 @@ class GraphRAGPipeline:
             t_build = time.perf_counter() - t0
             out, t = self.engine.generate(toks, soft)
             text = self.tokenizer.decode(out)
+            # soft-prompt embeddings are consumed like any other prompt
+            # position: count them, or soft-prompt runs under-report
+            # every prompt (and the prefill-savings denominators)
+            n_soft = 0 if soft is None else soft.shape[0]
             records.append(QueryRecord(
                 query=it.question, answer=it.answer, generated=text,
                 correct=self._check(text, it.answer), retrieval_s=rt,
                 prompt_build_s=t_build, prefill_s=t["prefill_s"],
-                decode_s=t["decode_s"], prompt_tokens=len(toks)))
+                decode_s=t["decode_s"],
+                prompt_tokens=len(toks) + n_soft))
         summary = RunSummary.from_records("baseline", records)
         return records, summary
 
@@ -164,7 +172,10 @@ class GraphRAGPipeline:
             for k, qi in enumerate(cp.member_indices):
                 it = items[qi]
                 text = self.tokenizer.decode(outs[k])
-                member_prompt = len(prefix_tokens) + len(suffixes[k])
+                # state.prefix_len counts the soft-prompt embeds the
+                # prefix prefill consumed (PrefixState.n_soft), which
+                # len(prefix_tokens) does not
+                member_prompt = state.prefix_len + len(suffixes[k])
                 # per-member shares come from the engine: the stateful
                 # fallback serves equal-length SUB-batches, so dividing
                 # the summed prefill/decode time by the cluster size n
@@ -198,29 +209,43 @@ class GraphRAGPipeline:
                      pool_budget_bytes: int = 1 << 30,
                      threshold: float = float("inf"),
                      max_clusters: Optional[int] = None,
+                     mode: str = "continuous", chunk: int = 4,
+                     max_suffix_len: Optional[int] = None,
                      scheduler=None) -> tuple:
-        """Online micro-batched serving of a streaming query trace.
+        """Online serving of a streaming query trace (DESIGN.md §7/§9).
 
-        ``items[i]`` arrives at ``arrivals[i]`` seconds (any order).  A
-        discrete-event loop drains the arrival queue into micro-batches
-        of at most ``max_batch`` queries: the virtual clock jumps to the
-        next arrival when idle and advances by the measured wall time of
-        each served batch, so ``queue_wait_s`` reflects real service
-        times.  Per batch: retrieve, embed, assign each query to a
-        cluster (spawning at distance > ``threshold``), materialize
-        prefix states through the byte-budgeted pool, and serve all
-        members in one multi-prefix batched prefill + decode.
+        ``items[i]`` arrives at ``arrivals[i]`` seconds (any order).
+        Two serving loops share the assigner + pool + engine substrate:
 
-        Pass ``scheduler`` (a previous call's return value) to keep the
-        cluster population and prefix pool warm across traces.  Returns
-        ``(records, summary, scheduler)``; pool hit/miss/eviction
-        counters live in ``scheduler.pool.stats``.
+        * ``mode="continuous"`` (default; paged backends) — an event
+          loop over ``ContinuousEngine``: arrivals admit into free
+          slots of a persistent in-flight batch between fixed
+          ``chunk``-step decode chunks, rows retire (and free their
+          suffix blocks) the moment they emit EOS, and per-row
+          prefill/decode attribution is exact.  No request ever waits
+          for another request's decode to finish.
+        * ``mode="drain"`` — the PR 3 drain-serve loop, kept as the A/B
+          oracle: the queue is drained into micro-batches of at most
+          ``max_batch`` queries and each batch is served to FULL
+          completion before the queue is consulted again.  Token
+          streams are identical between the modes (the continuous path
+          only reschedules work, never changes math); dense/stateful
+          engines always take this path.
+
+        The virtual clock jumps to the next arrival when idle and
+        advances by the measured wall time of each admission / decode
+        chunk / drained batch, so ``queue_wait_s`` reflects real
+        service times.  Pass ``scheduler`` (a previous call's return
+        value) to keep the cluster population and prefix pool warm
+        across traces.  Returns ``(records, summary, scheduler)``; pool
+        hit/miss/eviction counters live in ``scheduler.pool.stats``.
         """
         from repro.core.prefix_pool import PrefixPool
         from repro.serving.scheduler import (ArrivalQueue,
                                              OnlineClusterAssigner,
                                              OnlineScheduler)
         assert len(items) == len(arrivals)
+        assert mode in ("continuous", "drain"), mode
         stats = self.engine.cache_mgr.reset_stats()
         if scheduler is None:
             # OnlineScheduler owns the stats wiring: it points the
@@ -233,6 +258,11 @@ class GraphRAGPipeline:
                 self._prefix_payload)
         else:
             scheduler.pool.stats = stats    # fresh accounting window
+
+        if mode == "continuous" and self.engine.use_paged:
+            return self._serve_stream_continuous(
+                items, arrivals, scheduler, max_batch, chunk,
+                max_suffix_len)
 
         queue = ArrivalQueue()
         for i, t_arr in enumerate(arrivals):
@@ -271,10 +301,135 @@ class GraphRAGPipeline:
                     cluster_share_s=share, prompt_build_s=builds[k],
                     prefix_share_s=sq.prefix_share_s,
                     prefill_s=sq.prefill_s, decode_s=sq.decode_s,
+                    # the monolithic decode burns the whole budget for
+                    # every row — that IS the drain-serve wasted-decode
+                    # cost the continuous loop retires away
+                    decode_steps=self.engine.max_new_tokens - 1,
                     prompt_tokens=sq.prefix_len + len(suffixes[k]),
                     cached_tokens=sq.prefix_len if sq.pool_hit else 0)
             clock = now + (time.perf_counter() - t_batch0)
         summary = RunSummary.from_records(
             f"online(b={max_batch})", records,
+            prefill_savings=stats.prefill_savings)
+        return records, summary, scheduler
+
+    # ------------------------------------------------------------------
+    def warmup_stream(self, items: Sequence[QAItem], *,
+                      max_batch: int = 8, chunk: int = 4,
+                      prefix_lens: Optional[Sequence[int]] = None,
+                      max_suffix_len: Optional[int] = None) -> None:
+        """Pre-compile the continuous-serving shape grid for a trace
+        over ``items`` (no-op on dense/stateful engines).  Suffix
+        capacity is sized exactly as ``serve_stream`` will size it;
+        ``prefix_lens`` (one per representative length the trace can
+        serve) skips the per-item retrieval pass when the caller
+        already knows them.  Untimed and excluded from CacheStats."""
+        if not self.engine.use_paged:
+            return
+        from repro.serving.continuous import ContinuousEngine
+        if prefix_lens is None:
+            prefix_lens = sorted({len(self.tokenizer.encode(
+                self.prefix_text(self.retriever.retrieve(it.question)),
+                bos=True)) for it in items})
+        max_sfx = max_suffix_len if max_suffix_len is not None else max(
+            len(self.tokenizer.encode(self.suffix_text(it.question)))
+            for it in items)
+        cont = ContinuousEngine(self.engine, max_slots=max_batch,
+                                chunk=chunk, max_suffix_len=max_sfx)
+        cont.warmup(prefix_lens)
+
+    # ------------------------------------------------------------------
+    def _serve_stream_continuous(self, items: Sequence[QAItem],
+                                 arrivals: Sequence[float], scheduler,
+                                 max_batch: int, chunk: int,
+                                 max_suffix_len: Optional[int] = None
+                                 ) -> tuple:
+        """Event loop over a persistent in-flight batch (DESIGN.md §9).
+
+        Each iteration: (1) admit everything that has arrived by the
+        clock into free slots (retrieve → embed → assign → materialize
+        pinned prefixes → one batched suffix prefill), (2) run ONE
+        ``chunk``-step decode, (3) collect retirements.  The clock
+        advances by the measured wall time of each iteration, so a
+        query's ``queue_wait_s`` ends the moment it is admitted — not
+        when the previous batch finishes decoding.
+        """
+        from repro.serving.continuous import ContinuousEngine
+        from repro.serving.scheduler import ArrivalQueue
+        stats = self.engine.cache_mgr.stats
+        # suffix capacity is a compiled shape: size it to the trace —
+        # callers replaying a trace (benchmarks, warm schedulers) pass
+        # ``max_suffix_len`` to skip re-tokenizing every suffix per call
+        # (admission still encodes each suffix once, on the clock)
+        max_sfx = max_suffix_len if max_suffix_len is not None else max(
+            len(self.tokenizer.encode(self.suffix_text(it.question)))
+            for it in items)
+        cont = ContinuousEngine(self.engine, max_slots=max_batch,
+                                chunk=chunk, max_suffix_len=max_sfx)
+        queue = ArrivalQueue()
+        for i, t_arr in enumerate(arrivals):
+            queue.push(t_arr, i)
+        records: List[QueryRecord] = [None] * len(items)  # type: ignore
+        clock = 0.0
+        while len(queue) or cont.in_flight:
+            if cont.in_flight == 0 and len(queue):
+                clock = max(clock, queue.next_arrival())
+            batch = queue.drain(clock, cont.free_slots)
+            t_iter0 = time.perf_counter()
+            if batch:
+                idxs = [a.payload for a in batch]
+                subgraphs, ret_times = self.retrieve_all(
+                    [items[i] for i in idxs])
+                t0 = time.perf_counter()
+                emb = self.embed_for_clustering(subgraphs)
+                suffixes, builds = [], []
+                for i in idxs:
+                    t1 = time.perf_counter()
+                    suffixes.append(self.tokenizer.encode(
+                        self.suffix_text(items[i].question)))
+                    builds.append(time.perf_counter() - t1)
+                payloads = [
+                    {"i": i, "wait": clock - a.time_s, "retrieval": rt,
+                     "build": bd, "suffix_len": len(sfx)}
+                    for a, i, rt, bd, sfx in zip(batch, idxs, ret_times,
+                                                 builds, suffixes)]
+                admitted, prefill_s = scheduler.serve_continuous(
+                    cont, list(emb), subgraphs, suffixes, payloads,
+                    now=clock)
+                t_admit = time.perf_counter() - t0
+                # embedding/assignment/pool overhead not attributed to a
+                # query by the engine, spread uniformly over the group
+                engine_s = prefill_s + sum(
+                    aq.prefix_share_s for aq in admitted)
+                share = max(0.0, t_admit - engine_s - sum(builds)) \
+                    / len(batch)
+                for aq in admitted:
+                    aq.payload["share"] = share
+            if cont.in_flight:
+                cont.step()
+            clock += time.perf_counter() - t_iter0
+            for res in cont.pop_retired():
+                aq = res.payload
+                meta = aq.payload
+                i = meta["i"]
+                it = items[i]
+                text = self.tokenizer.decode(res.tokens)
+                records[i] = QueryRecord(
+                    query=it.question, answer=it.answer, generated=text,
+                    correct=self._check(text, it.answer),
+                    retrieval_s=meta["retrieval"],
+                    queue_wait_s=meta["wait"],
+                    cluster_share_s=meta.get("share", 0.0),
+                    prompt_build_s=meta["build"],
+                    prefix_share_s=aq.prefix_share_s,
+                    prefill_s=res.prefill_s,
+                    decode_s=res.decode_s,          # exact, not t/n
+                    decode_steps=res.decode_steps,
+                    # prefix_len includes any soft-prompt embeds the
+                    # prefill actually consumed (PrefixState.n_soft)
+                    prompt_tokens=aq.prefix_len + meta["suffix_len"],
+                    cached_tokens=aq.prefix_len if aq.pool_hit else 0)
+        summary = RunSummary.from_records(
+            f"continuous(b={max_batch},chunk={chunk})", records,
             prefill_savings=stats.prefill_savings)
         return records, summary, scheduler

@@ -1,0 +1,474 @@
+"""Continuous in-flight batching over the paged serving engine
+(DESIGN.md §9).
+
+The drain-serve loop (``OnlineScheduler.serve_batch`` driven by
+``GraphRAGPipeline.serve_stream``) serves each micro-batch to FULL
+completion: every row burns all ``max_new_tokens - 1`` scan steps even
+after emitting EOS, and a request arriving one tick after a batch
+starts waits out the whole batch's decode — head-of-line blocking the
+refcounted block arena was built to make unnecessary.  This module
+replaces the monolithic decode with a persistent in-flight batch:
+
+* **Chunked decode** — ``engine.decode_step`` runs decode in fixed
+  ``chunk``-step scans; between chunks the host owns the batch again.
+  Chunking a scan preserves carry semantics exactly, so the emitted
+  token stream is identical to the monolithic decode (the drain-serve
+  path is kept as the A/B oracle and the exactness test).
+* **Mid-flight retirement** — a row that emits EOS (or exhausts its
+  budget) retires at the next chunk boundary: its main-arena suffix
+  reservation is freed immediately (``pool.decref``), its prefix block
+  pins drop, and its EXACT prefill/decode attribution is recorded —
+  not a uniform ``t / n`` share.
+* **Admission between chunks** — newly drained arrivals prefill into
+  free slots against their cluster's (pinned) prefix pages while
+  survivors keep decoding out of the same arena; nothing waits for the
+  batch to drain.
+
+Device layout: each slot owns a fixed band of rows in a compact
+suffix **sub-arena** (``KVBlockPool.sub_arena``) — the decode carry is
+``slots × blocks_per_slot`` rows, while the main arena rides along
+READ-ONLY as the prefix source (the same split the drain path's
+``extract`` optimization uses, made persistent).  Admission prefills
+the newcomer's suffix KV directly into its slot's rows (main arena as
+the read-only ``prefix`` operand); per-row suffix blocks in the MAIN
+arena are reserved for the row's lifetime so arena pressure, pool
+eviction, and admission stay one refcount mechanism.  Slot reuse is a
+position reset on the retiring tenant's rows (``reset_pos_rows``) —
+the sub-arena is never reallocated, so slot turnover causes no arena
+churn.
+
+``InflightBatch`` owns the slots and device state; ``ContinuousEngine``
+is the serving facade (admission, retirement, CacheStats accounting).
+``OnlineScheduler.serve_continuous`` feeds it assigned, pool-pinned
+requests; ``GraphRAGPipeline.serve_stream`` is the event loop on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import PrefixState
+from repro.core.paged import NULL_BLOCK, reset_pos_rows
+from repro.data.tokenizer import EOS
+from repro.serving.bucketing import blocks_for, bucket_len, bucket_pow2
+from repro.serving.engine import Request
+
+
+@dataclasses.dataclass
+class RowState:
+    """Host bookkeeping for one in-flight slot."""
+    payload: Any                    # caller's handle, returned at retirement
+    state: Optional[PrefixState]    # prefix served against (blocks pinned)
+    blocks: List[int]               # main-arena suffix reservation
+    suffix_len: int                 # suffix tokens actually consumed
+    offset: int                     # prefix length (suffix scatter base)
+    pos: int                        # next decode position
+    tok: int                        # next decode input token
+    emitted: List[int]              # first token + decode stream (raw)
+    steps_left: int                 # decode budget remaining
+    admitted_s: float               # caller clock at admission
+    prefill_s: float                # this row's share of its admission
+    on_retire: Optional[Callable[[Any], None]]
+    decode_s: float = 0.0           # exact: sum of chunk_time / live_rows
+    steps: int = 0                  # decode steps actually consumed
+
+
+@dataclasses.dataclass
+class RowResult:
+    """One retired row (tokens are EOS-cut, ready for detokenization)."""
+    payload: Any
+    tokens: List[int]
+    prefill_s: float
+    decode_s: float
+    decode_steps: int
+    admitted_s: float
+
+
+class InflightBatch:
+    """Fixed-slot device state of the continuous batch (see module
+    docstring).  ``max_slots`` is bucketed to a power of two and is the
+    compiled decode batch; ``max_suffix_len`` fixes the per-slot suffix
+    capacity (suffix + decode tail), hence the sub-arena size
+    ``slots × blocks_per_slot + 1`` (the +1 is a trash row that
+    admission's batch-padding rows write into)."""
+
+    def __init__(self, engine, max_slots: int, chunk: int,
+                 max_suffix_len: int) -> None:
+        assert engine.use_paged, \
+            "continuous batching rides the paged backend (DESIGN.md §9)"
+        assert chunk >= 1, chunk
+        self.engine = engine
+        self.chunk = int(chunk)
+        # compiled decode batch is a power-of-two bucket, but the
+        # caller's concurrency cap is honored exactly: only the first
+        # ``usable`` slots ever admit (the rest are permanent done-padding)
+        self.usable = max(1, int(max_slots))
+        self.num_slots = bucket_pow2(self.usable)
+        self.t_max = bucket_len(max_suffix_len, engine.bucket)
+        suffix_cap = engine._suffix_capacity_for(self.t_max)
+        self.nbs = blocks_for(suffix_cap, engine.block_size)
+        self.slots: List[Optional[RowState]] = [None] * self.num_slots
+        # persistent decode carry: slot i owns sub rows
+        # [i*nbs, (i+1)*nbs); row num_slots*nbs is the trash row
+        self.sub = engine.block_pool.sub_arena(self.num_slots * self.nbs + 1)
+        self.trash_row = self.num_slots * self.nbs
+        self._sub_pages = np.arange(
+            self.num_slots * self.nbs,
+            dtype=np.int32).reshape(self.num_slots, self.nbs)
+
+    # ------------------------------------------------------------------
+    @property
+    def live(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    @property
+    def free(self) -> List[int]:
+        return [i for i in range(self.usable) if self.slots[i] is None]
+
+    def slot_rows(self, slot: int) -> np.ndarray:
+        return self._sub_pages[slot]
+
+    # ------------------------------------------------------------------
+    def _with_sub(self, fn):
+        """Run a jitted call that consumes the (donated) sub-arena and
+        returns the updated sub as its LAST output; re-home it even when
+        the call raises (mirrors ``ServingEngine._with_arena``)."""
+        sub_in, self.sub = self.sub, None
+        try:
+            out = fn(sub_in)
+        except BaseException:
+            self.sub = sub_in
+            raise
+        self.sub = out[-1]
+        return out
+
+    def reset_slots(self, slots: Sequence[int]) -> None:
+        """Mark the slots' sub rows empty (pos = -1) before a new tenant
+        prefills into them — stale positions from the previous tenant
+        would otherwise be attended as live KV.  The row list is padded
+        to the power-of-two admission bucket (duplicate indices are
+        harmless for a set-to-(-1) scatter) so the jitted reset
+        compiles per BUCKET, not per exact admission count — a k=3
+        admission must not land an XLA compile inside a timed TTFT."""
+        rows = np.concatenate([self.slot_rows(s) for s in slots])
+        kb = bucket_pow2(len(slots))
+        if kb > len(slots):
+            rows = np.concatenate(
+                [rows, np.tile(rows[:self.nbs], kb - len(slots))])
+        self._with_sub(lambda sub: (reset_pos_rows(sub, rows),))
+
+    def nbp_for(self, states: Sequence[Optional[PrefixState]]) -> int:
+        """Power-of-two prefix page-table width covering ``states``."""
+        return bucket_pow2(max(
+            [1] + [len(st.page.blocks) for st in states if st is not None]))
+
+
+class ContinuousEngine:
+    """Continuous-serving facade over a paged ``ServingEngine``.
+
+    ``admit(requests, ...)`` prefills newcomers into free slots (one
+    batched suffix prefill against their pinned prefix pages);
+    ``step()`` advances every live row by one ``chunk``-step decode;
+    retirements land in ``pop_retired()``.  ``max_suffix_len`` bounds
+    the suffix tokens a request may carry (capacity is a compiled
+    shape); requests beyond ``free_slots`` are the caller's to queue —
+    admission control IS the scheduler's drain loop.
+    """
+
+    def __init__(self, engine, *, max_slots: int = 8, chunk: int = 4,
+                 max_suffix_len: int = 64) -> None:
+        self.engine = engine
+        self.batch = InflightBatch(engine, max_slots, chunk, max_suffix_len)
+        self._retired: List[RowResult] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self.batch.free)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self.batch.live)
+
+    def pop_retired(self) -> List[RowResult]:
+        out, self._retired = self._retired, []
+        return out
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def admit(self, requests: Sequence[Request], payloads=None,
+              now: float = 0.0,
+              on_retire: Optional[Callable[[Any], None]] = None) -> float:
+        """Prefill ``requests`` into free slots; returns the admission's
+        prefill wall seconds (each row is billed ``t / k``).
+
+        Prefix block references are taken PER ROW for the row's
+        lifetime, so a pool eviction mid-flight can never recycle the
+        pages a survivor is still walking; per-row suffix blocks are
+        reserved in the main arena (this is what couples admission to
+        arena pressure — the allocation may reclaim cold POOLED
+        prefixes, but pinned in-flight ones survive).  Rows whose first
+        token is already EOS (or whose budget is one token) retire
+        immediately without entering decode.
+        """
+        eng, b = self.engine, self.batch
+        pool = eng.block_pool
+        k = len(requests)
+        assert 0 < k <= len(b.free), (k, len(b.free))
+        if payloads is None:
+            payloads = [None] * k
+        assert len(payloads) == k
+        states = [r.prefix for r in requests]
+        for st in states:
+            if st is not None:
+                assert st.is_paged and st.block_pool is pool, \
+                    "continuous admission needs page-table states " \
+                    "from this engine"
+        for r in requests:
+            assert len(r.suffix_tokens) <= b.t_max, \
+                (len(r.suffix_tokens), b.t_max)
+        slots = b.free[:k]
+
+        t0 = time.perf_counter()
+        kb = bucket_pow2(k)
+        suffixes = [list(r.suffix_tokens) for r in requests] \
+            + [[EOS]] * (kb - k)                     # batch padding rows
+        offs = np.asarray([st.prefix_len if st else 0 for st in states]
+                          + [0] * (kb - k), np.int32)
+        pinned = 0
+        flat: Optional[List[int]] = None
+        try:
+            for st in states:
+                if st is not None:
+                    pool.incref(st.page.blocks)      # per-row, per-lifetime
+                pinned += 1
+            # per-row main-arena suffix reservation; may reclaim cold
+            # pooled prefixes (never pinned in-flight ones).  Plain
+            # alloc, no pos reset: these blocks are budget, the KV
+            # lives in the sub-arena (any later tenant resets/overwrites)
+            flat = pool.alloc(k * b.nbs)
+            for j in range(k):
+                pool.note_tokens(flat[j * b.nbs:(j + 1) * b.nbs],
+                                 len(requests[j].suffix_tokens))
+            eng.cache_mgr.stats.record_blocks(pool)
+
+            nbp = b.nbp_for(states)
+            prow = np.full((kb, nbp), NULL_BLOCK, np.int32)
+            for j, st in enumerate(states):
+                if st is not None:
+                    prow[j] = st.page.row(nbp)
+            srow = np.full((kb, b.nbs), b.trash_row, np.int32)
+            for j, s in enumerate(slots):
+                srow[j] = b.slot_rows(s)
+            b.reset_slots(slots)
+            embeds, positions, valid, lens = eng._embed_padded(
+                suffixes, None, offs, pad_to=b.t_max)
+            prefill = eng._prefill_jit(kb, embeds.shape[1])
+            logits = self._prefill_into_sub(prefill, embeds, positions,
+                                            valid, offs, prow, srow)
+            first = np.asarray(jax.block_until_ready(
+                jnp.argmax(logits, axis=-1).astype(jnp.int32)))
+            t_prefill = time.perf_counter() - t0
+        except BaseException:
+            # unwind: no phantom prefix refs, no leaked reservations
+            for st in states[:pinned]:
+                if st is not None:
+                    pool.decref(st.page.blocks)
+            if flat is not None:
+                pool.decref(flat)
+            raise
+
+        for j, (slot, req, st) in enumerate(zip(slots, requests, states)):
+            row = RowState(
+                payload=payloads[j], state=st,
+                blocks=flat[j * b.nbs:(j + 1) * b.nbs],
+                suffix_len=len(req.suffix_tokens), offset=int(offs[j]),
+                pos=int(offs[j]) + int(lens[j]), tok=int(first[j]),
+                emitted=[int(first[j])],
+                steps_left=eng.max_new_tokens - 1,
+                admitted_s=now, prefill_s=t_prefill / k,
+                on_retire=on_retire)
+            b.slots[slot] = row
+            if row.tok == EOS or row.steps_left == 0:
+                self._retire(slot)       # no decode owed: retire now
+        return t_prefill
+
+    def _prefill_into_sub(self, prefill, embeds, positions, valid,
+                          offs, prow, srow):
+        """Suffix prefill with the sub-arena as the (donated) cache and
+        the main arena as the read-only prefix source — the admission
+        counterpart of the chunked decode's carry split.  Returns the
+        last-token logits."""
+        eng, b = self.engine, self.batch
+        out = b._with_sub(lambda sub: _cache_last(prefill(
+            eng.params, embeds, positions, valid, sub, eng.block_pool.arena,
+            jnp.asarray(offs), jnp.asarray(prow), jnp.asarray(srow))))
+        return out[0]
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def step(self) -> float:
+        """Advance every live row by one ``chunk``-step decode; retire
+        rows that emit EOS or exhaust their budget.  Returns the chunk's
+        wall seconds (0.0 with nothing live).  Each live row accrues
+        EXACTLY ``wall / live`` decode seconds for this chunk — rows
+        that already retired accrue nothing."""
+        eng, b = self.engine, self.batch
+        live = b.live
+        if not live:
+            return 0.0
+        n = b.num_slots
+        tok = np.full(n, EOS, np.int32)
+        pos = np.zeros(n, np.int32)
+        done = np.ones(n, bool)
+        offs = np.zeros(n, np.int32)
+        states = [b.slots[i].state if b.slots[i] else None
+                  for i in range(n)]
+        nbp = b.nbp_for(states)
+        prow = np.full((n, nbp), NULL_BLOCK, np.int32)
+        for i in live:
+            r = b.slots[i]
+            tok[i], pos[i], done[i], offs[i] = r.tok, r.pos, False, r.offset
+            if r.state is not None:
+                prow[i] = r.state.page.row(nbp)
+
+        t0 = time.perf_counter()
+        toks = b._with_sub(lambda sub: eng.decode_step(
+            tok, pos, done, sub, offs, prow, b._sub_pages,
+            steps=b.chunk))[0]
+        out = np.asarray(jax.block_until_ready(toks))
+        wall = time.perf_counter() - t0
+
+        share = wall / len(live)
+        for i in live:
+            r = b.slots[i]
+            r.decode_s += share
+            finished = False
+            for t in out[i].tolist():
+                r.emitted.append(int(t))
+                r.steps += 1
+                r.steps_left -= 1
+                if t == EOS or r.steps_left == 0:
+                    finished = True
+                    break
+            if finished:
+                self._retire(i)
+            else:
+                r.tok = int(out[i, -1])
+                r.pos += b.chunk
+                # keep the fragmentation gauge honest mid-flight: the
+                # reservation now also stores this row's decode tokens
+                pool = eng.block_pool
+                pool.note_tokens(r.blocks, r.suffix_len + r.steps)
+        return wall
+
+    def flush(self, max_chunks: int = 10_000) -> None:
+        """Decode until every in-flight row retires (tests/teardown)."""
+        for _ in range(max_chunks):
+            if not self.in_flight:
+                return
+            self.step()
+        raise RuntimeError("flush did not drain the in-flight batch")
+
+    # ------------------------------------------------------------------
+    # warmup (pre-compile shape buckets; excluded from timings/stats)
+    # ------------------------------------------------------------------
+    def warmup(self, prefix_lens: Sequence[int],
+               suffix_len: int = 8) -> None:
+        """Pre-compile the continuous shape grid: for one
+        representative prefix per page-width bucket in ``prefix_lens``
+        and every admission batch bucket ``kb ∈ {1, 2, ..., slots}``,
+        run one admit + chunk + flush.  Online admission composition
+        depends on arrival dynamics, so any (batch, width) combination
+        can appear at any moment — compile them up front or an XLA
+        compile lands inside a reported TTFT (EXPERIMENTS.md
+        protocol).  Warmup traffic is not real serving: CacheStats are
+        shielded and the throwaway prefix states are released."""
+        from repro.core.cache import CacheStats
+        eng, b = self.engine, self.batch
+        assert self.in_flight == 0, "warm up an idle engine"
+        seen, keep = set(), []
+        for p in sorted(int(p) for p in prefix_lens):
+            w = bucket_pow2(blocks_for(p, eng.block_size))
+            if w not in seen:
+                seen.add(w)
+                keep.append(p)
+        saved = eng.cache_mgr.stats
+        eng.cache_mgr.stats = CacheStats()
+        try:
+            for plen in keep:
+                st, _ = eng.prefill_prefix([EOS] * plen, _record=False)
+                try:
+                    # every admission-batch BUCKET a live drain can hit:
+                    # k <= usable rows bucket to bucket_pow2(k), which
+                    # for non-power-of-two usable exceeds usable itself
+                    for kb in sorted({bucket_pow2(k)
+                                      for k in range(1, b.usable + 1)}):
+                        sfx = [EOS] * min(suffix_len, b.t_max)
+                        self.admit([Request(list(sfx), st)
+                                    for _ in range(min(kb, b.usable))])
+                        self.flush()
+                        self.pop_retired()
+                    # the warm rows may all have retired AT ADMISSION
+                    # (instant EOS / one-token budget), in which case
+                    # flush() never ran a chunk — force one all-done
+                    # decode_step so this width's chunked-decode
+                    # executable is traced regardless
+                    n = b.num_slots
+                    nbp = b.nbp_for([st])
+                    prow = np.full((n, nbp), NULL_BLOCK, np.int32)
+                    prow[0] = st.page.row(nbp)
+                    b._with_sub(lambda sub: eng.decode_step(
+                        np.full(n, EOS, np.int32), np.zeros(n, np.int32),
+                        np.ones(n, bool), sub, np.zeros(n, np.int32),
+                        prow, b._sub_pages, steps=b.chunk))
+                finally:
+                    st.release()
+        finally:
+            eng.cache_mgr.stats = saved
+
+    # ------------------------------------------------------------------
+    # retirement
+    # ------------------------------------------------------------------
+    def _retire(self, slot: int) -> None:
+        """Free the row's arena footprint THE MOMENT it is done:
+        suffix reservation back to the free list, prefix pins dropped
+        (an evicted-but-in-flight prefix may free here), exact per-row
+        accounting recorded."""
+        eng, b = self.engine, self.batch
+        pool = eng.block_pool
+        r = b.slots[slot]
+        b.slots[slot] = None
+        # freeing IS the token-count reconciliation: decref zeroes the
+        # freed blocks' stored-token counters, so the gauge never keeps
+        # charging a retired row's unconsumed decode budget
+        pool.decref(r.blocks)
+        if r.state is not None:
+            pool.decref(r.state.page.blocks)
+        stats = eng.cache_mgr.stats
+        plen = r.state.prefix_len if r.state is not None else 0
+        stats.record_served(1)
+        stats.record_member(plen + r.suffix_len, r.suffix_len)
+        stats.finalize()
+        stats.record_blocks(pool)
+        toks = eng._cut(np.asarray(r.emitted, np.int32))
+        if r.on_retire is not None:
+            r.on_retire(r.payload)
+        self._retired.append(RowResult(
+            payload=r.payload, tokens=toks, prefill_s=r.prefill_s,
+            decode_s=r.decode_s, decode_steps=r.steps,
+            admitted_s=r.admitted_s))
+
+
+def _cache_last(out):
+    """(cache, logits, lengths) -> (logits, lengths, cache): put the
+    donated sub-arena LAST for ``InflightBatch._with_sub``."""
+    cache, logits, lengths = out
+    return logits, lengths, cache

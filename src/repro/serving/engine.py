@@ -27,7 +27,10 @@ mix members of any number of clusters.  Backends:
 
 ``generate_with_prefix`` / ``generate_multi_prefix`` remain as thin
 wrappers that build ``Request`` lists; ``generate`` is the vanilla
-no-cache baseline.  ``prefill_prefix`` computes the representative
+no-cache baseline.  ``decode_step`` exposes the decode scan in fixed
+step chunks for continuous in-flight batching
+(``serving/continuous.py``, DESIGN.md §9) — ``serve`` keeps the
+monolithic scan and is its drain-serve A/B oracle.  ``prefill_prefix`` computes the representative
 prefix at batch 1 and (paged backend) immediately re-homes it into
 arena blocks — the returned ``PrefixState`` is a page table, not a
 buffer.
@@ -109,6 +112,8 @@ class ServingEngine:
         self.cache_mgr = ClusterCacheManager()
         self._prefill_jit = functools.lru_cache(maxsize=64)(self._make_prefill)
         self._decode_jit = functools.lru_cache(maxsize=16)(self._make_decode)
+        self._decode_step_jit = functools.lru_cache(maxsize=32)(
+            self._make_decode_step)
         # Recurrent mixers (Mamba / RG-LRU) carry state through every
         # consumed token — right-padding would corrupt it (attention masks
         # padded slots; scans cannot).  Such archs get length-exact
@@ -204,6 +209,58 @@ class ServingEngine:
 
         return jax.jit(decode, donate_argnums=(3,))
 
+    def _make_decode_step(self, batch: int, steps: int):
+        """Chunked decode for continuous in-flight batching
+        (DESIGN.md §9): the same greedy scan body as ``_make_decode``
+        but over a FIXED chunk of ``steps`` tokens with the carry
+        (token / position / done) passed in and the emitted tokens
+        returned — the host retires finished rows and admits newly
+        arrived ones between chunks instead of burning the whole
+        ``max_new_tokens`` budget per batch.  Chunking a scan preserves
+        carry semantics exactly, so the emitted stream is
+        token-identical to the monolithic decode.  The carried
+        ``cache`` is the compact per-slot suffix sub-arena
+        (``KVBlockPool.sub_arena``); the main arena rides in ``prefix``
+        read-only."""
+        cfg = self.cfg
+
+        def decode_step(params, tok, pos, done, cache, prefix, slot_offset,
+                        prefix_pages, suffix_pages):
+            def body(carry, _):
+                cache, tok, pos, done = carry
+                emb = M.embed_tokens(params, tok[:, None])
+                hidden, cache, _ = M.forward(params, cfg, emb, pos[:, None],
+                                             cache=cache, prefix=prefix,
+                                             slot_offset=slot_offset,
+                                             prefix_pages=prefix_pages,
+                                             suffix_pages=suffix_pages)
+                logits = M.unembed(params, cfg, hidden)[:, 0]
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                done = done | (tok == EOS)
+                nxt = jnp.where(done, EOS, nxt)
+                return (cache, nxt, pos + 1, done), nxt
+
+            (cache, *_), toks = jax.lax.scan(body, (cache, tok, pos, done),
+                                             None, length=steps)
+            return toks.T, cache
+
+        return jax.jit(decode_step, donate_argnums=(4,))
+
+    def decode_step(self, tok, pos, done, sub, offs, prefix_rows,
+                    suffix_rows, *, steps: int):
+        """Run one ``steps``-token decode chunk over an in-flight batch
+        (continuous serving facade; see ``serving/continuous.py``).
+
+        ``sub`` is DONATED: callers must treat their handle as consumed
+        and re-home the returned sub-arena (exception-safe, like
+        ``_with_arena``).  Returns ``(tokens [B, steps], sub)``."""
+        fn = self._decode_step_jit(int(len(tok)), int(steps))
+        return fn(self.params, jnp.asarray(tok, jnp.int32),
+                  jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool),
+                  sub, self.block_pool.arena,
+                  jnp.asarray(offs, jnp.int32), jnp.asarray(prefix_rows),
+                  jnp.asarray(suffix_rows))
+
     # ------------------------------------------------------------------
     # embedding helpers
     # ------------------------------------------------------------------
@@ -289,18 +346,21 @@ class ServingEngine:
         prefill = self._prefill_jit(1, embeds.shape[1])
         cache, _, _ = prefill(self.params, embeds, positions, valid, cache,
                               None, 0, None, None)
+        n_soft = 0 if soft is None else int(soft.shape[0])
         if self.use_paged and enc is None:
             page = self.block_pool.write_prefix(cache, int(lens[0]))
             jax.block_until_ready(self.block_pool.arena)
             dt = time.perf_counter() - t0
             return PrefixState(cache=None, prefix_len=int(lens[0]),
                                capacity=capacity, page=page,
-                               block_pool=self.block_pool), dt
+                               block_pool=self.block_pool,
+                               n_soft=n_soft), dt
         jax.block_until_ready(cache)
         dt = time.perf_counter() - t0
         state = PrefixState(cache=cache, prefix_len=int(lens[0]),
                             capacity=capacity,
-                            enc_len=0 if enc is None else enc.shape[1])
+                            enc_len=0 if enc is None else enc.shape[1],
+                            n_soft=n_soft)
         return state, dt
 
     # ------------------------------------------------------------------
@@ -310,10 +370,12 @@ class ServingEngine:
               ) -> Tuple[List[List[int]], dict]:
         """Serve one batch of requests; THE serving path (DESIGN.md §8).
 
-        Rows may reference any mix of prefix states (or none, paged
-        backend).  Attention-only stacks run the paged backend; stateful
-        and cross-attention stacks transparently take the dense fallback
-        — callers never branch on architecture.
+        Rows may reference any mix of prefix states, or none — the
+        paged backend gives prefixless rows an all-NULL prefix table,
+        the dense fallback routes them through a no-prefix group.
+        Attention-only stacks run the paged backend; stateful and
+        cross-attention stacks transparently take the dense fallback —
+        callers never branch on architecture.
         """
         n = len(requests)
         assert n > 0, "serve() needs at least one request"
@@ -420,6 +482,11 @@ class ServingEngine:
             nbs = blocks_for(suffix_cap, self.block_size)
             flat = pool.alloc_suffix(b * nbs)        # private, pos reset
             suffix_rows = np.asarray(flat, np.int32).reshape(b, nbs)
+            # charge what prefill is about to store BEFORE the gauge is
+            # read: observing freshly allocated (zero-token) suffix
+            # blocks would overstate fragmentation for the whole batch
+            for i in range(b):
+                pool.note_tokens(suffix_rows[i], int(lens[i]))
             # observe the HBM high-water mark: resident prefixes + every
             # in-flight suffix block (gauge re-read after frees below)
             self.cache_mgr.stats.record_blocks(pool)
@@ -435,9 +502,6 @@ class ServingEngine:
             t_prefill = time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            for i in range(b):
-                pool.note_tokens(suffix_rows[i],
-                                 int(lens[i]) + self.max_new_tokens)
             lengths = jnp.asarray(offs + lens, jnp.int32)
             decode = self._decode_jit(b)
             # Decode writes only this batch's suffix blocks, so the
@@ -453,6 +517,15 @@ class ServingEngine:
                             offj, prow, sub_pages)
             out = np.asarray(jax.block_until_ready(out))
             t_decode = time.perf_counter() - t0
+            # reconcile token counts at row retirement: a row that hit
+            # EOS early stored fewer decode tokens than the
+            # ``max_new_tokens`` budget — charging the budget would
+            # understate the fragmentation the gauge exists to expose
+            for i in range(b):
+                row = out[i].tolist()
+                gen = (row.index(EOS) + 1 if EOS in row else len(row))
+                pool.note_tokens(suffix_rows[i], int(lens[i]) + gen)
+            self.cache_mgr.stats.record_blocks(pool)
         finally:
             if flat is not None:
                 pool.decref(flat)                    # suffix blocks free
@@ -495,14 +568,16 @@ class ServingEngine:
         m = len(requests)
         groups: dict = {}
         for i, r in enumerate(requests):
-            assert r.prefix is not None, \
-                "the dense backend serves prefix-backed requests " \
-                "(use generate() for prefixless baselines)"
-            groups.setdefault(r.prefix.uid, (r.prefix, []))[1].append(i)
+            # prefixless rows form their own group and take the
+            # no-prefix path — the paged backend serves them fine, so
+            # the stateful / cross-attn fallback must too (callers
+            # never branch on architecture)
+            uid = r.prefix.uid if r.prefix is not None else None
+            groups.setdefault(uid, (r.prefix, []))[1].append(i)
         outs: List = [None] * m
         agg = {"prefill_s": 0.0, "decode_s": 0.0, "batch": 0,
                "split_prefix": False, "paged": False,
-               "num_prefixes": len(groups),
+               "num_prefixes": sum(1 for k in groups if k is not None),
                "prefill_share": [0.0] * m, "decode_share": [0.0] * m}
         for state, idxs in groups.values():
             sub, t = self._serve_with_prefix(
@@ -517,9 +592,12 @@ class ServingEngine:
             agg["split_prefix"] = agg["split_prefix"] or t["split_prefix"]
         return outs, agg
 
-    def _serve_with_prefix(self, state: PrefixState,
+    def _serve_with_prefix(self, state: Optional[PrefixState],
                            suffix_token_lists: Sequence[List[int]]
                            ) -> Tuple[List[List[int]], dict]:
+        """Serve one prefix group (``state=None`` = the prefixless
+        group: rows attend nothing but their own tokens, exactly like
+        ``generate`` but batched)."""
         if self._stateful:
             groups = {}
             for i, tkl in enumerate(suffix_token_lists):
@@ -549,20 +627,28 @@ class ServingEngine:
         b = bucket_pow2(n)
         pads = [list(t) for t in suffix_token_lists] + \
                [[EOS]] * (b - n)                        # batch padding rows
-        use_split = self.use_split_prefix and state.enc_len == 0
+        plen = state.prefix_len if state is not None else 0
+        use_split = (state is not None and self.use_split_prefix
+                     and state.enc_len == 0)
         t0 = time.perf_counter()
         pad_to = len(suffix_token_lists[0]) if self._stateful else None
         if self._stateful:
             pads = [list(t)[:pad_to] + [EOS] * (pad_to - len(t))
                     if len(t) < pad_to else list(t) for t in pads]
         embeds, positions, valid, lens = self._embed_padded(
-            pads, None, state.prefix_len, pad_to=pad_to)
+            pads, None, plen, pad_to=pad_to)
         if use_split:
             # Split cascade: B members cost prefix_capacity + B×suffix
             # slots of HBM; the prefix KV is attended in place.
             cache = M.init_suffix_cache(
                 self.cfg, b, self._suffix_capacity_for(embeds.shape[1]))
             prefix, offset = state.cache, jnp.int32(state.prefix_len)
+        elif state is None:
+            # no-prefix path: a fresh cache sized for suffix + decode;
+            # the row's own tokens are the whole sequence
+            cache = M.init_cache(
+                self.cfg, b, self._suffix_capacity_for(embeds.shape[1]))
+            prefix, offset = None, 0
         else:
             template = jax.eval_shape(
                 lambda: M.init_cache(self.cfg, b, state.capacity,
@@ -577,7 +663,7 @@ class ServingEngine:
         t_prefill = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        lengths = jnp.asarray(state.prefix_len + lens, jnp.int32)
+        lengths = jnp.asarray(plen + lens, jnp.int32)
         decode = self._decode_jit(b)
         out, _ = decode(self.params, first, lengths, cache, prefix, offset,
                         None, None)

@@ -14,6 +14,16 @@ Online serving adds ``queue_wait_s`` — the time a request sat in the
 arrival queue before its micro-batch started (zero for the offline
 pipeline, where every query is present at t=0 by construction).  It
 counts toward TTFT: a streaming user experiences the wait.
+
+Attribution exactness (DESIGN.md §9): drain-serve batches can only
+split a batch's decode time uniformly (``t / n`` shares — a row that
+hit EOS on step 1 is billed the same as one that burned the whole
+budget).  Continuous in-flight batching records EXACT per-row decode
+attribution: each decode chunk's wall time is shared by the rows that
+were actually live in it, and ``decode_steps`` counts the steps the row
+really consumed (a retired row stops accruing).  ``trace_summary``
+reduces a record list to the benchmark quantities (mean/p50/p95 TTFT
+and queue wait).
 """
 from __future__ import annotations
 
@@ -37,7 +47,9 @@ class QueryRecord:
     prefill_s: float = 0.0            # own (suffix) prefill
     first_token_s: float = 0.0
     decode_s: float = 0.0             # tokens after the first
-    prompt_tokens: int = 0
+    decode_steps: int = 0             # decode-scan steps the row consumed
+                                      # (exact under continuous serving)
+    prompt_tokens: int = 0            # full prompt incl. soft-prompt embeds
     cached_tokens: int = 0            # tokens served from the prefix cache
 
     @property
@@ -83,6 +95,27 @@ class RunSummary:
     def row(self) -> str:
         return (f"{self.name:28s} ACC {self.acc:6.2f}  RT {self.rt_ms:8.2f}ms  "
                 f"TTFT {self.ttft_ms:8.2f}ms  PFTT {self.pftt_ms:8.2f}ms")
+
+
+def trace_summary(records: List[QueryRecord]) -> dict:
+    """Reduce one served trace to the streaming-latency quantities the
+    serving benchmarks compare (all in ms): mean/p50/p95 TTFT, mean/p95
+    arrival-queue wait, mean decode time and steps.  p95 queue wait is
+    the head-of-line-blocking witness — a drain-serve loop parks late
+    arrivals behind a whole batch's decode, which the mean hides."""
+    ttft = np.array([r.ttft for r in records], np.float64)
+    wait = np.array([r.queue_wait_s for r in records], np.float64)
+    dec = np.array([r.decode_s for r in records], np.float64)
+    return {
+        "mean_ttft_ms": round(1e3 * float(np.mean(ttft)), 3),
+        "p50_ttft_ms": round(1e3 * float(np.median(ttft)), 3),
+        "p95_ttft_ms": round(1e3 * float(np.percentile(ttft, 95)), 3),
+        "mean_queue_wait_ms": round(1e3 * float(np.mean(wait)), 3),
+        "p95_queue_wait_ms": round(1e3 * float(np.percentile(wait, 95)), 3),
+        "mean_decode_ms": round(1e3 * float(np.mean(dec)), 3),
+        "mean_decode_steps": round(
+            float(np.mean([r.decode_steps for r in records])), 3),
+    }
 
 
 def speedup(base: RunSummary, ours: RunSummary) -> dict:

@@ -26,7 +26,11 @@ one, so this module replaces the one-shot cut with three online pieces
   between clusters, each row walking its own cluster's prefix page
   table over the shared block arena (DESIGN.md §8).  The engine picks
   the backend (paged / dense fallback); this module never branches on
-  architecture.
+  architecture.  ``serve_continuous`` is the continuous-batching
+  counterpart (DESIGN.md §9): it ADMITS a drained group into a
+  ``ContinuousEngine``'s free slots (states pinned per row, released
+  at retirement) and leaves decode chunking to the caller's event
+  loop.
 
 Exactness contract: the multi-prefix path produces token-identical
 outputs to serving each cluster separately through the dense cascade
@@ -210,6 +214,20 @@ class ArrivalQueue:
 # the scheduler: assigner + pool + engine
 # ======================================================================
 @dataclasses.dataclass
+class AdmittedQuery:
+    """Per-query outcome of one CONTINUOUS admission (DESIGN.md §9).
+    Travels as the row's payload through ``ContinuousEngine`` and comes
+    back in its ``RowResult`` at retirement — which also releases this
+    row's pool pin (``on_retire``)."""
+    payload: Any                # caller's own handle
+    cluster_id: int
+    prefix_len: int             # tokens in the cluster prefix it reused
+    pool_hit: bool              # prefix served from the pool
+    spawned: bool               # this query opened the cluster
+    prefix_share_s: float       # share of any prefix prefill this admission paid
+
+
+@dataclasses.dataclass
 class ServedQuery:
     """Per-query outcome of one scheduled micro-batch."""
     tokens: List[int]           # generated token ids
@@ -324,3 +342,65 @@ class OnlineScheduler:
                 prefill_s=t["prefill_share"][i],
                 decode_s=t["decode_share"][i]))
         return served
+
+    # ------------------------------------------------------------------
+    def serve_continuous(self, cont, embeddings: Sequence[np.ndarray],
+                         subgraphs: Sequence[Subgraph],
+                         suffix_token_lists: Sequence[List[int]],
+                         payloads: Optional[Sequence[Any]] = None,
+                         now: float = 0.0
+                         ) -> Tuple[List[AdmittedQuery], float]:
+        """Assign + materialize prefixes + ADMIT one group of arrivals
+        into ``cont`` (a ``ContinuousEngine``) — the continuous
+        counterpart of ``serve_batch`` (DESIGN.md §9).  Decode is NOT
+        run here: the caller's event loop interleaves ``cont.step()``
+        chunks with further admissions, which is exactly what removes
+        the drain-serve loop's head-of-line blocking.
+
+        Every row takes its own pool pin (first acquisition through
+        ``ensure_state(pin=True)``, additional members via ``pin``);
+        the pin is released per row at retirement (``on_retire``), so a
+        cluster stays unevictable exactly as long as any of its members
+        is in flight.  Returns ``(admitted, prefill_s)`` — the
+        ``AdmittedQuery`` records come back as ``RowResult.payload``
+        from ``cont.pop_retired()``.
+        """
+        from repro.serving.engine import Request
+        n = len(suffix_token_lists)
+        assert len(embeddings) == n and len(subgraphs) == n
+        assert n <= cont.free_slots, (n, cont.free_slots)
+        if payloads is None:
+            payloads = [None] * n
+        assigns = [self.assigner.assign(e, sg)
+                   for e, sg in zip(embeddings, subgraphs)]
+        order = sorted(set(a.cluster_id for a in assigns))
+        members_of = {cid: sum(1 for a in assigns if a.cluster_id == cid)
+                      for cid in order}
+        states, hits, costs = {}, {}, {}
+        pins: List[int] = []            # one entry per pin taken
+        try:
+            for cid in order:
+                st, hit, dt = self.ensure_state(cid, pin=True)
+                pins.append(cid)
+                states[cid], hits[cid], costs[cid] = st, hit, dt
+                for _ in range(members_of[cid] - 1):
+                    self.pool.pin(cid)  # one pin per ROW of the cluster
+                    pins.append(cid)
+            admitted = [AdmittedQuery(
+                payload=payloads[i], cluster_id=a.cluster_id,
+                prefix_len=states[a.cluster_id].prefix_len,
+                pool_hit=hits[a.cluster_id], spawned=a.is_new,
+                prefix_share_s=(costs[a.cluster_id]
+                                / members_of[a.cluster_id]))
+                for i, a in enumerate(assigns)]
+            prefill_s = cont.admit(
+                [Request(suffix_tokens=list(s),
+                         prefix=states[a.cluster_id])
+                 for a, s in zip(assigns, suffix_token_lists)],
+                payloads=admitted, now=now,
+                on_retire=lambda aq: self.pool.release(aq.cluster_id))
+        except BaseException:
+            for cid in pins:
+                self.pool.release(cid)
+            raise
+        return admitted, prefill_s

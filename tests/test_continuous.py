@@ -1,0 +1,423 @@
+"""Continuous in-flight batching (DESIGN.md §9): token-exactness vs the
+drain-serve oracle, mid-flight retirement freeing suffix blocks,
+admission under arena pressure vs pinned in-flight prefixes, the
+prefixless dense fallback, and the accounting bugfix satellites."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.prefix_pool import PrefixPool
+from repro.data.tokenizer import EOS, Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.metrics import QueryRecord, trace_summary
+from repro.serving.scheduler import OnlineClusterAssigner, OnlineScheduler
+
+
+def _gqa_cfg(vocab, dtype="float32", impl="xla"):
+    return ModelConfig(name="cont-test", family="dense", num_layers=3,
+                       d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+                       d_ff=160, vocab_size=vocab, dtype=dtype,
+                       attention_impl=impl)
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a graph of nodes and edges answers questions"])
+
+
+def _engine(tok, key=0, dtype="float32", impl="xla", **kw):
+    cfg = _gqa_cfg(tok.vocab_size, dtype, impl)
+    params = M.init_params(jax.random.PRNGKey(key), cfg)
+    kw.setdefault("max_cache_len", 512)
+    kw.setdefault("max_new_tokens", 5)
+    return ServingEngine(params, cfg, tok, **kw)
+
+
+# ----------------------------------------------------------------------
+# token exactness vs the drain-serve oracle
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+def test_continuous_token_exact_vs_drain_oracle(tok, dtype, impl):
+    """Mixed-cluster rows admitted in STAGGERED groups (one group lands
+    mid-decode of the previous, like a Poisson trace) must reproduce
+    the drain-serve batch token for token: chunked decode + mid-flight
+    admission + retirement reschedule work, never change math."""
+    eng = _engine(tok, dtype=dtype, impl=impl)
+    st0, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True))
+    st1, _ = eng.prefill_prefix(tok.encode(
+        "the quick brown fox jumps over the lazy dog " * 8, bos=True))
+    assert len(st0.page.blocks) < len(st1.page.blocks)
+    sfx = [tok.encode("answers questions"), tok.encode("and edges"),
+           tok.encode("lazy dog jumps"), tok.encode("the quick")]
+    pids = [0, 1, 1, 0]
+    oracle, t = eng.generate_multi_prefix([st0, st1], pids, sfx,
+                                          _record=False)
+    assert t["paged"]
+
+    cont = ContinuousEngine(eng, max_slots=4, chunk=2, max_suffix_len=8)
+    base = eng.block_pool.blocks_in_use
+    cont.admit([Request(sfx[0], st0), Request(sfx[1], st1)],
+               payloads=[0, 1])
+    cont.step()                      # group 2 arrives mid-decode
+    cont.admit([Request(sfx[2], st1), Request(sfx[3], st0)],
+               payloads=[2, 3])
+    cont.flush()
+    res = {r.payload: r for r in cont.pop_retired()}
+    assert [res[i].tokens for i in range(4)] == oracle
+    # every reservation and prefix pin released with the rows
+    assert eng.block_pool.blocks_in_use == base
+    # exact attribution: decode shares sum to what was measured, and a
+    # row never consumes more steps than its budget
+    assert all(0 <= res[i].decode_steps <= eng.max_new_tokens - 1
+               for i in range(4))
+    st0.release()
+    st1.release()
+
+
+def test_continuous_matches_drain_through_serve_stream():
+    """Pipeline-level A/B: the SAME Poisson trace served continuous and
+    drain produces identical generations per query, and the continuous
+    records carry exact decode-step counts."""
+    from repro.data.scenegraph import generate_scene_graph
+    from repro.rag.pipeline import GraphRAGPipeline
+    from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+    from repro.rag.text_encoder import TextEncoder
+
+    graph, queries = generate_scene_graph()
+    tok2 = Tokenizer.train([q.question + " " + q.answer
+                            for q in queries] + graph.node_text,
+                           max_vocab=2048)
+    cfg = ModelConfig(name="cont-stream", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=tok2.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(32))
+    pipe = GraphRAGPipeline(
+        index=index, retriever=GRetrieverRetriever(index),
+        engine=ServingEngine(params, cfg, tok2, max_cache_len=512,
+                             max_new_tokens=4),
+        tokenizer=tok2, use_soft_prompt=False)
+    items = queries[:6]
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(0.05, size=len(items)))
+
+    recs_c, summ_c, _ = pipe.serve_stream(
+        items, arrivals, max_batch=4, threshold=0.25,
+        mode="continuous", chunk=2)
+    recs_d, _, _ = pipe.serve_stream(
+        items, arrivals, max_batch=4, threshold=0.25, mode="drain")
+    assert [r.generated for r in recs_c] == [r.generated for r in recs_d]
+    assert all(r.queue_wait_s >= 0 for r in recs_c)
+    assert all(0 <= r.decode_steps <= 3 for r in recs_c)
+    assert summ_c.num_queries == len(items)
+    s = trace_summary(recs_c)
+    assert s["p95_queue_wait_ms"] >= 0
+    assert s["mean_decode_steps"] > 0
+
+
+# ----------------------------------------------------------------------
+# mid-flight retirement
+# ----------------------------------------------------------------------
+def test_midflight_retirement_frees_suffix_blocks(tok):
+    """A row that exhausts its budget retires while another row is
+    still decoding: its main-arena suffix reservation returns to the
+    free list AT RETIREMENT (allocator free-count assertion), not when
+    the whole batch drains."""
+    eng = _engine(tok, max_new_tokens=4)
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True))
+    cont = ContinuousEngine(eng, max_slots=2, chunk=1, max_suffix_len=8)
+    nbs = cont.batch.nbs
+    cont.admit([Request(tok.encode("answers questions"), st)],
+               payloads=["a"])
+    cont.step()                                  # a: 1 of 3 steps
+    cont.step()                                  # a: 2 of 3 steps
+    cont.admit([Request(tok.encode("and edges"), st)], payloads=["b"])
+    free_before = eng.block_pool.free_blocks
+    freed_at_retire = None
+    for _ in range(10):
+        cont.step()
+        retired = cont.pop_retired()
+        if retired and freed_at_retire is None:
+            assert retired[0].payload == "a"     # admitted first, out first
+            freed_at_retire = eng.block_pool.free_blocks - free_before
+            inflight_at_retire = cont.in_flight
+        if not cont.in_flight:
+            break
+    assert freed_at_retire is not None
+    # a's reservation freed the moment it retired...
+    assert freed_at_retire >= nbs
+    # ...while b was still in flight (no drain barrier)
+    assert inflight_at_retire == 1
+    st.release()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_instant_retirement_when_no_decode_owed(tok):
+    """A row that owes no decode (budget of one token — and the same
+    path serves a first-token EOS) retires AT ADMISSION, consuming zero
+    scan steps; the drain loop burned ``max_new_tokens - 1`` scan steps
+    on every such row."""
+    eng = _engine(tok, max_new_tokens=1)
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True))
+    sfx = tok.encode("answers questions")
+    oracle, _ = eng.generate_with_prefix(st, [sfx], _record=False)
+    cont = ContinuousEngine(eng, max_slots=2, chunk=2, max_suffix_len=8)
+    cont.admit([Request(sfx, st)], payloads=["x"])
+    res = cont.pop_retired()                     # no step() needed
+    assert len(res) == 1 and res[0].decode_steps == 0
+    assert res[0].tokens == oracle[0]
+    assert cont.in_flight == 0
+    st.release()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_max_slots_cap_honored_at_non_pow2(tok):
+    """The compiled decode batch is a power-of-two bucket, but the
+    caller's concurrency cap must be honored exactly: max_slots=3 admits
+    at most 3 concurrent rows (the 4th compiled row is done-padding)."""
+    eng = _engine(tok)
+    cont = ContinuousEngine(eng, max_slots=3, chunk=2, max_suffix_len=8)
+    assert cont.free_slots == 3
+    assert cont.batch.num_slots == 4
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True))
+    cont.admit([Request(tok.encode("answers"), st) for _ in range(3)])
+    assert cont.free_slots == 0 and cont.in_flight <= 3
+    cont.flush()
+    cont.pop_retired()
+    st.release()
+
+
+def test_warmup_traces_decode_despite_instant_retirement(tok):
+    """Warmup must compile the chunked-decode executable even when every
+    warm row retires at admission (one-token budget), and must cover
+    the TOP admission bucket of a non-power-of-two slot cap (3 drained
+    arrivals bucket to a batch of 4): the first timed chunk or
+    admission may not pay an XLA compile."""
+    eng = _engine(tok, max_new_tokens=1)
+    cont = ContinuousEngine(eng, max_slots=3, chunk=2, max_suffix_len=8)
+    cont.warmup([4])                 # every warm row retires instantly
+    assert cont.in_flight == 0
+    assert eng.block_pool.blocks_in_use == 0
+    # the decode executable for this width bucket is now cached
+    key = (cont.batch.num_slots, cont.batch.chunk)
+    assert eng._decode_step_jit.cache_info().currsize >= 1, key
+
+
+# ----------------------------------------------------------------------
+# admission under arena pressure
+# ----------------------------------------------------------------------
+def test_admission_pressure_cannot_evict_pinned_inflight_prefix(tok):
+    """With the arena nearly full, admitting a NEW cluster's query must
+    reclaim only COLD pooled prefixes; a prefix pinned by an in-flight
+    row survives, and when nothing is evictable the admission fails
+    CLEANLY (pins dropped, in-flight row unharmed and token-exact)."""
+    eng = _engine(tok, arena_blocks=2, max_new_tokens=4)
+    pool = PrefixPool(budget_bytes=1 << 30)      # byte budget never binds
+    pool.attach_block_pool(eng.block_pool)
+    reps = {0: tok.encode("a graph of nodes", bos=True),
+            1: tok.encode("the quick brown fox", bos=True),
+            2: tok.encode("lazy dog jumps over", bos=True)}
+    sched = OnlineScheduler(eng, OnlineClusterAssigner(threshold=1.0),
+                            pool, lambda sg: reps[min(sg.nodes)])
+    from repro.core.subgraph import Subgraph
+    _sg = lambda i: Subgraph.from_lists([i], [])
+    emb = {i: np.array([10.0 * i, 0.0]) for i in range(3)}
+    cont = ContinuousEngine(eng, max_slots=2, chunk=1, max_suffix_len=8)
+
+    sfx = tok.encode("answers")
+    oracle = None
+    # cluster 0: admitted and in flight (1 prefix block + 1 reservation)
+    admitted, _ = sched.serve_continuous(cont, [emb[0]], [_sg(0)], [sfx],
+                                         payloads=["q0"])
+    assert pool.entry(0).refs == 1               # pinned by the row
+    blocks0 = list(pool.entry(0).state.page.blocks)
+    cont.step()                                  # mid-decode
+    # cluster 1: fits only by reclaiming... nothing is cold -> the
+    # prefix PREFILL or reservation hits OutOfBlocks, cluster 0 intact
+    from repro.core.paged import OutOfBlocks
+    free_before = eng.block_pool.free_blocks
+    with pytest.raises(OutOfBlocks):
+        sched.serve_continuous(cont, [emb[1]], [_sg(1)], [sfx],
+                               payloads=["q1"])
+    assert 0 in pool and pool.entry(0).refs == 1   # survived, still pinned
+    assert [eng.block_pool.allocator.refcount(b) for b in blocks0] \
+        == [2] * len(blocks0)                    # pool + in-flight row
+    assert eng.block_pool.free_blocks == free_before   # clean unwind
+    assert cont.free_slots == 1                  # failed row took no slot
+    # the in-flight row still decodes to the exact oracle
+    cont.flush()
+    [res] = cont.pop_retired()
+    st0 = pool.get(0)
+    o, _ = eng.generate_with_prefix(st0, [sfx], _record=False)
+    assert res.tokens == o[0]
+    assert pool.entry(0).refs == 0               # retirement released pin
+    # with the row retired, cluster 0 is COLD: the same admission now
+    # succeeds by evicting it (admission pressure = pool eviction)
+    admitted, _ = sched.serve_continuous(cont, [emb[1]], [_sg(1)], [sfx],
+                                         payloads=["q1"])
+    assert 0 not in pool and 1 in pool
+    assert pool.stats.pool_evictions >= 1
+    cont.flush()
+
+
+# ----------------------------------------------------------------------
+# satellite: prefixless requests through the dense fallback
+# ----------------------------------------------------------------------
+def test_serve_dense_prefixless_matches_generate(tok):
+    """Regression: ``serve`` on a prefixless request used to assert out
+    on the dense fallback while the paged backend served it fine.  Both
+    the stateful stack and a ``paged=False`` attention stack must now
+    match ``generate`` token for token, mixed with prefixed rows."""
+    # stateful (recurrent) stack: dense fallback is the ONLY path
+    cfg = ModelConfig(name="ssm-cont", family="ssm", num_layers=2,
+                      d_model=64, num_heads=0, num_kv_heads=0, d_ff=0,
+                      ssm_state=8, vocab_size=tok.vocab_size,
+                      dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=4)
+    assert eng._stateful and not eng.use_paged
+    sfx = [tok.encode("answers questions"), tok.encode("the quick brown")]
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True))
+    outs, t = eng.serve([Request(sfx[0], None), Request(sfx[1], st),
+                         Request(sfx[1], None)], _record=False)
+    assert outs[0] == eng.generate(sfx[0])[0]
+    assert outs[2] == eng.generate(sfx[1])[0]
+    assert outs[1] == eng.generate_with_prefix(st, [sfx[1]],
+                                               _record=False)[0][0]
+    assert t["num_prefixes"] == 1        # the prefixless group is free
+
+    # attention stack with the paged backend DISABLED: same contract,
+    # and identical to what the paged backend serves
+    eng_d = _engine(tok, key=2, paged=False, max_new_tokens=4)
+    eng_p = ServingEngine(eng_d.params, eng_d.cfg, tok, max_cache_len=512,
+                          max_new_tokens=4)
+    assert not eng_d.use_paged and eng_p.use_paged
+    outs_d, _ = eng_d.serve([Request(sfx[0], None)], _record=False)
+    outs_p, _ = eng_p.serve([Request(sfx[0], None)], _record=False)
+    assert outs_d[0] == outs_p[0] == eng_d.generate(sfx[0])[0]
+
+
+# ----------------------------------------------------------------------
+# satellite: fragmentation accounting reconciled at retirement
+# ----------------------------------------------------------------------
+def test_paged_note_tokens_reconciled_with_actual_decode(tok):
+    """The drain path used to charge every row ``suffix +
+    max_new_tokens`` stored tokens up front.  The gauge must now see
+    (a) the suffix tokens charged BEFORE the in-flight observation —
+    never zero-token suffix blocks — and (b) a post-decode observation
+    reconciled to what each row actually generated (EOS-cut)."""
+    eng = _engine(tok, max_new_tokens=5)
+    st, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True),
+                               _record=False)
+    stats = eng.cache_mgr.reset_stats()
+    snaps = []
+    orig = stats.record_blocks
+    stats.record_blocks = lambda pool: (
+        snaps.append((pool.blocks_in_use, pool.tokens_stored)),
+        orig(pool))[-1]
+    sfx = [tok.encode("answers questions"), tok.encode("and edges")]
+    outs, _ = eng.generate_with_prefix(st, sfx)    # batch 2 = bucket, no pads
+    prefix_tokens = st.prefix_len
+    lens = [len(s) for s in sfx]
+    gens = [min(len(o) + 1, eng.max_new_tokens) for o in outs]
+    # in-flight snapshot: prefix + every suffix token charged, no
+    # decode budget padded on top
+    assert snaps[0][1] == prefix_tokens + sum(lens)
+    # reconciled snapshot: exactly what the rows stored incl. decode
+    assert snaps[1][1] == prefix_tokens + sum(lens) + sum(gens)
+    # post-free snapshot: only the resident prefix remains charged
+    assert snaps[-1][1] == prefix_tokens
+    st.release()
+
+
+# ----------------------------------------------------------------------
+# satellite: soft-prompt tokens visible to accounting
+# ----------------------------------------------------------------------
+def test_soft_prompt_counted_in_prompt_tokens(tok):
+    """``use_soft_prompt=True`` runs consume ``n_soft`` embedding
+    positions per prefix (and per baseline prompt); prompt-token
+    accounting and the prefill-savings denominators must include
+    them."""
+    eng = _engine(tok, key=3)
+    soft = np.ones((3, 64), np.float32) * 0.01
+    ptoks = tok.encode("a graph of nodes", bos=True)
+    st, _ = eng.prefill_prefix(ptoks, soft=soft, _record=False)
+    assert st.n_soft == 3
+    assert st.prefix_len == len(ptoks) + 3       # prefill consumed them
+    stats = eng.cache_mgr.reset_stats()
+    sfx = tok.encode("answers questions")
+    eng.serve([Request(sfx, st)])
+    # the member's baseline-equivalent prompt includes the soft tokens
+    assert stats.prefill_tokens_baseline == st.prefix_len + len(sfx)
+    st.release()
+
+
+def test_pipeline_soft_prompt_prompt_tokens():
+    """run_baseline / run_subgcache prompt_tokens include the soft
+    prompt where the row actually consumed it."""
+    from repro.data.scenegraph import generate_scene_graph
+    from repro.gnn.graph_transformer import (apply_graph_transformer,
+                                             init_graph_transformer)
+    from repro.gnn.projector import init_projector
+    from repro.rag.pipeline import GraphRAGPipeline
+    from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+    from repro.rag.text_encoder import TextEncoder
+
+    graph, queries = generate_scene_graph()
+    tok2 = Tokenizer.train([q.question + " " + q.answer
+                            for q in queries] + graph.node_text,
+                           max_vocab=2048)
+    cfg = ModelConfig(name="soft-acct", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=tok2.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(5), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(32))
+    gnn_params = init_graph_transformer(jax.random.PRNGKey(7), 32, 32, 4, 4)
+    proj = init_projector(jax.random.PRNGKey(8), 32, cfg.d_model, 2)
+    pipe = GraphRAGPipeline(
+        index=index, retriever=GRetrieverRetriever(index),
+        engine=ServingEngine(params, cfg, tok2, max_cache_len=1024,
+                             max_new_tokens=3),
+        tokenizer=tok2, gnn_params=gnn_params,
+        gnn_apply=apply_graph_transformer, proj_params=proj,
+        use_soft_prompt=True)
+    items = queries[:2]
+    n_soft = pipe.soft_prompt(
+        pipe.retriever.retrieve(items[0].question)).shape[0]
+    assert n_soft == 2
+
+    recs, _ = pipe.run_baseline(items)
+    for r, it in zip(recs, items):
+        sg = pipe.retriever.retrieve(it.question)
+        full = pipe.prefix_text(sg) + " " + pipe.suffix_text(it.question)
+        assert r.prompt_tokens == len(
+            pipe.tokenizer.encode(full, bos=True)) + n_soft
+
+    recs, _, plan, _ = pipe.run_subgcache(items, num_clusters=1)
+    rep = plan.clusters[0].representative
+    plen = len(pipe.tokenizer.encode(pipe.prefix_text(rep), bos=True))
+    for r, it in zip(recs, items):
+        sfx_len = len(pipe.tokenizer.encode(pipe.suffix_text(it.question)))
+        assert r.prompt_tokens == plen + n_soft + sfx_len
+        assert r.cached_tokens == plen + n_soft
+
+
+# ----------------------------------------------------------------------
+# metrics
+# ----------------------------------------------------------------------
+def test_trace_summary_quantities():
+    recs = [QueryRecord(query="q", answer="a", generated="g", correct=True,
+                        queue_wait_s=w, prefill_s=0.01, decode_s=d,
+                        decode_steps=s)
+            for w, d, s in [(0.0, 0.02, 2), (0.1, 0.04, 4)]]
+    s = trace_summary(recs)
+    assert s["mean_queue_wait_ms"] == pytest.approx(50.0)
+    assert s["p95_queue_wait_ms"] == pytest.approx(95.0)
+    assert s["mean_decode_steps"] == pytest.approx(3.0)
+    assert s["mean_ttft_ms"] == pytest.approx(1e3 * (0.01 + 0.05))
