@@ -1,0 +1,340 @@
+"""Hierarchical prefix trees vs the flat per-cluster prefix layout
+under the PR 2 Poisson trace (DESIGN.md §10).
+
+Replays one Poisson arrival trace through ``serve_stream`` twice at the
+SAME prefix-pool HBM byte budget:
+
+  * ``flat`` — the PR 4 path: one flat prefix per leaf cluster, seeded
+    from an offline ``plan_batch`` cut (``from_plan`` warm start);
+  * ``tree`` — the same leaf clusters cut from the SAME dendrogram,
+    but each leaf's prefix is a root→leaf CHAIN: ancestor segments
+    (the content sibling clusters share) are pooled ONCE and every
+    descendant path references them.
+
+The budget is sized so the flat layout cannot keep every cluster
+prefix resident — layout efficiency decides what stays cached.  The
+tree keeps more prefix tokens resident per byte (shared segments are
+stored once), so it re-prefills less and serves a lower mean TTFT.
+
+Reported per mode: mean/p95 TTFT, total prefill tokens (prefix +
+suffix actually computed), pool counters, resident prefix tokens
+(each pooled segment counted once), and the per-level tree accounting
+(``trace_summary(records, stats)``).  Token identity is ASSERTED per
+replay: the tree trace served continuous must reproduce the tree
+drain-serve oracle token for token (scheduling changes, math never).
+
+A ``dendrogram_cut_reuse`` section times the fig3-style cluster sweep
+with the merge tree computed once vs re-clustered per point.
+
+Writes ``BENCH_tree_serving.json`` at the repo root.  Runs on CPU.
+
+    PYTHONPATH=src python benchmarks/tree_serving.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.clustering import build_dendrogram
+from repro.core.planner import plan_batch, plan_prefix_tree
+from repro.core.prefix_pool import PrefixPool
+from repro.data.scenegraph import generate_scene_graph
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.core.paged import KVBlockPool
+from repro.rag.pipeline import GraphRAGPipeline
+from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+from repro.rag.text_encoder import TextEncoder
+from repro.serving.bucketing import blocks_for
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import trace_summary
+from repro.serving.scheduler import OnlineClusterAssigner, OnlineScheduler
+
+MAX_CACHE_LEN = 1024
+BLOCK_SIZE = 32
+
+
+def substrate():
+    graph, queries = generate_scene_graph()
+    tok = Tokenizer.train([q.question + " " + q.answer for q in queries]
+                          + graph.node_text, max_vocab=2048)
+    cfg = ModelConfig(name="bench-tree", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=tok.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(64))
+    return graph, queries, tok, cfg, params, index
+
+
+def make_pipe(tok, cfg, params, index, max_new_tokens, arena_blocks):
+    # top_k=8 retrieval: representative prefixes long enough that
+    # re-prefilling one costs real compute, and overlapping enough that
+    # sibling clusters share substantial ancestor content — the
+    # workload regime hierarchical prefix trees exist for
+    engine = ServingEngine(params, cfg, tok, max_cache_len=MAX_CACHE_LEN,
+                           max_new_tokens=max_new_tokens,
+                           block_size=BLOCK_SIZE,
+                           arena_blocks=arena_blocks)
+    return GraphRAGPipeline(index=index,
+                            retriever=GRetrieverRetriever(index, top_k=8),
+                            engine=engine, tokenizer=tok,
+                            use_soft_prompt=False)
+
+
+def _seed_scheduler(pipe, subgraphs, emb, *, tree, num_clusters,
+                    tree_levels, budget, dendrogram):
+    """Both modes seed the SAME leaf clusters from the SAME dendrogram;
+    only the prefix layout differs (flat single segments vs chains)."""
+    if tree:
+        plan = plan_prefix_tree(subgraphs, emb, num_clusters,
+                                tree_levels=tree_levels,
+                                dendrogram=dendrogram)
+        assigner = OnlineClusterAssigner.from_tree_plan(plan, emb)
+    else:
+        plan = plan_batch(subgraphs, emb, num_clusters,
+                          dendrogram=dendrogram)
+        assigner = OnlineClusterAssigner.from_plan(plan, emb)
+    return OnlineScheduler(pipe.engine, assigner, PrefixPool(budget),
+                           pipe._prefix_payload,
+                           segment_tokens_fn=pipe._segment_payload), plan
+
+
+def _resident_path_tokens(sched) -> int:
+    """Prefix tokens SERVABLE from cache at this instant: for every
+    cluster whose leaf entry is resident, its full path length.  This
+    is the coverage metric the tree layout improves — a shared ancestor
+    occupies its bytes ONCE but contributes to every resident
+    descendant path (flat layouts pay those bytes per cluster)."""
+    total = 0
+    for c in sched.assigner.clusters:
+        key = ("seg", c.chain.keys[-1]) if c.chain is not None \
+            else c.cluster_id
+        e = sched.pool.entry(key)
+        if e is not None:
+            total += e.state.prefix_len
+    return total
+
+
+def _warm_chains(pipe, subgraphs, emb, **seed_kw):
+    """Compile pass: materialize every cluster's chain once (extension
+    prefills are their own jit signatures — an unwarmed one would land
+    an XLA compile inside a timed TTFT), then drop the states."""
+    sched, _ = _seed_scheduler(pipe, subgraphs, emb, **seed_kw)
+    for cid in range(len(sched.assigner.clusters)):
+        sched.ensure_chain(cid)
+    sched.pool.clear()
+
+
+def _chain_lens(pipe, plan, tree):
+    """Distinct prefix lengths covering the page-table WIDTHS the trace
+    can serve (the warmup grid).  A chain's width is the SUM of its
+    segments' block counts (each segment rounds up to whole blocks), so
+    tree lengths are emitted width-equivalent — ``width × block_size``
+    tokens compile exactly the bucket the chain will walk."""
+    tokf = pipe.tokenizer
+    out = set()
+    if tree:
+        for leaf in plan.leaves:
+            blocks = 0
+            chain = plan.chain(leaf)
+            for i, content in enumerate(chain.contents):
+                base = chain.contents[i - 1] if i else None
+                payload = pipe._segment_payload(content, base)
+                toks = payload[0] if isinstance(payload, tuple) else payload
+                blocks += blocks_for(len(toks), BLOCK_SIZE)
+            out.add(blocks * BLOCK_SIZE)
+    else:
+        for cp in plan.clusters:
+            out.add(len(tokf.encode(pipe.prefix_text(cp.representative),
+                                    bos=True)))
+    return sorted(out)
+
+
+def run(num_queries: int = 24, max_batch: int = 4, gap_s: float = 0.04,
+        num_clusters: int = 6, tree_levels: int = 3,
+        max_new_tokens: int = 8, seed: int = 0,
+        budget_frac: float = 0.5, log_fn=print):
+    graph, queries, tok, cfg, params, index = substrate()
+    items = queries[:num_queries]
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(gap_s, size=len(items)))
+
+    # one retrieval + embedding + dendrogram pass shared by both modes
+    probe = make_pipe(tok, cfg, params, index, max_new_tokens, 64)
+    subgraphs = [probe.retriever.retrieve(it.question) for it in items]
+    emb = probe.embed_for_clustering(subgraphs)
+    dd = build_dendrogram(emb)
+    flat_plan = plan_batch(subgraphs, emb, num_clusters, dendrogram=dd)
+    flat_lens = _chain_lens(probe, flat_plan, tree=False)
+
+    # equal byte budget: a FRACTION of what all flat cluster prefixes
+    # cost resident at once — the flat pool must evict, the tree's
+    # shared ancestors stretch the same bytes further
+    per_block = KVBlockPool.block_bytes_for(cfg, BLOCK_SIZE)
+    flat_total_blocks = sum(blocks_for(p, BLOCK_SIZE) for p in flat_lens)
+    budget = int(budget_frac * flat_total_blocks * per_block)
+    arena_blocks = (flat_total_blocks + 2 * max_batch
+                    * blocks_for(MAX_CACHE_LEN, BLOCK_SIZE) + 32)
+
+    result = {"trace": {
+        "queries": num_queries, "poisson_gap_s": gap_s,
+        "max_batch": max_batch, "num_clusters": num_clusters,
+        "tree_levels": tree_levels, "budget_bytes": budget,
+        "budget_frac_of_flat_resident": budget_frac,
+        "flat_prefix_lens": flat_lens}}
+
+    # ------------------------------------------------------------------
+    # build + warm BOTH modes up front, then INTERLEAVE the timed
+    # replays pairwise: whole-benchmark CPU drift (frequency, page
+    # cache, contention) is much larger than the layout effect, so an
+    # unpaired flat-phase-then-tree-phase protocol measures the
+    # machine, not the layout.  At a warm 100% hit rate the two
+    # layouts serve at identical speed (no steady-state chain
+    # overhead); the paired cold replays isolate what the tree
+    # actually changes — how much re-prefill the byte budget forces.
+    # ------------------------------------------------------------------
+    pipes, oracles, seed_kws = {}, {}, {}
+    for mode in ("flat", "tree"):
+        tree = mode == "tree"
+        pipe = make_pipe(tok, cfg, params, index, max_new_tokens,
+                         arena_blocks)
+        seed_kw = dict(tree=tree, num_clusters=num_clusters,
+                       tree_levels=tree_levels, budget=budget,
+                       dendrogram=dd)
+        sched, plan = _seed_scheduler(pipe, subgraphs, emb, **seed_kw)
+        pipe.warmup_stream(items, max_batch=max_batch, chunk=2,
+                           prefix_lens=_chain_lens(pipe, plan, tree))
+        _warm_chains(pipe, subgraphs, emb, **seed_kw)
+        if tree:
+            result["trace"]["tree_levels_realized"] = plan.levels
+            result["trace"]["tree_nodes"] = len(plan.nodes)
+        # token-identity oracle: the SAME cluster population served
+        # drain-style must emit identical generations per query
+        oracle, _, _ = pipe.serve_stream(
+            items, arrivals, mode="drain", max_batch=max_batch,
+            pool_budget_bytes=budget, scheduler=sched)
+        sched.pool.clear()
+        # one untimed continuous replay settles the drain pattern the
+        # timed replays will see (measured service times feed back into
+        # micro-batch composition — EXPERIMENTS.md protocol)
+        warm, _ = _seed_scheduler(pipe, subgraphs, emb, **seed_kw)
+        pipe.serve_stream(items, arrivals, mode="continuous",
+                          max_batch=max_batch, chunk=2, scheduler=warm)
+        pipes[mode], oracles[mode], seed_kws[mode] = pipe, oracle, seed_kw
+
+    runs = {"flat": [], "tree": []}
+    for _ in range(5):
+        for mode in ("flat", "tree"):
+            pipe = pipes[mode]
+            sched, _ = _seed_scheduler(pipe, subgraphs, emb,
+                                       **seed_kws[mode])
+            recs, _, sched = pipe.serve_stream(
+                items, arrivals, mode="continuous", max_batch=max_batch,
+                chunk=2, scheduler=sched)
+            assert ([r.generated for r in recs]
+                    == [r.generated for r in oracles[mode]]), \
+                f"{mode}: continuous trace diverged from the drain oracle"
+            stats = sched.pool.stats
+            sched.pool.observe_tree_residency()
+            summ = trace_summary(recs, stats)
+            summ["pool"] = {
+                "hits": stats.pool_hits, "misses": stats.pool_misses,
+                "evictions": stats.pool_evictions,
+                "reprefills": stats.pool_reprefills,
+                "hit_rate": round(stats.pool_hit_rate, 3),
+                "resident_end": len(sched.pool),
+            }
+            summ["prefix_tokens_resident_end"] = sched.pool.tokens_resident
+            summ["resident_path_tokens_end"] = _resident_path_tokens(sched)
+            runs[mode].append(summ)
+
+    pair_ratios = sorted(f["mean_ttft_ms"] / t["mean_ttft_ms"]
+                         for f, t in zip(runs["flat"], runs["tree"]))
+    for mode in ("flat", "tree"):
+        order = sorted(runs[mode], key=lambda s: s["mean_ttft_ms"])
+        best = order[len(order) // 2]        # median replay
+        best["runs_mean_ttft_ms"] = [s["mean_ttft_ms"]
+                                     for s in runs[mode]]
+        best["token_identical_vs_drain"] = True
+        result[mode] = best
+        log_fn(f"{mode:5s} mean TTFT {best['mean_ttft_ms']:8.1f}ms  "
+               f"prefill tokens {best['prefill_tokens_total']:6d}  "
+               f"resident prefix tokens "
+               f"{best['prefix_tokens_resident_end']:5d}  "
+               f"hit rate {best['pool']['hit_rate']:.0%}")
+    result["paired_ttft_ratios_flat_over_tree"] = [
+        round(r, 3) for r in pair_ratios]
+
+    # the PAIRED median is the headline: adjacent replays share machine
+    # conditions, so their ratio reflects the layout, not CPU drift
+    result["ttft_ratio_flat_over_tree"] = round(
+        pair_ratios[len(pair_ratios) // 2], 3)
+    result["prefill_tokens_ratio_flat_over_tree"] = round(
+        result["flat"]["prefill_tokens_total"]
+        / max(1, result["tree"]["prefill_tokens_total"]), 3)
+    result["resident_path_tokens_ratio_tree_over_flat"] = round(
+        result["tree"]["resident_path_tokens_end"]
+        / max(1, result["flat"]["resident_path_tokens_end"]), 3)
+
+    # fig3 satellite witness: cut reuse vs re-clustering per sweep point
+    sweep = [1, 2, 3, 4, 5, 8, 12]
+    t0 = time.perf_counter()
+    for k in sweep:
+        plan_batch(subgraphs, emb, k)
+    t_recluster = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dd2 = build_dendrogram(emb)
+    for k in sweep:
+        plan_batch(subgraphs, emb, k, dendrogram=dd2)
+    t_reuse = time.perf_counter() - t0
+    result["dendrogram_cut_reuse"] = {
+        "sweep_points": sweep,
+        "recluster_per_point_s": round(t_recluster, 4),
+        "build_once_cut_each_s": round(t_reuse, 4),
+        "speedup_x": round(t_recluster / max(t_reuse, 1e-9), 2),
+    }
+    log_fn(f"TTFT flat/tree x{result['ttft_ratio_flat_over_tree']:.2f}  "
+           f"prefill tokens flat/tree "
+           f"x{result['prefill_tokens_ratio_flat_over_tree']:.2f}  "
+           f"resident path tokens tree/flat "
+           f"x{result['resident_path_tokens_ratio_tree_over_flat']:.2f}  "
+           f"sweep cut-reuse "
+           f"x{result['dendrogram_cut_reuse']['speedup_x']:.1f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--gap-s", type=float, default=0.04)
+    ap.add_argument("--clusters", type=int, default=6)
+    ap.add_argument("--tree-levels", type=int, default=3)
+    ap.add_argument("--budget-frac", type=float, default=0.5)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_tree_serving.json"))
+    args = ap.parse_args()
+    result = run(num_queries=args.queries, max_batch=args.max_batch,
+                 gap_s=args.gap_s, num_clusters=args.clusters,
+                 tree_levels=args.tree_levels,
+                 budget_frac=args.budget_frac)
+    payload = {
+        "benchmark": "tree_vs_flat_prefix_poisson",
+        "config": "bench-tree (2L d64 GQA 4:2, f32, scene-graph RAG, "
+                  f"top_k=8, block_size={BLOCK_SIZE})",
+        "result": result,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

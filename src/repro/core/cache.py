@@ -23,12 +23,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.paged import KVBlockPool, PageTable
+from repro.core.paged import NULL_BLOCK, KVBlockPool, PageTable
 
 
 _UID = itertools.count()
@@ -36,21 +37,34 @@ _UID = itertools.count()
 
 @dataclasses.dataclass
 class PrefixState:
-    """Model sequence-state after consuming a shared prefix.
+    """Model sequence-state after consuming a shared prefix — or, since
+    the prefix-tree refactor (DESIGN.md §10), ONE SEGMENT of a prefix
+    CHAIN: a root-to-leaf path of nested segments through the
+    representative tree, where every descendant references its
+    ancestors' storage instead of replicating it.
 
     Two storage backends (one API — DESIGN.md §8):
 
-    * **dense** — ``cache`` holds the batch-1 cache pytree (split
-      cascade / broadcast fallback serving);
-    * **paged** — ``page`` maps the prefix into ``block_pool``'s block
-      arena and ``cache`` is None: the state is a thin view over
-      refcounted block allocations, shared by every member's page table
-      for free.  ``release()`` drops the state's block references
-      (eviction / cluster release); blocks return to the free list only
-      when the last in-flight reader also releases.
+    * **dense** — ``cache`` holds this segment's batch-1 cache pytree
+      (split cascade / broadcast fallback serving); a chain is served
+      as a tuple of segment caches folded by the N-way LSE cascade.
+    * **paged** — ``page`` maps THIS segment's tokens into
+      ``block_pool``'s block arena and ``cache`` is None.
+      ``ancestor_blocks`` holds the block ids of every ancestor
+      segment, root first, increfed for this state's lifetime — the
+      full chain walk is ``chain_blocks()`` and an ancestor evicted
+      from the pool can never be recycled under a live descendant.
+      ``release()`` drops the state's own AND ancestor block
+      references (eviction / cluster release); blocks return to the
+      free list only when the last reader releases.
+
+    ``prefix_len`` is always the CUMULATIVE path length through this
+    segment (so offsets, capacity buckets, and accounting are
+    unchanged for chain states); ``seg_len`` is the tokens this
+    segment itself owns (flat state: seg_len == prefix_len).
     """
     cache: Any                 # dense cache pytree (None when paged)
-    prefix_len: int            # tokens in the cached prefix (incl. n_soft)
+    prefix_len: int            # tokens in the cached path (incl. n_soft)
     capacity: int              # allocated / bucketed cache capacity
     enc_len: int = 0           # cross-attention KV length (enc-dec / VLM)
     # soft-prompt embeddings consumed ahead of the prefix text tokens;
@@ -60,6 +74,13 @@ class PrefixState:
     n_soft: int = 0
     page: Optional[PageTable] = None
     block_pool: Optional[KVBlockPool] = None
+    # --- prefix-chain fields (DESIGN.md §10) ---
+    parent: Optional["PrefixState"] = None   # segment one level up (or None)
+    seg_len: Optional[int] = None            # tokens owned by THIS segment
+    # ancestor block ids (root first), increfed at creation and decrefed
+    # by release(); snapshotted here because an evicted ancestor state
+    # drops its own ``page`` while this descendant must keep walking it
+    ancestor_blocks: List[int] = dataclasses.field(default_factory=list)
     # process-unique identity: lets caches key on "same state object"
     # without holding a strong reference (id() values are recycled;
     # uids never are)
@@ -69,12 +90,47 @@ class PrefixState:
     def is_paged(self) -> bool:
         return self.page is not None
 
+    @property
+    def segment_len(self) -> int:
+        """Tokens this segment owns (= prefix_len for flat states)."""
+        return self.prefix_len if self.seg_len is None else self.seg_len
+
+    def chain(self) -> List["PrefixState"]:
+        """Segments root→self (a flat state is its own chain)."""
+        out: List[PrefixState] = []
+        cur: Optional[PrefixState] = self
+        while cur is not None:
+            out.append(cur)
+            cur = cur.parent
+        return out[::-1]
+
+    def chain_blocks(self) -> List[int]:
+        """Every block of the full root→self path, root first — what
+        serving pins and what a prefix page-table row concatenates
+        (masking is positional, so block order only needs to be
+        deterministic).  Paged states only."""
+        own = self.page.blocks if self.page is not None else []
+        return list(self.ancestor_blocks) + list(own)
+
+    def page_row(self, width: int) -> np.ndarray:
+        """NULL-padded [width] page-table row over the full chain."""
+        blocks = self.chain_blocks()
+        assert len(blocks) <= width, (len(blocks), width)
+        out = np.full(width, NULL_BLOCK, np.int32)
+        out[:len(blocks)] = blocks
+        return out
+
     def release(self) -> None:
-        """Drop this state's block references (idempotent; no-op for
-        dense states, which the garbage collector owns)."""
-        if self.page is not None and self.block_pool is not None:
-            self.block_pool.decref(self.page.blocks)
-            self.page = None
+        """Drop this state's block references — its own segment AND the
+        per-lifetime references it holds on its ancestors (idempotent;
+        no-op for dense states, which the garbage collector owns)."""
+        if self.block_pool is not None:
+            if self.page is not None:
+                self.block_pool.decref(self.page.blocks)
+                self.page = None
+            if self.ancestor_blocks:
+                self.block_pool.decref(self.ancestor_blocks)
+                self.ancestor_blocks = []
 
     def broadcast(self, template: Any) -> Any:
         """Broadcast the batch-1 prefix state onto ``template`` shapes
@@ -134,6 +190,20 @@ class CacheStats:
     blocks_peak: int = 0         # high-water mark of blocks_in_use
     block_tokens: int = 0        # tokens stored at last observe
     block_size: int = 0          # slots per block
+    # --- prefix-tree chains (DESIGN.md §10); keyed by chain level,
+    # 0 = root segment.  "reused" = the segment was resident when a
+    # chain was materialized; "prefilled" = it had to be computed.
+    tree_prefill_tokens: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    tree_reused_tokens: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    tree_hits: Dict[int, int] = dataclasses.field(default_factory=dict)
+    tree_misses: Dict[int, int] = dataclasses.field(default_factory=dict)
+    ancestor_hits: int = 0       # non-leaf segments found resident
+    ancestor_misses: int = 0     # non-leaf segments prefilled
+    tree_segments_resident: int = 0   # gauge: pooled segments at last observe
+    tree_tokens_resident: int = 0     # gauge: pooled prefix tokens (each
+                                      # shared segment counted ONCE)
 
     @property
     def prefill_savings(self) -> float:
@@ -175,6 +245,43 @@ class CacheStats:
     def pool_hit_rate(self) -> float:
         total = self.pool_hits + self.pool_misses
         return self.pool_hits / total if total else 0.0
+
+    def record_tree_segment(self, level: int, tokens: int, *, hit: bool,
+                            leaf: bool) -> None:
+        """One segment touched while materializing a prefix chain
+        (DESIGN.md §10): either found resident (``hit`` — its tokens
+        were REUSED across sibling paths) or prefilled.  ``level`` is
+        the chain depth (0 = root); ``leaf`` marks the path's last
+        segment so the ancestor-hit rate — the tree layout's whole
+        claim — is auditable separately from ordinary leaf pool hits."""
+        level = int(level)
+        if hit:
+            self.tree_hits[level] = self.tree_hits.get(level, 0) + 1
+            self.tree_reused_tokens[level] = \
+                self.tree_reused_tokens.get(level, 0) + int(tokens)
+        else:
+            self.tree_misses[level] = self.tree_misses.get(level, 0) + 1
+            self.tree_prefill_tokens[level] = \
+                self.tree_prefill_tokens.get(level, 0) + int(tokens)
+        if not leaf:
+            if hit:
+                self.ancestor_hits += 1
+            else:
+                self.ancestor_misses += 1
+
+    @property
+    def ancestor_hit_rate(self) -> float:
+        """How often a non-leaf segment was already resident when a
+        chain was materialized (the tree layout's reuse claim)."""
+        total = self.ancestor_hits + self.ancestor_misses
+        return self.ancestor_hits / total if total else 0.0
+
+    def record_tree_residency(self, segments: int, tokens: int) -> None:
+        """Gauge: pooled chain segments / prefix tokens resident (each
+        shared ancestor counted once — the byte-budget win vs a flat
+        layout storing it per cluster)."""
+        self.tree_segments_resident = int(segments)
+        self.tree_tokens_resident = int(tokens)
 
     def record_blocks(self, pool) -> None:
         """Observe a ``KVBlockPool``'s occupancy (called by the engine

@@ -1,9 +1,18 @@
-"""Agglomerative hierarchical clustering (paper §3.2).
+"""Agglomerative hierarchical clustering (paper §3.2) as a reusable
+dendrogram.
 
-Own implementation (numpy, Lance–Williams recurrences) of the five linkage
-strategies the paper ablates: ward (default), single, complete, average,
-centroid.  Euclidean metric; the dendrogram is cut at a predefined number
-of clusters, exactly as the paper's setup (App. A.2).
+Own implementation (numpy, Lance–Williams recurrences) of the five
+linkage strategies the paper ablates: ward (default), single, complete,
+average, centroid.  Euclidean metric.
+
+The agglomeration is GREEDY and target-independent: the first
+``m - K`` merges are the same whatever ``K`` the caller eventually
+wants, so the expensive O(m^3) part is computed ONCE per batch
+(``build_dendrogram``) and every cut — the paper's ``num_clusters``
+knob, a cluster sweep, or the multi-level cuts of a prefix tree
+(DESIGN.md §10) — is a cheap O(m·merges) replay (``Dendrogram.cut``).
+``hierarchical_clustering`` keeps the historical one-shot API as a
+build + cut and produces byte-identical labels.
 
 O(m^3) naive agglomeration — m is the in-batch query count (<= a few
 hundred), so this is host-side noise next to LLM inference; the paper
@@ -11,7 +20,8 @@ measures the same (Fig. 4: < 2-6% of end-to-end latency).
 """
 from __future__ import annotations
 
-from typing import List
+import dataclasses
+from typing import List, Tuple
 
 import numpy as np
 
@@ -25,17 +35,68 @@ def _pairwise_sq(x: np.ndarray) -> np.ndarray:
     return np.maximum(d2, 0.0)
 
 
-def hierarchical_clustering(embeddings: np.ndarray, num_clusters: int,
-                            linkage: str = "ward") -> np.ndarray:
-    """Cluster row-vectors into ``num_clusters`` groups.
+@dataclasses.dataclass
+class Dendrogram:
+    """The full agglomerative merge tree over ``m`` leaves.
 
-    Returns int labels [m] in {0..num_clusters-1}.
+    ``merges[t] = (i, j, height)``: at step ``t`` cluster slot ``j``
+    merged into slot ``i`` (``i < j``; slot ids are original leaf
+    indices — the surviving slot keeps its id) at linkage distance
+    ``height``.  There are exactly ``m - 1`` merges; cutting after
+    ``m - K`` of them leaves ``K`` clusters.  Merge order is what the
+    greedy agglomeration chose, so replays are exact — not a
+    re-clustering.
+    """
+    m: int
+    linkage: str
+    merges: List[Tuple[int, int, float]]
+
+    def cut(self, num_clusters: int) -> np.ndarray:
+        """Labels [m] in {0..K-1} for the ``num_clusters`` cut.
+
+        Byte-identical to what the historical one-shot
+        ``hierarchical_clustering`` produced: clusters are numbered by
+        ascending surviving-slot id.
+        """
+        k = max(1, min(int(num_clusters), self.m))
+        members: List[List[int]] = [[i] for i in range(self.m)]
+        alive = [True] * self.m
+        for i, j, _ in self.merges[: self.m - k]:
+            members[i] = members[i] + members[j]
+            alive[j] = False
+        labels = np.zeros(self.m, dtype=np.int64)
+        c = 0
+        for root in range(self.m):
+            if not alive[root]:
+                continue
+            for idx in members[root]:
+                labels[idx] = c
+            c += 1
+        return labels
+
+    def cut_members(self, num_clusters: int) -> List[List[int]]:
+        """Member index lists per cluster, in cut-label order."""
+        labels = self.cut(num_clusters)
+        k = int(labels.max()) + 1 if self.m else 0
+        out: List[List[int]] = [[] for _ in range(k)]
+        for i, c in enumerate(labels.tolist()):
+            out[c].append(i)
+        return out
+
+
+def build_dendrogram(embeddings: np.ndarray,
+                     linkage: str = "ward") -> Dendrogram:
+    """Run the full O(m^3) agglomeration once, recording every merge.
+
+    Cuts at any ``num_clusters`` are then cheap replays — the cluster
+    sweep (``benchmarks/fig3_cluster_sweep.py``) and the multi-level
+    prefix-tree cuts (``core/planner.py::plan_prefix_tree``) both reuse
+    one dendrogram instead of re-running the agglomeration per point.
     """
     if linkage not in LINKAGES:
         raise ValueError(f"unknown linkage {linkage!r}; options: {LINKAGES}")
     x = np.asarray(embeddings, dtype=np.float64)
     m = x.shape[0]
-    num_clusters = max(1, min(num_clusters, m))
 
     # squared Euclidean for ward/centroid (Lance-Williams exactness),
     # plain Euclidean for single/complete/average.
@@ -46,9 +107,9 @@ def hierarchical_clustering(embeddings: np.ndarray, num_clusters: int,
 
     active = list(range(m))
     size = np.ones(m)
-    members: List[List[int]] = [[i] for i in range(m)]
+    merges: List[Tuple[int, int, float]] = []
 
-    while len(active) > num_clusters:
+    while len(active) > 1:
         # find closest active pair
         sub = d[np.ix_(active, active)]
         flat = np.argmin(sub)
@@ -57,6 +118,7 @@ def hierarchical_clustering(embeddings: np.ndarray, num_clusters: int,
         if i > j:
             i, j = j, i
         ni, nj, dij = size[i], size[j], d[i, j]
+        merges.append((i, j, float(dij)))
 
         # Lance-Williams update of d(k, i∪j) for every other active k
         for k in active:
@@ -77,13 +139,18 @@ def hierarchical_clustering(embeddings: np.ndarray, num_clusters: int,
                     / (ni + nj + nk)
             d[i, k] = d[k, i] = new
         size[i] = ni + nj
-        members[i] = members[i] + members[j]
         active.remove(j)
         d[j, :] = np.inf
         d[:, j] = np.inf
+    return Dendrogram(m=m, linkage=linkage, merges=merges)
 
-    labels = np.zeros(m, dtype=np.int64)
-    for c, root in enumerate(active):
-        for idx in members[root]:
-            labels[idx] = c
-    return labels
+
+def hierarchical_clustering(embeddings: np.ndarray, num_clusters: int,
+                            linkage: str = "ward") -> np.ndarray:
+    """Cluster row-vectors into ``num_clusters`` groups.
+
+    Returns int labels [m] in {0..num_clusters-1}.  One-shot facade:
+    callers cutting more than once should ``build_dendrogram`` and
+    ``cut`` themselves.
+    """
+    return build_dendrogram(embeddings, linkage).cut(num_clusters)

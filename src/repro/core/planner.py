@@ -11,17 +11,26 @@ stage, independent of the serving engine that executes it:
 ``num_clusters`` is the paper's knob: 1 cluster = maximal reuse,
 m clusters = vanilla graph-based RAG (the planner then degenerates to
 per-query processing, as noted in the paper's Discussion).
+
+Hierarchical prefix trees (DESIGN.md §10): the clustering dendrogram is
+cut at MULTIPLE levels (``plan_prefix_tree``) and each leaf cluster's
+prefix becomes a root-to-leaf CHAIN of segments — an ancestor node
+holds the content its descendant leaves share (intersection of their
+representatives), stored and prefilled once; each leaf extends its
+ancestor path with only its own remainder.  ``tree_levels=1``
+degenerates to the flat single-cut plan.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.clustering import hierarchical_clustering
-from repro.core.subgraph import Subgraph, merge_subgraphs
+from repro.core.clustering import Dendrogram, build_dendrogram
+from repro.core.subgraph import (Subgraph, intersect_subgraphs,
+                                 merge_subgraphs)
 
 
 @dataclasses.dataclass
@@ -53,16 +62,26 @@ class BatchPlan:
 def plan_batch(subgraphs: Sequence[Subgraph],
                embeddings: np.ndarray,
                num_clusters: int,
-               linkage: str = "ward") -> BatchPlan:
+               linkage: str = "ward",
+               dendrogram: Optional[Dendrogram] = None) -> BatchPlan:
     """Cluster the batch and build representative subgraphs.
 
     ``embeddings``: [m, dim] GNN subgraph embeddings (paper §3.2 — the same
     pretrained GNN the RAG pipeline uses for soft prompts).
+
+    ``dendrogram``: pass a ``build_dendrogram`` result to make this call
+    a cheap cut replay — a cluster sweep re-running the full O(m^3)
+    agglomeration per ``num_clusters`` point pays m-fold for the same
+    merge tree.
     """
     t0 = time.perf_counter()
     m = len(subgraphs)
     assert embeddings.shape[0] == m
-    labels = hierarchical_clustering(embeddings, num_clusters, linkage)
+    if dendrogram is None:
+        dendrogram = build_dendrogram(embeddings, linkage)
+    else:
+        assert dendrogram.m == m, (dendrogram.m, m)
+    labels = dendrogram.cut(num_clusters)
     clusters: List[ClusterPlan] = []
     for c in sorted(set(labels.tolist())):
         idx = [i for i in range(m) if labels[i] == c]
@@ -81,3 +100,167 @@ def plan_singleton(subgraphs: Sequence[Subgraph]) -> BatchPlan:
                 for i, sg in enumerate(subgraphs)]
     return BatchPlan(clusters=clusters, cluster_processing_time_s=0.0,
                      num_queries=len(subgraphs))
+
+
+# ======================================================================
+# hierarchical prefix trees (DESIGN.md §10)
+# ======================================================================
+@dataclasses.dataclass
+class TreeNode:
+    """One node of the representative prefix tree.
+
+    ``content`` is the FULL nested content at this node — a superset of
+    its parent's content by construction (parent = intersection of its
+    children), so the chain textualization emits each node's DELTA over
+    its parent and an ancestor's text is a literal token prefix of
+    every descendant's (``core/subgraph.py::textualize_delta``)."""
+    node_id: int
+    parent: Optional[int]              # node_id, None for a root segment
+    level: int                         # depth in the pruned tree (0 = root)
+    content: Subgraph
+    member_indices: List[int]          # queries assigned here (leaves only)
+
+
+@dataclasses.dataclass
+class ChainSpec:
+    """Root→leaf chain of one leaf cluster: pool keys + nested contents
+    (what the scheduler materializes segment by segment)."""
+    keys: List[int]                    # tree node ids, root first
+    contents: List[Subgraph]           # nested: contents[i] ⊆ contents[i+1]
+
+
+@dataclasses.dataclass
+class PrefixTreePlan:
+    """Multi-level execution plan: leaf clusters carry members, ancestor
+    nodes carry the shared content their descendants reference."""
+    nodes: List[TreeNode]              # indexed by node_id
+    leaves: List[int]                  # node ids, one per leaf cluster
+    level_cuts: List[int]              # dendrogram cuts, coarse → fine
+    cluster_processing_time_s: float
+    num_queries: int
+
+    @property
+    def levels(self) -> int:
+        """Longest root→leaf path (1 = flat)."""
+        return max((len(self.path(leaf)) for leaf in self.leaves),
+                   default=0)
+
+    def path(self, node_id: int) -> List[int]:
+        """Node ids root→``node_id`` (inclusive)."""
+        out = []
+        cur: Optional[int] = node_id
+        while cur is not None:
+            out.append(cur)
+            cur = self.nodes[cur].parent
+        return out[::-1]
+
+    def chain(self, leaf_id: int) -> ChainSpec:
+        p = self.path(leaf_id)
+        return ChainSpec(keys=p, contents=[self.nodes[n].content for n in p])
+
+    @property
+    def reuse_factor(self) -> float:
+        return self.num_queries / max(1, len(self.leaves))
+
+
+def default_level_cuts(num_clusters: int, tree_levels: int) -> List[int]:
+    """Coarse→fine dendrogram cuts for a ``tree_levels``-deep tree over
+    ``num_clusters`` leaf clusters: each ancestor level halves the
+    cluster count (K, K/2, K/4, ...), deduplicated."""
+    cuts = []
+    k = max(1, int(num_clusters))
+    for _ in range(max(1, int(tree_levels))):
+        if not cuts or k < cuts[0]:
+            cuts.insert(0, k)
+        k = max(1, k // 2)
+        if k == cuts[0]:
+            break
+    return cuts
+
+
+def plan_prefix_tree(subgraphs: Sequence[Subgraph],
+                     embeddings: np.ndarray,
+                     num_clusters: int,
+                     tree_levels: int = 2,
+                     linkage: str = "ward",
+                     dendrogram: Optional[Dendrogram] = None,
+                     level_cuts: Optional[Sequence[int]] = None
+                     ) -> PrefixTreePlan:
+    """Cut the dendrogram at multiple levels into a prefix tree.
+
+    Leaf clusters (the finest cut, ``num_clusters``) keep the flat
+    planner's semantics: members + union-merged representative.
+    Ancestor nodes take the INTERSECTION of their children's contents —
+    the shared structure sibling clusters would otherwise prefill once
+    each — so contents nest root→leaf and each leaf's full prefix
+    content equals its flat representative exactly (only the token
+    ORDER changes: shared content first).
+
+    Pruning: an ancestor that does not actually split (single child) or
+    shares nothing (empty intersection) is dropped — its children splice
+    up — so every surviving segment carries real reusable content.
+    """
+    t0 = time.perf_counter()
+    m = len(subgraphs)
+    assert embeddings.shape[0] == m
+    if dendrogram is None:
+        dendrogram = build_dendrogram(embeddings, linkage)
+    else:
+        assert dendrogram.m == m, (dendrogram.m, m)
+    if level_cuts is None:
+        level_cuts = default_level_cuts(num_clusters, tree_levels)
+    cuts = sorted(set(int(c) for c in level_cuts))          # coarse → fine
+    assert cuts, "need at least one cut"
+
+    fine = cuts[-1]
+    leaf_members: Dict[int, List[int]] = dict(
+        enumerate(dendrogram.cut_members(fine)))
+
+    nodes: List[TreeNode] = []
+    leaves: List[int] = []
+    # leaf nodes first (content = union of members, the flat representative)
+    leaf_node_of: Dict[int, int] = {}
+    for c in sorted(leaf_members):
+        nid = len(nodes)
+        nodes.append(TreeNode(
+            node_id=nid, parent=None, level=0,
+            content=merge_subgraphs([subgraphs[i] for i in leaf_members[c]]),
+            member_indices=leaf_members[c]))
+        leaf_node_of[c] = nid
+        leaves.append(nid)
+
+    # ancestor levels, fine → coarse; children tracked per current root
+    current: Dict[int, int] = dict(leaf_node_of)   # leaf label -> root node
+    for cut in reversed(cuts[:-1]):
+        coarse_labels = dendrogram.cut(cut)
+        groups: Dict[int, List[int]] = {}          # coarse label -> node ids
+        for leaf_label, nid in current.items():
+            anchor = leaf_members[leaf_label][0]   # dendrogram cuts nest
+            groups.setdefault(int(coarse_labels[anchor]), []).append(nid)
+        nxt: Dict[int, int] = dict(current)        # default: splice through
+        for coarse, child_ids in groups.items():
+            child_ids = sorted(set(child_ids))
+            if len(child_ids) < 2:
+                continue                           # no split: prune level
+            shared = intersect_subgraphs([nodes[n].content
+                                          for n in child_ids])
+            if shared.is_empty:
+                continue                           # nothing shared: prune
+            nid = len(nodes)
+            nodes.append(TreeNode(node_id=nid, parent=None, level=0,
+                                  content=shared, member_indices=[]))
+            for ch in child_ids:
+                nodes[ch].parent = nid
+            for leaf_label, root in current.items():
+                if root in child_ids:
+                    nxt[leaf_label] = nid
+        current = nxt
+
+    plan = PrefixTreePlan(nodes=nodes, leaves=leaves,
+                          level_cuts=list(cuts),
+                          cluster_processing_time_s=0.0, num_queries=m)
+    for nid in range(len(nodes)):                   # depth from root
+        p = plan.path(nid)
+        nodes[nid].level = len(p) - 1
+    plan.cluster_processing_time_s = time.perf_counter() - t0
+    return plan

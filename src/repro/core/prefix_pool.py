@@ -138,10 +138,9 @@ class PrefixPool:
         if bp is None:
             return
         while bp.free_blocks < n_needed:
-            victims = [e for e in self._entries.values() if e.refs == 0]
-            if not victims:
+            worst = self._pick_victim()
+            if worst is None:
                 return
-            worst = max(victims, key=self._score)
             del self._entries[worst.key]
             worst.state.release()
             self.stats.record_pool(evictions=1)
@@ -165,6 +164,19 @@ class PrefixPool:
 
     def entry(self, key: Hashable) -> Optional[PoolEntry]:
         return self._entries.get(key)
+
+    @property
+    def tokens_resident(self) -> int:
+        """Prefix tokens resident across entries — each pooled SEGMENT
+        counted once, so a shared ancestor contributes once however
+        many descendant paths reference it (the tree layout's
+        byte-budget claim; DESIGN.md §10)."""
+        return sum(e.state.segment_len for e in self._entries.values())
+
+    def observe_tree_residency(self) -> None:
+        """Push the resident segment/token gauges into CacheStats."""
+        self.stats.record_tree_residency(len(self._entries),
+                                         self.tokens_resident)
 
     # ------------------------------------------------------------------
     # lookup / admission
@@ -250,20 +262,57 @@ class PrefixPool:
     # eviction
     # ------------------------------------------------------------------
     def _score(self, e: PoolEntry) -> float:
-        """Eviction priority: ``age × prefix_len / hits`` (RAGCache-style
-        cost-aware ranking).  Higher = evict first: stale (age), cheap
-        to lose relative to payoff (few hits), and big (prefix_len ~
-        both HBM held and re-prefill cost recovered per byte freed)."""
+        """Eviction priority: ``age × segment_len / hits`` (RAGCache-
+        style cost-aware ranking).  Higher = evict first: stale (age),
+        cheap to lose relative to payoff (few hits), and big.  The SIZE
+        term is the entry's OWN tokens (``segment_len`` — equal to
+        ``prefix_len`` for flat states): that is both the HBM this
+        entry holds and the re-prefill its eviction risks.  A chain
+        state's cumulative ``prefix_len`` would overstate a small leaf
+        extension by its whole path and make the pool churn cheap leaf
+        segments while big stale entries squat on the budget."""
         age = max(1, self._clock - e.last_used)
-        return age * e.state.prefix_len / max(1, e.hits)
+        return age * e.state.segment_len / max(1, e.hits)
+
+    def _live_ancestor_uids(self) -> set:
+        """uids of states that are a chain ANCESTOR of some resident
+        entry's state (DESIGN.md §10).  Such entries are never eviction
+        victims: evicting an ancestor before its descendants would (a)
+        invert the tree's reuse economics — the shared segment is
+        exactly the content every sibling path re-prefills on a miss —
+        and (b) let a later materialization rebuild the ancestor while
+        resident descendants still chain to the old blocks.  Eviction
+        is therefore leaf-before-ancestor; an ancestor becomes
+        evictable the moment its last resident descendant goes (the
+        eviction loop re-picks per iteration, so a pressure wave peels
+        a path leaf-first in one pass).  Pinned descendants are
+        resident too, so an in-flight leaf protects its whole path."""
+        out: set = set()
+        for e in self._entries.values():
+            cur = e.state.parent
+            while cur is not None:
+                out.add(cur.uid)
+                cur = cur.parent
+        return out
+
+    def _pick_victim(self, protect: Optional[Hashable] = None
+                     ) -> Optional[PoolEntry]:
+        """Worst-scored unpinned entry that is not ``protect`` and not
+        an ancestor of any resident entry (None when nothing is
+        evictable)."""
+        anchored = self._live_ancestor_uids()
+        victims = [e for e in self._entries.values()
+                   if e.refs == 0 and e.key != protect
+                   and e.state.uid not in anchored]
+        if not victims:
+            return None
+        return max(victims, key=self._score)
 
     def _evict_to_budget(self, protect: Optional[Hashable] = None) -> None:
         while self.bytes_in_use > self.budget_bytes:
-            victims = [e for e in self._entries.values()
-                       if e.refs == 0 and e.key != protect]
-            if not victims:
+            worst = self._pick_victim(protect)
+            if worst is None:
                 return     # everything in flight / protected: overshoot
-            worst = max(victims, key=self._score)
             del self._entries[worst.key]
             # paged backend: eviction is a refcount drop — blocks free
             # now, or when the last in-flight reader releases

@@ -9,7 +9,7 @@ a cluster maps to the *identical* prompt prefix (the cached unit).
 from __future__ import annotations
 
 import dataclasses
-from typing import FrozenSet, Iterable, Sequence, Tuple
+from typing import FrozenSet, Iterable, Optional, Sequence, Tuple
 
 Edge = Tuple[int, str, int]
 
@@ -29,6 +29,17 @@ class Subgraph:
     def union(self, other: "Subgraph") -> "Subgraph":
         return Subgraph(nodes=self.nodes | other.nodes,
                         edges=self.edges | other.edges)
+
+    def intersection(self, other: "Subgraph") -> "Subgraph":
+        return Subgraph(nodes=self.nodes & other.nodes,
+                        edges=self.edges & other.edges)
+
+    def issubset(self, other: "Subgraph") -> bool:
+        return self.nodes <= other.nodes and self.edges <= other.edges
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.nodes and not self.edges
 
     @property
     def num_nodes(self) -> int:
@@ -56,6 +67,18 @@ def merge_subgraphs(subgraphs: Sequence[Subgraph]) -> Subgraph:
     return out
 
 
+def intersect_subgraphs(subgraphs: Sequence[Subgraph]) -> Subgraph:
+    """Shared structure of a set of subgraphs: the ancestor content of a
+    prefix-tree node is the intersection of its children's contents
+    (DESIGN.md §10) — the part sibling clusters prefill redundantly
+    under the flat layout."""
+    assert subgraphs, "cannot intersect an empty set"
+    out = subgraphs[0]
+    for sg in subgraphs[1:]:
+        out = out.intersection(sg)
+    return out
+
+
 def textualize(sg: Subgraph, node_text: Sequence[str]) -> str:
     """Render a subgraph as the prompt prefix (G-Retriever textualization).
 
@@ -63,10 +86,39 @@ def textualize(sg: Subgraph, node_text: Sequence[str]) -> str:
     subgraphs always produce byte-identical prompts — a precondition for
     prefix-cache hits.
     """
+    return textualize_delta(sg, node_text)
+
+
+def textualize_delta(sg: Subgraph, node_text: Sequence[str],
+                     base: Optional[Subgraph] = None) -> str:
+    """Render a subgraph SEGMENT: the content of ``sg`` not already in
+    ``base`` (``base=None`` renders everything — the historical flat
+    ``textualize``, byte-identical).
+
+    This is the textualization of one prefix-chain segment
+    (DESIGN.md §10): a path of nested contents C0 ⊆ C1 ⊆ ... ⊆ CL is
+    rendered as ``T(C0) ++ T(C1 \\ C0) ++ ...``, so an ancestor's full
+    path text is BY CONSTRUCTION a literal string prefix of every
+    descendant's — the property that makes an ancestor's KV blocks
+    reusable under every descendant chain.
+
+    Order stability: emitted nodes and edges are SORTED inside each
+    segment.  Set-difference iteration order (or any dependence on the
+    order members were unioned into the representative) must never
+    leak into the text — two chains over the same content sets must be
+    byte-identical, or the ancestor text silently stops being a token
+    prefix of its descendants and chain reuse serves wrong attention
+    content (regression: tests/test_prefix_tree.py).
+    """
+    new_nodes = sg.nodes if base is None else sg.nodes - base.nodes
+    new_edges = sg.edges if base is None else sg.edges - base.edges
+    if base is not None:
+        assert base.issubset(sg), \
+            "chain segments require nested content (base ⊆ sg)"
     lines = ["node_id,node_attr"]
-    for n in sorted(sg.nodes):
+    for n in sorted(new_nodes):
         lines.append(f"{n},{node_text[n]}")
     lines.append("src,edge_attr,dst")
-    for s, r, d in sorted(sg.edges):
+    for s, r, d in sorted(new_edges):
         lines.append(f"{s},{r},{d}")
     return "\n".join(lines)

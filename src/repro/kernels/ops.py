@@ -75,6 +75,20 @@ def merge_partials(o1, m1, l1, o2, m2, l2, *, block_q=128):
                                   interpret=_interpret())
 
 
+def fold_partials(partials, *, block_q=128):
+    """Associative N-way LSE fold over disjoint key sets: the prefix
+    CHAIN cascade (one partial per chain segment + the suffix partial,
+    DESIGN.md §10).  Left-folds the pairwise Pallas merge kernel, the
+    same evaluation order as ``kernels.ref.fold_partials_ref``."""
+    assert partials, "need at least one partial"
+    o, m, l = partials[0]
+    for o2, m2, l2 in partials[1:]:
+        o, m, l = _shared.merge_partials(o, m, l, o2, m2, l2,
+                                         block_q=block_q,
+                                         interpret=_interpret())
+    return o, m, l
+
+
 def decode_gqa(q, k, v, q_pos, k_pos, *, window=0, block_k=128):
     return _decode.decode_gqa(q, k, v, q_pos, k_pos, window=window,
                               block_k=block_k, interpret=_interpret())

@@ -133,6 +133,25 @@ def merge_partials_ref(o1, m1, l1, o2, m2, l2):
     return out.astype(o1.dtype), m, l
 
 
+def fold_partials_ref(partials):
+    """Associative LSE-fold of N online-softmax partials over pairwise
+    disjoint key sets: ``softmax([keys1 ++ ... ++ keysN])`` equals the
+    left fold of ``merge_partials_ref`` over the partial list.
+
+    The N-segment prefix-chain cascade (DESIGN.md §10): one partial per
+    chain segment plus the suffix partial, folded in path order.  The
+    merge is associative (each step is an exact flash-style
+    renormalization), so any fold order is mathematically identical;
+    the left fold is canonical so kernel and oracle see the same
+    floating-point evaluation order.
+    """
+    assert partials, "need at least one partial"
+    o, m, l = partials[0]
+    for o2, m2, l2 in partials[1:]:
+        o, m, l = merge_partials_ref(o, m, l, o2, m2, l2)
+    return o, m, l
+
+
 def decode_gqa_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
     """Single-token GQA decode oracle.
 

@@ -230,52 +230,66 @@ def merge_attend(o1, m1, l1, o2, m2, l2):
     return merge_partials_ref(o1, m1, l1, o2, m2, l2)
 
 
-def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix: dict,
+def fold_attend(partials):
+    """Associative N-way LSE fold over disjoint key sets — the chain
+    cascade (DESIGN.md §10).  Delegates to the kernel oracle."""
+    from repro.kernels.ref import fold_partials_ref
+    return fold_partials_ref(partials)
+
+
+def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix,
                   k_suf: jnp.ndarray, v_suf: jnp.ndarray,
                   suf_pos: jnp.ndarray, *, window: int = 0,
                   impl: str = "xla") -> jnp.ndarray:
-    """Cascade attention over [shared prefix ++ per-member suffix].
+    """Cascade attention over [shared prefix chain ++ per-member suffix].
 
-    q: [B, Hq, Tq, D]; prefix: {"k","v","pos"} seq-major batch-1 cache
-    (the live PrefixState buffers, unreplicated); k_suf, v_suf:
+    q: [B, Hq, Tq, D]; prefix: a {"k","v","pos"} seq-major batch-1
+    cache (the live PrefixState buffers, unreplicated) OR a sequence of
+    them — a prefix CHAIN in root→leaf order, one partial per segment
+    folded by the associative LSE merge (DESIGN.md §10; a 1-tuple is
+    exactly the historical 2-level cascade).  k_suf, v_suf:
     [B, Ts, Hkv, D]; suf_pos: [B, Ts].  The prefix side needs no causal
     mask — every cached prefix position is strictly past every query —
     so only validity (pos >= 0) and the optional sliding window apply.
     Numerically exact vs. attending the concatenated KV.
 
-    This is the DENSE cascade (single shared prefix at batch 1).
+    This is the DENSE cascade (shared prefix segments at batch 1).
     Multi-prefix batches go through the paged path instead
     (``attend_paged``, DESIGN.md §8), where every row walks its own
-    page table over the block arena.
+    page table over the block arena — a chain there is simply a wider
+    (concatenated) page walk.
     """
-    pk_, pv_, ppos_ = prefix["k"], prefix["v"], prefix["pos"]
+    segments = (tuple(prefix) if isinstance(prefix, (list, tuple))
+                else (prefix,))
     if impl == "pallas":
         from repro.kernels import ops as kops
-        pk = pk_.transpose(0, 2, 1, 3)               # head-major for MXU
-        pv = pv_.transpose(0, 2, 1, 3)
-        sk = k_suf.transpose(0, 2, 1, 3)
+        sk = k_suf.transpose(0, 2, 1, 3)             # head-major for MXU
         sv = v_suf.transpose(0, 2, 1, 3)
         if q.shape[2] == 1:
             # decode: keep the decode-shaped [group, d] q tiling (one KV
             # stream per kv-head group) instead of 1-row prefill tiles;
-            # the elementwise merge stays in XLA (fuses, nothing to tile)
-            o1, m1, l1 = kops.decode_gqa_partial(
-                q[:, :, 0], pk, pv, q_pos[:, 0], ppos_, window=window)
-            o2, m2, l2 = kops.decode_gqa_partial(
-                q[:, :, 0], sk, sv, q_pos[:, 0], suf_pos, window=window)
-            out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
+            # the elementwise fold stays in XLA (fuses, nothing to tile)
+            parts = [kops.decode_gqa_partial(
+                q[:, :, 0], p["k"].transpose(0, 2, 1, 3),
+                p["v"].transpose(0, 2, 1, 3), q_pos[:, 0], p["pos"],
+                window=window) for p in segments]
+            parts.append(kops.decode_gqa_partial(
+                q[:, :, 0], sk, sv, q_pos[:, 0], suf_pos, window=window))
+            out, _, _ = fold_attend(parts)
             return out[:, :, None].astype(q.dtype)
-        o1, m1, l1 = kops.attention_partial(q, pk, pv, q_pos, ppos_,
-                                            causal=False, window=window)
-        o2, m2, l2 = kops.attention_partial(q, sk, sv, q_pos, suf_pos,
-                                            causal=True, window=window)
-        out, _, _ = kops.merge_partials(o1, m1, l1, o2, m2, l2)
+        parts = [kops.attention_partial(
+            q, p["k"].transpose(0, 2, 1, 3), p["v"].transpose(0, 2, 1, 3),
+            q_pos, p["pos"], causal=False, window=window)
+            for p in segments]
+        parts.append(kops.attention_partial(q, sk, sv, q_pos, suf_pos,
+                                            causal=True, window=window))
+        out, _, _ = kops.fold_partials(parts)
         return out.astype(q.dtype)
-    o1, m1, l1 = attend_partial(q, pk_, pv_, q_pos,
-                                ppos_, causal=False, window=window)
-    o2, m2, l2 = attend_partial(q, k_suf, v_suf, q_pos, suf_pos,
-                                causal=True, window=window)
-    out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
+    parts = [attend_partial(q, p["k"], p["v"], q_pos, p["pos"],
+                            causal=False, window=window) for p in segments]
+    parts.append(attend_partial(q, k_suf, v_suf, q_pos, suf_pos,
+                                causal=True, window=window))
+    out, _, _ = fold_attend(parts)
     return out.astype(q.dtype)
 
 

@@ -116,8 +116,16 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
             window = cfg.local_window
         sub = ({k: cache[k] for k in ("k", "v", "pos")}
                if cache is not None else None)
-        sub_prefix = ({k: prefix[k] for k in ("k", "v", "pos")}
-                      if prefix is not None else None)
+        # prefix may be one batch-1 cache (dense single segment, or the
+        # paged decode's read-only arena) or a CHAIN of caches (a
+        # tuple, root→leaf): attention folds one partial per segment
+        if prefix is None:
+            sub_prefix = None
+        elif isinstance(prefix, (list, tuple)):
+            sub_prefix = tuple({k: p[k] for k in ("k", "v", "pos")}
+                               for p in prefix)
+        else:
+            sub_prefix = {k: prefix[k] for k in ("k", "v", "pos")}
         out, sub_new = attn_lib.self_attention(
             p["mixer"], h,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
@@ -339,7 +347,12 @@ def _group_body(cfg: ModelConfig, gspecs, ctx):
         new_gcache = {} if gcache is not None else None
         for j, spec in enumerate(gspecs):
             lc = gcache[str(j)] if gcache is not None else None
-            lp = gprefix[str(j)] if gprefix is not None else None
+            if gprefix is None:
+                lp = None
+            elif isinstance(gprefix, (list, tuple)):   # prefix chain
+                lp = tuple(gp[str(j)] for gp in gprefix)
+            else:
+                lp = gprefix[str(j)]
             x, nc, a = apply_layer(gparams[str(j)], spec, cfg, x, lc, ctx, lp)
             x = constrain(x, "layer_boundary")
             aux = aux + a
@@ -362,6 +375,12 @@ def run_stack(params: dict, cfg: ModelConfig, x: jnp.ndarray,
     period, n_groups, _ = stack_layout(cfg)
     aux = jnp.zeros((), jnp.float32)
     new_cache = {} if cache is not None else None
+    # ``prefix`` is deliberately NOT normalized to a tuple here: a tuple
+    # is a dense prefix CHAIN (one batch-1 cache per segment), while a
+    # bare dict is either the dense single-segment prefix OR the paged
+    # decode's read-only block ARENA — which must stay a dict all the
+    # way to ``attend_paged`` (wrapping it would chain-ify the arena)
+    chain = isinstance(prefix, (list, tuple))
 
     if n_groups:
         gspecs = specs[:period]
@@ -369,7 +388,12 @@ def run_stack(params: dict, cfg: ModelConfig, x: jnp.ndarray,
         if cfg.remat:
             body = jax.checkpoint(body)
         gcaches = cache.get("groups") if cache is not None else None
-        gprefix = prefix.get("groups") if prefix is not None else None
+        if prefix is None:
+            gprefix = None
+        elif chain:
+            gprefix = tuple(p.get("groups") for p in prefix)
+        else:
+            gprefix = prefix.get("groups")
         if gcaches is None:
             (x, aux), _ = jax.lax.scan(
                 lambda c, p: (body((c[0], c[1]), (p, None, None))[0], None),
@@ -383,7 +407,12 @@ def run_stack(params: dict, cfg: ModelConfig, x: jnp.ndarray,
     rest_specs = specs[n_groups * period:]
     for i, spec in enumerate(rest_specs):
         lc = cache["rest"][i] if cache is not None else None
-        lp = prefix["rest"][i] if prefix is not None else None
+        if prefix is None:
+            lp = None
+        elif chain:
+            lp = tuple(p["rest"][i] for p in prefix)
+        else:
+            lp = prefix["rest"][i]
         p = params["dec"]["rest"][i]
 
         def fn(p_, x_, lc_, lp_, _spec=spec):

@@ -17,6 +17,12 @@ Three serving modes over the same retriever, GNN, and engine:
   slot-limited micro-batches served to full completion — as the
   token-identical A/B oracle.  TTFT per query includes the
   arrival-queue wait.
+
+Both SubGCache modes take a ``tree_levels`` knob (DESIGN.md §10): cut
+the clustering dendrogram at several levels and serve each leaf
+cluster against a root→leaf prefix CHAIN — ancestor segments hold the
+content sibling clusters share, stored and prefilled once.
+``tree_levels=1`` (default) is the flat single-cut path.
 """
 from __future__ import annotations
 
@@ -27,9 +33,11 @@ from typing import Callable, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.core.clustering import Dendrogram
 from repro.core.embedding import embed_subgraphs, subgraph_tensors
-from repro.core.planner import BatchPlan, plan_batch
-from repro.core.subgraph import Subgraph, textualize
+from repro.core.planner import (BatchPlan, PrefixTreePlan, plan_batch,
+                                plan_prefix_tree)
+from repro.core.subgraph import Subgraph, textualize, textualize_delta
 from repro.data.scenegraph import QAItem
 from repro.data.tokenizer import Tokenizer
 from repro.gnn.projector import apply_projector
@@ -133,13 +141,31 @@ class GraphRAGPipeline:
             for sg in subgraphs])
 
     def run_subgcache(self, items: Sequence[QAItem], num_clusters: int,
-                      linkage: str = "ward") -> tuple:
-        """Cluster-wise prefix-cache processing (the paper's method)."""
+                      linkage: str = "ward", tree_levels: int = 1,
+                      dendrogram: Optional[Dendrogram] = None) -> tuple:
+        """Cluster-wise prefix-cache processing (the paper's method).
+
+        ``tree_levels`` (DESIGN.md §10): cut the dendrogram at
+        ``tree_levels`` levels and serve each leaf cluster against a
+        root→leaf prefix CHAIN — shared ancestor segments prefilled
+        once per ANCESTOR instead of once per cluster.  ``1`` (default)
+        is the flat single-cut path, token-identical to the
+        pre-refactor behavior.  Tree mode needs the cascade backends;
+        stateful / cross-attention engines transparently serve flat.
+
+        ``dendrogram``: pass a precomputed ``build_dendrogram`` result
+        to make the clustering step a cheap cut replay (the fig3 sweep
+        computes the merge tree once and cuts it per point).
+        """
+        if tree_levels > 1 and self.engine.use_split_prefix:
+            return self._run_subgcache_tree(items, num_clusters, linkage,
+                                            tree_levels, dendrogram)
         subgraphs, ret_times = self.retrieve_all(items)
 
         t0 = time.perf_counter()
         emb = self.embed_for_clustering(subgraphs)
-        plan = plan_batch(subgraphs, emb, num_clusters, linkage)
+        plan = plan_batch(subgraphs, emb, num_clusters, linkage,
+                          dendrogram=dendrogram)
         cluster_time = (time.perf_counter() - t0
                         + plan.cluster_processing_time_s)
         share = cluster_time / max(1, len(items))
@@ -197,11 +223,122 @@ class GraphRAGPipeline:
         return records, summary, plan, stats
 
     # ------------------------------------------------------------------
+    def _run_subgcache_tree(self, items: Sequence[QAItem],
+                            num_clusters: int, linkage: str,
+                            tree_levels: int,
+                            dendrogram: Optional[Dendrogram]) -> tuple:
+        """Offline serving over a prefix tree (DESIGN.md §10): ancestor
+        segments are prefilled ONCE and kept live while every
+        descendant leaf is served against its root→leaf chain; each
+        leaf's own extension is released after its cluster (the flat
+        path's one-live-prefix bound, per segment level).  Ancestor
+        prefill cost and text build are amortized over the members
+        UNDER the ancestor — the same uniform-share rule the flat path
+        applies per cluster."""
+        subgraphs, ret_times = self.retrieve_all(items)
+
+        t0 = time.perf_counter()
+        emb = self.embed_for_clustering(subgraphs)
+        plan = plan_prefix_tree(subgraphs, emb, num_clusters,
+                                tree_levels=tree_levels, linkage=linkage,
+                                dendrogram=dendrogram)
+        cluster_time = (time.perf_counter() - t0
+                        + plan.cluster_processing_time_s)
+        share = cluster_time / max(1, len(items))
+
+        members_under = {n.node_id: 0 for n in plan.nodes}
+        for leaf in plan.leaves:
+            k = len(plan.nodes[leaf].member_indices)
+            for nid in plan.path(leaf):
+                members_under[nid] += k
+
+        stats = self.engine.cache_mgr.reset_stats()
+        seg_states: dict = {}        # node_id -> (state, prefill_s, build_s)
+        records: List[QueryRecord] = [None] * len(items)  # type: ignore
+        try:
+            for leaf in plan.leaves:
+                node = plan.nodes[leaf]
+                path = plan.path(leaf)
+                parent_state = None
+                prefix_share = build_share = 0.0
+                for depth, nid in enumerate(path):
+                    hit = nid in seg_states
+                    if not hit:
+                        t1 = time.perf_counter()
+                        content = plan.nodes[nid].content
+                        base = (plan.nodes[path[depth - 1]].content
+                                if depth else None)
+                        payload = self._segment_payload(content, base)
+                        toks, soft = (payload if isinstance(payload, tuple)
+                                      else (payload, None))
+                        t_build = time.perf_counter() - t1
+                        if parent_state is None:
+                            st, dt = self.engine.prefill_prefix(toks, soft)
+                        else:
+                            st, dt = self.engine.prefill_prefix_extension(
+                                parent_state, toks)
+                        seg_states[nid] = (st, dt, t_build)
+                    st, dt, t_build = seg_states[nid]
+                    stats.record_tree_segment(depth, st.segment_len,
+                                              hit=hit, leaf=(nid == leaf))
+                    prefix_share += dt / members_under[nid]
+                    build_share += t_build / members_under[nid]
+                    parent_state = st
+                state = parent_state
+
+                suffixes, builds = [], []
+                for qi in node.member_indices:
+                    t1 = time.perf_counter()
+                    suffixes.append(self.tokenizer.encode(
+                        self.suffix_text(items[qi].question)))
+                    builds.append(time.perf_counter() - t1)
+
+                del seg_states[leaf]     # the ctx below releases the leaf
+                with self.engine.cache_mgr.cluster(state):
+                    outs, t = self.engine.generate_with_prefix(state,
+                                                               suffixes)
+
+                for k, qi in enumerate(node.member_indices):
+                    it = items[qi]
+                    text = self.tokenizer.decode(outs[k])
+                    records[qi] = QueryRecord(
+                        query=it.question, answer=it.answer, generated=text,
+                        correct=self._check(text, it.answer),
+                        retrieval_s=ret_times[qi], cluster_share_s=share,
+                        prompt_build_s=builds[k] + build_share,
+                        prefix_share_s=prefix_share,
+                        prefill_s=t["prefill_share"][k],
+                        decode_s=t["decode_share"][k],
+                        prompt_tokens=state.prefix_len + len(suffixes[k]),
+                        cached_tokens=state.prefix_len)
+        finally:
+            for st, _, _ in seg_states.values():
+                st.release()             # ancestors freed after the batch
+        summary = RunSummary.from_records(
+            f"subgcache(c={num_clusters},{linkage},tree{tree_levels})",
+            records, cluster_processing_s=cluster_time,
+            prefill_savings=stats.prefill_savings)
+        return records, summary, plan, stats
+
+    # ------------------------------------------------------------------
     def _prefix_payload(self, sg: Subgraph):
         """(prefix tokens, soft-prompt embeds or None) for a cluster
         representative — the closure ``OnlineScheduler`` prefills with."""
         toks = self.tokenizer.encode(self.prefix_text(sg), bos=True)
         return toks, self.soft_prompt(sg)
+
+    def _segment_payload(self, content: Subgraph,
+                         base: Optional[Subgraph] = None):
+        """Token ids of ONE prefix-chain segment (DESIGN.md §10):
+        ``content``'s delta over ``base``.  ``base=None`` is the root
+        segment — full textualization with the prefix header, BOS, and
+        the soft graph prompt (consumed once, at the path's start, so
+        every descendant chain shares it byte-for-byte); deeper
+        segments carry only their delta text."""
+        if base is None:
+            return self._prefix_payload(content)
+        return self.tokenizer.encode(
+            textualize_delta(content, self.index.graph.node_text, base))
 
     def serve_stream(self, items: Sequence[QAItem],
                      arrivals: Sequence[float], *,
@@ -211,6 +348,8 @@ class GraphRAGPipeline:
                      max_clusters: Optional[int] = None,
                      mode: str = "continuous", chunk: int = 4,
                      max_suffix_len: Optional[int] = None,
+                     tree_levels: int = 1,
+                     tree_clusters: Optional[int] = None,
                      scheduler=None) -> tuple:
         """Online serving of a streaming query trace (DESIGN.md §7/§9).
 
@@ -239,6 +378,14 @@ class GraphRAGPipeline:
         value) to keep the cluster population and prefix pool warm
         across traces.  Returns ``(records, summary, scheduler)``; pool
         hit/miss/eviction counters live in ``scheduler.pool.stats``.
+
+        ``tree_levels`` > 1 (DESIGN.md §10; split-cascade engines)
+        seeds the assigner from a multi-level prefix-tree plan over the
+        trace's own retrievals (the warm-start bootstrap ``from_plan``
+        already models, cut at ``tree_clusters`` leaves): cluster
+        prefixes become root→leaf chains whose shared ancestor segments
+        are pooled ONCE and pinned per in-flight row.  ``1`` (default)
+        is the flat path, token-identical to the pre-refactor behavior.
         """
         from repro.core.prefix_pool import PrefixPool
         from repro.serving.scheduler import (ArrivalQueue,
@@ -248,14 +395,28 @@ class GraphRAGPipeline:
         assert mode in ("continuous", "drain"), mode
         stats = self.engine.cache_mgr.reset_stats()
         if scheduler is None:
+            if tree_levels > 1 and self.engine.use_split_prefix:
+                # seed the leaf population + chain specs from the
+                # trace's own retrievals (untimed bootstrap pass — the
+                # flat ``from_plan`` warm start with a deeper cut)
+                subgraphs, _ = self.retrieve_all(items)
+                emb = self.embed_for_clustering(subgraphs)
+                k = tree_clusters if tree_clusters is not None else \
+                    (max_clusters if max_clusters is not None else 8)
+                plan = plan_prefix_tree(subgraphs, emb, k,
+                                        tree_levels=tree_levels)
+                assigner = OnlineClusterAssigner.from_tree_plan(
+                    plan, emb, threshold=threshold,
+                    max_clusters=max_clusters)
+            else:
+                assigner = OnlineClusterAssigner(threshold=threshold,
+                                                 max_clusters=max_clusters)
             # OnlineScheduler owns the stats wiring: it points the
             # pool's counters at the engine's (just-reset) window
             scheduler = OnlineScheduler(
-                self.engine,
-                OnlineClusterAssigner(threshold=threshold,
-                                      max_clusters=max_clusters),
-                PrefixPool(pool_budget_bytes),
-                self._prefix_payload)
+                self.engine, assigner, PrefixPool(pool_budget_bytes),
+                self._prefix_payload,
+                segment_tokens_fn=self._segment_payload)
         else:
             scheduler.pool.stats = stats    # fresh accounting window
 

@@ -64,6 +64,9 @@ class RowState:
     """Host bookkeeping for one in-flight slot."""
     payload: Any                    # caller's handle, returned at retirement
     state: Optional[PrefixState]    # prefix served against (blocks pinned)
+    prefix_blocks: List[int]        # SNAPSHOT of the pinned chain blocks
+                                    # (a mid-flight pool eviction drops the
+                                    # state's own handles, never this list)
     blocks: List[int]               # main-arena suffix reservation
     suffix_len: int                 # suffix tokens actually consumed
     offset: int                     # prefix length (suffix scatter base)
@@ -163,9 +166,11 @@ class InflightBatch:
         self._with_sub(lambda sub: (reset_pos_rows(sub, rows),))
 
     def nbp_for(self, states: Sequence[Optional[PrefixState]]) -> int:
-        """Power-of-two prefix page-table width covering ``states``."""
+        """Power-of-two prefix page-table width covering ``states``
+        (a chain state's row concatenates its whole root→leaf path)."""
         return bucket_pow2(max(
-            [1] + [len(st.page.blocks) for st in states if st is not None]))
+            [1] + [len(st.chain_blocks()) for st in states
+                   if st is not None]))
 
 
 class ContinuousEngine:
@@ -241,12 +246,18 @@ class ContinuousEngine:
             + [[EOS]] * (kb - k)                     # batch padding rows
         offs = np.asarray([st.prefix_len if st else 0 for st in states]
                           + [0] * (kb - k), np.int32)
+        # snapshot each row's full chain walk (ancestors ++ own segment,
+        # DESIGN.md §10): the pins below and the decode page rows use
+        # this list, so a pool eviction mid-flight (which drops the
+        # STATE's handles) can never strand a live row
+        prefix_blocks = [st.chain_blocks() if st is not None else []
+                         for st in states]
         pinned = 0
         flat: Optional[List[int]] = None
         try:
-            for st in states:
-                if st is not None:
-                    pool.incref(st.page.blocks)      # per-row, per-lifetime
+            for blocks in prefix_blocks:
+                if blocks:
+                    pool.incref(blocks)              # per-row, per-lifetime
                 pinned += 1
             # per-row main-arena suffix reservation; may reclaim cold
             # pooled prefixes (never pinned in-flight ones).  Plain
@@ -260,9 +271,8 @@ class ContinuousEngine:
 
             nbp = b.nbp_for(states)
             prow = np.full((kb, nbp), NULL_BLOCK, np.int32)
-            for j, st in enumerate(states):
-                if st is not None:
-                    prow[j] = st.page.row(nbp)
+            for j, blocks in enumerate(prefix_blocks):
+                prow[j, :len(blocks)] = blocks
             srow = np.full((kb, b.nbs), b.trash_row, np.int32)
             for j, s in enumerate(slots):
                 srow[j] = b.slot_rows(s)
@@ -277,9 +287,9 @@ class ContinuousEngine:
             t_prefill = time.perf_counter() - t0
         except BaseException:
             # unwind: no phantom prefix refs, no leaked reservations
-            for st in states[:pinned]:
-                if st is not None:
-                    pool.decref(st.page.blocks)
+            for blocks in prefix_blocks[:pinned]:
+                if blocks:
+                    pool.decref(blocks)
             if flat is not None:
                 pool.decref(flat)
             raise
@@ -287,6 +297,7 @@ class ContinuousEngine:
         for j, (slot, req, st) in enumerate(zip(slots, requests, states)):
             row = RowState(
                 payload=payloads[j], state=st,
+                prefix_blocks=prefix_blocks[j],
                 blocks=flat[j * b.nbs:(j + 1) * b.nbs],
                 suffix_len=len(req.suffix_tokens), offset=int(offs[j]),
                 pos=int(offs[j]) + int(lens[j]), tok=int(first[j]),
@@ -329,15 +340,16 @@ class ContinuousEngine:
         pos = np.zeros(n, np.int32)
         done = np.ones(n, bool)
         offs = np.zeros(n, np.int32)
-        states = [b.slots[i].state if b.slots[i] else None
-                  for i in range(n)]
-        nbp = b.nbp_for(states)
+        # page rows come from each row's admission-time SNAPSHOT of its
+        # chain walk — valid even if the pooled state was evicted
+        # mid-flight (the row's own pins keep the blocks alive)
+        nbp = bucket_pow2(max(
+            [1] + [len(b.slots[i].prefix_blocks) for i in live]))
         prow = np.full((n, nbp), NULL_BLOCK, np.int32)
         for i in live:
             r = b.slots[i]
             tok[i], pos[i], done[i], offs[i] = r.tok, r.pos, False, r.offset
-            if r.state is not None:
-                prow[i] = r.state.page.row(nbp)
+            prow[i, :len(r.prefix_blocks)] = r.prefix_blocks
 
         t0 = time.perf_counter()
         toks = b._with_sub(lambda sub: eng.decode_step(
@@ -424,7 +436,7 @@ class ContinuousEngine:
                     n = b.num_slots
                     nbp = b.nbp_for([st])
                     prow = np.full((n, nbp), NULL_BLOCK, np.int32)
-                    prow[0] = st.page.row(nbp)
+                    prow[0] = st.page_row(nbp)
                     b._with_sub(lambda sub: eng.decode_step(
                         np.full(n, EOS, np.int32), np.zeros(n, np.int32),
                         np.ones(n, bool), sub, np.zeros(n, np.int32),
@@ -450,8 +462,8 @@ class ContinuousEngine:
         # freed blocks' stored-token counters, so the gauge never keeps
         # charging a retired row's unconsumed decode budget
         pool.decref(r.blocks)
-        if r.state is not None:
-            pool.decref(r.state.page.blocks)
+        if r.prefix_blocks:
+            pool.decref(r.prefix_blocks)     # the admission-time chain pins
         stats = eng.cache_mgr.stats
         plen = r.state.prefix_len if r.state is not None else 0
         stats.record_served(1)

@@ -55,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import ClusterCacheManager, PrefixState
-from repro.core.paged import NULL_BLOCK, KVBlockPool
+from repro.core.paged import NULL_BLOCK, KVBlockPool, PageTable
 from repro.data.tokenizer import EOS, PAD, Tokenizer
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -363,6 +363,93 @@ class ServingEngine:
                             n_soft=n_soft)
         return state, dt
 
+    def prefill_prefix_extension(self, parent: PrefixState,
+                                 ext_tokens: List[int],
+                                 _record: bool = True
+                                 ) -> Tuple[PrefixState, float]:
+        """Extend a prefix chain by one segment (DESIGN.md §10).
+
+        Prefills ``ext_tokens`` at batch 1 BEHIND the parent's full
+        chain (the cascade: parent path as the read-only prefix source,
+        fresh KV into this segment's own storage), so the returned
+        child state's path KV is token-identical to flat-prefilling the
+        concatenated path — the ancestor segments are stored once and
+        referenced, never recomputed or copied.
+
+        Paged backend: the extension's KV lands in exactly
+        ``ceil(len / block_size)`` fresh arena blocks (the segment's
+        own page); the child takes per-lifetime block references on
+        every ancestor block, so a pool-evicted ancestor can never be
+        recycled under a live descendant.  Dense split backend: the
+        segment gets its own batch-1 cache and the chain is served as
+        a tuple of segment caches through the N-way LSE fold.
+        Attention-only stacks only (the engine's callers gate).
+        """
+        assert parent.enc_len == 0, \
+            "prefix chains do not cover cross-attention states"
+        t0 = time.perf_counter()
+        embeds, positions, valid, lens = self._embed_padded(
+            [list(ext_tokens)], None, parent.prefix_len)
+        n_ext = int(lens[0])
+        total = parent.prefix_len + n_ext
+        # capacity-bucket the FULL path first: an over-long chain must
+        # raise before any refcount or allocation side effect
+        capacity = self._prefix_capacity_for(total)
+        if _record:
+            self.cache_mgr.stats.record_prefix(n_ext, split=True)
+        prefill = self._prefill_jit(1, embeds.shape[1])
+        if self.use_paged:
+            assert parent.is_paged and parent.block_pool is self.block_pool, \
+                "chain extension needs a page-table parent from this engine"
+            pool = self.block_pool
+            chain = parent.chain_blocks()
+            nbp = bucket_pow2(len(chain))
+            prow = np.full((1, nbp), NULL_BLOCK, np.int32)
+            prow[0, :len(chain)] = chain
+            # the child's lifetime references on its ancestors: taken
+            # BEFORE the allocation below, whose reclaim pass may evict
+            # the parent from the pool mid-extension
+            pool.incref(chain)
+            bids: Optional[List[int]] = None
+            try:
+                bids = pool.alloc_suffix(blocks_for(n_ext, self.block_size))
+                srow = np.asarray(bids, np.int32).reshape(1, -1)
+                self._with_arena(lambda a: prefill(
+                    self.params, embeds, positions, valid, a, None,
+                    jnp.int32(parent.prefix_len), jnp.asarray(prow),
+                    jnp.asarray(srow)))
+                pool.note_tokens(bids, n_ext)
+                jax.block_until_ready(pool.arena)
+            except BaseException:
+                pool.decref(chain)
+                if bids is not None:
+                    pool.decref(bids)
+                raise
+            self.cache_mgr.stats.record_blocks(pool)
+            dt = time.perf_counter() - t0
+            return PrefixState(
+                cache=None, prefix_len=total, capacity=capacity,
+                page=PageTable(blocks=bids, length=n_ext),
+                block_pool=pool, n_soft=parent.n_soft, parent=parent,
+                seg_len=n_ext, ancestor_blocks=chain), dt
+        # dense split backend: the segment's own batch-1 suffix-style
+        # cache, prefilled through the N-way cascade over the chain
+        assert self.use_split_prefix and parent.cache is not None, \
+            "dense chain extension needs the split cascade " \
+            "(stateful / cross-attention stacks serve flat prefixes)"
+        cache = M.init_suffix_cache(self.cfg, 1,
+                                    self._prefix_capacity_for(n_ext))
+        prefix = tuple(s.cache for s in parent.chain())
+        cache, _, _ = prefill(self.params, embeds, positions, valid, cache,
+                              prefix, jnp.int32(parent.prefix_len),
+                              None, None)
+        jax.block_until_ready(cache)
+        dt = time.perf_counter() - t0
+        return PrefixState(cache=cache, prefix_len=total,
+                           capacity=self._prefix_capacity_for(n_ext),
+                           n_soft=parent.n_soft, parent=parent,
+                           seg_len=n_ext), dt
+
     # ------------------------------------------------------------------
     # the serving API
     # ------------------------------------------------------------------
@@ -452,16 +539,22 @@ class ServingEngine:
         # pins happen inside the try: any failure below (suffix-capacity
         # overflow, arena exhaustion, a compile error) must drop them,
         # or the blocks leak phantom references forever.
+        # a chain state's row is the CONCATENATION of its ancestors' and
+        # its own blocks (DESIGN.md §10) — masking is positional, so the
+        # N-segment cascade is just a wider page walk; pins cover the
+        # full path (snapshotted: an eviction mid-batch drops the
+        # state's own handle, never the list we increfed)
         nbp = bucket_pow2(max(1, max(
-            (len(st.page.blocks) for st in states if st is not None),
+            (len(st.chain_blocks()) for st in states if st is not None),
             default=1)))
         pinned: dict = {}
         flat: Optional[List[int]] = None
         try:
             for st in states:
                 if st is not None and st.uid not in pinned:
-                    pool.incref(st.page.blocks)
-                    pinned[st.uid] = st.page.blocks
+                    blocks = st.chain_blocks()
+                    pool.incref(blocks)
+                    pinned[st.uid] = blocks
             if len(pinned) == 1 and all(st is not None for st in states[:n]):
                 # single-cluster micro-batch (common under temporally
                 # clustered traffic): a [1, NBP] SHARED table — every row
@@ -469,13 +562,13 @@ class ServingEngine:
                 # like the dense batch-1 cascade, not once per member.
                 # Batch-padding rows ride along (outputs discarded).
                 one = next(st for st in states if st is not None)
-                prefix_rows = one.page.row(nbp)[None]
+                prefix_rows = one.page_row(nbp)[None]
                 offs = np.full(b, one.prefix_len, np.int32)
             else:
                 prefix_rows = np.full((b, nbp), NULL_BLOCK, np.int32)
                 for i, st in enumerate(states):
                     if st is not None:
-                        prefix_rows[i] = st.page.row(nbp)
+                        prefix_rows[i] = st.page_row(nbp)
             embeds, positions, valid, lens = self._embed_padded(
                 suffixes, None, offs)
             suffix_cap = self._suffix_capacity_for(embeds.shape[1])
@@ -639,10 +732,15 @@ class ServingEngine:
             pads, None, plen, pad_to=pad_to)
         if use_split:
             # Split cascade: B members cost prefix_capacity + B×suffix
-            # slots of HBM; the prefix KV is attended in place.
+            # slots of HBM; the prefix KV is attended in place.  A chain
+            # state passes its segments as a TUPLE of batch-1 caches —
+            # one partial per segment, folded by the N-way LSE cascade
+            # (DESIGN.md §10).
             cache = M.init_suffix_cache(
                 self.cfg, b, self._suffix_capacity_for(embeds.shape[1]))
-            prefix, offset = state.cache, jnp.int32(state.prefix_len)
+            prefix = (tuple(s.cache for s in state.chain())
+                      if state.parent is not None else state.cache)
+            offset = jnp.int32(state.prefix_len)
         elif state is None:
             # no-prefix path: a fresh cache sized for suffix + decode;
             # the row's own tokens are the whole sequence
@@ -650,6 +748,9 @@ class ServingEngine:
                 self.cfg, b, self._suffix_capacity_for(embeds.shape[1]))
             prefix, offset = None, 0
         else:
+            assert state.parent is None, \
+                "chain states require the split cascade (broadcast " \
+                "would replicate only the leaf segment)"
             template = jax.eval_shape(
                 lambda: M.init_cache(self.cfg, b, state.capacity,
                                      enc_len=state.enc_len))

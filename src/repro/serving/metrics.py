@@ -97,16 +97,22 @@ class RunSummary:
                 f"TTFT {self.ttft_ms:8.2f}ms  PFTT {self.pftt_ms:8.2f}ms")
 
 
-def trace_summary(records: List[QueryRecord]) -> dict:
+def trace_summary(records: List[QueryRecord], stats=None) -> dict:
     """Reduce one served trace to the streaming-latency quantities the
     serving benchmarks compare (all in ms): mean/p50/p95 TTFT, mean/p95
     arrival-queue wait, mean decode time and steps.  p95 queue wait is
     the head-of-line-blocking witness — a drain-serve loop parks late
-    arrivals behind a whole batch's decode, which the mean hides."""
+    arrivals behind a whole batch's decode, which the mean hides.
+
+    Pass the trace's ``CacheStats`` window as ``stats`` to append the
+    prefix-TREE reuse quantities (DESIGN.md §10): tokens prefilled vs
+    reused per chain level, the ancestor-hit rate, and the resident
+    segment/token gauges — the numbers that make a tree benchmark's
+    savings claim auditable from the report alone."""
     ttft = np.array([r.ttft for r in records], np.float64)
     wait = np.array([r.queue_wait_s for r in records], np.float64)
     dec = np.array([r.decode_s for r in records], np.float64)
-    return {
+    out = {
         "mean_ttft_ms": round(1e3 * float(np.mean(ttft)), 3),
         "p50_ttft_ms": round(1e3 * float(np.median(ttft)), 3),
         "p95_ttft_ms": round(1e3 * float(np.percentile(ttft, 95)), 3),
@@ -115,6 +121,32 @@ def trace_summary(records: List[QueryRecord]) -> dict:
         "mean_decode_ms": round(1e3 * float(np.mean(dec)), 3),
         "mean_decode_steps": round(
             float(np.mean([r.decode_steps for r in records])), 3),
+    }
+    if stats is not None:
+        out["prefill_tokens_total"] = (stats.prefix_tokens_computed
+                                       + stats.suffix_tokens_computed)
+        out["tree"] = tree_report(stats)
+    return out
+
+
+def tree_report(stats) -> dict:
+    """Per-level prefix-chain accounting from a ``CacheStats`` window
+    (all-zero / empty for flat serving)."""
+    levels = sorted(set(stats.tree_prefill_tokens)
+                    | set(stats.tree_reused_tokens))
+    return {
+        "levels": {
+            str(lv): {
+                "prefill_tokens": stats.tree_prefill_tokens.get(lv, 0),
+                "reused_tokens": stats.tree_reused_tokens.get(lv, 0),
+                "hits": stats.tree_hits.get(lv, 0),
+                "misses": stats.tree_misses.get(lv, 0),
+            } for lv in levels},
+        "ancestor_hits": stats.ancestor_hits,
+        "ancestor_misses": stats.ancestor_misses,
+        "ancestor_hit_rate": round(stats.ancestor_hit_rate, 4),
+        "segments_resident": stats.tree_segments_resident,
+        "prefix_tokens_resident": stats.tree_tokens_resident,
     }
 
 

@@ -45,7 +45,7 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.planner import BatchPlan
+from repro.core.planner import BatchPlan, ChainSpec, PrefixTreePlan
 from repro.core.prefix_pool import PrefixPool
 from repro.core.subgraph import Subgraph
 
@@ -55,12 +55,18 @@ from repro.core.subgraph import Subgraph
 # ======================================================================
 @dataclasses.dataclass
 class OnlineCluster:
-    """A live cluster: frozen representative + assignment centroid."""
+    """A live cluster: frozen representative + assignment centroid.
+
+    ``chain`` (tree serving, DESIGN.md §10): the root→leaf chain spec —
+    pool keys + nested segment contents — this cluster's prefix is
+    materialized through.  ``None`` = flat single-segment prefix (the
+    representative's textualization, the historical behavior)."""
     cluster_id: int
     centroid: np.ndarray        # [dim] assignment anchor (frozen at spawn
                                 # or seeded from an offline plan)
     representative: Subgraph    # subgraph whose textualization is the prefix
     members: int = 0
+    chain: Optional[ChainSpec] = None
 
 
 @dataclasses.dataclass
@@ -115,6 +121,31 @@ class OnlineClusterAssigner:
                 cluster_id=len(a.clusters), centroid=centroid,
                 representative=cp.representative,
                 members=len(cp.member_indices)))
+        return a
+
+    @classmethod
+    def from_tree_plan(cls, plan: PrefixTreePlan, embeddings: np.ndarray,
+                       threshold: float = math.inf,
+                       max_clusters: Optional[int] = None
+                       ) -> "OnlineClusterAssigner":
+        """Seed the assigner from a multi-level prefix-tree plan
+        (DESIGN.md §10): one online cluster per tree LEAF, carrying the
+        root→leaf chain spec the scheduler materializes segment by
+        segment.  Assignment itself is unchanged — queries join the
+        nearest leaf centroid; the tree only changes how that leaf's
+        prefix is stored.  Spawned clusters (past the seed population)
+        fall back to flat single-segment prefixes: an unseen cluster
+        has no dendrogram ancestors to share with."""
+        a = cls(threshold=threshold, max_clusters=max_clusters)
+        for leaf in plan.leaves:
+            node = plan.nodes[leaf]
+            centroid = np.mean(np.asarray(embeddings)[node.member_indices],
+                               axis=0)
+            a.clusters.append(OnlineCluster(
+                cluster_id=len(a.clusters), centroid=centroid,
+                representative=node.content,
+                members=len(node.member_indices),
+                chain=plan.chain(leaf)))
         return a
 
     # ------------------------------------------------------------------
@@ -225,6 +256,9 @@ class AdmittedQuery:
     pool_hit: bool              # prefix served from the pool
     spawned: bool               # this query opened the cluster
     prefix_share_s: float       # share of any prefix prefill this admission paid
+    # pool keys this row pinned — the full root→leaf path for a chain
+    # cluster, [cluster_id] for a flat one; released at retirement
+    pin_keys: List[Any] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -251,16 +285,22 @@ class OnlineScheduler:
     ``prefix_tokens_fn(representative) -> List[int]`` builds the prefix
     token ids for a cluster representative (the pipeline passes its
     textualize+tokenize closure, keeping this module free of tokenizer
-    and retriever dependencies).
+    and retriever dependencies).  ``segment_tokens_fn(content, base) ->
+    List[int]`` is the chain counterpart (DESIGN.md §10): the token ids
+    of ONE chain segment — ``content``'s delta over ``base`` (``base
+    is None`` = the root segment, which also carries the soft prompt);
+    required only when the assigner holds chain clusters.
     """
 
     def __init__(self, engine, assigner: OnlineClusterAssigner,
                  pool: PrefixPool,
-                 prefix_tokens_fn: Callable[[Subgraph], List[int]]) -> None:
+                 prefix_tokens_fn: Callable[[Subgraph], List[int]],
+                 segment_tokens_fn: Optional[Callable] = None) -> None:
         self.engine = engine
         self.assigner = assigner
         self.pool = pool
         self.prefix_tokens_fn = prefix_tokens_fn
+        self.segment_tokens_fn = segment_tokens_fn
         # pool accounting flows into the engine's serving stats window
         self.pool.stats = engine.cache_mgr.stats
         # paged backend: block-allocator pressure evicts cold pooled
@@ -291,6 +331,66 @@ class OnlineScheduler:
         self.pool.put(cluster_id, state, prefill_s=dt, pin=pin)
         return state, False, dt
 
+    def ensure_chain(self, cluster_id: int, pin: bool = False):
+        """Materialize a cluster's full prefix CHAIN through the pool:
+        ``(leaf_state, leaf_hit, prefill_s, pin_keys)`` (DESIGN.md §10).
+
+        Walks the path root→leaf; each segment is its own pool entry
+        (key ``("seg", node_id)`` — shared by every sibling path, which
+        is the whole point).  A resident segment is reused (ancestor
+        hits are the tree layout's savings and are recorded per level);
+        a missing one is prefilled as an EXTENSION of the parent state,
+        so only the path's cold remainder is ever computed.  The
+        tree-aware eviction order (leaf before ancestor,
+        ``core/prefix_pool.py``) guarantees a resident descendant never
+        dangles below an evicted ancestor, so the forward walk never
+        recomputes content a deeper segment still holds.  ``pin=True``
+        pins EVERY path entry (one ref per segment per call); callers
+        release the returned ``pin_keys``.  Flat clusters delegate to
+        ``ensure_state`` with ``pin_keys=[cluster_id]``.
+        """
+        c = self.assigner.clusters[cluster_id]
+        if c.chain is None:
+            st, hit, dt = self.ensure_state(cluster_id, pin=pin)
+            return st, hit, dt, [cluster_id]
+        assert self.segment_tokens_fn is not None, \
+            "chain clusters need segment_tokens_fn (pipeline wiring)"
+        stats = self.engine.cache_mgr.stats
+        n = len(c.chain.keys)
+        parent, prefill_s, keys, hit = None, 0.0, [], False
+        try:
+            for i, (node, content) in enumerate(zip(c.chain.keys,
+                                                    c.chain.contents)):
+                key = ("seg", node)
+                st = self.pool.get(key, pin=pin)
+                hit = st is not None
+                if not hit:
+                    base = c.chain.contents[i - 1] if i else None
+                    payload = self.segment_tokens_fn(content, base)
+                    toks, soft = (payload if isinstance(payload, tuple)
+                                  else (payload, None))
+                    if parent is None:
+                        st, dt = self.engine.prefill_prefix(toks, soft)
+                    else:
+                        st, dt = self.engine.prefill_prefix_extension(
+                            parent, toks)
+                    self.pool.put(key, st, prefill_s=dt, pin=pin)
+                    prefill_s += dt
+                stats.record_tree_segment(i, st.segment_len, hit=hit,
+                                          leaf=(i == n - 1))
+                keys.append(key)
+                parent = st
+        except BaseException:
+            # a mid-chain failure (e.g. OutOfBlocks on an extension)
+            # must drop the pins this walk already took — the caller's
+            # unwind only covers keys it has been handed
+            if pin:
+                for key in keys:
+                    self.pool.release(key)
+            raise
+        self.pool.observe_tree_residency()
+        return parent, hit, prefill_s, keys
+
     def serve_batch(self, embeddings: Sequence[np.ndarray],
                     subgraphs: Sequence[Subgraph],
                     suffix_token_lists: Sequence[List[int]]
@@ -313,22 +413,24 @@ class OnlineScheduler:
                    for e, sg in zip(embeddings, subgraphs)]
         order = sorted(set(a.cluster_id for a in assigns))
         states, hits, prefill_costs = {}, {}, {}
-        pinned = []
+        pinned: List[Any] = []           # pool keys (full path per cluster)
         try:
             # materialize-and-pin: each state is pinned the moment it is
-            # acquired, so a later cluster's admission in this same loop
-            # cannot evict a state this batch already claimed
+            # acquired — for a chain cluster every PATH segment is
+            # pinned (root to leaf) — so a later cluster's admission in
+            # this same loop cannot evict a state this batch already
+            # claimed
             for cid in order:
-                st, hit, dt = self.ensure_state(cid, pin=True)
-                pinned.append(cid)
+                st, hit, dt, keys = self.ensure_chain(cid, pin=True)
+                pinned.extend(keys)
                 states[cid], hits[cid], prefill_costs[cid] = st, hit, dt
             outs, t = self.engine.serve(
                 [Request(suffix_tokens=list(s),
                          prefix=states[a.cluster_id])
                  for a, s in zip(assigns, suffix_token_lists)])
         finally:
-            for cid in pinned:
-                self.pool.release(cid)
+            for key in pinned:
+                self.pool.release(key)
         members_of = {cid: sum(1 for a in assigns if a.cluster_id == cid)
                       for cid in order}
         served = []
@@ -376,31 +478,42 @@ class OnlineScheduler:
         order = sorted(set(a.cluster_id for a in assigns))
         members_of = {cid: sum(1 for a in assigns if a.cluster_id == cid)
                       for cid in order}
-        states, hits, costs = {}, {}, {}
-        pins: List[int] = []            # one entry per pin taken
+        states, hits, costs, paths = {}, {}, {}, {}
+        pins: List[Any] = []            # one pool key per pin taken
         try:
             for cid in order:
-                st, hit, dt = self.ensure_state(cid, pin=True)
-                pins.append(cid)
+                # the full root→leaf path is pinned per ROW: a cluster's
+                # whole chain stays unevictable exactly as long as any
+                # of its members is in flight (DESIGN.md §10)
+                st, hit, dt, keys = self.ensure_chain(cid, pin=True)
+                pins.extend(keys)
                 states[cid], hits[cid], costs[cid] = st, hit, dt
+                paths[cid] = keys
                 for _ in range(members_of[cid] - 1):
-                    self.pool.pin(cid)  # one pin per ROW of the cluster
-                    pins.append(cid)
+                    for key in keys:
+                        self.pool.pin(key)
+                        pins.append(key)
             admitted = [AdmittedQuery(
                 payload=payloads[i], cluster_id=a.cluster_id,
                 prefix_len=states[a.cluster_id].prefix_len,
                 pool_hit=hits[a.cluster_id], spawned=a.is_new,
                 prefix_share_s=(costs[a.cluster_id]
-                                / members_of[a.cluster_id]))
+                                / members_of[a.cluster_id]),
+                pin_keys=list(paths[a.cluster_id]))
                 for i, a in enumerate(assigns)]
             prefill_s = cont.admit(
                 [Request(suffix_tokens=list(s),
                          prefix=states[a.cluster_id])
                  for a, s in zip(assigns, suffix_token_lists)],
                 payloads=admitted, now=now,
-                on_retire=lambda aq: self.pool.release(aq.cluster_id))
+                on_retire=self._release_pins)
         except BaseException:
-            for cid in pins:
-                self.pool.release(cid)
+            for key in pins:
+                self.pool.release(key)
             raise
         return admitted, prefill_s
+
+    def _release_pins(self, aq: AdmittedQuery) -> None:
+        """Drop one retired row's pool pins (its full pinned path)."""
+        for key in aq.pin_keys:
+            self.pool.release(key)

