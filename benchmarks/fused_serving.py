@@ -1,0 +1,305 @@
+"""Fused single-pass cascade kernel + int8 prefix blocks over the PR 5
+tree trace (DESIGN.md §11).
+
+Replays ONE Poisson arrival trace through the hierarchical prefix-tree
+scheduler (the ``tree`` mode of ``benchmarks/tree_serving.py`` — same
+substrate, same dendrogram, same leaf clusters) under three serving
+arms at the SAME PrefixPool byte budget:
+
+  * ``multilaunch_bf16`` — bf16 Pallas, ``fused=False``: per-segment
+    partial-attention launches folded by the LSE merge (the PR 3-5
+    path);
+  * ``fused_bf16``       — bf16 Pallas, ``fused=True``: ONE kernel per
+    layer walks prefix chain + suffix blocks carrying the (o, m, l)
+    accumulator in-register — no partial tensors, no fold pass;
+  * ``fused_int8``       — fused + ``quantize_prefix=True``: prefix
+    blocks resident as int8 with per-(block, kv-head) f32 scales,
+    dequantized in-register after DMA.  Half the bytes per resident
+    path token, so the SAME budget keeps ~2x the path tokens cached
+    and re-prefills less.
+
+Token identity is ASSERTED per replay: each arm's continuous trace
+must reproduce its own drain-serve oracle, and the fused bf16 arm must
+be token-identical to the multi-launch arm (same math, one launch).
+The int8 arm reports its greedy-token match rate against bf16 instead
+(the quality gate; thresholds in EXPERIMENTS.md).
+
+Reported per arm: mean/p95 TTFT, decode ms/token, pool counters,
+resident path tokens at the shared budget, and MODELED decode
+HBM bytes/token (KV bytes walked per generated token plus, for the
+multi-launch arm, the partial-tensor write+read traffic the fusion
+deletes) — the roofline term CPU-interpret timings cannot show.
+``benchmarks/roofline.py --fused-json`` formats that model as a table.
+
+NOTE: Pallas kernels run in interpret mode off-TPU, so the measured
+millisecond numbers are emulation timings — comparable across arms
+(same interpreter), not absolute.  The JSON marks this.
+
+Writes ``BENCH_fused_serving.json`` at the repo root.  Runs on CPU.
+
+    PYTHONPATH=src python benchmarks/fused_serving.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import tree_serving as TS  # noqa: E402  (substrate + scheduler helpers)
+
+from repro.core.clustering import build_dendrogram  # noqa: E402
+from repro.core.paged import KVBlockPool  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.rag.pipeline import GraphRAGPipeline  # noqa: E402
+from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex  # noqa: E402
+from repro.rag.text_encoder import TextEncoder  # noqa: E402
+from repro.data.scenegraph import generate_scene_graph  # noqa: E402
+from repro.data.tokenizer import Tokenizer  # noqa: E402
+from repro.serving.bucketing import blocks_for  # noqa: E402
+from repro.serving.engine import ServingEngine  # noqa: E402
+from repro.serving.metrics import trace_summary  # noqa: E402
+
+MAX_CACHE_LEN = 1024
+BLOCK_SIZE = TS.BLOCK_SIZE
+
+ARMS = (
+    ("multilaunch_bf16", dict(fused=False, quantize_prefix=False)),
+    ("fused_bf16", dict(fused=True, quantize_prefix=False)),
+    ("fused_int8", dict(fused=True, quantize_prefix=True)),
+)
+
+
+def substrate(impl: str, dtype: str):
+    graph, queries = generate_scene_graph()
+    tok = Tokenizer.train([q.question + " " + q.answer for q in queries]
+                          + graph.node_text, max_vocab=2048)
+    cfg = ModelConfig(name="bench-fused", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=tok.vocab_size, dtype=dtype,
+                      attention_impl=impl)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(64))
+    return graph, queries, tok, cfg, params, index
+
+
+def make_pipe(tok, cfg, params, index, max_new_tokens, arena_blocks,
+              *, fused, quantize_prefix):
+    engine = ServingEngine(params, cfg, tok, max_cache_len=MAX_CACHE_LEN,
+                           max_new_tokens=max_new_tokens,
+                           block_size=BLOCK_SIZE,
+                           arena_blocks=arena_blocks, fused=fused,
+                           quantize_prefix=quantize_prefix)
+    return GraphRAGPipeline(index=index,
+                            retriever=GRetrieverRetriever(index, top_k=8),
+                            engine=engine, tokenizer=tok,
+                            use_soft_prompt=False)
+
+
+def modeled_decode_bytes_per_token(cfg, *, path_tokens: int,
+                                   suffix_tokens: int, fused: bool,
+                                   quantized: bool) -> dict:
+    """HBM bytes one decode step moves through attention, per layer
+    summed over layers: the full path KV is streamed once (prefix at
+    its ARENA itemsize + per-block scales when quantized; suffix at
+    compute dtype), and the multi-launch path additionally writes then
+    re-reads a per-segment (o, m, l) partial for the LSE fold — the
+    traffic the fused kernel deletes."""
+    hq, hkv, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    comp = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    kv_item = 1 if quantized else comp
+    nbp = blocks_for(path_tokens, BLOCK_SIZE)
+    prefix = path_tokens * 2 * hkv * d * kv_item
+    scales = (nbp * 2 * hkv * 4) if quantized else 0
+    suffix = suffix_tokens * 2 * hkv * d * comp
+    # two partial launches (prefix, suffix) each write o[Hq,D] + m/l
+    # [Hq] in f32; the fold reads both back
+    partials = 0 if fused else 2 * 2 * (hq * (d + 2)) * 4
+    per_layer = prefix + scales + suffix + partials
+    return {"prefix_kv": prefix * cfg.num_layers,
+            "scales": scales * cfg.num_layers,
+            "suffix_kv": suffix * cfg.num_layers,
+            "partial_tensors": partials * cfg.num_layers,
+            "total": per_layer * cfg.num_layers}
+
+
+def run(num_queries: int = 12, max_batch: int = 4, gap_s: float = 0.04,
+        num_clusters: int = 4, tree_levels: int = 2,
+        max_new_tokens: int = 6, seed: int = 0, replays: int = 3,
+        budget_frac: float = 0.5, impl: str = "pallas",
+        dtype: str = "bfloat16", log_fn=print):
+    graph, queries, tok, cfg, params, index = substrate(impl, dtype)
+    items = queries[:num_queries]
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(gap_s, size=len(items)))
+
+    # one retrieval + embedding + dendrogram pass shared by every arm
+    probe = make_pipe(tok, cfg, params, index, max_new_tokens, 64,
+                      fused=True, quantize_prefix=False)
+    subgraphs = [probe.retriever.retrieve(it.question) for it in items]
+    emb = probe.embed_for_clustering(subgraphs)
+    dd = build_dendrogram(emb)
+
+    # constrained budget: a fraction of what the TREE layout costs
+    # fully resident at compute dtype — the bf16 arms must evict;
+    # int8 halves the per-token price so the same bytes hold ~2x
+    seed_kw = dict(tree=True, num_clusters=num_clusters,
+                   tree_levels=tree_levels, budget=1 << 60, dendrogram=dd)
+    _, plan = TS._seed_scheduler(probe, subgraphs, emb, **seed_kw)
+    tree_lens = TS._chain_lens(probe, plan, tree=True)
+    per_block = KVBlockPool.block_bytes_for(cfg, BLOCK_SIZE)
+    tree_blocks = sum(blocks_for(p, BLOCK_SIZE) for p in tree_lens)
+    budget = int(budget_frac * tree_blocks * per_block)
+    arena_blocks = (tree_blocks + 2 * max_batch
+                    * blocks_for(MAX_CACHE_LEN, BLOCK_SIZE) + 32)
+    seed_kw["budget"] = budget
+
+    mean_path = int(np.mean(tree_lens))
+    result = {"trace": {
+        "queries": num_queries, "poisson_gap_s": gap_s,
+        "max_batch": max_batch, "num_clusters": num_clusters,
+        "tree_levels": tree_levels, "budget_bytes": budget,
+        "budget_frac_of_tree_resident": budget_frac,
+        "tree_path_lens": tree_lens, "impl": impl, "dtype": dtype,
+        "interpret_mode": jax.default_backend() != "tpu",
+        "replays": replays}}
+
+    # build + warm every arm up front, then interleave the timed
+    # replays pairwise (tree_serving.py protocol: adjacent replays
+    # share machine conditions, so cross-arm ratios reflect the
+    # serving path, not CPU drift)
+    pipes, oracles = {}, {}
+    for name, kw in ARMS:
+        pipe = make_pipe(tok, cfg, params, index, max_new_tokens,
+                         arena_blocks, **kw)
+        sched, _ = TS._seed_scheduler(pipe, subgraphs, emb, **seed_kw)
+        pipe.warmup_stream(items, max_batch=max_batch, chunk=2,
+                           prefix_lens=tree_lens)
+        TS._warm_chains(pipe, subgraphs, emb, **seed_kw)
+        oracle, _, _ = pipe.serve_stream(
+            items, arrivals, mode="drain", max_batch=max_batch,
+            pool_budget_bytes=budget, scheduler=sched)
+        sched.pool.clear()
+        warm, _ = TS._seed_scheduler(pipe, subgraphs, emb, **seed_kw)
+        pipe.serve_stream(items, arrivals, mode="continuous",
+                          max_batch=max_batch, chunk=2, scheduler=warm)
+        pipes[name], oracles[name] = pipe, oracle
+
+    # the fused bf16 arm must serve the very tokens multi-launch does —
+    # one-launch fusion is a scheduling change, never a math change
+    base_toks = [r.generated for r in oracles["multilaunch_bf16"]]
+    assert [r.generated for r in oracles["fused_bf16"]] == base_toks, \
+        "fused bf16 diverged from multi-launch tokens"
+    q8_toks = [r.generated for r in oracles["fused_int8"]]
+    # generation-level quality proxy for the trace (the per-token gate
+    # lives in tests/test_fused_quant.py): fraction of queries whose
+    # full greedy generation is unchanged under int8 prefixes
+    int8_match = float(np.mean([a == b for a, b in
+                                zip(base_toks, q8_toks)]))
+
+    runs = {name: [] for name, _ in ARMS}
+    for _ in range(replays):
+        for name, kw in ARMS:
+            pipe = pipes[name]
+            sched, _ = TS._seed_scheduler(pipe, subgraphs, emb, **seed_kw)
+            recs, _, sched = pipe.serve_stream(
+                items, arrivals, mode="continuous", max_batch=max_batch,
+                chunk=2, scheduler=sched)
+            assert ([r.generated for r in recs]
+                    == [r.generated for r in oracles[name]]), \
+                f"{name}: continuous trace diverged from the drain oracle"
+            stats = sched.pool.stats
+            summ = trace_summary(recs, stats)
+            dec_tok = sum(r.decode_steps for r in recs)
+            summ["decode_ms_per_token"] = round(
+                1e3 * sum(r.decode_s for r in recs) / max(1, dec_tok), 3)
+            summ["pool"] = {
+                "hits": stats.pool_hits, "misses": stats.pool_misses,
+                "reprefills": stats.pool_reprefills,
+                "hit_rate": round(stats.pool_hit_rate, 3)}
+            summ["resident_path_tokens_end"] = \
+                TS._resident_path_tokens(sched)
+            runs[name].append(summ)
+
+    for name, kw in ARMS:
+        order = sorted(runs[name], key=lambda s: s["mean_ttft_ms"])
+        med = order[len(order) // 2]
+        med["runs_mean_ttft_ms"] = [s["mean_ttft_ms"]
+                                    for s in runs[name]]
+        med["token_identical_vs_drain"] = True
+        med["modeled_decode_bytes_per_token"] = \
+            modeled_decode_bytes_per_token(
+                cfg, path_tokens=mean_path,
+                suffix_tokens=32 + max_new_tokens,
+                fused=kw["fused"], quantized=kw["quantize_prefix"])
+        result[name] = med
+        kib = med["modeled_decode_bytes_per_token"]["total"] / 1024
+        log_fn(f"{name:17s} mean TTFT {med['mean_ttft_ms']:8.1f}ms  "
+               f"decode {med['decode_ms_per_token']:7.2f}ms/tok  "
+               f"resident path tokens "
+               f"{med['resident_path_tokens_end']:5d}  "
+               f"modeled {kib:.1f} KiB/tok")
+
+    result["fused_bf16_token_identical_to_multilaunch"] = True
+    result["int8_generation_match_rate"] = round(int8_match, 4)
+    result["ttft_ratio_multilaunch_over_fused_int8"] = round(
+        result["multilaunch_bf16"]["mean_ttft_ms"]
+        / max(1e-9, result["fused_int8"]["mean_ttft_ms"]), 3)
+    result["resident_path_tokens_ratio_int8_over_bf16"] = round(
+        result["fused_int8"]["resident_path_tokens_end"]
+        / max(1, result["fused_bf16"]["resident_path_tokens_end"]), 3)
+    result["modeled_bytes_ratio_multilaunch_over_fused_int8"] = round(
+        result["multilaunch_bf16"]["modeled_decode_bytes_per_token"]["total"]
+        / max(1, result["fused_int8"]
+              ["modeled_decode_bytes_per_token"]["total"]), 3)
+    log_fn(f"int8 generation match {int8_match:.1%}  "
+           f"TTFT multi/int8 "
+           f"x{result['ttft_ratio_multilaunch_over_fused_int8']:.2f}  "
+           f"resident int8/bf16 "
+           f"x{result['resident_path_tokens_ratio_int8_over_bf16']:.2f}  "
+           f"modeled bytes multi/int8 "
+           f"x{result['modeled_bytes_ratio_multilaunch_over_fused_int8']:.2f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--gap-s", type=float, default=0.04)
+    ap.add_argument("--clusters", type=int, default=4)
+    ap.add_argument("--tree-levels", type=int, default=2)
+    ap.add_argument("--replays", type=int, default=3)
+    ap.add_argument("--budget-frac", type=float, default=0.5)
+    ap.add_argument("--impl", default="pallas",
+                    choices=["pallas", "xla"])
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_fused_serving.json"))
+    args = ap.parse_args()
+    result = run(num_queries=args.queries, max_batch=args.max_batch,
+                 gap_s=args.gap_s, num_clusters=args.clusters,
+                 tree_levels=args.tree_levels, replays=args.replays,
+                 budget_frac=args.budget_frac, impl=args.impl,
+                 dtype=args.dtype)
+    payload = {
+        "benchmark": "fused_cascade_int8_prefix_tree_trace",
+        "config": f"bench-fused (2L d64 GQA 4:2, {args.dtype}, "
+                  f"{args.impl}, scene-graph RAG, top_k=8, "
+                  f"block_size={BLOCK_SIZE})",
+        "result": result,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

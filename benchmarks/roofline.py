@@ -3,11 +3,19 @@
 Per (arch x shape), single-pod mesh: the three roofline terms, dominant
 bottleneck, model-FLOPs ratio, and per-device memory; multi-pod rows show
 the compile proof.
+
+``--fused-json BENCH_fused_serving.json`` additionally prints the decode
+bytes-moved table: modeled HBM bytes one decode step streams through
+attention per serving arm (prefix KV at the arena itemsize + dequant
+scales, suffix KV at compute dtype, and the multi-launch partial-tensor
+write+read traffic the fused cascade kernel deletes) — decode is
+memory-bound, so bytes/token IS its roofline term.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 
 def fmt_table(results, multi_pod=False):
@@ -49,17 +57,44 @@ def fmt_table(results, multi_pod=False):
     return "\n".join(rows)
 
 
+def fmt_decode_bytes_table(fused_result):
+    """Decode bytes-moved rows from ``BENCH_fused_serving.json``'s
+    ``modeled_decode_bytes_per_token`` sections (one row per arm)."""
+    arms = [k for k, v in fused_result.items()
+            if isinstance(v, dict) and "modeled_decode_bytes_per_token" in v]
+    rows = [(f"| {'serving arm':17s} | {'prefix KV':>9s} | {'scales':>7s} | "
+             f"{'suffix KV':>9s} | {'partials':>8s} | {'total/tok':>9s} |"),
+            "|" + "|".join("-" * n for n in (19, 11, 9, 11, 10, 11)) + "|"]
+    base = None
+    for arm in arms:
+        m = fused_result[arm]["modeled_decode_bytes_per_token"]
+        base = base or m["total"]
+        rows.append(
+            f"| {arm:17s} | {m['prefix_kv']:9d} | {m['scales']:7d} | "
+            f"{m['suffix_kv']:9d} | {m['partial_tensors']:8d} | "
+            f"{m['total']:6d} x{base / max(1, m['total']):.2f} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--fused-json", default="BENCH_fused_serving.json")
     args = ap.parse_args()
-    with open(args.json) as f:
-        results = json.load(f)
-    print("## single-pod (16x16 = 256 chips) — roofline terms")
-    print(fmt_table(results, multi_pod=False))
-    print()
-    print("## multi-pod (2x16x16 = 512 chips) — compile proof")
-    print(fmt_table(results, multi_pod=True))
+    if os.path.exists(args.json):
+        with open(args.json) as f:
+            results = json.load(f)
+        print("## single-pod (16x16 = 256 chips) — roofline terms")
+        print(fmt_table(results, multi_pod=False))
+        print()
+        print("## multi-pod (2x16x16 = 512 chips) — compile proof")
+        print(fmt_table(results, multi_pod=True))
+    if os.path.exists(args.fused_json):
+        with open(args.fused_json) as f:
+            fused = json.load(f)
+        print()
+        print("## decode HBM bytes moved per generated token (modeled)")
+        print(fmt_decode_bytes_table(fused["result"]))
 
 
 if __name__ == "__main__":

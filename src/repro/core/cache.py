@@ -190,6 +190,12 @@ class CacheStats:
     blocks_peak: int = 0         # high-water mark of blocks_in_use
     block_tokens: int = 0        # tokens stored at last observe
     block_size: int = 0          # slots per block
+    block_bytes: int = 0         # per-block bytes at the PREFIX-resident
+                                 # layout (int8 + scales when the pool
+                                 # quantizes, else compute dtype) — NOT
+                                 # hardcoded to the compute itemsize
+    block_bytes_in_use: int = 0  # gauge: blocks_in_use * block_bytes
+    block_bytes_peak: int = 0    # high-water mark of block_bytes_in_use
     # --- prefix-tree chains (DESIGN.md §10); keyed by chain level,
     # 0 = root segment.  "reused" = the segment was resident when a
     # chain was materialized; "prefilled" = it had to be computed.
@@ -291,6 +297,12 @@ class CacheStats:
         self.blocks_peak = max(self.blocks_peak, pool.blocks_in_use)
         self.block_tokens = pool.tokens_stored
         self.block_size = pool.block_size
+        # byte gauges priced at the arena dtype blocks actually occupy
+        # (int8 + scales under quantize_prefix), not the compute dtype
+        self.block_bytes = pool.prefix_block_bytes
+        self.block_bytes_in_use = pool.blocks_in_use * self.block_bytes
+        self.block_bytes_peak = max(self.block_bytes_peak,
+                                    self.block_bytes_in_use)
 
     @property
     def block_occupancy(self) -> float:

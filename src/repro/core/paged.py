@@ -160,7 +160,17 @@ def _leaf_axes(path) -> tuple:
         return -3, -4
     if key == "pos":
         return -1, -2
+    if key in ("k_scale", "v_scale"):   # quantized arena [.., NB, Hkv]
+        return None, -2
     raise ValueError(f"paged arenas hold attention KV only; got {path}")
+
+
+def _tree_get(tree, path):
+    """Navigate a pytree by a tree_map_with_path key path."""
+    cur = tree
+    for p in path:
+        cur = cur[p.key if hasattr(p, "key") else p.idx]
+    return cur
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
@@ -222,6 +232,62 @@ def _extract_blocks(arena, bids):
     return jax.tree_util.tree_map_with_path(f, arena)
 
 
+def _qarena_like(node):
+    """Mirror an arena pytree into the int8 quantized-prefix layout:
+    each attention leaf dict gains per-(block, kv-head) f32
+    ``k_scale``/``v_scale`` [.., NB, Hkv] next to int8 K/V and an int32
+    position copy.  Positions start at -1 everywhere (including the
+    NULL block), so an un-quantized row can never read as live KV."""
+    if isinstance(node, dict) and "k" in node and "pos" in node:
+        k = node["k"]                      # [.., NB, bs, Hkv, D]
+        scale_shape = k.shape[:-3] + (k.shape[-2],)
+        return {
+            "k": jnp.zeros(k.shape, jnp.int8),
+            "v": jnp.zeros(k.shape, jnp.int8),
+            "pos": jnp.full(node["pos"].shape, -1, jnp.int32),
+            "k_scale": jnp.ones(scale_shape, jnp.float32),
+            "v_scale": jnp.ones(scale_shape, jnp.float32),
+        }
+    if isinstance(node, dict):
+        return {kk: _qarena_like(vv) for kk, vv in node.items()}
+    if isinstance(node, (list, tuple)):
+        return type(node)(_qarena_like(v) for v in node)
+    return node
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _quantize_blocks(qarena, arena, bids):
+    """Quantize arena rows ``bids`` into the int8 prefix arena
+    (donated, in place): per (block, kv-head) symmetric scales
+    ``amax / 127`` over the block's (slot, head_dim) tile, values
+    rounded and clipped to [-127, 127]; positions copied verbatim.
+    Zero blocks get scale 1.0 so dequant stays exact."""
+    def rows_and_scale(path, which):
+        src = _tree_get(arena, path[:-1])[which]       # [.., NB, bs, Hkv, D]
+        x = jnp.moveaxis(src, -4, 0)[bids].astype(jnp.float32)
+        amax = jnp.max(jnp.abs(x), axis=(-3, -1))      # [n, .., Hkv]
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        return x, scale
+
+    def f(path, q):
+        key = path[-1].key
+        if key in ("k", "v"):
+            x, scale = rows_and_scale(path, key)
+            qr = jnp.clip(jnp.round(x / scale[..., None, :, None]),
+                          -127, 127).astype(jnp.int8)
+            q2 = jnp.moveaxis(q, -4, 0).at[bids].set(qr)
+            return jnp.moveaxis(q2, 0, -4)
+        if key in ("k_scale", "v_scale"):
+            _, scale = rows_and_scale(path, key[0])
+            q2 = jnp.moveaxis(q, -2, 0).at[bids].set(scale)
+            return jnp.moveaxis(q2, 0, -2)
+        assert key == "pos", path
+        src = jnp.moveaxis(_tree_get(arena, path), -2, 0)[bids]
+        q2 = jnp.moveaxis(q, -2, 0).at[bids].set(src)
+        return jnp.moveaxis(q2, 0, -2)
+    return jax.tree_util.tree_map_with_path(f, qarena)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_block(arena, src, dst):
     """Duplicate one block row (copy-on-write)."""
@@ -241,13 +307,19 @@ class KVBlockPool:
     ``block_size`` — jits donate it, callers reassign ``pool.arena``.
     """
 
-    def __init__(self, cfg, num_blocks: int, block_size: int) -> None:
+    def __init__(self, cfg, num_blocks: int, block_size: int, *,
+                 quantize_prefix: bool = False) -> None:
         from repro.models import model as M
         assert num_blocks >= 2 and block_size >= 1
         self.cfg = cfg
         self.block_size = int(block_size)
         self.num_blocks = int(num_blocks)
+        self.quantize_prefix = bool(quantize_prefix)
         self.arena = M.init_block_arena(cfg, num_blocks, block_size)
+        # int8 prefix arena + per-(block, kv-head) f32 scales, populated
+        # at write_prefix / quantize_blocks time (DESIGN.md §11); None
+        # when quantization is off
+        self.qarena = _qarena_like(self.arena) if quantize_prefix else None
         self.allocator = BlockAllocator(num_blocks)
         # tokens actually stored per block (internal-fragmentation stat)
         self._block_tokens = np.zeros(num_blocks, np.int64)
@@ -256,25 +328,59 @@ class KVBlockPool:
     # geometry / accounting
     # ------------------------------------------------------------------
     @staticmethod
-    def block_bytes_for(cfg, block_size: int) -> int:
-        """HBM bytes one block costs across all attention layers."""
+    def block_bytes_for(cfg, block_size: int, *, kv_itemsize=None,
+                        scale_bytes: int = 0) -> int:
+        """HBM bytes one block costs across all attention layers.
+
+        Defaults to the compute dtype's itemsize; pass ``kv_itemsize``
+        (and per-block ``scale_bytes``) to price a different arena
+        layout — byte accounting must reflect the dtype of the arena a
+        block actually resides in, or an int8 pool under-reports
+        occupancy and over-admits."""
         from repro.models.layers import dtype_of
-        itemsize = jnp.dtype(dtype_of(cfg.dtype)).itemsize
+        itemsize = (jnp.dtype(dtype_of(cfg.dtype)).itemsize
+                    if kv_itemsize is None else int(kv_itemsize))
         n_attn = len(cfg.layer_specs())
         kv = 2 * block_size * cfg.num_kv_heads * cfg.head_dim_ * itemsize
         pos = block_size * 4
-        return n_attn * (kv + pos)
+        return n_attn * (kv + pos + scale_bytes)
 
     @classmethod
-    def from_budget(cls, cfg, budget_bytes: int,
-                    block_size: int) -> "KVBlockPool":
-        """Largest arena fitting ``budget_bytes`` (plus the null block)."""
-        per = cls.block_bytes_for(cfg, block_size)
-        return cls(cfg, max(2, budget_bytes // per + 1), block_size)
+    def prefix_block_bytes_for(cls, cfg, block_size: int, *,
+                               quantize_prefix: bool = False) -> int:
+        """Bytes one PREFIX-resident block costs: the int8 layout
+        (1-byte K/V + two f32 scales per kv-head) when quantized, else
+        the compute-dtype layout."""
+        if not quantize_prefix:
+            return cls.block_bytes_for(cfg, block_size)
+        return cls.block_bytes_for(cfg, block_size, kv_itemsize=1,
+                                   scale_bytes=2 * cfg.num_kv_heads * 4)
+
+    @classmethod
+    def from_budget(cls, cfg, budget_bytes: int, block_size: int, *,
+                    quantize_prefix: bool = False) -> "KVBlockPool":
+        """Largest arena fitting ``budget_bytes`` (plus the null block).
+
+        The budget prices blocks at their PREFIX-resident layout — int8
+        halves the per-block cost, so the same budget holds ~2× the
+        blocks (and path tokens); the regression test pins that ratio.
+        """
+        per = cls.prefix_block_bytes_for(cfg, block_size,
+                                         quantize_prefix=quantize_prefix)
+        return cls(cfg, max(2, budget_bytes // per + 1), block_size,
+                   quantize_prefix=quantize_prefix)
 
     @property
     def block_bytes(self) -> int:
         return self.block_bytes_for(self.cfg, self.block_size)
+
+    @property
+    def prefix_block_bytes(self) -> int:
+        """Per-block bytes at the layout prefix blocks actually occupy
+        (int8 + scales when quantized).  This is what pool budgets and
+        ``PrefixPool`` charge — NOT the compute-dtype ``block_bytes``."""
+        return self.prefix_block_bytes_for(
+            self.cfg, self.block_size, quantize_prefix=self.quantize_prefix)
 
     @property
     def blocks_in_use(self) -> int:
@@ -333,7 +439,27 @@ class KVBlockPool:
                                      jnp.asarray(bids, jnp.int32),
                                      n=n, block_size=self.block_size)
         self.note_tokens(bids, prefix_len)
+        self.quantize_blocks(bids)
         return PageTable(blocks=bids, length=prefix_len)
+
+    def quantize_blocks(self, bids: Sequence[int]) -> None:
+        """Re-quantize arena rows ``bids`` into the int8 prefix arena
+        (no-op when quantization is off).  Called whenever blocks
+        become prefix-resident: ``write_prefix`` and after a
+        prefix-extension prefill writes its new tail blocks.  Suffix
+        blocks are never quantized — decode writes them every step and
+        reads them back at compute dtype."""
+        if self.qarena is None or not len(bids):
+            return
+        self.qarena = _quantize_blocks(self.qarena, self.arena,
+                                       jnp.asarray(bids, jnp.int32))
+
+    def prefix_source(self):
+        """The arena decode-time readers should pass as the PREFIX
+        operand: the int8 quantized arena when quantization is on
+        (attention dequantizes — in-register in the fused kernel), else
+        the main arena."""
+        return self.qarena if self.qarena is not None else self.arena
 
     def alloc_suffix(self, n_blocks: int) -> List[int]:
         """Fresh private blocks for a request's suffix+decode tail,
@@ -351,6 +477,8 @@ class KVBlockPool:
             return bid
         [new] = self.alloc(1)
         self.arena = _copy_block(self.arena, bid, new)
+        if self.qarena is not None:       # keep the int8 mirror coherent
+            self.qarena = _copy_block(self.qarena, bid, new)
         self._block_tokens[new] = self._block_tokens[bid]
         self.allocator.decref([bid])
         return new

@@ -57,10 +57,14 @@ def state_bytes(state: PrefixState) -> int:
     """HBM footprint of a PrefixState.
 
     Paged states cost exactly their blocks (``ceil(P / block_size) ×
-    block_bytes`` — no pad-to-capacity waste); dense states cost the
-    sum of their cache-pytree leaves (the full capacity bucket)."""
+    per-block bytes`` — no pad-to-capacity waste) at the layout prefix
+    blocks actually occupy: ``prefix_block_bytes`` is the int8+scales
+    footprint when the pool quantizes, else the compute dtype — pricing
+    at the compute itemsize would make an int8 pool under-report
+    occupancy and over-admit.  Dense states cost the sum of their
+    cache-pytree leaves (the full capacity bucket)."""
     if state.is_paged:
-        return len(state.page.blocks) * state.block_pool.block_bytes
+        return len(state.page.blocks) * state.block_pool.prefix_block_bytes
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state.cache))
 
 

@@ -1,0 +1,379 @@
+"""Fused single-pass cascade serving kernels (DESIGN.md §11).
+
+Through PR 5 the paged serving hot path launched one partial-attention
+kernel per chain segment group (prefix walk, suffix walk) plus a
+separate pairwise LSE-merge op.  Each launch re-streams its query tile
+and round-trips its (o, m, l) partial through HBM; the merge is one
+more elementwise pass over the partials.  These kernels fuse the WHOLE
+root-to-leaf cascade into one ``pallas_call``:
+
+* BOTH page tables — the concatenated prefix-chain walk ``[Bp, NPP]``
+  and the private suffix walk ``[B, NPS]`` — are scalar-prefetched
+  (``num_scalar_prefetch=2``); grid step ``j`` DMAs prefix block
+  ``ppt[row, j]`` while ``j < NPP`` and suffix block
+  ``spt[b, j - NPP]`` after, so the kernel loop IS the full
+  concatenated page walk.
+* The running online-softmax accumulator (acc, m, l) lives in VMEM
+  scratch across ALL segments — no per-segment partials ever
+  materialize in HBM and the separate ``merge_partials`` /
+  ``fold_partials`` op disappears (the two-way Pallas merge kernel was
+  deleted with it; ``kernels.ref.fold_partials_ref`` survives as the
+  oracle).
+* Index maps clamp the inactive table (``min(j, NPP-1)`` /
+  ``max(j - NPP, 0)``): Pallas skips the re-DMA when a block index is
+  unchanged between steps, so the idle side costs no extra HBM traffic.
+* **int8 prefix blocks** (quantized KV arena, ``core/paged.py``): when
+  per-block per-kv-head f32 scales are passed, the prefix K/V tiles
+  arrive int8 and are dequantized IN REGISTER right after DMA
+  (``tile.astype(f32) * scale``) — resident prefix bytes halve vs bf16
+  while every matmul stays f32.  Suffix tiles are always compute-dtype
+  (decode writes them every step; quantizing the write path would put
+  a round-trip quantization error inside the autoregressive loop).
+
+Exactness: the single-pass accumulator is mathematically identical to
+the multi-launch cascade + LSE fold but NOT bitwise (``exp(s - m)`` vs
+``exp(s - m_seg) * exp(m_seg - m)`` round differently), so the fused
+Pallas kernels are gated by allclose against
+``kernels.ref.fused_paged_*_ref`` — which IS the multi-launch
+composition — plus end-to-end greedy-token identity (tests).  The XLA
+serving path under ``fused=True`` runs the composition itself and is
+therefore bitwise-identical to multi-launch by construction.
+
+Masking is purely positional like every kernel in this repo: valid
+``kp >= 0``, causal ``kp <= qp`` (suffix side; every prefix position
+precedes every query so the prefix side matches the multi-launch
+``causal=False`` partial exactly), window ``qp - kp < w`` on both.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _accum(s_mask, s, acc_ref, m_ref, l_ref, v):
+    """One online-softmax update of the VMEM (acc, m, l) scratch with a
+    masked score tile ``s`` [rows, bk] and value tile ``v`` [bk, d]."""
+    s = jnp.where(s_mask, s, NEG_INF)
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(s_mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[:, 0] = alpha * l_ref[:, 0] + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+
+def _fused_decode_kernel(ppt_ref, spt_ref, *refs, window: int, npp: int,
+                         n_total: int, scale: float, quantized: bool):
+    """Grid (B, Hkv, NPP + NPS); one [group, d] q tile rides the whole
+    concatenated walk.  Steps j < npp stream (and optionally dequantize)
+    prefix blocks; later steps stream suffix blocks.  Causal masking
+    always applies — a decode query is at or past every cached
+    position, same as the multi-launch decode partials."""
+    if quantized:
+        (qpos_ref, pkpos_ref, skpos_ref, q_ref, pk_ref, pv_ref,
+         sk_ref, sv_ref, ks_ref, vs_ref, o_ref,
+         acc_ref, m_ref, l_ref) = refs
+    else:
+        (qpos_ref, pkpos_ref, skpos_ref, q_ref, pk_ref, pv_ref,
+         sk_ref, sv_ref, o_ref, acc_ref, m_ref, l_ref) = refs
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [g, d]
+    qp = qpos_ref[0, 0]                                    # scalar int32
+
+    def step(k, v, kp):
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = (kp >= 0) & (kp <= qp)
+        if window:
+            mask = mask & (qp - kp < window)
+        _accum(mask[None, :], s, acc_ref, m_ref, l_ref, v)
+
+    @pl.when(j < npp)
+    def _prefix():
+        k = pk_ref[0, 0].astype(jnp.float32)               # [bs, d]
+        v = pv_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0]                           # in-register dequant
+            v = v * vs_ref[0, 0]
+        step(k, v, pkpos_ref[0])
+
+    @pl.when(j >= npp)
+    def _suffix():
+        step(sk_ref[0, 0].astype(jnp.float32),
+             sv_ref[0, 0].astype(jnp.float32), skpos_ref[0])
+
+    @pl.when(j == n_total - 1)
+    def _done():
+        l = l_ref[:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = acc_ref[...] / safe[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
+                           prefix_table, suffix_table, k_scale=None,
+                           v_scale=None, *, window: int = 0,
+                           interpret: bool = True):
+    """Single-token fused-cascade GQA decode over a paged KV arena.
+
+    q: [B, Hq, D]; pk, pv: [NBp, Hkv, bs, D] prefix arena (int8 when
+    ``k_scale``/``v_scale`` [NBp, Hkv] f32 are given, else compute
+    dtype); sk, sv: [NBs, Hkv, bs, D] suffix arena (always compute
+    dtype); p_kpos/s_kpos: [NB*, bs]; prefix_table: [Bp in (1, B), NPP]
+    (a [1, NPP] table is the shared cluster walk); suffix_table:
+    [B or 1, NPS].  Returns the NORMALIZED output [B, Hq, D] f32 — no
+    (m, l) escapes, nothing merges after.
+    """
+    b, hq, d = q.shape
+    hkv, bs = pk.shape[1], pk.shape[2]
+    assert sk.shape[2] == bs, (sk.shape, bs)
+    pb, npp = prefix_table.shape
+    sb, nps = suffix_table.shape
+    assert pb in (1, b) and sb in (1, b), (prefix_table.shape,
+                                           suffix_table.shape, b)
+    assert npp >= 1 and nps >= 1, (npp, nps)
+    quantized = k_scale is not None
+    prow = (lambda b_: 0) if pb == 1 else (lambda b_: b_)
+    srow = (lambda b_: 0) if sb == 1 else (lambda b_: b_)
+    group = hq // hkv
+    scale = d ** -0.5
+    n_total = npp + nps
+
+    qg = q.reshape(b, hkv, group, d)
+    qp2 = q_pos.reshape(b, 1).astype(jnp.int32)
+
+    # the inactive table's index is CLAMPED to its last/first block so
+    # Pallas sees an unchanged index and skips the re-DMA
+    def jp(j):
+        return jnp.minimum(j, npp - 1)
+
+    def js(j):
+        return jnp.maximum(j - npp, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda b_, h, j, ppt, spt: (b_, 0)),
+        pl.BlockSpec((1, bs),
+                     lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)], 0)),
+        pl.BlockSpec((1, bs),
+                     lambda b_, h, j, ppt, spt: (spt[srow(b_), js(j)], 0)),
+        pl.BlockSpec((1, 1, group, d),
+                     lambda b_, h, j, ppt, spt: (b_, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)],
+                                                 h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)],
+                                                 h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, j, ppt, spt: (spt[srow(b_), js(j)],
+                                                 h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, j, ppt, spt: (spt[srow(b_), js(j)],
+                                                 h, 0, 0)),
+    ]
+    args = [qp2, p_kpos, s_kpos, qg, pk, pv, sk, sv]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1),
+                         lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)],
+                                                     h)),
+            pl.BlockSpec((1, 1),
+                         lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)],
+                                                     h)),
+        ]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_total),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda b_, h, j, ppt, spt: (b_, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    [out] = pl.pallas_call(
+        functools.partial(_fused_decode_kernel, window=window, npp=npp,
+                          n_total=n_total, scale=scale, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, group, d), jnp.float32)],
+        interpret=interpret,
+    )(prefix_table.astype(jnp.int32), suffix_table.astype(jnp.int32), *args)
+    return out.reshape(b, hq, d)
+
+
+def _fused_prefill_kernel(ppt_ref, spt_ref, *refs, causal: bool, window: int,
+                          npp: int, n_total: int, scale: float,
+                          quantized: bool):
+    """Grid (B, Hq, nq, NPP + NPS); prefill-shaped [bq, d] q tiles.
+    Prefix steps use the multi-launch prefix mask (validity + window,
+    NO causal term — every prefix position precedes every query);
+    suffix steps apply the causal mask."""
+    if quantized:
+        (qpos_ref, pkpos_ref, skpos_ref, q_ref, pk_ref, pv_ref,
+         sk_ref, sv_ref, ks_ref, vs_ref, o_ref,
+         acc_ref, m_ref, l_ref) = refs
+    else:
+        (qpos_ref, pkpos_ref, skpos_ref, q_ref, pk_ref, pv_ref,
+         sk_ref, sv_ref, o_ref, acc_ref, m_ref, l_ref) = refs
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [bq, d]
+    qp = qpos_ref[0]                                       # [bq]
+
+    def step(k, v, kp, seg_causal):
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = kp[None, :] >= 0
+        if seg_causal:
+            mask = mask & (kp[None, :] <= qp[:, None])
+        if window:
+            mask = mask & (qp[:, None] - kp[None, :] < window)
+        _accum(mask, s, acc_ref, m_ref, l_ref, v)
+
+    @pl.when(j < npp)
+    def _prefix():
+        k = pk_ref[0, 0].astype(jnp.float32)
+        v = pv_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
+        step(k, v, pkpos_ref[0], False)
+
+    @pl.when(j >= npp)
+    def _suffix():
+        step(sk_ref[0, 0].astype(jnp.float32),
+             sv_ref[0, 0].astype(jnp.float32), skpos_ref[0], causal)
+
+    @pl.when(j == n_total - 1)
+    def _done():
+        l = l_ref[:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = acc_ref[...] / safe[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "interpret"))
+def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
+                          prefix_table, suffix_table, k_scale=None,
+                          v_scale=None, *, causal: bool = True,
+                          window: int = 0, block_q: int = 128,
+                          interpret: bool = True):
+    """Fused-cascade masked GQA prefill over a paged KV arena.
+
+    q: [B, Hq, Tq, D]; arenas / tables / scales as in
+    ``fused_paged_decode_gqa`` but with prefill q tiling (grid
+    (B, Hq, nq, NPP + NPS)).  ``causal`` applies to the SUFFIX side
+    only (the prefix side replicates the multi-launch ``causal=False``
+    prefix partial).  Returns the normalized output [B, Hq, Tq, D] f32.
+    """
+    b, hq, tq, d = q.shape
+    hkv, bs = pk.shape[1], pk.shape[2]
+    assert sk.shape[2] == bs, (sk.shape, bs)
+    pb, npp = prefix_table.shape
+    sb, nps = suffix_table.shape
+    assert pb in (1, b) and sb in (1, b), (prefix_table.shape,
+                                           suffix_table.shape, b)
+    assert npp >= 1 and nps >= 1, (npp, nps)
+    quantized = k_scale is not None
+    prow = (lambda b_: 0) if pb == 1 else (lambda b_: b_)
+    srow = (lambda b_: 0) if sb == 1 else (lambda b_: b_)
+    group = hq // hkv
+    scale = d ** -0.5
+    n_total = npp + nps
+
+    bq = min(block_q, tq)
+    tq_p = ((tq + bq - 1) // bq) * bq
+    if tq_p != tq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, tq_p - tq), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, tq_p - tq)), constant_values=0)
+    nq = tq_p // bq
+
+    def jp(j):
+        return jnp.minimum(j, npp - 1)
+
+    def js(j):
+        return jnp.maximum(j - npp, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, bq), lambda b_, h, i, j, ppt, spt: (b_, i)),
+        pl.BlockSpec((1, bs),
+                     lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)], 0)),
+        pl.BlockSpec((1, bs),
+                     lambda b_, h, i, j, ppt, spt: (spt[srow(b_), js(j)], 0)),
+        pl.BlockSpec((1, 1, bq, d),
+                     lambda b_, h, i, j, ppt, spt: (b_, h, i, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)],
+                                                    h // group, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)],
+                                                    h // group, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, i, j, ppt, spt: (spt[srow(b_), js(j)],
+                                                    h // group, 0, 0)),
+        pl.BlockSpec((1, 1, bs, d),
+                     lambda b_, h, i, j, ppt, spt: (spt[srow(b_), js(j)],
+                                                    h // group, 0, 0)),
+    ]
+    args = [q_pos, p_kpos, s_kpos, q, pk, pv, sk, sv]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1),
+                         lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)],
+                                                        h // group)),
+            pl.BlockSpec((1, 1),
+                         lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)],
+                                                        h // group)),
+        ]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hq, nq, n_total),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, i, j, ppt, spt: (b_, h, i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+    [out] = pl.pallas_call(
+        functools.partial(_fused_prefill_kernel, causal=causal, window=window,
+                          npp=npp, n_total=n_total, scale=scale,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, hq, tq_p, d), jnp.float32)],
+        interpret=interpret,
+    )(prefix_table.astype(jnp.int32), suffix_table.astype(jnp.int32), *args)
+    return out[:, :, :tq, :]

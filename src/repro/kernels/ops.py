@@ -8,7 +8,9 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import decode_gqa as _decode
+from repro.kernels import fused_cascade as _fused
 from repro.kernels import prefix_attention as _prefix
+from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rglru
 from repro.kernels import shared_prefix as _shared
 from repro.kernels import ssm_scan as _ssm
@@ -69,23 +71,48 @@ def paged_decode_gqa(q, k, v, q_pos, k_pos, page_table, *, window=0):
                                     window=window, interpret=_interpret())
 
 
-def merge_partials(o1, m1, l1, o2, m2, l2, *, block_q=128):
-    """Exact LSE-merge of two attention partials over disjoint keys."""
-    return _shared.merge_partials(o1, m1, l1, o2, m2, l2, block_q=block_q,
-                                  interpret=_interpret())
+def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
+                          prefix_table, suffix_table, k_scale=None,
+                          v_scale=None, *, causal=True, window=0,
+                          block_q=128):
+    """Fused single-pass cascade prefill: ONE kernel walks the
+    concatenated prefix-chain + suffix page tables, carrying the
+    (o, m, l) accumulator in VMEM across every segment; int8 prefix
+    tiles dequantize in-register when scales are passed (DESIGN.md
+    §11).  Replaces per-segment ``paged_attention_partial`` launches
+    plus the LSE fold."""
+    return _fused.fused_paged_attention(
+        q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos, prefix_table,
+        suffix_table, k_scale, v_scale, causal=causal, window=window,
+        block_q=block_q, interpret=_interpret())
+
+
+def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
+                           prefix_table, suffix_table, k_scale=None,
+                           v_scale=None, *, window=0):
+    """Fused single-pass cascade decode (decode-shaped [group, d] q
+    tiles over the concatenated page walk); see
+    ``fused_paged_attention``."""
+    return _fused.fused_paged_decode_gqa(
+        q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos, prefix_table,
+        suffix_table, k_scale, v_scale, window=window,
+        interpret=_interpret())
 
 
 def fold_partials(partials, *, block_q=128):
-    """Associative N-way LSE fold over disjoint key sets: the prefix
-    CHAIN cascade (one partial per chain segment + the suffix partial,
-    DESIGN.md §10).  Left-folds the pairwise Pallas merge kernel, the
-    same evaluation order as ``kernels.ref.fold_partials_ref``."""
+    """Associative N-way LSE fold over disjoint key sets: the dense
+    prefix CHAIN cascade (one partial per chain segment + the suffix
+    partial, DESIGN.md §10).  The paged serving path folds in-kernel
+    now (``fused_paged_*``), so the pairwise Pallas merge kernel is
+    gone; this left-folds ``kernels.ref.merge_partials_ref`` — jnp,
+    jit-safe, and the canonical evaluation order shared with
+    ``fold_partials_ref``.  ``block_q`` is accepted for API
+    compatibility and ignored."""
+    del block_q
     assert partials, "need at least one partial"
     o, m, l = partials[0]
     for o2, m2, l2 in partials[1:]:
-        o, m, l = _shared.merge_partials(o, m, l, o2, m2, l2,
-                                         block_q=block_q,
-                                         interpret=_interpret())
+        o, m, l = _ref.merge_partials_ref(o, m, l, o2, m2, l2)
     return o, m, l
 
 

@@ -152,6 +152,57 @@ def fold_partials_ref(partials):
     return o, m, l
 
 
+def dequantize_paged_ref(x, scale):
+    """Dequantize a head-major int8 paged arena [NB, Hkv, bs, D] with
+    per-(block, kv-head) f32 scales [NB, Hkv]."""
+    return x.astype(jnp.float32) * scale[:, :, None, None]
+
+
+def fused_paged_attention_ref(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
+                              prefix_table, suffix_table, k_scale=None,
+                              v_scale=None, *, causal: bool = True,
+                              window: int = 0):
+    """Oracle for the fused single-pass cascade prefill kernel.
+
+    BY CONSTRUCTION this is the exact multi-launch composition — prefix
+    partial (causal=False) + suffix partial (causal) + LSE merge — so
+    the ``fused=True`` serving path on the XLA backend, which runs this
+    composition, is bitwise-identical to multi-launch, and the Pallas
+    single-pass kernel (whose accumulator visits the same keys in the
+    same order but renormalizes incrementally) is gated against it by
+    allclose + end-to-end greedy-token identity.  When
+    ``k_scale``/``v_scale`` [NBp, Hkv] are given the prefix arena is
+    int8 and is dequantized before the prefix partial (int8 mode is
+    otherwise off for oracles).  Returns the normalized output only.
+    """
+    if k_scale is not None:
+        pk = dequantize_paged_ref(pk, k_scale)
+        pv = dequantize_paged_ref(pv, v_scale)
+    o1, m1, l1 = paged_attention_partial_ref(
+        q, pk, pv, q_pos, p_kpos, prefix_table, causal=False, window=window)
+    o2, m2, l2 = paged_attention_partial_ref(
+        q, sk, sv, q_pos, s_kpos, suffix_table, causal=causal, window=window)
+    out, _, _ = merge_partials_ref(o1, m1, l1, o2, m2, l2)
+    return out
+
+
+def fused_paged_decode_gqa_ref(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
+                               prefix_table, suffix_table, k_scale=None,
+                               v_scale=None, *, window: int = 0):
+    """Oracle for the fused single-pass cascade decode kernel: the exact
+    multi-launch decode composition (both partials causal) with optional
+    int8 prefix dequantization.  q: [B, Hq, D]; returns [B, Hq, D]."""
+    if k_scale is not None:
+        pk = dequantize_paged_ref(pk, k_scale)
+        pv = dequantize_paged_ref(pv, v_scale)
+    o1, m1, l1 = paged_decode_gqa_partial_ref(
+        q, pk, pv, q_pos, p_kpos, prefix_table, window=window)
+    o2, m2, l2 = paged_decode_gqa_partial_ref(
+        q, sk, sv, q_pos, s_kpos, suffix_table, window=window)
+    out, _, _ = merge_partials_ref(o1, m1, l1, o2, m2, l2)
+    return out
+
+
 def decode_gqa_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
     """Single-token GQA decode oracle.
 

@@ -6,9 +6,12 @@ attending; these kernels instead let batched queries ``[B, Hq, Tq, D]``
 attend over a **batch-1 shared prefix KV** ``[1, Hkv, P, D]`` directly —
 each prefix KV tile is streamed HBM->VMEM once per kv-head group, never
 per member.  The result is a *partial* attention ``(out, m, l)`` in
-online-softmax form; a second (elementwise) kernel merges it with the
-per-member suffix partial, which is numerically exact: softmax over
-``[prefix ++ suffix]`` equals the LSE-merge of the two partials.
+online-softmax form; an LSE merge (``ops.fold_partials``, delegating to
+``ref.merge_partials_ref``) combines it with the per-member suffix
+partial, which is numerically exact: softmax over ``[prefix ++ suffix]``
+equals the LSE-merge of the two partials.  (The paged serving path no
+longer merges at all — ``fused_cascade.py`` folds the whole cascade
+in-kernel, which is why the old pairwise Pallas merge kernel is gone.)
 
 ``attention_partial`` also accepts per-member KV (kv batch == q batch),
 so the suffix side of the cascade uses the same kernel.
@@ -29,8 +32,7 @@ any other empty slot.  (The page table generalizes PR 2's
 pool itself.)
 
 Tiling mirrors ``prefix_attention.py``: grid (B, Hq, nq, nk), KV minor,
-online-softmax scratch in VMEM persisting across the nk loop; the merge
-kernel is a pure-VPU elementwise pass on (B, Hq, nq) tiles.
+online-softmax scratch in VMEM persisting across the nk loop.
 """
 from __future__ import annotations
 
@@ -312,7 +314,7 @@ def paged_attention_partial(q, k, v, q_pos, k_pos, page_table, *,
     ``page_table[b, j]``, so the KV-minor loop walks the page table and
     the attention math is byte-identical to the dense cascade over the
     gathered sequence.  Returns ``(out [B,Hq,Tq,D] f32 normalized,
-    m [B,Hq,Tq], l [B,Hq,Tq])`` for ``merge_partials``.
+    m [B,Hq,Tq], l [B,Hq,Tq])`` for the LSE merge/fold.
     """
     b, hq, tq, d = q.shape
     hkv, bs = k.shape[1], k.shape[2]
@@ -433,60 +435,3 @@ def paged_decode_gqa_partial(q, k, v, q_pos, k_pos, page_table, *,
         interpret=interpret,
     )(page_table.astype(jnp.int32), qp2, k_pos, qg, k, v)
     return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
-
-
-def _merge_kernel(o1_ref, m1_ref, l1_ref, o2_ref, m2_ref, l2_ref,
-                  o_ref, m_out_ref, l_out_ref):
-    o1 = o1_ref[0, 0].astype(jnp.float32)                # [bq, d]
-    o2 = o2_ref[0, 0].astype(jnp.float32)
-    m1, l1 = m1_ref[0, 0], l1_ref[0, 0]                  # [bq]
-    m2, l2 = m2_ref[0, 0], l2_ref[0, 0]
-
-    m = jnp.maximum(m1, m2)
-    w1 = jnp.exp(m1 - m) * l1                            # un-normalized masses
-    w2 = jnp.exp(m2 - m) * l2
-    l = w1 + w2
-    safe = jnp.where(l > 0, l, 1.0)
-    o = (o1 * w1[:, None] + o2 * w2[:, None]) / safe[:, None]
-    o_ref[0, 0] = o.astype(o_ref.dtype)
-    m_out_ref[0, 0] = m
-    l_out_ref[0, 0] = l
-
-
-@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
-def merge_partials(o1, m1, l1, o2, m2, l2, *, block_q: int = 128,
-                   interpret: bool = True):
-    """LSE-merge two partial attentions over disjoint key sets.
-
-    o*: [B, Hq, Tq, D] (normalized partial outputs); m*, l*: [B, Hq, Tq]
-    online-softmax stats.  Returns the merged ``(out, m, l)``; merging is
-    associative so cascades deeper than prefix+suffix can chain it.
-    """
-    b, hq, tq, d = o1.shape
-    bq = min(block_q, tq)
-    tq_p = ((tq + bq - 1) // bq) * bq
-    if tq_p != tq:
-        pad4 = ((0, 0), (0, 0), (0, tq_p - tq), (0, 0))
-        pad3 = ((0, 0), (0, 0), (0, tq_p - tq))
-        o1, o2 = jnp.pad(o1, pad4), jnp.pad(o2, pad4)
-        m1 = jnp.pad(m1, pad3, constant_values=NEG_INF)
-        m2 = jnp.pad(m2, pad3, constant_values=NEG_INF)
-        l1, l2 = jnp.pad(l1, pad3), jnp.pad(l2, pad3)
-
-    nq = tq_p // bq
-    spec4 = pl.BlockSpec((1, 1, bq, d), lambda b_, h, i: (b_, h, i, 0))
-    spec3 = pl.BlockSpec((1, 1, bq), lambda b_, h, i: (b_, h, i))
-    out, m, l = pl.pallas_call(
-        _merge_kernel,
-        grid=(b, hq, nq),
-        in_specs=[spec4, spec3, spec3, spec4, spec3, spec3],
-        out_specs=[spec4, spec3, spec3],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, hq, tq_p, d), o1.dtype),
-            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
-            jax.ShapeDtypeStruct((b, hq, tq_p), jnp.float32),
-        ],
-        interpret=interpret,
-    )(o1, m1.astype(jnp.float32), l1.astype(jnp.float32),
-      o2, m2.astype(jnp.float32), l2.astype(jnp.float32))
-    return out[:, :, :tq, :], m[:, :, :tq], l[:, :, :tq]

@@ -296,8 +296,9 @@ def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix,
 def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
                  prefix_arena: dict, prefix_pages: jnp.ndarray,
                  suffix_arena: dict, suffix_pages: jnp.ndarray,
-                 *, window: int = 0, impl: str = "xla") -> jnp.ndarray:
-    """Cascade attention over a paged KV arena (DESIGN.md §8).
+                 *, window: int = 0, impl: str = "xla",
+                 fused: bool = True) -> jnp.ndarray:
+    """Cascade attention over a paged KV arena (DESIGN.md §8, §11).
 
     q: [B, Hq, Tq, D]; prefix_arena / suffix_arena: {"k","v","pos"}
     block-arena leaves (k/v [NB, bs, Hkv, D] seq-major, pos [NB, bs]);
@@ -311,18 +312,36 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
     Rows with an all-NULL prefix table (no cached prefix) degrade to
     pure suffix attention — the masked prefix partial carries no mass.
 
+    ``prefix_arena`` may be a QUANTIZED arena (``KVBlockPool.qarena``):
+    int8 k/v plus per-(block, kv-head) f32 ``k_scale``/``v_scale``
+    leaves.  Every path dequantizes before use — the fused Pallas
+    kernel in-register right after the tile DMA, the others densely.
+    The suffix arena is always compute dtype (decode writes it).
+
+    ``fused=True`` (the default) routes the PALLAS branch to the
+    single-pass cascade kernels (``kernels/fused_cascade.py``): one
+    launch walks both page tables carrying the (o, m, l) accumulator in
+    VMEM, instead of one partial launch per segment plus an LSE fold.
+    The XLA branch ignores the flag — its "fused" composition IS the
+    multi-launch cascade, so on XLA fused and multi-launch are
+    bitwise-identical by construction; the Pallas single-pass kernel
+    renormalizes incrementally (same keys, same order, different
+    rounding) and is gated by oracle-allclose + greedy-token identity.
+
     The two arenas are usually the SAME object (prefill: one address
-    space).  Decode passes the main arena as ``prefix_arena`` (a scan
-    invariant — prefix blocks are read-only during decode) and a
-    compact extraction of the batch's suffix blocks as
-    ``suffix_arena`` (the only blocks decode writes; carrying the full
-    arena through the scan would copy it per step on backends where
-    donation cannot alias).
+    space).  Decode passes the prefix source (main arena, or the int8
+    arena when quantizing) as ``prefix_arena`` (a scan invariant —
+    prefix blocks are read-only during decode) and a compact extraction
+    of the batch's suffix blocks as ``suffix_arena`` (the only blocks
+    decode writes; carrying the full arena through the scan would copy
+    it per step on backends where donation cannot alias).
 
     The Pallas path walks the page tables with one-block-per-grid-step
     scalar-prefetch DMA; the XLA path gathers the blocks (exact, and
     what CPU validation runs).
     """
+    k_scale = prefix_arena.get("k_scale")
+    v_scale = prefix_arena.get("v_scale")
     if impl == "pallas":
         from repro.kernels import ops as kops
         pka = prefix_arena["k"].transpose(0, 2, 1, 3)  # head-major (MXU)
@@ -330,6 +349,20 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
         ska = suffix_arena["k"].transpose(0, 2, 1, 3)
         sva = suffix_arena["v"].transpose(0, 2, 1, 3)
         ppos, spos = prefix_arena["pos"], suffix_arena["pos"]
+        if fused:
+            if q.shape[2] == 1:
+                out = kops.fused_paged_decode_gqa(
+                    q[:, :, 0], pka, pva, ska, sva, q_pos[:, 0], ppos,
+                    spos, prefix_pages, suffix_pages, k_scale, v_scale,
+                    window=window)
+                return out[:, :, None].astype(q.dtype)
+            out = kops.fused_paged_attention(
+                q, pka, pva, ska, sva, q_pos, ppos, spos, prefix_pages,
+                suffix_pages, k_scale, v_scale, window=window)
+            return out.astype(q.dtype)
+        if k_scale is not None:     # multi-launch kernels read raw tiles:
+            pka = pka.astype(jnp.float32) * k_scale[:, :, None, None]
+            pva = pva.astype(jnp.float32) * v_scale[:, :, None, None]
         if q.shape[2] == 1:
             o1, m1, l1 = kops.paged_decode_gqa_partial(
                 q[:, :, 0], pka, pva, q_pos[:, 0], ppos, prefix_pages,
@@ -345,14 +378,20 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
         o2, m2, l2 = kops.paged_attention_partial(
             q, ska, sva, q_pos, spos, suffix_pages, causal=True,
             window=window)
-        out, _, _ = kops.merge_partials(o1, m1, l1, o2, m2, l2)
+        out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
         return out.astype(q.dtype)
 
     def gathered(arena, pages):
         kk = arena["k"][pages]                     # [Bk, W, bs, Hkv, D]
         bk, w, bs, hkv, d = kk.shape
+        vv = arena["v"][pages]
+        if "k_scale" in arena:                     # int8 prefix arena
+            ks = arena["k_scale"][pages]           # [Bk, W, Hkv]
+            kk = kk.astype(jnp.float32) * ks[:, :, None, :, None]
+            vv = vv.astype(jnp.float32) * \
+                arena["v_scale"][pages][:, :, None, :, None]
         kk = kk.reshape(bk, w * bs, hkv, d)
-        vv = arena["v"][pages].reshape(bk, w * bs, hkv, d)
+        vv = vv.reshape(bk, w * bs, hkv, d)
         pp = arena["pos"][pages].reshape(bk, w * bs)
         return kk, vv, pp
 
@@ -491,7 +530,8 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                    impl: str = "xla", prefix: Optional[dict] = None,
                    slot_offset=0,
                    prefix_pages: Optional[jnp.ndarray] = None,
-                   suffix_pages: Optional[jnp.ndarray] = None):
+                   suffix_pages: Optional[jnp.ndarray] = None,
+                   fused: bool = True):
     """x: [B, T, D_model]; positions: [B, T] absolute positions.
 
     Returns (out [B, T, D_model], new_cache or None).
@@ -559,7 +599,7 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
         prefix_src = prefix if prefix is not None else new_cache
         out = attend_paged(q, positions, prefix_src, prefix_pages,
                            new_cache, suffix_pages, window=window,
-                           impl=impl)
+                           impl=impl, fused=fused)
     elif prefix is not None:
         # Split prefix/suffix cascade: fresh KV goes into the suffix-only
         # cache; the shared batch-1 prefix buffers are attended in place.

@@ -119,13 +119,18 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
         # prefix may be one batch-1 cache (dense single segment, or the
         # paged decode's read-only arena) or a CHAIN of caches (a
         # tuple, root→leaf): attention folds one partial per segment
+        def prefix_keys(src):
+            # quantized paged arenas carry int8 K/V + per-block scales
+            base = ("k", "v", "pos")
+            return base + (("k_scale", "v_scale") if "k_scale" in src
+                           else ())
         if prefix is None:
             sub_prefix = None
         elif isinstance(prefix, (list, tuple)):
-            sub_prefix = tuple({k: p[k] for k in ("k", "v", "pos")}
+            sub_prefix = tuple({k: p[k] for k in prefix_keys(p)}
                                for p in prefix)
         else:
-            sub_prefix = {k: prefix[k] for k in ("k", "v", "pos")}
+            sub_prefix = {k: prefix[k] for k in prefix_keys(prefix)}
         out, sub_new = attn_lib.self_attention(
             p["mixer"], h,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
@@ -136,7 +141,8 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
             impl=cfg.attention_impl, prefix=sub_prefix,
             slot_offset=ctx.get("slot_offset", 0),
             prefix_pages=ctx.get("prefix_pages"),
-            suffix_pages=ctx.get("suffix_pages"))
+            suffix_pages=ctx.get("suffix_pages"),
+            fused=ctx.get("fused", True))
         if sub_new is not None:
             new_cache.update(sub_new)
     elif spec.mixer == MAMBA:
@@ -470,7 +476,8 @@ def forward(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
             valid: Optional[jnp.ndarray] = None, ring: bool = False,
             prefix: Optional[dict] = None, slot_offset=0,
             prefix_pages: Optional[jnp.ndarray] = None,
-            suffix_pages: Optional[jnp.ndarray] = None):
+            suffix_pages: Optional[jnp.ndarray] = None,
+            fused: bool = True):
     """Run the decoder stack in any serving mode.
 
     embeds: [B, T, D] already-embedded inputs; positions: [B, T]
@@ -493,7 +500,8 @@ def forward(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
     """
     ctx = {"positions": positions, "valid": valid, "ring": ring,
            "enc": enc, "causal": True, "slot_offset": slot_offset,
-           "prefix_pages": prefix_pages, "suffix_pages": suffix_pages}
+           "prefix_pages": prefix_pages, "suffix_pages": suffix_pages,
+           "fused": fused}
     return run_stack(params, cfg, embeds, cache, ctx, prefix=prefix)
 
 

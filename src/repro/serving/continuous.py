@@ -313,12 +313,14 @@ class ContinuousEngine:
     def _prefill_into_sub(self, prefill, embeds, positions, valid,
                           offs, prow, srow):
         """Suffix prefill with the sub-arena as the (donated) cache and
-        the main arena as the read-only prefix source — the admission
+        the prefix source — the main arena, or the int8 quantized arena
+        under ``quantize_prefix`` — read-only: the admission
         counterpart of the chunked decode's carry split.  Returns the
         last-token logits."""
         eng, b = self.engine, self.batch
         out = b._with_sub(lambda sub: _cache_last(prefill(
-            eng.params, embeds, positions, valid, sub, eng.block_pool.arena,
+            eng.params, embeds, positions, valid, sub,
+            eng.block_pool.prefix_source(),
             jnp.asarray(offs), jnp.asarray(prow), jnp.asarray(srow))))
         return out[0]
 

@@ -102,13 +102,19 @@ class ServingEngine:
                  max_cache_len: int = 768, max_new_tokens: int = 32,
                  bucket: int = 32, split_prefix: Optional[bool] = None,
                  paged: Optional[bool] = None, block_size: int = 64,
-                 arena_blocks: Optional[int] = None):
+                 arena_blocks: Optional[int] = None, fused: bool = True,
+                 quantize_prefix: bool = False):
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer
         self.max_cache_len = max_cache_len
         self.max_new_tokens = max_new_tokens
         self.bucket = bucket
+        # fused=True routes the paged Pallas path through the
+        # single-pass cascade kernels (kernels/fused_cascade.py); on
+        # XLA the fused composition IS the multi-launch cascade, so the
+        # flag only changes which Pallas kernels launch (DESIGN.md §11)
+        self.fused = bool(fused)
         self.cache_mgr = ClusterCacheManager()
         self._prefill_jit = functools.lru_cache(maxsize=64)(self._make_prefill)
         self._decode_jit = functools.lru_cache(maxsize=16)(self._make_decode)
@@ -142,9 +148,11 @@ class ServingEngine:
             if arena_blocks is None:
                 arena_blocks = 8 * max_cache_len // block_size + 32
             self.block_pool: Optional[KVBlockPool] = KVBlockPool(
-                cfg, arena_blocks + 1, block_size)    # +1: NULL block
+                cfg, arena_blocks + 1, block_size,    # +1: NULL block
+                quantize_prefix=quantize_prefix)
         else:
             self.block_pool = None
+        self.quantize_prefix = bool(quantize_prefix) and self.use_paged
 
     # ------------------------------------------------------------------
     # jitted building blocks (cached per shape bucket)
@@ -157,6 +165,7 @@ class ServingEngine:
         ``cache`` plus per-row prefix/suffix page tables and per-row
         ``slot_offset``."""
         cfg = self.cfg
+        fused = self.fused
 
         def prefill(params, embeds, positions, valid, cache, prefix,
                     slot_offset, prefix_pages, suffix_pages):
@@ -165,7 +174,8 @@ class ServingEngine:
                                          prefix=prefix,
                                          slot_offset=slot_offset,
                                          prefix_pages=prefix_pages,
-                                         suffix_pages=suffix_pages)
+                                         suffix_pages=suffix_pages,
+                                         fused=fused)
             lengths = jnp.sum(valid.astype(jnp.int32), axis=1)      # [B]
             last = jnp.take_along_axis(
                 hidden, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)
@@ -183,6 +193,7 @@ class ServingEngine:
         scan never copies it."""
         cfg = self.cfg
         steps = self.max_new_tokens - 1
+        fused = self.fused
 
         def decode(params, first_token, lengths, cache, prefix, slot_offset,
                    prefix_pages, suffix_pages):
@@ -193,7 +204,8 @@ class ServingEngine:
                                              cache=cache, prefix=prefix,
                                              slot_offset=slot_offset,
                                              prefix_pages=prefix_pages,
-                                             suffix_pages=suffix_pages)
+                                             suffix_pages=suffix_pages,
+                                             fused=fused)
                 logits = M.unembed(params, cfg, hidden)[:, 0]
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 done = done | (tok == EOS)
@@ -223,6 +235,7 @@ class ServingEngine:
         (``KVBlockPool.sub_arena``); the main arena rides in ``prefix``
         read-only."""
         cfg = self.cfg
+        fused = self.fused
 
         def decode_step(params, tok, pos, done, cache, prefix, slot_offset,
                         prefix_pages, suffix_pages):
@@ -233,7 +246,8 @@ class ServingEngine:
                                              cache=cache, prefix=prefix,
                                              slot_offset=slot_offset,
                                              prefix_pages=prefix_pages,
-                                             suffix_pages=suffix_pages)
+                                             suffix_pages=suffix_pages,
+                                             fused=fused)
                 logits = M.unembed(params, cfg, hidden)[:, 0]
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 done = done | (tok == EOS)
@@ -257,7 +271,7 @@ class ServingEngine:
         fn = self._decode_step_jit(int(len(tok)), int(steps))
         return fn(self.params, jnp.asarray(tok, jnp.int32),
                   jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool),
-                  sub, self.block_pool.arena,
+                  sub, self.block_pool.prefix_source(),
                   jnp.asarray(offs, jnp.int32), jnp.asarray(prefix_rows),
                   jnp.asarray(suffix_rows))
 
@@ -414,11 +428,17 @@ class ServingEngine:
             try:
                 bids = pool.alloc_suffix(blocks_for(n_ext, self.block_size))
                 srow = np.asarray(bids, np.int32).reshape(1, -1)
+                # quantized pools read ancestor blocks from the int8
+                # arena (pool.qarena; None otherwise — the prefix is
+                # then read from the donated arena itself).  Never pass
+                # pool.arena here: it IS the donated cache argument.
                 self._with_arena(lambda a: prefill(
-                    self.params, embeds, positions, valid, a, None,
+                    self.params, embeds, positions, valid, a, pool.qarena,
                     jnp.int32(parent.prefix_len), jnp.asarray(prow),
                     jnp.asarray(srow)))
                 pool.note_tokens(bids, n_ext)
+                # the fresh tail blocks are prefix-resident from now on
+                pool.quantize_blocks(bids)
                 jax.block_until_ready(pool.arena)
             except BaseException:
                 pool.decref(chain)
@@ -587,9 +607,12 @@ class ServingEngine:
             srow = jnp.asarray(suffix_rows)
             offj = jnp.asarray(offs)
             prefill = self._prefill_jit(b, embeds.shape[1])
+            # quantized pools read prefix blocks from the int8 arena
+            # (pool.qarena; None otherwise — then read from the donated
+            # arena itself, never pool.arena, which IS the donated arg)
             arena, logits, _ = self._with_arena(
                 lambda a: prefill(self.params, embeds, positions, valid,
-                                  a, None, offj, prow, srow))
+                                  a, pool.qarena, offj, prow, srow))
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             jax.block_until_ready(first)
             t_prefill = time.perf_counter() - t0
@@ -606,8 +629,8 @@ class ServingEngine:
             # discarded with the suffix blocks; nothing scatters back.
             sub = pool.extract(flat)
             sub_pages = jnp.arange(b * nbs, dtype=jnp.int32).reshape(b, nbs)
-            out, _ = decode(self.params, first, lengths, sub, pool.arena,
-                            offj, prow, sub_pages)
+            out, _ = decode(self.params, first, lengths, sub,
+                            pool.prefix_source(), offj, prow, sub_pages)
             out = np.asarray(jax.block_until_ready(out))
             t_decode = time.perf_counter() - t0
             # reconcile token counts at row retirement: a row that hit

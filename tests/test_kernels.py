@@ -121,7 +121,9 @@ def test_decode_gqa_partial_cascade(kv_batch, window):
 
 
 def test_lse_merge_matches_ref():
-    """Kernel LSE merge vs the jnp oracle on synthetic partials."""
+    """N-way fold entry point vs the jnp oracle on synthetic partials.
+    (The pairwise Pallas merge kernel is gone — the paged cascade folds
+    in-kernel now — so ``ops.fold_partials`` is the merge surface.)"""
     b, hq, tq, d = 2, 4, 13, 16
     ks = jax.random.split(KEY, 6)
     o1 = jax.random.normal(ks[0], (b, hq, tq, d))
@@ -133,7 +135,7 @@ def test_lse_merge_matches_ref():
     # include empty partials (fully-masked rows): l = 0, m = NEG_INF
     l1 = l1.at[0, 0, :3].set(0.0)
     m1 = m1.at[0, 0, :3].set(ref.NEG_INF)
-    got, gm, gl = ops.merge_partials(o1, m1, l1, o2, m2, l2, block_q=8)
+    got, gm, gl = ops.fold_partials([(o1, m1, l1), (o2, m2, l2)])
     want, wm, wl = ref.merge_partials_ref(o1, m1, l1, o2, m2, l2)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5, rtol=2e-5)
@@ -161,7 +163,7 @@ def test_partial_merge_equals_full_attention():
                                block_q=8, block_k=16)
     o2 = ops.attention_partial(q, sk, sv, q_pos, s_pos, causal=True,
                                block_q=8, block_k=8)
-    got, _, _ = ops.merge_partials(*o1, *o2, block_q=8)
+    got, _, _ = ops.fold_partials([o1, o2])
 
     k_all = jnp.concatenate([jnp.broadcast_to(pk, (b,) + pk.shape[1:]), sk], 2)
     v_all = jnp.concatenate([jnp.broadcast_to(pv, (b,) + pv.shape[1:]), sv], 2)
