@@ -123,7 +123,13 @@ class PrefixState:
     def release(self) -> None:
         """Drop this state's block references — its own segment AND the
         per-lifetime references it holds on its ancestors (idempotent;
-        no-op for dense states, which the garbage collector owns)."""
+        no-op for dense states, which the garbage collector owns).
+
+        With a host tier attached (DESIGN.md §12) an evicting
+        ``PrefixPool`` gathers the segment's bits to host BEFORE calling
+        this: release ends the state's device life; the ``HostSegment``
+        carries the content until promotion rebuilds a fresh state
+        through new blocks (bitwise identical) or the tier discards it."""
         if self.block_pool is not None:
             if self.page is not None:
                 self.block_pool.decref(self.page.blocks)
@@ -210,6 +216,22 @@ class CacheStats:
     tree_segments_resident: int = 0   # gauge: pooled segments at last observe
     tree_tokens_resident: int = 0     # gauge: pooled prefix tokens (each
                                       # shared segment counted ONCE)
+    # --- host tier (core/tiered.py, DESIGN.md §12) ---
+    tier_demotions: int = 0      # pool evictions captured to host buffers
+    tier_promotions: int = 0     # host segments re-onboarded to device
+    tier_prefetch_promotions: int = 0  # promotions kicked speculatively
+                                       # at assignment time, pre-queue-front
+    tier_prefetch_hits: int = 0  # later pool hit landed on a prefetched entry
+    tier_promotion_failures: int = 0   # promotions unwound (device_put /
+                                       # OutOfBlocks); host copy survives
+    tier_demoted_bytes: int = 0
+    tier_promoted_bytes: int = 0
+    tier_promotion_wait_s: float = 0.0  # residual blocking on transfers
+                                        # AFTER overlap with prefills
+    host_discards: int = 0       # host-tier evictions — the true loss tier
+    host_segments: int = 0       # gauge: segments host-resident
+    host_bytes_in_use: int = 0   # gauge: host buffer bytes
+    host_bytes_peak: int = 0     # high-water mark of host_bytes_in_use
 
     @property
     def prefill_savings(self) -> float:
@@ -282,6 +304,45 @@ class CacheStats:
         total = self.ancestor_hits + self.ancestor_misses
         return self.ancestor_hits / total if total else 0.0
 
+    def record_tier(self, *, demotions: int = 0, promotions: int = 0,
+                    prefetch_promotions: int = 0, prefetch_hits: int = 0,
+                    promotion_failures: int = 0, demoted_bytes: int = 0,
+                    promoted_bytes: int = 0, promotion_wait_s: float = 0.0,
+                    discards: int = 0) -> None:
+        """Host-tier accounting (called by ``PrefixPool``/``HostTier``;
+        DESIGN.md §12)."""
+        self.tier_demotions += demotions
+        self.tier_promotions += promotions
+        self.tier_prefetch_promotions += prefetch_promotions
+        self.tier_prefetch_hits += prefetch_hits
+        self.tier_promotion_failures += promotion_failures
+        self.tier_demoted_bytes += demoted_bytes
+        self.tier_promoted_bytes += promoted_bytes
+        self.tier_promotion_wait_s += promotion_wait_s
+        self.host_discards += discards
+
+    def record_host(self, tier) -> None:
+        """Observe a ``HostTier``'s residency gauges."""
+        self.host_segments = len(tier)
+        self.host_bytes_in_use = tier.bytes_in_use
+        self.host_bytes_peak = max(self.host_bytes_peak,
+                                   tier.bytes_in_use)
+
+    @property
+    def tier_promotion_rate(self) -> float:
+        """Of the misses that had been evicted before, how many were
+        answered from host instead of recomputed (the tier's claim)."""
+        total = self.tier_promotions + self.pool_reprefills
+        return self.tier_promotions / total if total else 0.0
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """How often a speculative promotion was actually consumed by a
+        later pool hit (prefetch precision)."""
+        if not self.tier_prefetch_promotions:
+            return 0.0
+        return self.tier_prefetch_hits / self.tier_prefetch_promotions
+
     def record_tree_residency(self, segments: int, tokens: int) -> None:
         """Gauge: pooled chain segments / prefix tokens resident (each
         shared ancestor counted once — the byte-budget win vs a flat
@@ -292,15 +353,21 @@ class CacheStats:
     def record_blocks(self, pool) -> None:
         """Observe a ``KVBlockPool``'s occupancy (called by the engine
         after each paged serve; the peak is the HBM high-water mark)."""
-        self.blocks_total = pool.allocator.num_usable
+        total = pool.allocator.num_usable
+        if pool.suffix_allocator is not pool.allocator:
+            total += pool.suffix_allocator.num_usable
+        self.blocks_total = total
         self.blocks_in_use = pool.blocks_in_use
         self.blocks_peak = max(self.blocks_peak, pool.blocks_in_use)
         self.block_tokens = pool.tokens_stored
         self.block_size = pool.block_size
-        # byte gauges priced at the arena dtype blocks actually occupy
-        # (int8 + scales under quantize_prefix), not the compute dtype
+        # byte gauges priced at the arena dtype PREFIX blocks actually
+        # occupy (int8 + scales under quantize_prefix, whose suffix
+        # space is separate compute-dtype working storage), not the
+        # compute dtype
         self.block_bytes = pool.prefix_block_bytes
-        self.block_bytes_in_use = pool.blocks_in_use * self.block_bytes
+        self.block_bytes_in_use = (pool.prefix_blocks_in_use
+                                   * self.block_bytes)
         self.block_bytes_peak = max(self.block_bytes_peak,
                                     self.block_bytes_in_use)
 

@@ -256,15 +256,20 @@ def _qarena_like(node):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _quantize_blocks(qarena, arena, bids):
-    """Quantize arena rows ``bids`` into the int8 prefix arena
-    (donated, in place): per (block, kv-head) symmetric scales
-    ``amax / 127`` over the block's (slot, head_dim) tile, values
-    rounded and clipped to [-127, 127]; positions copied verbatim.
-    Zero blocks get scale 1.0 so dequant stays exact."""
+def _quantize_blocks(qarena, arena, src_bids, dst_bids):
+    """Quantize arena rows ``src_bids`` into int8-prefix-arena rows
+    ``dst_bids`` (donated, in place): per (block, kv-head) symmetric
+    scales ``amax / 127`` over the block's (slot, head_dim) tile,
+    values rounded and clipped to [-127, 127]; positions copied
+    verbatim.  Zero blocks get scale 1.0 so dequant stays exact.
+
+    ``src`` and ``dst`` are SEPARATE id spaces for a quantized pool:
+    compute-dtype staging rows feed int8 prefix rows, and the staging
+    rows go back to the suffix free list once the copy commits
+    (``KVBlockPool.write_prefix``)."""
     def rows_and_scale(path, which):
         src = _tree_get(arena, path[:-1])[which]       # [.., NB, bs, Hkv, D]
-        x = jnp.moveaxis(src, -4, 0)[bids].astype(jnp.float32)
+        x = jnp.moveaxis(src, -4, 0)[src_bids].astype(jnp.float32)
         amax = jnp.max(jnp.abs(x), axis=(-3, -1))      # [n, .., Hkv]
         scale = jnp.where(amax > 0, amax / 127.0, 1.0)
         return x, scale
@@ -275,17 +280,33 @@ def _quantize_blocks(qarena, arena, bids):
             x, scale = rows_and_scale(path, key)
             qr = jnp.clip(jnp.round(x / scale[..., None, :, None]),
                           -127, 127).astype(jnp.int8)
-            q2 = jnp.moveaxis(q, -4, 0).at[bids].set(qr)
+            q2 = jnp.moveaxis(q, -4, 0).at[dst_bids].set(qr)
             return jnp.moveaxis(q2, 0, -4)
         if key in ("k_scale", "v_scale"):
             _, scale = rows_and_scale(path, key[0])
-            q2 = jnp.moveaxis(q, -2, 0).at[bids].set(scale)
+            q2 = jnp.moveaxis(q, -2, 0).at[dst_bids].set(scale)
             return jnp.moveaxis(q2, 0, -2)
         assert key == "pos", path
-        src = jnp.moveaxis(_tree_get(arena, path), -2, 0)[bids]
-        q2 = jnp.moveaxis(q, -2, 0).at[bids].set(src)
+        src = jnp.moveaxis(_tree_get(arena, path), -2, 0)[src_bids]
+        q2 = jnp.moveaxis(q, -2, 0).at[dst_bids].set(src)
         return jnp.moveaxis(q2, 0, -2)
     return jax.tree_util.tree_map_with_path(f, qarena)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_blocks(arena, sub, bids):
+    """Scatter a compact sub-arena (row i = block ``bids[i]``) back
+    into arena rows ``bids`` (donated, in place) — the inverse of
+    ``_extract_blocks``, and the device half of host-tier promotion:
+    ``sub`` is the freshly ``device_put`` copy of a demoted segment.
+    Same-dtype leaves make the round trip bitwise."""
+    def f(path, a, s):
+        _, blk_ax = _leaf_axes(path)
+        a2 = jnp.moveaxis(a, blk_ax, 0)
+        s2 = jnp.moveaxis(s, blk_ax, 0)
+        a2 = a2.at[bids].set(s2.astype(a2.dtype))
+        return jnp.moveaxis(a2, 0, blk_ax)
+    return jax.tree_util.tree_map_with_path(f, arena, sub)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -305,6 +326,17 @@ class KVBlockPool:
     ``init_block_arena`` shapes and flow through ``forward`` exactly
     like a dense cache whose batch dim is ``num_blocks`` and capacity is
     ``block_size`` — jits donate it, callers reassign ``pool.arena``.
+
+    With ``quantize_prefix=True`` the pool runs TWO id spaces of equal
+    size: ``allocator`` addresses int8 ``qarena`` rows (prefix blocks —
+    what budgets price and page tables reference), and
+    ``suffix_allocator`` addresses compute-dtype ``arena`` rows
+    (suffix/decode KV plus transient prefill staging).  ``write_prefix``
+    stages through arena rows and returns them to the suffix free list
+    once the int8 copy commits, so quantized prefixes no longer strand
+    dead compute-dtype rows (ROADMAP "known debts").  Without
+    quantization both names alias ONE allocator — the single address
+    space of DESIGN.md §8, unchanged.
     """
 
     def __init__(self, cfg, num_blocks: int, block_size: int, *,
@@ -321,8 +353,12 @@ class KVBlockPool:
         # when quantization is off
         self.qarena = _qarena_like(self.arena) if quantize_prefix else None
         self.allocator = BlockAllocator(num_blocks)
+        self.suffix_allocator = (BlockAllocator(num_blocks)
+                                 if quantize_prefix else self.allocator)
         # tokens actually stored per block (internal-fragmentation stat)
         self._block_tokens = np.zeros(num_blocks, np.int64)
+        self._sfx_tokens = (np.zeros(num_blocks, np.int64)
+                            if quantize_prefix else self._block_tokens)
 
     # ------------------------------------------------------------------
     # geometry / accounting
@@ -384,6 +420,19 @@ class KVBlockPool:
 
     @property
     def blocks_in_use(self) -> int:
+        """In-use blocks across BOTH id spaces (they coincide for an
+        unquantized pool)."""
+        n = self.allocator.blocks_in_use
+        if self.suffix_allocator is not self.allocator:
+            n += self.suffix_allocator.blocks_in_use
+        return n
+
+    @property
+    def prefix_blocks_in_use(self) -> int:
+        """Blocks resident in the PREFIX space only — the rows budgets
+        price (`prefix_block_bytes` each).  For a quantized pool this
+        excludes compute-dtype suffix/staging rows; the satellite-4
+        regression pins that this agrees with ``from_budget`` sizing."""
         return self.allocator.blocks_in_use
 
     @property
@@ -391,8 +440,15 @@ class KVBlockPool:
         return self.allocator.free_blocks
 
     @property
+    def free_suffix_blocks(self) -> int:
+        return self.suffix_allocator.free_blocks
+
+    @property
     def tokens_stored(self) -> int:
-        return int(self._block_tokens.sum())
+        n = int(self._block_tokens.sum())
+        if self._sfx_tokens is not self._block_tokens:
+            n += int(self._sfx_tokens.sum())
+        return n
 
     @property
     def fragmentation(self) -> float:
@@ -407,24 +463,33 @@ class KVBlockPool:
     # ------------------------------------------------------------------
     # allocation / sharing
     # ------------------------------------------------------------------
-    def alloc(self, n_blocks: int) -> List[int]:
-        return self.allocator.alloc(n_blocks)
+    def alloc(self, n_blocks: int, *, suffix: bool = False) -> List[int]:
+        """Take blocks from the prefix space, or — ``suffix=True`` —
+        from the suffix space (compute-dtype arena rows; same space
+        when quantization is off)."""
+        a = self.suffix_allocator if suffix else self.allocator
+        return a.alloc(n_blocks)
 
     def incref(self, bids: Sequence[int]) -> None:
         self.allocator.incref(bids)
 
-    def decref(self, bids: Sequence[int]) -> List[int]:
-        freed = self.allocator.decref(bids)
+    def decref(self, bids: Sequence[int], *,
+               suffix: bool = False) -> List[int]:
+        a = self.suffix_allocator if suffix else self.allocator
+        toks = self._sfx_tokens if suffix else self._block_tokens
+        freed = a.decref(bids)
         if freed:
-            self._block_tokens[freed] = 0
+            toks[freed] = 0
         return freed
 
-    def note_tokens(self, bids: Sequence[int], n_tokens: int) -> None:
+    def note_tokens(self, bids: Sequence[int], n_tokens: int, *,
+                    suffix: bool = False) -> None:
         """Record how many tokens an allocation actually stores (fills
         blocks in order; feeds the fragmentation counter)."""
+        toks = self._sfx_tokens if suffix else self._block_tokens
         left = n_tokens
         for b in bids:
-            self._block_tokens[b] = min(left, self.block_size)
+            toks[b] = min(left, self.block_size)
             left = max(0, left - self.block_size)
 
     # ------------------------------------------------------------------
@@ -432,27 +497,50 @@ class KVBlockPool:
     # ------------------------------------------------------------------
     def write_prefix(self, dense_cache, prefix_len: int) -> PageTable:
         """Copy a batch-1 dense prefix cache into freshly allocated
-        blocks; returns the page table (refcount 1, caller-owned)."""
+        prefix blocks; returns the page table (refcount 1,
+        caller-owned).
+
+        Quantized pools stage through suffix-space arena rows: scatter
+        the dense cache at compute dtype, quantize into fresh int8
+        prefix rows, then return the staging rows to the suffix free
+        list — the resident prefix occupies ONLY the int8 layout the
+        budget priced."""
         n = self.blocks_needed(prefix_len)
-        bids = self.alloc(n)
-        self.arena = _scatter_prefix(self.arena, dense_cache,
-                                     jnp.asarray(bids, jnp.int32),
-                                     n=n, block_size=self.block_size)
+        if self.qarena is None:
+            bids = self.alloc(n)
+            self.arena = _scatter_prefix(self.arena, dense_cache,
+                                         jnp.asarray(bids, jnp.int32),
+                                         n=n, block_size=self.block_size)
+            self.note_tokens(bids, prefix_len)
+            return PageTable(blocks=bids, length=prefix_len)
+        stage = self.alloc(n, suffix=True)
+        try:
+            self.arena = _scatter_prefix(self.arena, dense_cache,
+                                         jnp.asarray(stage, jnp.int32),
+                                         n=n, block_size=self.block_size)
+            bids = self.alloc(n)
+        except BaseException:
+            self.decref(stage, suffix=True)
+            raise
+        self.quantize_blocks(stage, bids)
+        self.decref(stage, suffix=True)
         self.note_tokens(bids, prefix_len)
-        self.quantize_blocks(bids)
         return PageTable(blocks=bids, length=prefix_len)
 
-    def quantize_blocks(self, bids: Sequence[int]) -> None:
-        """Re-quantize arena rows ``bids`` into the int8 prefix arena
-        (no-op when quantization is off).  Called whenever blocks
-        become prefix-resident: ``write_prefix`` and after a
-        prefix-extension prefill writes its new tail blocks.  Suffix
-        blocks are never quantized — decode writes them every step and
-        reads them back at compute dtype."""
-        if self.qarena is None or not len(bids):
+    def quantize_blocks(self, src_bids: Sequence[int],
+                        dst_bids: Optional[Sequence[int]] = None) -> None:
+        """Quantize arena rows ``src_bids`` into int8 prefix rows
+        ``dst_bids`` (no-op when quantization is off).  Called whenever
+        tokens become prefix-resident: ``write_prefix`` staging and
+        after a prefix-extension prefill writes its tail into staging
+        rows.  Suffix blocks are never quantized — decode writes them
+        every step and reads them back at compute dtype."""
+        if self.qarena is None or not len(src_bids):
             return
+        dst = src_bids if dst_bids is None else dst_bids
         self.qarena = _quantize_blocks(self.qarena, self.arena,
-                                       jnp.asarray(bids, jnp.int32))
+                                       jnp.asarray(src_bids, jnp.int32),
+                                       jnp.asarray(dst, jnp.int32))
 
     def prefix_source(self):
         """The arena decode-time readers should pass as the PREFIX
@@ -462,26 +550,71 @@ class KVBlockPool:
         return self.qarena if self.qarena is not None else self.arena
 
     def alloc_suffix(self, n_blocks: int) -> List[int]:
-        """Fresh private blocks for a request's suffix+decode tail,
-        positions reset so no stale keys from a previous tenant leak."""
-        bids = self.alloc(n_blocks)
+        """Fresh private suffix-space blocks for a request's
+        suffix+decode tail, positions reset so no stale keys from a
+        previous tenant leak."""
+        bids = self.alloc(n_blocks, suffix=True)
         self.arena = _reset_pos(self.arena, jnp.asarray(bids, jnp.int32))
         return bids
 
     def cow(self, bid: int) -> int:
-        """Return a block safe to WRITE: ``bid`` itself when uniquely
-        referenced, else a fresh copy (dropping one reference on the
-        original).  Callers holding a shared page table swap the copied
-        id into their own table only — other readers are untouched."""
+        """Return a PREFIX block safe to WRITE: ``bid`` itself when
+        uniquely referenced, else a fresh copy (dropping one reference
+        on the original).  Callers holding a shared page table swap the
+        copied id into their own table only — other readers are
+        untouched.  For a quantized pool the copy runs on the int8
+        arena (where prefix rows live); the compute arena is suffix
+        space there and holds nothing for ``bid``."""
         if self.allocator.refcount(bid) <= 1:
             return bid
         [new] = self.alloc(1)
-        self.arena = _copy_block(self.arena, bid, new)
-        if self.qarena is not None:       # keep the int8 mirror coherent
+        if self.qarena is not None:
             self.qarena = _copy_block(self.qarena, bid, new)
+        else:
+            self.arena = _copy_block(self.arena, bid, new)
         self._block_tokens[new] = self._block_tokens[bid]
         self.allocator.decref([bid])
         return new
+
+    # ------------------------------------------------------------------
+    # host tier (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def demote_blocks(self, bids: Sequence[int]):
+        """Gather prefix rows ``bids`` (from the arena page tables
+        actually reference: int8 qarena when quantized, else the
+        compute arena) into host numpy buffers, bitwise.  Returns
+        ``(host_pytree, nbytes, per_block_token_counts)`` — everything
+        ``promote_blocks`` needs to rebuild the segment exactly."""
+        sub = _extract_blocks(self.prefix_source(),
+                              jnp.asarray(bids, jnp.int32))
+        host = jax.device_get(sub)
+        nbytes = int(sum(x.nbytes for x in jax.tree_util.tree_leaves(host)))
+        toks = [int(self._block_tokens[b]) for b in bids]
+        return host, nbytes, toks
+
+    def promote_blocks(self, host, block_tokens: Sequence[int]):
+        """Re-onboard a demoted segment: fresh prefix blocks, an ASYNC
+        ``device_put`` of the host copy, and a donated scatter into the
+        prefix arena.  Returns ``(bids, transfer)`` without blocking —
+        the scatter is ordered behind the transfer by data dependency,
+        so downstream prefills overlap it for free; block on
+        ``transfer`` only to measure residual promotion wait.  Raises
+        ``OutOfBlocks`` (nothing allocated, host copy untouched) when
+        the prefix space cannot reclaim enough rows."""
+        bids = self.alloc(len(block_tokens))
+        try:
+            transfer = jax.device_put(host)
+            rows = jnp.asarray(bids, jnp.int32)
+            if self.qarena is not None:
+                self.qarena = _scatter_blocks(self.qarena, transfer, rows)
+            else:
+                self.arena = _scatter_blocks(self.arena, transfer, rows)
+        except BaseException:
+            self.decref(bids)
+            raise
+        for b, t in zip(bids, block_tokens):
+            self._block_tokens[b] = t
+        return bids, transfer
 
     def extract(self, bids: Sequence[int]):
         """Compact sub-arena holding just blocks ``bids`` (result row i

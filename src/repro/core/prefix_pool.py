@@ -29,6 +29,14 @@ re-admits it — the pool only remembers that the key was seen before so
 the readmission is counted as a re-prefill, the cost signal the byte
 budget trades against.
 
+Host tier (``attach_host_tier``; core/tiered.py, DESIGN.md §12): with a
+``HostTier`` attached, eviction DEMOTES a paged segment's blocks to
+host numpy buffers before releasing them, and ``promote`` turns a later
+miss into fresh blocks + an async ``device_put`` instead of a
+re-prefill; recompute remains only for double misses.  A demote that
+loses a race with a same-key ``get(pin=True)`` aborts — the pin wins
+and nothing is copied.
+
 Paged backend (DESIGN.md §8): when ``attach_block_pool`` wires this
 pool to the engine's ``KVBlockPool``, entries are thin views over
 refcounted block allocations — a resident prefix costs exactly its
@@ -51,6 +59,8 @@ from typing import Dict, Hashable, List, Optional
 import jax
 
 from repro.core.cache import CacheStats, PrefixState
+from repro.core.paged import PageTable
+from repro.core.tiered import HostSegment, HostTier
 
 
 def state_bytes(state: PrefixState) -> int:
@@ -78,6 +88,9 @@ class PoolEntry:
     hits: int = 0
     last_used: int = 0          # logical-clock tick of the latest touch
     refs: int = 0               # in-flight pins; > 0 blocks eviction
+    prefetched: bool = False    # admitted by speculative promotion; the
+                                # first hit consumes the flag (prefetch
+                                # precision accounting, DESIGN.md §12)
 
 
 class PrefixPool:
@@ -97,6 +110,7 @@ class PrefixPool:
         self._entries: Dict[Hashable, PoolEntry] = {}
         self._seen: set = set()      # keys ever admitted (re-prefill count)
         self._clock = 0
+        self.tier: Optional[HostTier] = None
 
     # ------------------------------------------------------------------
     # paged backend wiring
@@ -135,6 +149,12 @@ class PrefixPool:
             e.state.release()
         self._entries.clear()
 
+    def attach_host_tier(self, tier: HostTier) -> None:
+        """Wire a host-memory tier under this pool (DESIGN.md §12):
+        evictions demote through it, ``promote`` re-onboards from it."""
+        self.tier = tier
+        tier.stats = self.stats
+
     def _reclaim_blocks(self, n_needed: int) -> None:
         """Evict unpinned entries (worst score first) until the block
         allocator has ``n_needed`` free blocks or nothing is evictable."""
@@ -145,9 +165,8 @@ class PrefixPool:
             worst = self._pick_victim()
             if worst is None:
                 return
-            del self._entries[worst.key]
-            worst.state.release()
-            self.stats.record_pool(evictions=1)
+            if not self._evict_entry(worst):
+                continue     # demote lost a pin race; victim re-picked
 
     # ------------------------------------------------------------------
     # introspection
@@ -203,8 +222,18 @@ class PrefixPool:
         e.last_used = self._clock
         if pin:
             e.refs += 1
+        if e.prefetched:     # a speculative promotion paid off
+            e.prefetched = False
+            self.stats.record_tier(prefetch_hits=1)
         self.stats.record_pool(hits=1)
         return e.state
+
+    def peek(self, key: Hashable) -> Optional[PrefixState]:
+        """Lookup WITHOUT hit/miss accounting, recency, or pinning —
+        for prefetch probes walking a chain (a probe is not traffic;
+        counting it would inflate the hit rate it exists to improve)."""
+        e = self._entries.get(key)
+        return e.state if e is not None else None
 
     def put(self, key: Hashable, state: PrefixState,
             prefill_s: float = 0.0, pin: bool = False) -> PrefixState:
@@ -317,8 +346,133 @@ class PrefixPool:
             worst = self._pick_victim(protect)
             if worst is None:
                 return     # everything in flight / protected: overshoot
-            del self._entries[worst.key]
-            # paged backend: eviction is a refcount drop — blocks free
-            # now, or when the last in-flight reader releases
-            worst.state.release()
-            self.stats.record_pool(evictions=1)
+            if not self._evict_entry(worst):
+                continue   # demote lost a pin race; victim re-picked
+
+    def _evict_entry(self, worst: PoolEntry) -> bool:
+        """One eviction: demote to the host tier (when attached), then
+        release the device blocks.  Returns False — entry untouched,
+        nothing copied — when the demotion gather lost a race with a
+        same-key pin; the caller re-picks (the now-pinned entry no
+        longer qualifies as a victim)."""
+        if not self._demote(worst):
+            return False
+        del self._entries[worst.key]
+        # paged backend: eviction is a refcount drop — blocks free
+        # now, or when the last in-flight reader releases
+        worst.state.release()
+        self.stats.record_pool(evictions=1)
+        return True
+
+    def _key_of_state(self, st: PrefixState) -> Optional[Hashable]:
+        for k, e in self._entries.items():
+            if e.state is st:
+                return k
+        return None
+
+    def _demote(self, e: PoolEntry) -> bool:
+        """Capture an eviction victim's bits into the host tier.  True:
+        proceed with the eviction (captured, or nothing to capture);
+        False: the gather lost a race with a same-key pin — nothing was
+        stored and the entry must stay resident (the pin wins)."""
+        tier = self.tier
+        bp = getattr(self, "_block_pool", None)
+        st = e.state
+        if tier is None or bp is None or not st.is_paged \
+                or st.block_pool is not bp:
+            return True
+        parent_key = None
+        if st.parent is not None:
+            # leaf-before-ancestor eviction guarantees the parent is
+            # still resident while this segment demotes — its pool key
+            # is what chain-aware promotion re-links through
+            parent_key = self._key_of_state(st.parent)
+            if parent_key is None:
+                return True   # unmapped parent: promotion couldn't link
+        host, nbytes, toks = bp.demote_blocks(st.page.blocks)
+        if e.refs > 0:        # a pin landed during the gather: it wins
+            return False
+        seg = HostSegment(
+            key=e.key, host=host, block_tokens=toks, nbytes=nbytes,
+            prefix_len=st.prefix_len, page_length=st.page.length,
+            seg_len=st.seg_len, capacity=st.capacity, enc_len=st.enc_len,
+            n_soft=st.n_soft, parent_key=parent_key,
+            quantized=bp.quantize_prefix, prefill_s=e.prefill_s,
+            hits=e.hits)
+        if tier.admit(seg):
+            self.stats.record_tier(demotions=1, demoted_bytes=nbytes)
+        return True
+
+    # ------------------------------------------------------------------
+    # promotion (host tier → device; DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def promote(self, key: Hashable, *, parent: Optional[PrefixState] = None,
+                pin: bool = False,
+                prefetched: bool = False) -> Optional[PrefixState]:
+        """Re-onboard a demoted segment: fresh prefix blocks, an async
+        ``device_put`` + scatter (``KVBlockPool.promote_blocks`` — the
+        batch's suffix prefill overlaps the transfer), and re-admission
+        under ``key``.  ``parent`` must be the RESIDENT state of the
+        segment's recorded chain parent (chain-aware: callers walk
+        root→leaf so ancestors are device-resident first); it is pinned
+        across the allocation so the alloc's own reclaim pass cannot
+        evict it mid-promotion.
+
+        Returns None — and leaves the host copy intact for a recompute
+        fallback or retry — on a host miss, a stale chain linkage, or
+        any failure during allocation/transfer (``OutOfBlocks``, an
+        injected ``device_put`` fault): the unwind drops every
+        reference the attempt took, so no phantom refs survive."""
+        tier = self.tier
+        bp = getattr(self, "_block_pool", None)
+        if tier is None or bp is None:
+            return None
+        hseg = tier.peek(key)
+        if hseg is None:
+            return None
+        if hseg.quantized != bp.quantize_prefix:
+            return None      # demoted from a different arena layout
+        pe = None
+        if hseg.parent_key is not None:
+            pe = self._entries.get(hseg.parent_key)
+            if parent is None or pe is None or pe.state is not parent \
+                    or parent.prefix_len + hseg.page_length \
+                    != hseg.prefix_len:
+                return None  # stale linkage: fall back to recompute
+        elif parent is not None:
+            return None
+        if pe is not None:
+            pe.refs += 1     # hold the parent across our alloc's reclaim
+        bids = anc = None
+        try:
+            bids, transfer = bp.promote_blocks(hseg.host,
+                                               hseg.block_tokens)
+            if parent is not None:
+                anc = list(parent.chain_blocks())
+                bp.incref(anc)
+        except Exception:
+            if bids is not None:
+                bp.decref(bids)
+            self.stats.record_tier(promotion_failures=1)
+            return None
+        finally:
+            if pe is not None:
+                pe.refs = max(0, pe.refs - 1)
+        state = PrefixState(
+            cache=None, prefix_len=hseg.prefix_len,
+            capacity=hseg.capacity, enc_len=hseg.enc_len,
+            n_soft=hseg.n_soft,
+            page=PageTable(blocks=bids, length=hseg.page_length),
+            block_pool=bp, parent=parent, seg_len=hseg.seg_len,
+            ancestor_blocks=anc or [])
+        tier.pop(key)        # move semantics: commit point
+        tier.track_transfer(transfer)
+        self.stats.record_tier(promotions=1, promoted_bytes=hseg.nbytes,
+                               prefetch_promotions=int(prefetched))
+        self.stats.record_host(tier)
+        # a promotion is NOT a re-prefill — keep the recompute counter
+        # honest by exempting this admission from the _seen check
+        self._seen.discard(key)
+        self.put(key, state, prefill_s=hseg.prefill_s, pin=pin)
+        self._entries[key].prefetched = bool(prefetched)
+        return state

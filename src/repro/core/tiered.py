@@ -1,0 +1,204 @@
+"""Host-memory tier for the prefix cache: HBM → host → recompute
+(DESIGN.md §12).
+
+A ``PrefixPool`` eviction used to destroy a segment's blocks outright,
+so the next hit on that cluster paid a full re-prefill — the exact miss
+penalty SubGCache exists to avoid, and the dominant cost once the arena
+budget is tight enough that flat AND tree layouts thrash (ROADMAP open
+item 2).  RAGCache's knowledge-cache hierarchy is the precedent: keep
+the bits, change the medium.
+
+* **Demotion** — before an eviction releases a segment's device blocks,
+  the pool gathers the rows page tables actually reference (compute
+  K/V + positions, or int8 K/V + scales + positions for a quantized
+  pool) into host ``numpy`` buffers, bitwise
+  (``KVBlockPool.demote_blocks``).  The ``HostSegment`` records
+  everything promotion needs to rebuild the ``PrefixState`` exactly:
+  lengths, capacity, soft-token count, per-block token counts, and the
+  POOL KEY of its chain parent (chain-aware promotion re-links through
+  keys, not block ids — a recomputed ancestor carries different blocks
+  but identical bits).
+* **Promotion** — a later pool miss that finds a host segment allocates
+  fresh prefix blocks, ``jax.device_put``s the host copy ASYNC, and
+  scatters it into the prefix arena (``KVBlockPool.promote_blocks``).
+  Nothing blocks: the scatter is ordered behind the transfer by data
+  dependency, so the batch's suffix prefill overlaps it for free.  The
+  transfer handle is parked here and drained at an explicit sync point
+  — the drained block time is the RESIDUAL promotion wait after
+  overlap (``CacheStats.tier_promotion_wait_s``).  The host copy is
+  dropped only when the promotion commits (move semantics): a
+  ``device_put`` failure or ``OutOfBlocks`` mid-promotion unwinds to a
+  state where the host copy survives and recompute can take over.
+* **Second-level eviction** — the tier has its OWN byte budget and the
+  same cost-aware score the pool uses (age × segment tokens / hits);
+  a host eviction is a true discard (device → host → gone).  Discards
+  peel leaf-first: a segment that is the recorded parent of another
+  hosted segment is never victimized while that descendant is hosted,
+  mirroring the pool's ancestor-anchoring rule one tier down.
+
+Pin semantics per tier: device entries pin via ``PoolEntry.refs`` (a
+pinned entry is never evicted, hence never demoted — a demote that
+loses a race with a same-key ``get(pin=True)`` aborts without copying);
+host segments have no readers, so nothing pins them — only the
+parent-of-hosted rule protects a segment from discard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HostSegment:
+    """One demoted prefix/ancestor segment, keyed like the pool entry
+    it was demoted from."""
+    key: Any
+    host: Any                    # pytree of numpy block rows (row i =
+                                 # block i of the segment's page, bitwise)
+    block_tokens: List[int]      # per-block stored-token counts
+    nbytes: int                  # host buffer bytes (tier budget charge)
+    prefix_len: int              # cumulative path tokens through segment
+    page_length: int             # tokens in the segment's OWN page
+    seg_len: Optional[int]       # segment-owned tokens (None for flat)
+    capacity: int
+    enc_len: int
+    n_soft: int
+    parent_key: Optional[Any]    # pool key of the chain parent (None
+                                 # for flat / root segments)
+    quantized: bool              # demoted from the int8 prefix arena
+    prefill_s: float             # original prefill cost (re-admission
+                                 # metadata for the pool's cost model)
+    hits: int = 0
+    last_used: float = dataclasses.field(default_factory=time.monotonic)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.block_tokens)
+
+
+class HostTier:
+    """Budgeted host-RAM store of demoted prefix segments (see module
+    docstring).  ``stats`` is attached by the owning ``PrefixPool``."""
+
+    def __init__(self, budget_bytes: int) -> None:
+        self.budget_bytes = int(budget_bytes)
+        self._segments: Dict[Any, HostSegment] = {}
+        self.bytes_in_use = 0
+        self.stats = None        # CacheStats, set by PrefixPool.attach
+        # in-flight promotion transfers: (device handles, submit time);
+        # drained (blocked on) at the scheduler's sync point to measure
+        # the residual wait the serving path actually experienced
+        self._inflight: List[Tuple[Any, float]] = []
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._segments)
+
+    def __contains__(self, key) -> bool:
+        return key in self._segments
+
+    def get(self, key) -> Optional[HostSegment]:
+        seg = self._segments.get(key)
+        if seg is not None:
+            seg.hits += 1
+            seg.last_used = time.monotonic()
+        return seg
+
+    def peek(self, key) -> Optional[HostSegment]:
+        """Lookup without touching recency/hits (prefetch probes)."""
+        return self._segments.get(key)
+
+    def pop(self, key) -> Optional[HostSegment]:
+        """Remove a segment (promotion commit — move semantics)."""
+        seg = self._segments.pop(key, None)
+        if seg is not None:
+            self.bytes_in_use -= seg.nbytes
+        return seg
+
+    def keys(self):
+        return self._segments.keys()
+
+    # ------------------------------------------------------------------
+    def admit(self, seg: HostSegment) -> bool:
+        """Store a demoted segment, discarding colder hosted segments
+        to fit the byte budget (leaf-first; see ``_pick_discard``).  A
+        segment larger than the whole budget is refused (counted as a
+        discard — the content is lost either way)."""
+        if seg.nbytes > self.budget_bytes:
+            self._count(discards=1)
+            return False
+        old = self.pop(seg.key)
+        if old is not None:      # re-demotion of a re-admitted key
+            self._count(discards=1)
+        while self.bytes_in_use + seg.nbytes > self.budget_bytes:
+            victim = self._pick_discard()
+            if victim is None:
+                self._count(discards=1)
+                return False
+            self.pop(victim.key)
+            self._count(discards=1)
+        self._segments[seg.key] = seg
+        self.bytes_in_use += seg.nbytes
+        if self.stats is not None:
+            self.stats.record_host(self)
+        return True
+
+    def _score(self, seg: HostSegment, now: float) -> float:
+        """Cost-aware discard score (higher = colder): age × segment
+        tokens / hits — the pool's eviction model one tier down."""
+        age = max(now - seg.last_used, 1e-9)
+        return age * max(1, seg.page_length) / max(1, seg.hits)
+
+    def _pick_discard(self) -> Optional[HostSegment]:
+        """Coldest hosted segment that is NOT the recorded parent of
+        another hosted segment — discards peel chains leaf-first, so a
+        hosted descendant's ancestry is never truncated under it.
+        Every parent chain ends in a non-parent (chains are acyclic),
+        so a victim exists whenever the tier is non-empty."""
+        parents = {s.parent_key for s in self._segments.values()
+                   if s.parent_key is not None}
+        now = time.monotonic()
+        worst, worst_score = None, -1.0
+        for seg in self._segments.values():
+            if seg.key in parents:
+                continue
+            sc = self._score(seg, now)
+            if sc > worst_score:
+                worst, worst_score = seg, sc
+        return worst
+
+    def _count(self, **kw) -> None:
+        if self.stats is not None:
+            self.stats.record_tier(**kw)
+            self.stats.record_host(self)
+
+    # ------------------------------------------------------------------
+    # promotion transfer bookkeeping
+    # ------------------------------------------------------------------
+    def track_transfer(self, handle) -> None:
+        """Park an in-flight ``device_put`` result for wait accounting."""
+        self._inflight.append((handle, time.monotonic()))
+
+    def drain_pending(self) -> float:
+        """Block on every parked promotion transfer; returns (and
+        records) the residual wall seconds the block actually took —
+        ~0 when the transfer already overlapped other dispatched work
+        (the async-promotion claim, measured not assumed)."""
+        if not self._inflight:
+            return 0.0
+        import jax
+        t0 = time.perf_counter()
+        for handle, _ in self._inflight:
+            jax.block_until_ready(handle)
+        dt = time.perf_counter() - t0
+        self._inflight.clear()
+        self._count(promotion_wait_s=dt)
+        return dt
+
+    def clear(self) -> None:
+        self._segments.clear()
+        self.bytes_in_use = 0
+        self._inflight.clear()
+        if self.stats is not None:
+            self.stats.record_host(self)

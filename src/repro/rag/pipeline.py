@@ -350,6 +350,7 @@ class GraphRAGPipeline:
                      max_suffix_len: Optional[int] = None,
                      tree_levels: int = 1,
                      tree_clusters: Optional[int] = None,
+                     host_tier_bytes: Optional[int] = None,
                      scheduler=None) -> tuple:
         """Online serving of a streaming query trace (DESIGN.md §7/§9).
 
@@ -386,6 +387,16 @@ class GraphRAGPipeline:
         prefixes become root→leaf chains whose shared ancestor segments
         are pooled ONCE and pinned per in-flight row.  ``1`` (default)
         is the flat path, token-identical to the pre-refactor behavior.
+
+        ``host_tier_bytes`` (paged backends; DESIGN.md §12) attaches a
+        host-memory tier of that byte budget under the prefix pool:
+        evictions demote segment blocks to pinned host buffers instead
+        of discarding them, later hits promote them back through an
+        async ``device_put``, and queued-but-not-admitted arrivals are
+        speculatively prefetched (``OnlineScheduler.prefetch``) so the
+        transfer overlaps their queue wait.  Token streams are
+        unchanged — a promoted segment serves bit-for-bit the blocks it
+        was demoted from.
         """
         from repro.core.prefix_pool import PrefixPool
         from repro.serving.scheduler import (ArrivalQueue,
@@ -419,6 +430,12 @@ class GraphRAGPipeline:
                 segment_tokens_fn=self._segment_payload)
         else:
             scheduler.pool.stats = stats    # fresh accounting window
+            if scheduler.pool.tier is not None:
+                scheduler.pool.tier.stats = stats
+        if host_tier_bytes is not None and scheduler.pool.tier is None \
+                and getattr(self.engine, "block_pool", None) is not None:
+            from repro.core.tiered import HostTier
+            scheduler.pool.attach_host_tier(HostTier(host_tier_bytes))
 
         if mode == "continuous" and self.engine.use_paged:
             return self._serve_stream_continuous(
@@ -429,7 +446,7 @@ class GraphRAGPipeline:
         for i, t_arr in enumerate(arrivals):
             queue.push(t_arr, i)
         records: List[QueryRecord] = [None] * len(items)  # type: ignore
-        clock = 0.0
+        clock, pf_memo = 0.0, {}
         while len(queue):
             now = max(clock, queue.next_arrival())
             batch = queue.drain(now, max_batch)
@@ -469,10 +486,41 @@ class GraphRAGPipeline:
                     prompt_tokens=sq.prefix_len + len(suffixes[k]),
                     cached_tokens=sq.prefix_len if sq.pool_hit else 0)
             clock = now + (time.perf_counter() - t_batch0)
+            # speculate for the overflow this batch left queued: start
+            # their clusters' host→device promotions now, so the async
+            # transfers overlap the queue wait, not the next batch
+            clock += self._prefetch_queued(scheduler, queue, items,
+                                           clock, max_batch, pf_memo)
         summary = RunSummary.from_records(
             f"online(b={max_batch})", records,
             prefill_savings=stats.prefill_savings)
         return records, summary, scheduler
+
+    def _prefetch_queued(self, scheduler, queue, items, now: float,
+                         limit: int, memo: dict) -> float:
+        """Speculative host→device prefetch for arrivals that are
+        queued but not yet admitted (DESIGN.md §12): probe each one
+        against the live centroids and start promoting its cluster's
+        host-resident chain segments, so the async transfer overlaps
+        the remaining queue wait.  Per-item embeddings are memoized —
+        one probe per query however many iterations it stays queued.
+        Returns the measured host-side seconds (callers keep it on the
+        clock: speculation is work, not free time)."""
+        tier = scheduler.pool.tier
+        if tier is None or not len(tier) or not len(queue) \
+                or not scheduler.assigner.clusters:
+            return 0.0
+        t0 = time.perf_counter()
+        embs = []
+        for a in queue.peek(now, limit):
+            i = a.payload
+            if i not in memo:
+                sgs, _ = self.retrieve_all([items[i]])
+                memo[i] = self.embed_for_clustering(sgs)[0]
+            embs.append(memo[i])
+        if embs:
+            scheduler.prefetch(embs)
+        return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
     def warmup_stream(self, items: Sequence[QAItem], *,
@@ -531,7 +579,7 @@ class GraphRAGPipeline:
         for i, t_arr in enumerate(arrivals):
             queue.push(t_arr, i)
         records: List[QueryRecord] = [None] * len(items)  # type: ignore
-        clock = 0.0
+        clock, pf_memo = 0.0, {}
         while len(queue) or cont.in_flight:
             if cont.in_flight == 0 and len(queue):
                 clock = max(clock, queue.next_arrival())
@@ -569,6 +617,10 @@ class GraphRAGPipeline:
             if cont.in_flight:
                 cont.step()
             clock += time.perf_counter() - t_iter0
+            # overflow still waiting for a slot: start its host→device
+            # promotions so the transfers overlap the queue wait
+            clock += self._prefetch_queued(scheduler, queue, items,
+                                           clock, max_batch, pf_memo)
             for res in cont.pop_retired():
                 aq = res.payload
                 meta = aq.payload

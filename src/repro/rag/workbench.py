@@ -33,7 +33,7 @@ from repro.rag.retriever import (GRAGRetriever, GRetrieverRetriever,
                                  RetrieverIndex)
 from repro.rag.text_encoder import TextEncoder
 from repro.serving.engine import ServingEngine
-from repro.serving.metrics import tree_report
+from repro.serving.metrics import tier_report, tree_report
 from repro.training import checkpoint as ckpt
 from repro.training import optimizer as opt
 from repro.training.train_loop import train as run_train
@@ -114,6 +114,8 @@ def serving_report(pipe: GraphRAGPipeline) -> dict:
         "block_fragmentation": round(st.block_fragmentation, 4),
         # prefix-tree chains (DESIGN.md §10; empty levels = flat serving)
         "tree": tree_report(st),
+        # host tier (DESIGN.md §12; all-zero when no tier is attached)
+        "tier": tier_report(st),
     }
 
 

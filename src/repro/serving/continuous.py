@@ -263,10 +263,11 @@ class ContinuousEngine:
             # pooled prefixes (never pinned in-flight ones).  Plain
             # alloc, no pos reset: these blocks are budget, the KV
             # lives in the sub-arena (any later tenant resets/overwrites)
-            flat = pool.alloc(k * b.nbs)
+            flat = pool.alloc(k * b.nbs, suffix=True)
             for j in range(k):
                 pool.note_tokens(flat[j * b.nbs:(j + 1) * b.nbs],
-                                 len(requests[j].suffix_tokens))
+                                 len(requests[j].suffix_tokens),
+                                 suffix=True)
             eng.cache_mgr.stats.record_blocks(pool)
 
             nbp = b.nbp_for(states)
@@ -291,7 +292,7 @@ class ContinuousEngine:
                 if blocks:
                     pool.decref(blocks)
             if flat is not None:
-                pool.decref(flat)
+                pool.decref(flat, suffix=True)
             raise
 
         for j, (slot, req, st) in enumerate(zip(slots, requests, states)):
@@ -380,7 +381,8 @@ class ContinuousEngine:
                 # keep the fragmentation gauge honest mid-flight: the
                 # reservation now also stores this row's decode tokens
                 pool = eng.block_pool
-                pool.note_tokens(r.blocks, r.suffix_len + r.steps)
+                pool.note_tokens(r.blocks, r.suffix_len + r.steps,
+                                 suffix=True)
         return wall
 
     def flush(self, max_chunks: int = 10_000) -> None:
@@ -463,7 +465,7 @@ class ContinuousEngine:
         # freeing IS the token-count reconciliation: decref zeroes the
         # freed blocks' stored-token counters, so the gauge never keeps
         # charging a retired row's unconsumed decode budget
-        pool.decref(r.blocks)
+        pool.decref(r.blocks, suffix=True)
         if r.prefix_blocks:
             pool.decref(r.prefix_blocks)     # the admission-time chain pins
         stats = eng.cache_mgr.stats

@@ -424,10 +424,11 @@ class ServingEngine:
             # BEFORE the allocation below, whose reclaim pass may evict
             # the parent from the pool mid-extension
             pool.incref(chain)
+            stage: Optional[List[int]] = None
             bids: Optional[List[int]] = None
             try:
-                bids = pool.alloc_suffix(blocks_for(n_ext, self.block_size))
-                srow = np.asarray(bids, np.int32).reshape(1, -1)
+                stage = pool.alloc_suffix(blocks_for(n_ext, self.block_size))
+                srow = np.asarray(stage, np.int32).reshape(1, -1)
                 # quantized pools read ancestor blocks from the int8
                 # arena (pool.qarena; None otherwise — the prefix is
                 # then read from the donated arena itself).  Never pass
@@ -436,12 +437,22 @@ class ServingEngine:
                     self.params, embeds, positions, valid, a, pool.qarena,
                     jnp.int32(parent.prefix_len), jnp.asarray(prow),
                     jnp.asarray(srow)))
+                if pool.qarena is not None:
+                    # the tail becomes prefix-resident in the int8 space;
+                    # the compute-dtype staging rows return to the suffix
+                    # free list (no dead rows — ROADMAP known debt)
+                    bids = pool.alloc(len(stage))
+                    pool.quantize_blocks(stage, bids)
+                    pool.decref(stage, suffix=True)
+                    stage = None
+                else:
+                    bids, stage = stage, None
                 pool.note_tokens(bids, n_ext)
-                # the fresh tail blocks are prefix-resident from now on
-                pool.quantize_blocks(bids)
                 jax.block_until_ready(pool.arena)
             except BaseException:
                 pool.decref(chain)
+                if stage is not None:
+                    pool.decref(stage, suffix=True)
                 if bids is not None:
                     pool.decref(bids)
                 raise
@@ -599,7 +610,7 @@ class ServingEngine:
             # read: observing freshly allocated (zero-token) suffix
             # blocks would overstate fragmentation for the whole batch
             for i in range(b):
-                pool.note_tokens(suffix_rows[i], int(lens[i]))
+                pool.note_tokens(suffix_rows[i], int(lens[i]), suffix=True)
             # observe the HBM high-water mark: resident prefixes + every
             # in-flight suffix block (gauge re-read after frees below)
             self.cache_mgr.stats.record_blocks(pool)
@@ -640,11 +651,12 @@ class ServingEngine:
             for i in range(b):
                 row = out[i].tolist()
                 gen = (row.index(EOS) + 1 if EOS in row else len(row))
-                pool.note_tokens(suffix_rows[i], int(lens[i]) + gen)
+                pool.note_tokens(suffix_rows[i], int(lens[i]) + gen,
+                                 suffix=True)
             self.cache_mgr.stats.record_blocks(pool)
         finally:
             if flat is not None:
-                pool.decref(flat)                    # suffix blocks free
+                pool.decref(flat, suffix=True)       # suffix blocks free
             for blocks in pinned.values():
                 pool.decref(blocks)
         self.cache_mgr.stats.record_blocks(pool)

@@ -126,6 +126,7 @@ def trace_summary(records: List[QueryRecord], stats=None) -> dict:
         out["prefill_tokens_total"] = (stats.prefix_tokens_computed
                                        + stats.suffix_tokens_computed)
         out["tree"] = tree_report(stats)
+        out["tier"] = tier_report(stats)
     return out
 
 
@@ -147,6 +148,34 @@ def tree_report(stats) -> dict:
         "ancestor_hit_rate": round(stats.ancestor_hit_rate, 4),
         "segments_resident": stats.tree_segments_resident,
         "prefix_tokens_resident": stats.tree_tokens_resident,
+    }
+
+
+def tier_report(stats) -> dict:
+    """Host-tier traffic accounting from a ``CacheStats`` window
+    (DESIGN.md §12; all-zero when no tier is attached).  The headline
+    numbers: ``promotion_rate`` — the fraction of would-be re-prefills
+    the host copy absorbed (promotions / (promotions + re-prefills)) —
+    and ``prefetch_hit_rate`` — how many speculative promotions a real
+    query then consumed (speculation precision).  ``promotion_wait_ms``
+    is the RESIDUAL wall time spent blocking on promotion transfers at
+    the scheduler's sync points, i.e. what the async ``device_put``
+    failed to overlap — near zero is the overlap claim, measured."""
+    return {
+        "demotions": stats.tier_demotions,
+        "promotions": stats.tier_promotions,
+        "prefetch_promotions": stats.tier_prefetch_promotions,
+        "prefetch_hits": stats.tier_prefetch_hits,
+        "prefetch_hit_rate": round(stats.prefetch_hit_rate, 4),
+        "promotion_failures": stats.tier_promotion_failures,
+        "promotion_rate": round(stats.tier_promotion_rate, 4),
+        "demoted_bytes": stats.tier_demoted_bytes,
+        "promoted_bytes": stats.tier_promoted_bytes,
+        "promotion_wait_ms": round(1e3 * stats.tier_promotion_wait_s, 3),
+        "host_discards": stats.host_discards,
+        "host_segments": stats.host_segments,
+        "host_bytes_in_use": stats.host_bytes_in_use,
+        "host_bytes_peak": stats.host_bytes_peak,
     }
 
 

@@ -240,6 +240,14 @@ class ArrivalQueue:
             out.append(heapq.heappop(self._heap))
         return out
 
+    def peek(self, now: float, limit: Optional[int] = None) -> List[Arrival]:
+        """Non-popping view of up to ``limit`` requests with
+        ``time_s <= now``, oldest first — the queued-but-not-admitted
+        overflow the serving loop speculatively prefetches for
+        (DESIGN.md §12) while the current batch occupies the slots."""
+        out = sorted((a for a in self._heap if a.time_s <= now))
+        return out if limit is None else out[:limit]
+
 
 # ======================================================================
 # the scheduler: assigner + pool + engine
@@ -312,15 +320,23 @@ class OnlineScheduler:
     def ensure_state(self, cluster_id: int, pin: bool = False):
         """Pool lookup with miss handling: (state, hit, prefill_s).
 
-        Miss (cold cluster or evicted entry) re-prefills the
-        representative prefix and re-admits it; the pool counts the
-        readmission as a re-prefill when the key was evicted before.
-        ``pin=True`` acquires the state with an in-flight reference
-        held atomically (materialize-and-pin), so a later admission in
-        the same batch can never evict a state this batch already
-        claimed — the caller must ``pool.release`` it after serving.
+        Miss (cold cluster or evicted entry) first tries to PROMOTE the
+        segment back from the host tier (DESIGN.md §12) — bitwise the
+        blocks it was demoted from, so a promoted state counts as a hit
+        (the tokens are served from the cache hierarchy, not
+        recomputed).  Only a double miss (device AND host) re-prefills
+        the representative prefix and re-admits it; the pool counts
+        that readmission as a re-prefill when the key was evicted
+        before.  ``pin=True`` acquires the state with an in-flight
+        reference held atomically (materialize-and-pin), so a later
+        admission in the same batch can never evict a state this batch
+        already claimed — the caller must ``pool.release`` it after
+        serving.
         """
         state = self.pool.get(cluster_id, pin=pin)
+        if state is not None:
+            return state, True, 0.0
+        state = self.pool.promote(cluster_id, pin=pin)
         if state is not None:
             return state, True, 0.0
         payload = self.prefix_tokens_fn(
@@ -363,6 +379,11 @@ class OnlineScheduler:
                                                     c.chain.contents)):
                 key = ("seg", node)
                 st = self.pool.get(key, pin=pin)
+                if st is None:
+                    # host-tier promotion before recompute: the walk is
+                    # root→leaf, so the parent is device-resident by the
+                    # time its child promotes (chain-aware re-linking)
+                    st = self.pool.promote(key, parent=parent, pin=pin)
                 hit = st is not None
                 if not hit:
                     base = c.chain.contents[i - 1] if i else None
@@ -390,6 +411,59 @@ class OnlineScheduler:
             raise
         self.pool.observe_tree_residency()
         return parent, hit, prefill_s, keys
+
+    # ------------------------------------------------------------------
+    # speculative host→device prefetch (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def prefetch(self, embeddings: Sequence[np.ndarray]) -> int:
+        """Kick off host-tier promotions for queries that are TAGGED but
+        not yet at the queue front: each embedding is probed against the
+        live centroids (``assigner.nearest`` — non-mutating, no spawn,
+        no member count), and any host-resident segment on the matched
+        cluster's chain is promoted NOW, so the async ``device_put``
+        overlaps the queue wait instead of the serving batch.  Promoted
+        entries are admitted unpinned with ``prefetched=True``; the
+        first real ``get`` hit consumes the flag
+        (``CacheStats.prefetch_hit_rate`` — speculation precision).
+
+        Prefetch never computes: the walk stops at the first segment
+        that is neither device- nor host-resident (promoting below a
+        cold ancestor is impossible anyway — chain promotion re-links
+        through the resident parent).  Probes use ``pool.peek``, so a
+        prefetch is invisible to hit/miss accounting.  Returns the
+        number of promotions started.
+        """
+        if not self.assigner.clusters:
+            return 0
+        tier = self.pool.tier
+        if tier is None or len(tier) == 0:
+            return 0
+        started = 0
+        for emb in embeddings:
+            cid, _ = self.assigner.nearest(emb)
+            c = self.assigner.clusters[cid]
+            path = ([("seg", node) for node in c.chain.keys]
+                    if c.chain is not None else [cid])
+            parent = None
+            for key in path:
+                st = self.pool.peek(key)
+                if st is None and tier.peek(key) is not None:
+                    st = self.pool.promote(key, parent=parent,
+                                           prefetched=True)
+                    if st is not None:
+                        started += 1
+                if st is None:
+                    break        # cold segment: prefetch never computes
+                parent = st
+        return started
+
+    def _drain_tier(self) -> float:
+        """Sync point for in-flight promotion transfers: block on every
+        parked ``device_put`` and record the residual wait — ~0 when
+        the batch's own dispatched work already covered the transfer
+        (the overlap claim, measured per batch)."""
+        tier = self.pool.tier
+        return tier.drain_pending() if tier is not None else 0.0
 
     def serve_batch(self, embeddings: Sequence[np.ndarray],
                     subgraphs: Sequence[Subgraph],
@@ -429,6 +503,9 @@ class OnlineScheduler:
                          prefix=states[a.cluster_id])
                  for a, s in zip(assigns, suffix_token_lists)])
         finally:
+            # promotion transfers dispatched for/during this batch have
+            # been overlapped by the serve itself; drain what is left
+            self._drain_tier()
             for key in pinned:
                 self.pool.release(key)
         members_of = {cid: sum(1 for a in assigns if a.cluster_id == cid)
@@ -511,6 +588,7 @@ class OnlineScheduler:
             for key in pins:
                 self.pool.release(key)
             raise
+        self._drain_tier()
         return admitted, prefill_s
 
     def _release_pins(self, aq: AdmittedQuery) -> None:

@@ -202,11 +202,19 @@ def test_int8_write_dequant_round_trip_error_bounds():
                                  x.shape, jnp.float32).astype(x.dtype)
     dense = jax.tree_util.tree_map_with_path(fill, dense)
     page = pool.write_prefix(dense, P)
+    # the compute-dtype staging rows went BACK to the suffix free list
+    # once the int8 copy committed (the dead-row reclaim fix), so the
+    # full-precision source comes from an unquantized reference pool
+    # given the same dense cache — not from the quantized pool's arena
+    ref = KVBlockPool(cfg, num_blocks=16, block_size=8)
+    ref_page = ref.write_prefix(dense, P)
+    assert pool.free_suffix_blocks == ref.num_blocks - 1  # staging freed
 
-    arena_leaves = jax.tree_util.tree_leaves_with_path(pool.arena)
+    arena_leaves = jax.tree_util.tree_leaves_with_path(ref.arena)
     q_by_path = {jax.tree_util.keystr(p): x for p, x in
                  jax.tree_util.tree_leaves_with_path(pool.qarena)}
     bids = jnp.asarray(page.blocks)
+    rbids = jnp.asarray(ref_page.blocks)
     checked = 0
     for path, leaf in arena_leaves:
         key = path[-1].key
@@ -214,11 +222,11 @@ def test_int8_write_dequant_round_trip_error_bounds():
         if key == "pos":
             np.testing.assert_array_equal(
                 np.asarray(jnp.moveaxis(q_by_path[ps], -2, 0)[bids]),
-                np.asarray(jnp.moveaxis(leaf, -2, 0)[bids]))
+                np.asarray(jnp.moveaxis(leaf, -2, 0)[rbids]))
             continue
         qv = q_by_path[ps]
         scale = q_by_path[ps.replace(f"'{key}'", f"'{key}_scale'")]
-        src = jnp.moveaxis(leaf, -4, 0)[bids].astype(jnp.float32)
+        src = jnp.moveaxis(leaf, -4, 0)[rbids].astype(jnp.float32)
         deq = (jnp.moveaxis(qv, -4, 0)[bids].astype(jnp.float32)
                * jnp.moveaxis(scale, -2, 0)[bids][:, ..., None, :, None])
         step = jnp.moveaxis(scale, -2, 0)[bids][:, ..., None, :, None]
@@ -370,7 +378,7 @@ def test_quantized_serving_quality_gate(tok):
                 jnp.int32(st.prefix_len), jnp.asarray(prow),
                 jnp.asarray(srow)))
             lg.append(np.asarray(lgt[0], np.float32))
-            eng.block_pool.decref(bids)
+            eng.block_pool.decref(bids, suffix=True)
         logits[name] = lg
         leaf.release()
         root.release()

@@ -1,0 +1,367 @@
+"""Property-based invariant suite for the block/pool/tier layer
+(DESIGN.md §8/§10/§12).
+
+A seeded op-sequence machine drives random interleavings of
+put / put-child / get(pin) / release / budget shocks / demote (via
+eviction) / promote / cow / suffix-allocation churn against a REAL
+``KVBlockPool`` + ``PrefixPool`` + ``HostTier`` stack, re-deriving the
+ground truth from scratch after every operation:
+
+* every block is refcounted exactly once per owner (resident page,
+  ancestor snapshot, harness reader, suffix hold);
+* free list ∪ owned blocks PARTITIONS each arena id space;
+* a pinned entry is never evicted (hence never demoted);
+* byte gauges (pool, tier, CacheStats) reconcile with totals recomputed
+  from first principles;
+* eviction order: a resident segment's parent is resident, and the host
+  tier never picks a discard victim that anchors a hosted descendant.
+
+The driver mirrors production pin discipline where the stack requires
+it: a chain parent is pinned while a child is built against it, and an
+entry is pinned across its own copy-on-write (the scheduler holds both
+pins inside a batch) — otherwise the allocator's reclaim hook could
+evict the state mid-operation, which no caller permits.
+
+The driver is stdlib-only (``random.Random``) so it runs everywhere;
+CI executes 100 seeds × {f32, int8} = 200 sequences.  When
+``hypothesis`` is installed (CI kernels job), a shrinking variant runs
+the same machine under generated op programs."""
+import collections
+import random
+
+import pytest
+
+from repro.core.cache import CacheStats, PrefixState
+from repro.core.paged import KVBlockPool, OutOfBlocks
+from repro.core.prefix_pool import PrefixPool, state_bytes
+from repro.core.tiered import HostTier
+from repro.models.config import ModelConfig
+
+try:
+    import hypothesis
+    from hypothesis import strategies as hyp_st
+except ImportError:          # CI installs hypothesis; local runs skip
+    hypothesis = None
+
+
+def _tiny_cfg():
+    return ModelConfig(name="prop-test", family="dense", num_layers=1,
+                       d_model=16, num_heads=2, num_kv_heads=1, head_dim=8,
+                       d_ff=32, vocab_size=64, dtype="float32")
+
+
+def _filled_dense(cfg, P, C=16):
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as M
+    dense = M.init_cache(cfg, 1, C)
+
+    def fill(path, x):
+        if path[-1].key == "pos":
+            seq = jnp.arange(x.shape[-1])
+            return jnp.broadcast_to(jnp.where(seq < P, seq, -1), x.shape)
+        return jnp.arange(x.size, dtype=jnp.float32).reshape(
+            x.shape).astype(x.dtype) / x.size
+    return jax.tree_util.tree_map_with_path(fill, dense)
+
+
+# segment token lengths come from a tiny set so the jitted write/copy
+# signatures (static block counts) stay hot across all seeds
+SEG_LENS = (3, 6, 11)
+BLOCK_SIZE = 4
+NUM_BLOCKS = 24
+
+
+class PoolMachine:
+    """One randomized episode against the real pool stack."""
+
+    OPS = ("put_flat", "put_flat", "put_child", "get", "get", "release",
+           "shrink_pool", "grow_pool", "shrink_tier", "promote", "cow",
+           "drop_reader", "suffix_alloc", "suffix_free")
+
+    def __init__(self, seed: int, quantize: bool) -> None:
+        self.rng = random.Random(seed)
+        self.cfg = _tiny_cfg()
+        self.bp = KVBlockPool(self.cfg, NUM_BLOCKS, BLOCK_SIZE,
+                              quantize_prefix=quantize)
+        self.stats = CacheStats()
+        self.pool = PrefixPool(1 << 30, self.stats)
+        self.pool.attach_block_pool(self.bp)
+        self.pool.attach_host_tier(HostTier(1 << 30))
+        self.next_key = 0
+        self.pins = collections.Counter()     # key -> pins the driver holds
+        self.readers = []                     # increfed block-id lists
+        self.suffix_holds = []                # suffix-space allocations
+        per = self.bp.prefix_block_bytes
+        self.pool_budgets = [1, 2 * per, 5 * per]
+        host_per = per if quantize else self.bp.block_bytes
+        self.tier_budgets = [1, 3 * host_per, 1 << 30]
+        self._dense = {P: _filled_dense(self.cfg, P) for P in SEG_LENS}
+
+    # -- state fabrication (the pool stores states, it never computes
+    # them — content is irrelevant to every invariant checked here) ----
+    def _mk_state(self, parent=None):
+        seg = self.rng.choice(SEG_LENS)
+        pt = self.bp.write_prefix(self._dense[seg], seg)
+        anc = []
+        if parent is not None:
+            anc = list(parent.chain_blocks())
+            self.bp.incref(anc)
+        base = parent.prefix_len if parent is not None else 0
+        return PrefixState(cache=None, prefix_len=base + seg, capacity=64,
+                           page=pt, block_pool=self.bp, parent=parent,
+                           seg_len=seg, ancestor_blocks=anc)
+
+    def _fresh_key(self):
+        self.next_key += 1
+        return self.next_key
+
+    def _resident_keys(self):
+        return list(self.pool._entries)
+
+    # -- ops -----------------------------------------------------------
+    def op_put_flat(self):
+        try:
+            st = self._mk_state()
+        except OutOfBlocks:
+            return
+        self.pool.put(self._fresh_key(), st, prefill_s=self.rng.random())
+
+    def op_put_child(self):
+        keys = self._resident_keys()
+        if not keys:
+            return
+        pkey = self.rng.choice(keys)
+        # pin the parent until the child is ADMITTED — the window the
+        # scheduler holds a chain pin for: both the child's own
+        # write_prefix and any eviction pass before the child is
+        # resident could otherwise reclaim the parent out from under it
+        self.pool.pin(pkey)
+        try:
+            st = self._mk_state(self.pool._entries[pkey].state)
+            self.pool.put(self._fresh_key(), st,
+                          prefill_s=self.rng.random())
+        except OutOfBlocks:
+            pass
+        finally:
+            self.pool.release(pkey)
+
+    def op_get(self):
+        if self.next_key == 0:
+            return
+        key = self.rng.randrange(1, self.next_key + 1)
+        pin = self.rng.random() < 0.5
+        st = self.pool.get(key, pin=pin)
+        if st is not None and pin:
+            self.pins[key] += 1
+
+    def op_release(self):
+        held = [k for k, n in self.pins.items() if n > 0]
+        if not held:
+            return
+        key = self.rng.choice(held)
+        self.pool.release(key)
+        self.pins[key] -= 1
+
+    def op_shrink_pool(self):
+        self.pool.budget_bytes = self.rng.choice(self.pool_budgets)
+        self.pool._evict_to_budget()
+
+    def op_grow_pool(self):
+        self.pool.budget_bytes = 1 << 30
+
+    def op_shrink_tier(self):
+        # enforcement is admit-time: a shrink strands bytes until the
+        # next demotion's discard loop peels the tier back down
+        self.pool.tier.budget_bytes = self.rng.choice(self.tier_budgets)
+
+    def op_promote(self):
+        # production only promotes on a pool MISS: resident keys are
+        # answered by get() and never reach promote
+        hosted = [k for k in self.pool.tier.keys()
+                  if k not in self.pool._entries]
+        if not hosted:
+            return
+        key = self.rng.choice(hosted)
+        hseg = self.pool.tier.peek(key)
+        parent = None
+        if hseg.parent_key is not None:
+            pe = self.pool._entries.get(hseg.parent_key)
+            parent = pe.state if pe is not None else None
+        pin = self.rng.random() < 0.3
+        st = self.pool.promote(key, parent=parent, pin=pin,
+                               prefetched=self.rng.random() < 0.5)
+        if st is not None and pin:
+            self.pins[key] += 1
+
+    def op_cow(self):
+        keys = self._resident_keys()
+        if not keys:
+            return
+        key = self.rng.choice(keys)
+        st = self.pool._entries[key].state
+        # a reader appears (incref), then the state COWs one block for
+        # a write — the reader keeps the original id; the entry is
+        # pinned across the copy (cow's alloc may reclaim, and no
+        # writer tolerates its own state evicting mid-write)
+        held = list(st.page.blocks)
+        self.bp.incref(held)
+        self.readers.append(held)
+        i = self.rng.randrange(len(st.page.blocks))
+        self.pool.pin(key)
+        try:
+            st.page.blocks[i] = self.bp.cow(st.page.blocks[i])
+        except OutOfBlocks:
+            pass
+        finally:
+            self.pool.release(key)
+
+    def op_drop_reader(self):
+        if not self.readers:
+            return
+        lst = self.readers.pop(self.rng.randrange(len(self.readers)))
+        self.bp.decref(lst)
+
+    def op_suffix_alloc(self):
+        n = self.rng.randint(1, 3)
+        try:
+            bids = self.bp.alloc(n, suffix=True)
+        except OutOfBlocks:
+            return
+        self.bp.note_tokens(bids, n * BLOCK_SIZE - 1, suffix=True)
+        self.suffix_holds.append(bids)
+
+    def op_suffix_free(self):
+        if not self.suffix_holds:
+            return
+        bids = self.suffix_holds.pop(
+            self.rng.randrange(len(self.suffix_holds)))
+        self.bp.decref(bids, suffix=True)
+
+    # -- ground truth --------------------------------------------------
+    def _expected_refs(self):
+        """(prefix-space, suffix-space) Counters of block-id -> owner
+        count, recomputed from ownership lists (NOT from allocator
+        state)."""
+        pfx = collections.Counter()
+        for e in self.pool._entries.values():
+            for b in e.state.page.blocks:
+                pfx[b] += 1
+            for b in e.state.ancestor_blocks:
+                pfx[b] += 1
+        for lst in self.readers:
+            for b in lst:
+                pfx[b] += 1
+        sfx = collections.Counter()
+        for lst in self.suffix_holds:
+            for b in lst:
+                sfx[b] += 1
+        if self.bp.suffix_allocator is self.bp.allocator:
+            # single address space: suffix holds share the one allocator
+            pfx = pfx + sfx
+            sfx = pfx
+        return pfx, sfx
+
+    def check(self):
+        bp, pool, tier = self.bp, self.pool, self.pool.tier
+        pfx, sfx = self._expected_refs()
+        spaces = [(bp.allocator, pfx)]
+        if bp.suffix_allocator is not bp.allocator:
+            spaces.append((bp.suffix_allocator, sfx))
+        for alloc, expected in spaces:
+            # every block refcounted exactly once per owner
+            for bid in range(1, bp.num_blocks):
+                assert alloc.refcount(bid) == expected.get(bid, 0), (
+                    f"block {bid}: refcount {alloc.refcount(bid)} != "
+                    f"{expected.get(bid, 0)} owners")
+            # free ∪ owned partitions the arena id space
+            free = set(alloc._free)
+            owned = {b for b, c in expected.items() if c > 0}
+            assert free.isdisjoint(owned)
+            assert free | owned == set(range(1, bp.num_blocks))
+        # no pinned entry was evicted (or demoted): the driver's pins
+        # map exactly onto resident entry refs
+        for key, n in self.pins.items():
+            if n > 0:
+                e = pool._entries.get(key)
+                assert e is not None, f"pinned key {key} was evicted"
+                assert e.refs == n, (key, e.refs, n)
+        # byte gauges reconcile with scratch recomputation
+        assert pool.bytes_in_use == sum(
+            state_bytes(e.state) for e in pool._entries.values())
+        assert tier.bytes_in_use == sum(
+            s.nbytes for s in tier._segments.values())
+        self.stats.record_blocks(bp)
+        assert self.stats.block_bytes_in_use == \
+            bp.prefix_blocks_in_use * bp.prefix_block_bytes
+        self.stats.record_host(tier)
+        assert self.stats.host_bytes_in_use == tier.bytes_in_use
+        assert self.stats.host_bytes_peak >= tier.bytes_in_use
+        # tree order: a resident segment's parent is resident (eviction
+        # is leaf-before-ancestor; pinned leaves anchor their path)
+        resident = {e.state.uid for e in pool._entries.values()}
+        for e in pool._entries.values():
+            if e.state.parent is not None:
+                assert e.state.parent.uid in resident, \
+                    f"entry {e.key}: parent evicted under a descendant"
+        # host leaf-first: the next discard victim never anchors a
+        # hosted descendant
+        v = tier._pick_discard()
+        if v is not None:
+            anchors = {s.parent_key for s in tier._segments.values()
+                       if s.parent_key is not None}
+            assert v.key not in anchors
+
+    # -- episode -------------------------------------------------------
+    def run(self, n_ops: int = 40) -> None:
+        for _ in range(n_ops):
+            getattr(self, "op_" + self.rng.choice(self.OPS))()
+            self.check()
+        self.teardown()
+
+    def teardown(self) -> None:
+        # unwinding every driver-held reference must balance exactly
+        for key, n in list(self.pins.items()):
+            for _ in range(n):
+                self.pool.release(key)
+        for lst in self.readers:
+            self.bp.decref(lst)
+        for bids in self.suffix_holds:
+            self.bp.decref(bids, suffix=True)
+        self.pool.clear()
+        assert self.bp.blocks_in_use == 0
+        assert self.bp.allocator.free_blocks == self.bp.allocator.num_usable
+        assert self.bp.suffix_allocator.free_blocks == \
+            self.bp.suffix_allocator.num_usable
+
+
+@pytest.mark.parametrize("quantize", [False, True], ids=["f32", "int8"])
+@pytest.mark.parametrize("seed", range(100))
+def test_pool_invariants_random_interleavings(seed, quantize):
+    PoolMachine(seed, quantize).run()
+
+
+def test_pool_invariants_long_episode():
+    """One deep episode per layout (more ops than any parametrized
+    seed) to reach rarer interleavings: repeated demote/promote cycles
+    of the same keys, budget oscillation, deeper chains."""
+    PoolMachine(10_000, quantize=False).run(n_ops=150)
+    PoolMachine(10_001, quantize=True).run(n_ops=150)
+
+
+if hypothesis is not None:
+    @hypothesis.given(
+        seed=hyp_st.integers(0, 2 ** 31 - 1),
+        ops=hyp_st.lists(hyp_st.sampled_from(PoolMachine.OPS),
+                         min_size=1, max_size=25),
+        quantize=hyp_st.booleans())
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_pool_invariants_hypothesis(seed, ops, quantize):
+        """Shrinking variant: hypothesis picks the program, the machine
+        checks the same invariants, and a failure minimizes to the
+        shortest violating op sequence."""
+        m = PoolMachine(seed, quantize)
+        for op in ops:
+            getattr(m, "op_" + op)()
+            m.check()
+        m.teardown()

@@ -1,0 +1,534 @@
+"""Host-memory tier for the prefix cache (DESIGN.md §12): demote →
+promote block round trips are bitwise (f32 and int8+scales), serving a
+promoted segment is token-identical to the never-evicted and recomputed
+arms (flat and chain, drain and continuous, f32/XLA and bf16/Pallas),
+speculative prefetch is counted honestly, injected faults
+(``device_put`` failure, ``OutOfBlocks``, a demote-vs-pin race) unwind
+without phantom references, and quantized prefix staging rows return to
+the suffix free list (the dead-row reclaim regression)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheStats
+from repro.core.paged import KVBlockPool, OutOfBlocks
+from repro.core.prefix_pool import PrefixPool, state_bytes
+from repro.core.tiered import HostSegment, HostTier
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import Request, ServingEngine
+
+
+def _gqa_cfg(vocab=64, dtype="float32", impl="xla"):
+    return ModelConfig(name="tier-test", family="dense", num_layers=3,
+                       d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+                       d_ff=160, vocab_size=vocab, dtype=dtype,
+                       attention_impl=impl)
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a graph of nodes and edges answers questions"])
+
+
+def _engine(tok, key=0, dtype="float32", impl="xla", **kw):
+    cfg = _gqa_cfg(tok.vocab_size, dtype, impl)
+    params = M.init_params(jax.random.PRNGKey(key), cfg)
+    kw.setdefault("max_cache_len", 512)
+    kw.setdefault("max_new_tokens", 5)
+    return ServingEngine(params, cfg, tok, **kw)
+
+
+def _filled_dense(cfg, P, C=32):
+    dense = M.init_cache(cfg, 1, C)
+
+    def fill(path, x):
+        if path[-1].key == "pos":
+            seq = jnp.arange(x.shape[-1])
+            return jnp.broadcast_to(jnp.where(seq < P, seq, -1), x.shape)
+        return jnp.arange(x.size, dtype=jnp.float32).reshape(
+            x.shape).astype(x.dtype) / x.size
+    return jax.tree_util.tree_map_with_path(fill, dense)
+
+
+def _tiered_pool(eng, pool_budget=1 << 30, tier_budget=1 << 30):
+    pool = PrefixPool(pool_budget, eng.cache_mgr.stats)
+    pool.attach_block_pool(eng.block_pool)
+    pool.attach_host_tier(HostTier(tier_budget))
+    return pool
+
+
+# ----------------------------------------------------------------------
+# block-level round trip: demote → promote is bitwise
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("dtype,quantize", [("float32", False),
+                                            ("bfloat16", False),
+                                            ("float32", True)])
+def test_demote_promote_round_trip_bitwise(dtype, quantize):
+    """The host copy and the re-promoted arena rows must be BITWISE the
+    rows that were demoted — K/V, positions, and (when quantized) the
+    int8 codes plus their f32 scales.  Token identity downstream rests
+    entirely on this."""
+    cfg = _gqa_cfg(dtype=dtype)
+    pool = KVBlockPool(cfg, num_blocks=16, block_size=8,
+                       quantize_prefix=quantize)
+    P = 19
+    pt = pool.write_prefix(_filled_dense(cfg, P), P)
+    host, nbytes, toks = pool.demote_blocks(pt.blocks)
+    assert nbytes == sum(x.nbytes for x in jax.tree_util.tree_leaves(host))
+    assert sum(toks) == P
+    if quantize:    # scales travel with the segment
+        assert any("scale" in jax.tree_util.keystr(p) for p, _ in
+                   jax.tree_util.tree_leaves_with_path(host))
+    pool.decref(pt.blocks)
+    bids, transfer = pool.promote_blocks(host, toks)
+    jax.block_until_ready(transfer)
+    host2, nbytes2, toks2 = pool.demote_blocks(bids)
+    assert nbytes2 == nbytes and toks2 == toks
+    for a, b in zip(jax.tree_util.tree_leaves(host),
+                    jax.tree_util.tree_leaves(host2)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8))
+    pool.decref(bids)
+    assert pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# engine-level: tokens identical across never-evicted / promoted /
+# recomputed, flat
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+def test_flat_promote_and_recompute_tokens_identical(tok, dtype, impl):
+    eng = _engine(tok, dtype=dtype, impl=impl)
+    stats = eng.cache_mgr.stats
+    pool = _tiered_pool(eng)
+    tier = pool.tier
+    prefix = tok.encode("the quick brown fox jumps over the lazy dog "
+                        + "a graph of nodes " * 30, bos=True)
+    sfx = [tok.encode("answers questions"), tok.encode("and edges")]
+    st, dt = eng.prefill_prefix(prefix, _record=False)
+    pool.put("c", st, prefill_s=dt)
+    oracle, t = eng.serve([Request(s, st) for s in sfx], _record=False)
+    assert t["paged"]
+
+    # arm 2: evict (→ demote), promote back, serve
+    pool.budget_bytes = 1
+    pool._evict_to_budget()
+    assert "c" not in pool and "c" in tier
+    assert stats.tier_demotions == 1
+    pool.budget_bytes = 1 << 30
+    st2 = pool.promote("c")
+    assert st2 is not None and "c" not in tier
+    assert stats.tier_promotions == 1 and stats.pool_reprefills == 0
+    assert stats.tier_promoted_bytes == stats.tier_demoted_bytes > 0
+    out2, _ = eng.serve([Request(s, st2) for s in sfx], _record=False)
+    assert out2 == oracle
+    assert tier.drain_pending() >= 0.0 and not tier._inflight
+
+    # arm 3: evict again, DISCARD the host copy, recompute
+    pool.budget_bytes = 1
+    pool._evict_to_budget()
+    tier.clear()
+    pool.budget_bytes = 1 << 30
+    assert pool.promote("c") is None          # double miss
+    st3, dt3 = eng.prefill_prefix(prefix, _record=False)
+    pool.put("c", st3, prefill_s=dt3)
+    assert stats.pool_reprefills == 1         # recompute counted honestly
+    out3, _ = eng.serve([Request(s, st3) for s in sfx], _record=False)
+    assert out3 == oracle
+    assert stats.tier_promotion_rate == 0.5   # 1 promotion vs 1 reprefill
+    pool.clear()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# chain-aware promotion (tree levels >= 2)
+# ----------------------------------------------------------------------
+def _chain_sched(tok, eng, pool):
+    from repro.core.planner import ChainSpec
+    from repro.core.subgraph import Subgraph
+    from repro.serving.scheduler import (OnlineCluster,
+                                         OnlineClusterAssigner,
+                                         OnlineScheduler)
+    anc_sg = Subgraph.from_lists([0, 1, 2], [])
+    leaf_sg = Subgraph.from_lists([0, 1, 2, 3, 4], [])
+    assigner = OnlineClusterAssigner()
+    assigner.clusters.append(OnlineCluster(
+        cluster_id=0, centroid=np.zeros(2), representative=leaf_sg,
+        chain=ChainSpec(keys=[10, 11], contents=[anc_sg, leaf_sg])))
+
+    def seg_tokens(content, base):
+        if base is None:
+            return tok.encode("the quick brown fox jumps over the lazy "
+                              "dog " * 6, bos=True)
+        return tok.encode("a graph of nodes and edges")
+    return OnlineScheduler(eng, assigner, pool, lambda sg: [],
+                           segment_tokens_fn=seg_tokens)
+
+
+def test_chain_promote_relinks_through_resident_parent(tok):
+    """Evict the LEAF only (tree order protects the root): the next
+    materialization must PROMOTE it — not re-prefill — and the promoted
+    leaf must chain to the still-resident root's blocks.  Tokens match
+    the pre-eviction serve exactly."""
+    eng = _engine(tok)
+    stats = eng.cache_mgr.stats
+    pool = _tiered_pool(eng)
+    sched = _chain_sched(tok, eng, pool)
+    sfx = [tok.encode("answers questions"), tok.encode("lazy dog")]
+    st, hit, _, _ = sched.ensure_chain(0)
+    oracle, _ = eng.serve([Request(s, st) for s in sfx], _record=False)
+    root = pool.entry(("seg", 10)).state
+    root_blocks = list(root.page.blocks)
+
+    pool.budget_bytes = state_bytes(root)
+    pool._evict_to_budget()
+    assert ("seg", 10) in pool and ("seg", 11) not in pool
+    assert ("seg", 11) in pool.tier
+    assert pool.tier.peek(("seg", 11)).parent_key == ("seg", 10)
+
+    pool.budget_bytes = 1 << 30
+    st2, hit2, dt2, _ = sched.ensure_chain(0)
+    assert hit2 and dt2 == 0.0            # promoted, not recomputed
+    assert stats.tier_promotions == 1 and stats.pool_reprefills == 0
+    assert st2.parent is root
+    assert st2.ancestor_blocks == root_blocks
+    out, _ = eng.serve([Request(s, st2) for s in sfx], _record=False)
+    assert out == oracle
+    pool.clear()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_chain_promote_whole_path_root_then_leaf(tok):
+    """Evict the whole chain (leaf first, then root — both demoted).
+    The next walk promotes root→leaf, re-linking the leaf under the
+    freshly promoted root; tokens are unchanged."""
+    eng = _engine(tok)
+    stats = eng.cache_mgr.stats
+    pool = _tiered_pool(eng)
+    sched = _chain_sched(tok, eng, pool)
+    sfx = [tok.encode("answers questions")]
+    st, _, _, _ = sched.ensure_chain(0)
+    oracle, _ = eng.serve([Request(s, st) for s in sfx], _record=False)
+
+    pool.budget_bytes = 1
+    pool._evict_to_budget()
+    assert len(pool) == 0 and len(pool.tier) == 2
+    assert stats.tier_demotions == 2
+
+    pool.budget_bytes = 1 << 30
+    st2, hit2, dt2, _ = sched.ensure_chain(0)
+    assert hit2 and dt2 == 0.0
+    assert stats.tier_promotions == 2 and stats.pool_reprefills == 0
+    assert st2.parent is pool.entry(("seg", 10)).state
+    out, _ = eng.serve([Request(s, st2) for s in sfx], _record=False)
+    assert out == oracle
+    pool.clear()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_host_discard_is_leaf_first():
+    """The host tier's second-level eviction never victimizes a segment
+    that is the recorded parent of another hosted segment, even when
+    the parent's score is colder — chains peel leaf-first one tier
+    down, mirroring the pool's ancestor anchoring."""
+    tier = HostTier(budget_bytes=300)
+    stats = CacheStats()
+    tier.stats = stats
+
+    def seg(key, parent_key, nbytes, page_length):
+        return HostSegment(
+            key=key, host={}, block_tokens=[page_length], nbytes=nbytes,
+            prefix_len=page_length, page_length=page_length,
+            seg_len=page_length, capacity=64, enc_len=0, n_soft=0,
+            parent_key=parent_key, quantized=False, prefill_s=0.0)
+
+    assert tier.admit(seg("root", None, 100, 64))     # cold + big
+    assert tier.admit(seg("leaf", "root", 100, 4))    # hot + small
+    tier.get("leaf")
+    # pressure: only one can stay — the ROOT must, it anchors the leaf's
+    # linkage even though its discard score is far worse
+    assert tier.admit(seg("other", None, 200, 8))
+    assert "root" in tier and "leaf" not in tier
+    assert stats.host_discards == 1
+    assert stats.host_bytes_in_use == tier.bytes_in_use == 300
+    assert stats.host_bytes_peak == 300
+
+
+# ----------------------------------------------------------------------
+# speculative prefetch
+# ----------------------------------------------------------------------
+def test_prefetch_promotes_and_accounts(tok):
+    from repro.core.subgraph import Subgraph
+    from repro.serving.scheduler import (OnlineCluster,
+                                         OnlineClusterAssigner,
+                                         OnlineScheduler)
+    eng = _engine(tok)
+    stats = eng.cache_mgr.stats
+    pool = _tiered_pool(eng)
+    assigner = OnlineClusterAssigner()
+    assigner.clusters.append(OnlineCluster(
+        cluster_id=0, centroid=np.zeros(2),
+        representative=Subgraph.from_lists([0], [])))
+    sched = OnlineScheduler(
+        eng, assigner, pool,
+        lambda sg: tok.encode("a graph of nodes and edges " * 10,
+                              bos=True))
+    st, hit, _ = sched.ensure_state(0)
+    assert not hit
+    sfx = [tok.encode("answers questions")]
+    oracle, _ = eng.serve([Request(s, st) for s in sfx], _record=False)
+
+    pool.budget_bytes = 1
+    pool._evict_to_budget()
+    pool.budget_bytes = 1 << 30
+    assert 0 in pool.tier
+
+    # a queued query is tagged to cluster 0 → its segment promotes NOW
+    assert sched.prefetch([np.zeros(2)]) == 1
+    e = pool.entry(0)
+    assert e is not None and e.refs == 0 and e.prefetched
+    assert stats.tier_prefetch_promotions == 1
+    assert stats.tier_prefetch_hits == 0      # not consumed yet
+    # a second probe for the same cluster finds it resident: no-op
+    assert sched.prefetch([np.zeros(2)]) == 0
+    assert stats.pool_hits == 0               # probes are not traffic
+
+    # the query reaches the front: ensure_state is a pool HIT that
+    # consumes the prefetch flag — and serves the same tokens
+    st2, hit2, dt2 = sched.ensure_state(0)
+    assert hit2 and dt2 == 0.0
+    assert stats.tier_prefetch_hits == 1
+    assert stats.prefetch_hit_rate == 1.0
+    assert not pool.entry(0).prefetched       # consumed exactly once
+    out, _ = eng.serve([Request(s, st2) for s in sfx], _record=False)
+    assert out == oracle
+    sched._drain_tier()
+    pool.clear()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_prefetch_never_computes(tok):
+    """A probe whose cluster has no host copy (true double miss) must
+    not prefill anything — prefetch is promotion-only."""
+    from repro.core.subgraph import Subgraph
+    from repro.serving.scheduler import (OnlineCluster,
+                                         OnlineClusterAssigner,
+                                         OnlineScheduler)
+    eng = _engine(tok)
+    pool = _tiered_pool(eng)
+    assigner = OnlineClusterAssigner()
+    assigner.clusters.append(OnlineCluster(
+        cluster_id=0, centroid=np.zeros(2),
+        representative=Subgraph.from_lists([0], [])))
+    sched = OnlineScheduler(eng, assigner, pool,
+                            lambda sg: tok.encode("a graph", bos=True))
+    # tier attached but empty → fast path, nothing promoted or computed
+    assert sched.prefetch([np.zeros(2)]) == 0
+    assert len(pool) == 0 and eng.block_pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# fault injection
+# ----------------------------------------------------------------------
+def _demoted_flat(tok, eng, pool):
+    """One flat segment admitted, served once, then demoted to host."""
+    prefix = tok.encode("the quick brown fox jumps over the lazy dog "
+                        * 4, bos=True)
+    st, dt = eng.prefill_prefix(prefix, _record=False)
+    pool.put("c", st, prefill_s=dt)
+    sfx = [tok.encode("answers questions")]
+    oracle, _ = eng.serve([Request(s, st) for s in sfx], _record=False)
+    pool.budget_bytes = 1
+    pool._evict_to_budget()
+    pool.budget_bytes = 1 << 30
+    assert "c" in pool.tier and "c" not in pool
+    return prefix, sfx, oracle
+
+
+def test_device_put_failure_unwinds_and_recomputes(tok, monkeypatch):
+    """An injected ``device_put`` fault mid-promotion must leave no
+    phantom references (allocator free count restored), keep the host
+    copy, count a promotion failure — and the serving path falls back
+    to recompute with identical tokens."""
+    eng = _engine(tok)
+    stats = eng.cache_mgr.stats
+    pool = _tiered_pool(eng)
+    prefix, sfx, oracle = _demoted_flat(tok, eng, pool)
+    free0 = eng.block_pool.allocator.free_blocks
+
+    with monkeypatch.context() as mp:
+        def boom(*a, **kw):
+            raise RuntimeError("injected transfer fault")
+        mp.setattr(jax, "device_put", boom)
+        assert pool.promote("c") is None
+    assert eng.block_pool.allocator.free_blocks == free0
+    assert "c" in pool.tier and "c" not in pool   # host copy survives
+    assert stats.tier_promotion_failures == 1
+    assert stats.tier_promotions == 0
+
+    # fall back to recompute (the scheduler's double-miss branch)
+    st2, dt2 = eng.prefill_prefix(prefix, _record=False)
+    pool.put("c", st2, prefill_s=dt2)
+    out, _ = eng.serve([Request(s, st2) for s in sfx], _record=False)
+    assert out == oracle
+    # ...and the intact host copy still promotes once the fault clears
+    pool.budget_bytes = 1
+    pool._evict_to_budget()
+    pool.budget_bytes = 1 << 30
+    assert pool.promote("c") is not None
+    pool.clear()
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_out_of_blocks_mid_promotion_unwinds(tok):
+    """Promotion under arena exhaustion (every block pinned elsewhere)
+    must raise-and-unwind inside the attempt: no allocation survives,
+    the host copy is intact, and the promotion succeeds verbatim once
+    pressure clears."""
+    eng = _engine(tok)
+    stats = eng.cache_mgr.stats
+    pool = _tiered_pool(eng)
+    _, sfx, oracle = _demoted_flat(tok, eng, pool)
+    bp = eng.block_pool
+    hold = bp.alloc(bp.allocator.free_blocks)     # exhaust prefix space
+    assert bp.allocator.free_blocks == 0
+    assert pool.promote("c") is None
+    assert bp.allocator.free_blocks == 0          # nothing leaked back
+    assert "c" in pool.tier
+    assert stats.tier_promotion_failures == 1
+    bp.decref(hold)
+    free0 = bp.allocator.free_blocks
+    st = pool.promote("c")
+    assert st is not None
+    out, _ = eng.serve([Request(s, st) for s in sfx], _record=False)
+    assert out == oracle
+    assert bp.allocator.free_blocks == free0 - len(st.page.blocks)
+    pool.clear()
+    assert bp.blocks_in_use == 0
+
+
+def test_demote_loses_race_with_pin(tok, monkeypatch):
+    """A ``get(pin=True)`` that lands while the demotion gather is in
+    flight must WIN: the demote aborts (nothing stored host-side), the
+    entry stays resident and pinned, and the eviction pass moves on."""
+    eng = _engine(tok)
+    stats = eng.cache_mgr.stats
+    pool = _tiered_pool(eng)
+    prefix = tok.encode("a graph of nodes and edges " * 4, bos=True)
+    st, dt = eng.prefill_prefix(prefix, _record=False)
+    pool.put("c", st, prefill_s=dt)
+    bp = eng.block_pool
+    orig = bp.demote_blocks
+
+    def racing_demote(bids):
+        out = orig(bids)
+        pool.pin("c")        # the racing reader lands mid-gather
+        return out
+    monkeypatch.setattr(bp, "demote_blocks", racing_demote)
+    free0 = bp.allocator.free_blocks
+    pool.budget_bytes = 1
+    pool._evict_to_budget()                       # gives up: pin wins
+    assert "c" in pool and pool.entry("c").refs == 1
+    assert len(pool.tier) == 0 and pool.tier.bytes_in_use == 0
+    assert stats.tier_demotions == 0 and stats.pool_evictions == 0
+    assert bp.allocator.free_blocks == free0      # state untouched
+    pool.release("c")
+    pool.clear()
+    assert bp.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# satellite regression: quantized prefixes strand no compute-dtype rows
+# ----------------------------------------------------------------------
+def test_quantized_staging_rows_return_to_suffix_free_list():
+    """``write_prefix`` on a quantized pool must return its compute-
+    dtype staging rows to the suffix free list once the int8 copy
+    commits; the resident prefix then prices EXACTLY as ``from_budget``
+    sized it (bytes ↔ block counts agree)."""
+    cfg = _gqa_cfg()
+    pool = KVBlockPool(cfg, num_blocks=16, block_size=8,
+                       quantize_prefix=True)
+    P = 19
+    pt = pool.write_prefix(_filled_dense(cfg, P), P)
+    # every staging row is back: the suffix space is fully free again
+    assert pool.free_suffix_blocks == pool.suffix_allocator.num_usable
+    assert pool.prefix_blocks_in_use == len(pt.blocks) == 3
+    assert pool.blocks_in_use == 3
+
+    stats = CacheStats()
+    stats.record_blocks(pool)
+    resident_bytes = stats.block_bytes_in_use
+    assert resident_bytes == len(pt.blocks) * pool.prefix_block_bytes
+    # from_budget agreement: a pool sized to exactly the resident bytes
+    # holds exactly that many usable prefix blocks
+    sized = KVBlockPool.from_budget(cfg, resident_bytes, 8,
+                                    quantize_prefix=True)
+    assert sized.allocator.num_usable == pool.prefix_blocks_in_use
+    # both id spaces are reported in the capacity gauge
+    assert stats.blocks_total == 2 * pool.allocator.num_usable
+    pool.decref(pt.blocks)
+    assert pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# pipeline end to end: drain + continuous, thrash budget, tokens fixed
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_pipe():
+    from repro.data.scenegraph import generate_scene_graph
+    from repro.rag.pipeline import GraphRAGPipeline
+    from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+    from repro.rag.text_encoder import TextEncoder
+    graph, queries = generate_scene_graph()
+    tok2 = Tokenizer.train([q.question + " " + q.answer for q in queries]
+                           + graph.node_text, max_vocab=2048)
+    cfg = ModelConfig(name="tier-pipe", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=tok2.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(32))
+    pipe = GraphRAGPipeline(
+        index=index, retriever=GRetrieverRetriever(index),
+        engine=ServingEngine(params, cfg, tok2, max_cache_len=768,
+                             max_new_tokens=4),
+        tokenizer=tok2, use_soft_prompt=False)
+    return pipe, queries[:10]
+
+
+@pytest.mark.parametrize("mode", ["drain", "continuous"])
+@pytest.mark.parametrize("tree_levels", [1, 2])
+def test_serve_stream_tiered_tokens_identical(small_pipe, mode,
+                                              tree_levels):
+    """End to end under a THRASH budget (pool holds ~one prefix, so
+    every cluster switch evicts): serving with the host tier attached
+    produces token-identical answers to the roomy no-tier reference, in
+    both loop modes and both layouts — and actually exercises the tier
+    (demotions and promotions observed)."""
+    pipe, items = small_pipe
+    arr = np.cumsum(np.full(len(items), 0.01))
+    # a near-zero spawn threshold splits the trace into several flat
+    # clusters (the tree path seeds its own leaves); one-entry budget +
+    # several clusters = guaranteed thrash
+    kw = dict(max_batch=4, mode=mode, chunk=2, tree_levels=tree_levels,
+              tree_clusters=3, threshold=1e-6, max_clusters=3)
+    ref, _, rs = pipe.serve_stream(items, arr, **kw)
+    # thrash budget: just one resident entry's bytes
+    thrash = max(e.nbytes for e in rs.pool._entries.values()) \
+        if len(rs.pool) else 1 << 20
+    rec, _, sch = pipe.serve_stream(items, arr, pool_budget_bytes=thrash,
+                                    host_tier_bytes=1 << 30, **kw)
+    assert [r.generated for r in rec] == [r.generated for r in ref]
+    st = sch.pool.stats
+    assert st.tier_demotions > 0
+    assert st.tier_promotions > 0
+    assert st.tier_promotion_failures == 0
+    # the serving report exposes the tier section
+    from repro.rag.workbench import serving_report
+    rep = serving_report(pipe)
+    assert rep["tier"]["promotions"] == st.tier_promotions
+    assert 0.0 <= rep["tier"]["prefetch_hit_rate"] <= 1.0
