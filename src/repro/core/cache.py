@@ -232,6 +232,11 @@ class CacheStats:
     host_segments: int = 0       # gauge: segments host-resident
     host_bytes_in_use: int = 0   # gauge: host buffer bytes
     host_bytes_peak: int = 0     # high-water mark of host_bytes_in_use
+    # --- replica router (serving/router.py, DESIGN.md §13) ---
+    migrations_out: int = 0      # cluster segments rebalanced AWAY from
+                                 # this replica (demote leg)
+    migrations_in: int = 0       # cluster segments adopted FROM another
+                                 # replica (host-tier handoff leg)
 
     @property
     def prefill_savings(self) -> float:
@@ -320,6 +325,13 @@ class CacheStats:
         self.tier_promoted_bytes += promoted_bytes
         self.tier_promotion_wait_s += promotion_wait_s
         self.host_discards += discards
+
+    def record_migration(self, *, out: int = 0, into: int = 0) -> None:
+        """Cluster-chain segments this replica migrated during router
+        rebalancing (DESIGN.md §13) — placement moves, NOT evictions:
+        the segment keeps serving, just from a different replica."""
+        self.migrations_out += out
+        self.migrations_in += into
 
     def record_host(self, tier) -> None:
         """Observe a ``HostTier``'s residency gauges."""

@@ -327,37 +327,61 @@ class KVBlockPool:
     like a dense cache whose batch dim is ``num_blocks`` and capacity is
     ``block_size`` — jits donate it, callers reassign ``pool.arena``.
 
-    With ``quantize_prefix=True`` the pool runs TWO id spaces of equal
-    size: ``allocator`` addresses int8 ``qarena`` rows (prefix blocks —
-    what budgets price and page tables reference), and
-    ``suffix_allocator`` addresses compute-dtype ``arena`` rows
-    (suffix/decode KV plus transient prefill staging).  ``write_prefix``
-    stages through arena rows and returns them to the suffix free list
-    once the int8 copy commits, so quantized prefixes no longer strand
-    dead compute-dtype rows (ROADMAP "known debts").  Without
-    quantization both names alias ONE allocator — the single address
-    space of DESIGN.md §8, unchanged.
+    With ``quantize_prefix=True`` the pool runs TWO id spaces:
+    ``allocator`` addresses int8 ``qarena`` rows (prefix blocks — what
+    budgets price and page tables reference), and ``suffix_allocator``
+    addresses compute-dtype ``arena`` rows (suffix/decode KV plus
+    transient prefill staging).  ``write_prefix`` stages through arena
+    rows and returns them to the suffix free list once the int8 copy
+    commits, and the two arenas are sized SEPARATELY
+    (``suffix_blocks``): prefix residency never allocates matching
+    compute-dtype rows, so a quantized pool's device footprint is the
+    priced int8 layout plus an independently sized suffix working set —
+    not a dead full-precision shadow of the prefix arena (the ROADMAP
+    "dead device storage" debt).  Without quantization both names alias
+    ONE allocator — the single address space of DESIGN.md §8,
+    unchanged.
     """
 
     def __init__(self, cfg, num_blocks: int, block_size: int, *,
-                 quantize_prefix: bool = False) -> None:
+                 quantize_prefix: bool = False,
+                 suffix_blocks: Optional[int] = None) -> None:
         from repro.models import model as M
         assert num_blocks >= 2 and block_size >= 1
         self.cfg = cfg
         self.block_size = int(block_size)
         self.num_blocks = int(num_blocks)
         self.quantize_prefix = bool(quantize_prefix)
-        self.arena = M.init_block_arena(cfg, num_blocks, block_size)
+        if not quantize_prefix:
+            assert suffix_blocks is None or suffix_blocks == num_blocks, \
+                "one address space: suffix_blocks only splits a " \
+                "quantized pool"
+            suffix_blocks = num_blocks
+        elif suffix_blocks is None:
+            suffix_blocks = num_blocks
+        assert suffix_blocks >= 2
+        self.suffix_blocks = int(suffix_blocks)
+        # compute-dtype arena: the ONLY arena (and the prefix home) when
+        # unquantized; the suffix/staging space (suffix_blocks rows)
+        # when quantized
+        self.arena = M.init_block_arena(cfg, suffix_blocks, block_size)
         # int8 prefix arena + per-(block, kv-head) f32 scales, populated
         # at write_prefix / quantize_blocks time (DESIGN.md §11); None
-        # when quantization is off
-        self.qarena = _qarena_like(self.arena) if quantize_prefix else None
+        # when quantization is off.  Built from an eval_shape template
+        # at num_blocks rows — its row count is independent of the
+        # compute arena's.
+        if quantize_prefix:
+            template = jax.eval_shape(
+                lambda: M.init_block_arena(cfg, num_blocks, block_size))
+            self.qarena = _qarena_like(template)
+        else:
+            self.qarena = None
         self.allocator = BlockAllocator(num_blocks)
-        self.suffix_allocator = (BlockAllocator(num_blocks)
+        self.suffix_allocator = (BlockAllocator(suffix_blocks)
                                  if quantize_prefix else self.allocator)
         # tokens actually stored per block (internal-fragmentation stat)
         self._block_tokens = np.zeros(num_blocks, np.int64)
-        self._sfx_tokens = (np.zeros(num_blocks, np.int64)
+        self._sfx_tokens = (np.zeros(suffix_blocks, np.int64)
                             if quantize_prefix else self._block_tokens)
 
     # ------------------------------------------------------------------
@@ -394,17 +418,29 @@ class KVBlockPool:
 
     @classmethod
     def from_budget(cls, cfg, budget_bytes: int, block_size: int, *,
-                    quantize_prefix: bool = False) -> "KVBlockPool":
+                    quantize_prefix: bool = False,
+                    suffix_blocks: Optional[int] = None) -> "KVBlockPool":
         """Largest arena fitting ``budget_bytes`` (plus the null block).
 
         The budget prices blocks at their PREFIX-resident layout — int8
         halves the per-block cost, so the same budget holds ~2× the
         blocks (and path tokens); the regression test pins that ratio.
-        """
+
+        A quantized pool's compute-dtype SUFFIX arena is sized
+        separately: ``suffix_blocks`` when given, else the block count
+        the same budget buys at compute dtype (what an unquantized pool
+        would have offered suffixes).  The int8 capacity win applies to
+        prefix residency only — sizing the suffix space at the doubled
+        int8 count would silently allocate ~2× the budget in dead
+        full-precision rows (the ROADMAP dead-storage debt)."""
         per = cls.prefix_block_bytes_for(cfg, block_size,
                                          quantize_prefix=quantize_prefix)
+        if quantize_prefix and suffix_blocks is None:
+            suffix_blocks = max(
+                2, budget_bytes // cls.block_bytes_for(cfg, block_size) + 1)
         return cls(cfg, max(2, budget_bytes // per + 1), block_size,
-                   quantize_prefix=quantize_prefix)
+                   quantize_prefix=quantize_prefix,
+                   suffix_blocks=suffix_blocks)
 
     @property
     def block_bytes(self) -> int:
@@ -417,6 +453,18 @@ class KVBlockPool:
         ``PrefixPool`` charge — NOT the compute-dtype ``block_bytes``."""
         return self.prefix_block_bytes_for(
             self.cfg, self.block_size, quantize_prefix=self.quantize_prefix)
+
+    @property
+    def device_bytes(self) -> int:
+        """Total device-resident arena bytes at the layouts actually
+        allocated: ``suffix_blocks`` compute-dtype rows plus — when
+        quantized — ``num_blocks`` int8+scales prefix rows.  The
+        satellite regression pins that this equals the summed leaf
+        bytes (no dead full-precision shadow of the prefix arena)."""
+        total = self.suffix_blocks * self.block_bytes
+        if self.quantize_prefix:
+            total += self.num_blocks * self.prefix_block_bytes
+        return total
 
     @property
     def blocks_in_use(self) -> int:

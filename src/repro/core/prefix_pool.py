@@ -403,6 +403,32 @@ class PrefixPool:
             self.stats.record_tier(demotions=1, demoted_bytes=nbytes)
         return True
 
+    def demote_to_host(self, key: Hashable) -> bool:
+        """Targeted demote of ONE resident segment — the router's
+        migration primitive (DESIGN.md §13): the source replica demotes
+        a migrating cluster's chain leaf-first through the SAME host
+        round-trip eviction already uses (never a device-to-device copy
+        path), the router hands the ``HostSegment`` to the destination
+        tier, and the destination promotes lazily on the cluster's next
+        hit.  Refuses (False, entry untouched) when the segment is
+        pinned (in flight), still anchors a resident descendant (demote
+        the descendant first), has no tier to land in, or the demote
+        gather loses a pin race.  NOT counted as an eviction — this is
+        placement, not budget pressure; callers account it via
+        ``CacheStats.record_migration``."""
+        e = self._entries.get(key)
+        bp = getattr(self, "_block_pool", None)
+        if e is None or e.refs > 0 or self.tier is None or bp is None \
+                or not e.state.is_paged or e.state.block_pool is not bp:
+            return False     # nothing _demote could capture: refuse
+        if e.state.uid in self._live_ancestor_uids():
+            return False
+        if not self._demote(e):
+            return False
+        del self._entries[key]
+        e.state.release()
+        return True
+
     # ------------------------------------------------------------------
     # promotion (host tier → device; DESIGN.md §12)
     # ------------------------------------------------------------------

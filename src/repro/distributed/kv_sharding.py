@@ -1,0 +1,130 @@
+"""Sharded KV block arenas over a device mesh (DESIGN.md §13).
+
+The paged serving stack through PR 7 is single-device: one
+``KVBlockPool`` arena, one engine.  This module is the tensor-parallel
+half of the replica serving subsystem — it places the per-layer
+``[num_blocks, block_size, Hkv, Dh]`` arena leaves under
+``NamedSharding`` so one logical engine spans the mesh's 'model' axis:
+
+* **heads mode** — ``Hkv % model_shards == 0`` (every big zoo config:
+  mixtral_8x22b 8 kv-heads, arctic_480b 8, command_r_35b 8): K/V shard
+  on the kv-head dim, quantization scales ``[NB, Hkv]`` on their head
+  dim, positions/page tables replicate.  Attention is embarrassingly
+  parallel per head (softmax never crosses heads), so the Pallas
+  kernel wrappers in ``kernels/ops.py`` run under ``shard_map`` with
+  each device walking its own head-slice of the arena — NO collectives
+  inside the kernel, which is why sharded serving is token-IDENTICAL
+  to the single-device engine (same per-head reduction order,
+  bitwise).
+* **Dh fallback** — ``Hkv`` not divisible (small validation configs on
+  a wide mesh) but ``head_dim`` is: K/V shard on the head_dim axis.
+  That splits the QK contraction, so the shard_map fast path stays OFF
+  (it would need in-kernel collectives and change reduction order);
+  the wrappers fall through to the plain call and GSPMD partitions the
+  XLA gather path, inserting the collectives itself.
+* **replicate** — neither divides: full arena on every device.
+
+The jnp oracle path (``attend_paged`` with ``impl="xla"``) needs no
+wrapper in ANY mode: its arena gather happens inside jit, and GSPMD
+propagates the arena's NamedSharding through it for free.
+
+``shard_engine`` is the one-call entry: replicate the params, shard
+the pool's arena(s), and install the mesh into ``kernels.ops`` —
+BEFORE the engine's lru-cached jits trace, so every serving path
+compiles against the sharded layout.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import sanitize
+from repro.models.config import ModelConfig
+
+
+def model_shards(mesh: Optional[Mesh]) -> int:
+    """Size of the mesh's 'model' axis (1 when absent / no mesh)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
+
+
+def kv_shard_mode(cfg: ModelConfig, mesh: Optional[Mesh]) -> str:
+    """'heads' | 'dh' | 'replicate' — how this config's arenas split
+    over the mesh (see module docstring)."""
+    nm = model_shards(mesh)
+    if nm <= 1:
+        return "replicate"
+    if cfg.num_kv_heads % nm == 0:
+        return "heads"
+    if cfg.head_dim_ % nm == 0:
+        return "dh"
+    return "replicate"
+
+
+def arena_leaf_spec(key: str, shape, cfg: ModelConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one block-arena leaf in STORAGE (seq-major)
+    layout: k/v ``[.., NB, bs, Hkv, Dh]``, pos ``[.., NB, bs]``,
+    scales ``[.., NB, Hkv]``.  Leading scanned-group dims replicate."""
+    mode = kv_shard_mode(cfg, mesh)
+    ndim = len(shape)
+    if key in ("k", "v"):
+        if mode == "heads":
+            spec = (None, None, "model", None)
+        elif mode == "dh":
+            spec = (None, None, None, "model")
+        else:
+            spec = (None,) * 4
+    elif key in ("k_scale", "v_scale"):
+        spec = (None, "model") if mode == "heads" else (None, None)
+    else:                                   # pos (and anything unknown)
+        spec = (None,) * ndim
+    if len(spec) < ndim:
+        spec = (None,) * (ndim - len(spec)) + tuple(spec)
+    return sanitize(tuple(spec), tuple(shape), mesh)
+
+
+def arena_pspecs(arena, cfg: ModelConfig, mesh: Mesh):
+    """Map a block-arena pytree (main or quantized) to PartitionSpecs."""
+    def spec(path, leaf):
+        key = getattr(path[-1], "key", None)
+        return arena_leaf_spec(key, leaf.shape, cfg, mesh)
+    return jax.tree_util.tree_map_with_path(spec, arena)
+
+
+def shard_arena(arena, cfg: ModelConfig, mesh: Mesh):
+    """``device_put`` an arena pytree under its NamedShardings."""
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             arena_pspecs(arena, cfg, mesh),
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(arena, shardings)
+
+
+def shard_pool(pool, mesh: Mesh) -> None:
+    """Re-home a ``KVBlockPool``'s arena(s) onto the mesh in place.
+    Host-side state (allocators, token counters) is untouched — block
+    ids address full rows regardless of how a row's heads split."""
+    pool.arena = shard_arena(pool.arena, pool.cfg, mesh)
+    if pool.qarena is not None:
+        pool.qarena = shard_arena(pool.qarena, pool.cfg, mesh)
+
+
+def shard_engine(engine, mesh: Mesh) -> str:
+    """Make a ``ServingEngine`` serve over ``mesh``: replicate params,
+    shard the block arenas, and install the mesh into ``kernels.ops``
+    so the paged/fused Pallas wrappers shard_map in heads mode.
+
+    MUST run before the engine serves anything — the engine's jitted
+    serving functions are lru-cached per shape, and a trace taken
+    without the mesh pins the unsharded layout for that shape.
+    Returns the shard mode actually engaged.
+    """
+    from repro.kernels import ops as kops
+    mode = kv_shard_mode(engine.cfg, mesh)
+    replicated = NamedSharding(mesh, P())
+    engine.params = jax.device_put(engine.params, replicated)
+    shard_pool(engine.block_pool, mesh)
+    kops.configure_mesh(mesh)
+    return mode

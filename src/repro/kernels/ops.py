@@ -2,10 +2,26 @@
 
 ``interpret`` defaults to True off-TPU (CPU validation per the repo's
 target/runtime split) and False on real TPU backends.
+
+Mesh-aware paged serving (DESIGN.md §13): after ``configure_mesh``
+installs a device mesh with a >1 'model' axis, the paged/fused
+wrappers route through ``shard_map`` whenever the call's kv-head count
+divides the axis — each device walks its own HEAD-slice of the arena
+(kernel-facing layout is head-major ``[NB, Hkv, bs, D]``; the shard
+axis is dim 1).  Attention never reduces across heads, so the sharded
+launch needs no collectives and stays bitwise identical to the
+single-device kernel.  Calls whose head count does not divide the mesh
+(or made before/without ``configure_mesh``) take the plain path
+unchanged; a Dh-sharded arena also takes the plain path and lets GSPMD
+insert the contraction collectives itself (``distributed/
+kv_sharding.py``).  ``shard_map`` runs with ``check_rep=False``:
+``pallas_call`` carries no replication rule.
 """
 from __future__ import annotations
 
 import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import decode_gqa as _decode
 from repro.kernels import fused_cascade as _fused
@@ -18,6 +34,42 @@ from repro.kernels import ssm_scan as _ssm
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# device mesh the paged/fused wrappers shard over (None = single device)
+_MESH = None
+
+
+def configure_mesh(mesh) -> None:
+    """Install (``mesh=None``: clear) the mesh for head-parallel paged
+    serving.  Call BEFORE an engine builds its jitted serving functions
+    — those traces are lru-cached and pin whichever path was active."""
+    global _MESH
+    _MESH = mesh
+
+
+def _model_shards(num_kv_heads: int) -> int:
+    """The 'model'-axis size when the head-parallel shard_map path
+    engages for a call with ``num_kv_heads`` kv heads, else 0."""
+    m = _MESH
+    if m is None or "model" not in m.axis_names:
+        return 0
+    nm = int(m.shape["model"])
+    if nm <= 1 or num_kv_heads % nm:
+        return 0
+    return nm
+
+
+# head-major shard specs: [B|NB, H, ...] arrays split dim 1
+_H4 = P(None, "model", None, None)   # q prefill / k / v / out
+_H3 = P(None, "model", None)         # decode q & out / prefill m & l
+_H2 = P(None, "model")               # decode m & l / quant scales
+_R = P()                             # tables, positions — replicated
+
+
+def _sharded(fn, in_specs, out_specs):
+    return shard_map(fn, mesh=_MESH, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 def prefix_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
@@ -50,25 +102,42 @@ def paged_attention_partial(q, k, v, q_pos, k_pos, page_table, *,
                             causal=False, window=0, block_q=128):
     """Partial attention over a paged KV arena [NB, Hkv, bs, D]: the
     scalar-prefetched ``page_table`` [B, NP] steers one-block-per-step
-    DMA (DESIGN.md §8); no gather is materialized."""
-    return _shared.paged_attention_partial(
-        q, k, v, q_pos, k_pos, page_table, causal=causal, window=window,
-        block_q=block_q, interpret=_interpret())
+    DMA (DESIGN.md §8); no gather is materialized.  Head-parallel over
+    a configured mesh (module docstring)."""
+    def call(q_, k_, v_, qp, kp, pt):
+        return _shared.paged_attention_partial(
+            q_, k_, v_, qp, kp, pt, causal=causal, window=window,
+            block_q=block_q, interpret=_interpret())
+    if _model_shards(k.shape[1]):
+        call = _sharded(call, (_H4, _H4, _H4, _R, _R, _R),
+                        (_H4, _H3, _H3))
+    return call(q, k, v, q_pos, k_pos, page_table)
 
 
 def paged_decode_gqa_partial(q, k, v, q_pos, k_pos, page_table, *,
                              window=0):
     """Single-token decode partial over a paged KV arena (decode-shaped
-    [group, d] q tiles; the KV loop walks ``page_table`` [B, NP])."""
-    return _shared.paged_decode_gqa_partial(
-        q, k, v, q_pos, k_pos, page_table, window=window,
-        interpret=_interpret())
+    [group, d] q tiles; the KV loop walks ``page_table`` [B, NP]).
+    Head-parallel over a configured mesh (module docstring)."""
+    def call(q_, k_, v_, qp, kp, pt):
+        return _shared.paged_decode_gqa_partial(
+            q_, k_, v_, qp, kp, pt, window=window, interpret=_interpret())
+    if _model_shards(k.shape[1]):
+        call = _sharded(call, (_H3, _H4, _H4, _R, _R, _R),
+                        (_H3, _H2, _H2))
+    return call(q, k, v, q_pos, k_pos, page_table)
 
 
 def paged_decode_gqa(q, k, v, q_pos, k_pos, page_table, *, window=0):
-    """Normalized single-stream paged decode (see decode_gqa.py)."""
-    return _decode.paged_decode_gqa(q, k, v, q_pos, k_pos, page_table,
-                                    window=window, interpret=_interpret())
+    """Normalized single-stream paged decode (see decode_gqa.py).
+    Head-parallel over a configured mesh (module docstring)."""
+    def call(q_, k_, v_, qp, kp, pt):
+        return _decode.paged_decode_gqa(q_, k_, v_, qp, kp, pt,
+                                        window=window,
+                                        interpret=_interpret())
+    if _model_shards(k.shape[1]):
+        call = _sharded(call, (_H3, _H4, _H4, _R, _R, _R), _H3)
+    return call(q, k, v, q_pos, k_pos, page_table)
 
 
 def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
@@ -80,11 +149,23 @@ def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
     (o, m, l) accumulator in VMEM across every segment; int8 prefix
     tiles dequantize in-register when scales are passed (DESIGN.md
     §11).  Replaces per-segment ``paged_attention_partial`` launches
-    plus the LSE fold."""
-    return _fused.fused_paged_attention(
-        q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos, prefix_table,
-        suffix_table, k_scale, v_scale, causal=causal, window=window,
-        block_q=block_q, interpret=_interpret())
+    plus the LSE fold.  Head-parallel over a configured mesh (module
+    docstring); int8 scales [NBp, Hkv] shard on their head dim."""
+    def call(q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, *scales):
+        ks, vs = scales if scales else (None, None)
+        return _fused.fused_paged_attention(
+            q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, ks, vs,
+            causal=causal, window=window, block_q=block_q,
+            interpret=_interpret())
+    args = (q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
+            prefix_table, suffix_table)
+    specs = (_H4, _H4, _H4, _H4, _H4, _R, _R, _R, _R, _R)
+    if k_scale is not None:
+        args += (k_scale, v_scale)
+        specs += (_H2, _H2)
+    if _model_shards(pk.shape[1]):
+        call = _sharded(call, specs, _H4)
+    return call(*args)
 
 
 def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
@@ -93,10 +174,20 @@ def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
     """Fused single-pass cascade decode (decode-shaped [group, d] q
     tiles over the concatenated page walk); see
     ``fused_paged_attention``."""
-    return _fused.fused_paged_decode_gqa(
-        q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos, prefix_table,
-        suffix_table, k_scale, v_scale, window=window,
-        interpret=_interpret())
+    def call(q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, *scales):
+        ks, vs = scales if scales else (None, None)
+        return _fused.fused_paged_decode_gqa(
+            q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, ks, vs,
+            window=window, interpret=_interpret())
+    args = (q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
+            prefix_table, suffix_table)
+    specs = (_H3, _H4, _H4, _H4, _H4, _R, _R, _R, _R, _R)
+    if k_scale is not None:
+        args += (k_scale, v_scale)
+        specs += (_H2, _H2)
+    if _model_shards(pk.shape[1]):
+        call = _sharded(call, specs, _H3)
+    return call(*args)
 
 
 def fold_partials(partials, *, block_q=128):

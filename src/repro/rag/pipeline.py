@@ -351,7 +351,7 @@ class GraphRAGPipeline:
                      tree_levels: int = 1,
                      tree_clusters: Optional[int] = None,
                      host_tier_bytes: Optional[int] = None,
-                     scheduler=None) -> tuple:
+                     scheduler=None, replicas: int = 1) -> tuple:
         """Online serving of a streaming query trace (DESIGN.md §7/§9).
 
         ``items[i]`` arrives at ``arrivals[i]`` seconds (any order).
@@ -397,31 +397,36 @@ class GraphRAGPipeline:
         transfer overlaps their queue wait.  Token streams are
         unchanged — a promoted segment serves bit-for-bit the blocks it
         was demoted from.
+
+        ``replicas`` > 1 (paged backends; DESIGN.md §13) serves the
+        trace through a ``ReplicaRouter`` over that many engine
+        replicas — each with a PRIVATE block arena, prefix pool, and
+        host tier — under cluster-affinity placement with least-loaded
+        spawns and hot-replica rebalancing.  One shared assigner is
+        consulted in global arrival order, so the token streams stay
+        identical to ``replicas=1``; returns ``(records, summary,
+        router)`` (the router in the scheduler slot).
         """
         from repro.core.prefix_pool import PrefixPool
-        from repro.serving.scheduler import (ArrivalQueue,
-                                             OnlineClusterAssigner,
-                                             OnlineScheduler)
+        from repro.serving.scheduler import ArrivalQueue, OnlineScheduler
         assert len(items) == len(arrivals)
         assert mode in ("continuous", "drain"), mode
+        if replicas > 1:
+            assert self.engine.use_paged, \
+                "replica serving requires the paged backend"
+            # ``scheduler`` doubles as the warm-router slot here: pass a
+            # previous replica call's returned router to replay warm
+            return self._serve_stream_replicas(
+                items, arrivals, replicas=replicas, max_batch=max_batch,
+                pool_budget_bytes=pool_budget_bytes, threshold=threshold,
+                max_clusters=max_clusters, mode=mode, chunk=chunk,
+                max_suffix_len=max_suffix_len, tree_levels=tree_levels,
+                tree_clusters=tree_clusters,
+                host_tier_bytes=host_tier_bytes, router=scheduler)
         stats = self.engine.cache_mgr.reset_stats()
         if scheduler is None:
-            if tree_levels > 1 and self.engine.use_split_prefix:
-                # seed the leaf population + chain specs from the
-                # trace's own retrievals (untimed bootstrap pass — the
-                # flat ``from_plan`` warm start with a deeper cut)
-                subgraphs, _ = self.retrieve_all(items)
-                emb = self.embed_for_clustering(subgraphs)
-                k = tree_clusters if tree_clusters is not None else \
-                    (max_clusters if max_clusters is not None else 8)
-                plan = plan_prefix_tree(subgraphs, emb, k,
-                                        tree_levels=tree_levels)
-                assigner = OnlineClusterAssigner.from_tree_plan(
-                    plan, emb, threshold=threshold,
-                    max_clusters=max_clusters)
-            else:
-                assigner = OnlineClusterAssigner(threshold=threshold,
-                                                 max_clusters=max_clusters)
+            assigner = self._make_assigner(items, threshold, max_clusters,
+                                           tree_levels, tree_clusters)
             # OnlineScheduler owns the stats wiring: it points the
             # pool's counters at the engine's (just-reset) window
             scheduler = OnlineScheduler(
@@ -495,6 +500,25 @@ class GraphRAGPipeline:
             f"online(b={max_batch})", records,
             prefill_savings=stats.prefill_savings)
         return records, summary, scheduler
+
+    def _make_assigner(self, items, threshold, max_clusters,
+                       tree_levels: int, tree_clusters):
+        """The online cluster assigner for a trace over ``items`` —
+        flat, or seeded from a multi-level prefix-tree plan over the
+        trace's own retrievals (untimed bootstrap pass — the flat
+        ``from_plan`` warm start with a deeper cut)."""
+        from repro.serving.scheduler import OnlineClusterAssigner
+        if tree_levels > 1 and self.engine.use_split_prefix:
+            subgraphs, _ = self.retrieve_all(items)
+            emb = self.embed_for_clustering(subgraphs)
+            k = tree_clusters if tree_clusters is not None else \
+                (max_clusters if max_clusters is not None else 8)
+            plan = plan_prefix_tree(subgraphs, emb, k,
+                                    tree_levels=tree_levels)
+            return OnlineClusterAssigner.from_tree_plan(
+                plan, emb, threshold=threshold, max_clusters=max_clusters)
+        return OnlineClusterAssigner(threshold=threshold,
+                                     max_clusters=max_clusters)
 
     def _prefetch_queued(self, scheduler, queue, items, now: float,
                          limit: int, memo: dict) -> float:
@@ -646,3 +670,214 @@ class GraphRAGPipeline:
             f"continuous(b={max_batch},chunk={chunk})", records,
             prefill_savings=stats.prefill_savings)
         return records, summary, scheduler
+
+    # ------------------------------------------------------------------
+    def _serve_stream_replicas(self, items: Sequence[QAItem],
+                               arrivals: Sequence[float], *,
+                               replicas: int, max_batch: int,
+                               pool_budget_bytes: int, threshold: float,
+                               max_clusters: Optional[int], mode: str,
+                               chunk: int,
+                               max_suffix_len: Optional[int],
+                               tree_levels: int,
+                               tree_clusters: Optional[int],
+                               host_tier_bytes: Optional[int],
+                               router=None) -> tuple:
+        """Serve one trace through a ``ReplicaRouter`` (DESIGN.md §13).
+
+        Interleaved per-replica virtual clocks: each iteration picks
+        the replica with the earliest actionable time — but only after
+        every arrival due by that time has been ROUTED (retrieve →
+        embed → one shared-assigner ``route`` per arrival, in global
+        arrival order), since a just-routed arrival may hand an idle
+        replica an earlier event.  The acting replica then admits from
+        its private queue and runs one decode chunk (continuous) or
+        drains one micro-batch to completion (drain), advancing its own
+        clock by the measured wall time; the router rebalances between
+        iterations.  Makespan = the slowest replica's clock — the
+        number the scaling bench divides query count by.
+
+        Pass a previous call's ``router`` to replay against warm
+        engines/placements (its counters are reset; the cluster
+        population and jit caches are the warmth)."""
+        from repro.serving.continuous import ContinuousEngine
+        from repro.serving.router import ReplicaRouter
+        if router is None:
+            assigner = self._make_assigner(items, threshold, max_clusters,
+                                           tree_levels, tree_clusters)
+            router = ReplicaRouter.build(
+                self.engine, assigner, replicas,
+                pool_budget_bytes=pool_budget_bytes,
+                prefix_tokens_fn=self._prefix_payload,
+                segment_tokens_fn=self._segment_payload,
+                host_tier_bytes=host_tier_bytes)
+        else:
+            assert len(router.replicas) == replicas, \
+                (len(router.replicas), replicas)
+            router.reset_counters()
+            for r in router.replicas:
+                st = r.engine.cache_mgr.reset_stats()
+                r.scheduler.pool.stats = st
+                if r.scheduler.pool.tier is not None:
+                    r.scheduler.pool.tier.stats = st
+        conts = None
+        if mode == "continuous":
+            max_sfx = max_suffix_len if max_suffix_len is not None else \
+                max(len(self.tokenizer.encode(
+                    self.suffix_text(it.question))) for it in items)
+            conts = [ContinuousEngine(r.engine, max_slots=max_batch,
+                                      chunk=chunk, max_suffix_len=max_sfx)
+                     for r in router.replicas]
+
+        order = sorted(range(len(items)), key=lambda i: arrivals[i])
+        ptr = 0
+        records: List[QueryRecord] = [None] * len(items)  # type: ignore
+
+        def route_due(now: float) -> None:
+            """Advance the global routing frontier to ``now``: assign +
+            place every not-yet-routed arrival with time <= now, in
+            arrival order (the token-identity invariant)."""
+            nonlocal ptr
+            while ptr < len(order) and arrivals[order[ptr]] <= now:
+                i = order[ptr]
+                ptr += 1
+                sgs, rts = self.retrieve_all([items[i]])
+                emb = self.embed_for_clustering(sgs)[0]
+                rt = router.route(emb, sgs[0])
+                t1 = time.perf_counter()
+                sfx = self.tokenizer.encode(
+                    self.suffix_text(items[i].question))
+                router.replicas[rt.replica].queue.push(arrivals[i], {
+                    "i": i, "a": rt.assignment, "sg": sgs[0],
+                    "emb": emb, "ret": rts[0], "sfx": sfx,
+                    "build": time.perf_counter() - t1})
+
+        def action_times():
+            out = []
+            for r in router.replicas:
+                busy = conts[r.idx].in_flight if conts else 0
+                if busy:
+                    out.append((r.clock, r.idx))
+                elif len(r.queue):
+                    out.append((max(r.clock, r.queue.next_arrival()),
+                                r.idx))
+            return out
+
+        while True:
+            times = action_times()
+            t_arr = arrivals[order[ptr]] if ptr < len(order) else None
+            if not times:
+                if t_arr is None:
+                    break                      # drained everywhere
+                route_due(t_arr)               # idle fleet: jump ahead
+                continue
+            t_act, idx = min(times)
+            if t_arr is not None and t_arr <= t_act:
+                # a pending arrival may hand an idle replica an event
+                # EARLIER than t_act — route first, then re-evaluate
+                route_due(t_act)
+                continue
+            r = router.replicas[idx]
+            r.clock = max(r.clock, t_act)
+            if conts is not None:
+                self._replica_step_continuous(r, conts[idx], router,
+                                              items, records)
+            else:
+                self._replica_step_drain(r, router, items, records,
+                                         max_batch)
+            router.maybe_rebalance()
+
+        base = sum(r.stats.prefill_tokens_baseline
+                   for r in router.replicas)
+        cached = sum(r.stats.prefill_tokens_cached
+                     for r in router.replicas)
+        summary = RunSummary.from_records(
+            f"replicas(n={replicas},{mode})", records,
+            prefill_savings=base / cached if cached else 1.0)
+        return records, summary, router
+
+    def _replica_step_continuous(self, r, cont, router, items,
+                                 records) -> None:
+        """One continuous-mode iteration on replica ``r``: admit due
+        arrivals into free slots, one ``chunk``-step decode, collect
+        retirements (same accounting as the single-engine loop)."""
+        batch = r.queue.drain(r.clock, cont.free_slots)
+        t0 = time.perf_counter()
+        if batch:
+            metas = [a.payload for a in batch]
+            payloads = [
+                {"i": m["i"], "wait": r.clock - a.time_s,
+                 "retrieval": m["ret"], "build": m["build"],
+                 "suffix_len": len(m["sfx"])}
+                for a, m in zip(batch, metas)]
+            admitted, prefill_s = r.scheduler.serve_continuous(
+                cont, [m["emb"] for m in metas],
+                [m["sg"] for m in metas], [m["sfx"] for m in metas],
+                payloads, now=r.clock,
+                assignments=[m["a"] for m in metas])
+            t_admit = time.perf_counter() - t0
+            engine_s = prefill_s + sum(aq.prefix_share_s
+                                       for aq in admitted)
+            share = max(0.0, t_admit - engine_s) / len(batch)
+            for aq in admitted:
+                aq.payload["share"] = share
+        if cont.in_flight:
+            cont.step()
+        r.clock += time.perf_counter() - t0
+        for res in cont.pop_retired():
+            aq = res.payload
+            meta = aq.payload
+            i = meta["i"]
+            it = items[i]
+            text = self.tokenizer.decode(res.tokens)
+            records[i] = QueryRecord(
+                query=it.question, answer=it.answer, generated=text,
+                correct=self._check(text, it.answer),
+                retrieval_s=meta["retrieval"],
+                queue_wait_s=meta["wait"],
+                cluster_share_s=meta.get("share", 0.0),
+                prompt_build_s=meta["build"],
+                prefix_share_s=aq.prefix_share_s,
+                prefill_s=res.prefill_s, decode_s=res.decode_s,
+                decode_steps=res.decode_steps,
+                prompt_tokens=aq.prefix_len + meta["suffix_len"],
+                cached_tokens=aq.prefix_len if aq.pool_hit else 0,
+                replica=r.idx)
+            router.retire(r.idx, aq.cluster_id)
+
+    def _replica_step_drain(self, r, router, items, records,
+                            max_batch: int) -> None:
+        """One drain-mode iteration on replica ``r``: serve one
+        micro-batch to full completion (the oracle loop's economics,
+        replicated)."""
+        batch = r.queue.drain(r.clock, max_batch)
+        if not batch:
+            return
+        metas = [a.payload for a in batch]
+        t0 = time.perf_counter()
+        served = r.scheduler.serve_batch(
+            [m["emb"] for m in metas], [m["sg"] for m in metas],
+            [m["sfx"] for m in metas],
+            assignments=[m["a"] for m in metas])
+        t_serve = time.perf_counter() - t0
+        engine_s = sum(s.prefix_share_s + s.prefill_s + s.decode_s
+                       for s in served)
+        share = max(0.0, t_serve - engine_s) / len(batch)
+        for a, m, sq in zip(batch, metas, served):
+            i = m["i"]
+            it = items[i]
+            text = self.tokenizer.decode(sq.tokens)
+            records[i] = QueryRecord(
+                query=it.question, answer=it.answer, generated=text,
+                correct=self._check(text, it.answer),
+                retrieval_s=m["ret"],
+                queue_wait_s=r.clock - a.time_s,
+                cluster_share_s=share, prompt_build_s=m["build"],
+                prefix_share_s=sq.prefix_share_s,
+                prefill_s=sq.prefill_s, decode_s=sq.decode_s,
+                decode_steps=self.engine.max_new_tokens - 1,
+                prompt_tokens=sq.prefix_len + len(m["sfx"]),
+                cached_tokens=sq.prefix_len if sq.pool_hit else 0,
+                replica=r.idx)
+            router.retire(r.idx, sq.cluster_id)
+        r.clock += t_serve

@@ -82,14 +82,16 @@ class Workbench:
             use_soft_prompt=use_soft_prompt)
 
 
-def serving_report(pipe: GraphRAGPipeline) -> dict:
+def serving_report(pipe: GraphRAGPipeline, router=None) -> dict:
     """Engine-recorded SubGCache accounting for the pipeline's current
     stats window (the engine updates ``cache_mgr.stats`` as it serves;
     ``run_subgcache`` resets the window per run).  ``prefill_savings``
     is the paper's headline ratio: tokens a vanilla pipeline would
-    prefill over tokens actually prefilled."""
+    prefill over tokens actually prefilled.  Pass the ``ReplicaRouter``
+    a ``serve_stream(replicas=N)`` call returned to append the
+    per-replica placement/balance breakdown (DESIGN.md §13)."""
     st = pipe.engine.cache_mgr.stats
-    return {
+    out = {
         "num_queries": st.num_queries,
         "num_clusters": st.num_clusters,
         "clusters_split": st.clusters_split,
@@ -117,6 +119,10 @@ def serving_report(pipe: GraphRAGPipeline) -> dict:
         # host tier (DESIGN.md §12; all-zero when no tier is attached)
         "tier": tier_report(st),
     }
+    if router is not None:
+        from repro.serving.metrics import router_report
+        out["router"] = router_report(router)
+    return out
 
 
 def _dataset(name: str):

@@ -104,6 +104,13 @@ class ServingEngine:
                  paged: Optional[bool] = None, block_size: int = 64,
                  arena_blocks: Optional[int] = None, fused: bool = True,
                  quantize_prefix: bool = False):
+        # recorded BEFORE any defaulting mutates the locals, so
+        # ``clone()`` rebuilds a replica from the caller's own spec
+        self._ctor_kwargs = dict(
+            max_cache_len=max_cache_len, max_new_tokens=max_new_tokens,
+            bucket=bucket, split_prefix=split_prefix, paged=paged,
+            block_size=block_size, arena_blocks=arena_blocks,
+            fused=fused, quantize_prefix=quantize_prefix)
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer
@@ -153,6 +160,14 @@ class ServingEngine:
         else:
             self.block_pool = None
         self.quantize_prefix = bool(quantize_prefix) and self.use_paged
+
+    def clone(self) -> "ServingEngine":
+        """A fresh engine over the SAME params/config/tokenizer with a
+        PRIVATE block arena, cache manager, and jit caches — one serving
+        replica (DESIGN.md §13).  Params are shared by reference (pure
+        reads), so N replicas cost N arenas, not N models."""
+        return ServingEngine(self.params, self.cfg, self.tok,
+                             **self._ctor_kwargs)
 
     # ------------------------------------------------------------------
     # jitted building blocks (cached per shape bucket)

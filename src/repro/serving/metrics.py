@@ -51,6 +51,8 @@ class QueryRecord:
                                       # (exact under continuous serving)
     prompt_tokens: int = 0            # full prompt incl. soft-prompt embeds
     cached_tokens: int = 0            # tokens served from the prefix cache
+    replica: int = 0                  # serving replica (router traces;
+                                      # 0 for single-engine serving)
 
     @property
     def pftt(self) -> float:
@@ -127,7 +129,68 @@ def trace_summary(records: List[QueryRecord], stats=None) -> dict:
                                        + stats.suffix_tokens_computed)
         out["tree"] = tree_report(stats)
         out["tier"] = tier_report(stats)
+    if any(r.replica for r in records):
+        out["replicas"] = {
+            str(i): {
+                "queries": len(grp),
+                "mean_ttft_ms": round(
+                    1e3 * float(np.mean([r.ttft for r in grp])), 3),
+                "p95_ttft_ms": round(1e3 * float(np.percentile(
+                    [r.ttft for r in grp], 95)), 3),
+            }
+            for i, grp in sorted(_by_replica(records).items())}
     return out
+
+
+def _by_replica(records: List[QueryRecord]) -> dict:
+    out: dict = {}
+    for r in records:
+        out.setdefault(r.replica, []).append(r)
+    return out
+
+
+def router_report(router, records: Optional[List[QueryRecord]] = None
+                  ) -> dict:
+    """Reduce a ``ReplicaRouter`` run to the placement/balance
+    quantities the scaling and skew benches assert on (DESIGN.md §13).
+
+    Per replica: queries routed/retired, cluster spawns, the
+    cluster-affinity hit rate (fraction of routed queries that landed
+    on a cluster already placed there — prefix locality, THE router
+    policy's claim), migrations in/out, pool hit rate and arena
+    occupancy from the replica's own ``CacheStats`` window, and —
+    when ``records`` is passed — mean TTFT over the queries it served.
+    Aggregate: total migrations and the imbalance gauge (max/mean of
+    per-replica routed counts; 1.0 = perfectly even)."""
+    by_rep = _by_replica(records) if records is not None else {}
+    per = {}
+    for r in router.replicas:
+        st = r.stats
+        row = {
+            "routed": r.routed,
+            "retired": r.retired,
+            "spawns": r.spawns,
+            "affinity_hit_rate": round(
+                router.affinity_hit_rate(r.idx), 4),
+            "migrations_in": st.migrations_in,
+            "migrations_out": st.migrations_out,
+            "pool_hit_rate": round(st.pool_hit_rate, 4),
+            "block_occupancy": round(st.block_occupancy, 4),
+            "clusters_placed": sum(
+                1 for v in router.placement.values() if v == r.idx),
+        }
+        grp = by_rep.get(r.idx)
+        if grp:
+            row["mean_ttft_ms"] = round(
+                1e3 * float(np.mean([q.ttft for q in grp])), 3)
+        per[str(r.idx)] = row
+    return {
+        "replicas": per,
+        "num_replicas": len(router.replicas),
+        "migrations": router.migrations,
+        "imbalance": round(router.imbalance(), 4),
+        "clusters": len(router.placement),
+    }
 
 
 def tree_report(stats) -> dict:

@@ -1,0 +1,309 @@
+"""Cluster-affinity router over N serving replicas (DESIGN.md §13).
+
+The single-engine serving stack caps throughput at one device's decode
+rate no matter how many queries share a prefix.  ``ReplicaRouter`` is
+the data-parallel half of the replica subsystem (the tensor-parallel
+half is ``distributed/kv_sharding.py``): N ``ServingEngine`` replicas,
+each owning a PRIVATE ``KVBlockPool`` arena, ``PrefixPool``, host tier,
+and ``CacheStats`` window, behind one router that decides — per query,
+at arrival time — which replica serves it.
+
+Three policies, in priority order:
+
+* **cluster affinity** — a cluster's prefix chain is materialized on
+  exactly ONE replica; members route there.  Prefix reuse is the whole
+  SubGCache win, and a cluster spread over two replicas would prefill
+  its representative twice and halve both hit rates.
+* **least-loaded spawn** — a NEW cluster is placed on the replica with
+  the smallest backlog (routed − retired; ties round-robin), so cold
+  clusters spread instead of piling onto replica 0.
+* **rebalance by migration** — when one replica runs hot
+  (``load_max > hot_ratio × load_mean`` with a gap ≥ ``min_gap``), the
+  router moves a co-located cluster from the hot replica to the
+  coldest one — a DRAINED one (no pending backlog: migration redirects
+  future arrivals only, so a backlogged cluster would leave its
+  queries behind while taking its resident prefix with it).  The
+  move is the existing HOST ROUND-TRIP — targeted
+  ``PrefixPool.demote_to_host`` on the source, a ``HostSegment``
+  handoff between the two host tiers, lazy ``promote`` on the
+  destination at the cluster's next hit — never a device-to-device
+  copy path to maintain.  Migration affects FUTURE traffic only;
+  queries already routed keep their replica.
+
+ONE ``OnlineClusterAssigner`` is shared by every replica and consulted
+by the router in GLOBAL arrival order.  That is the token-identity
+argument: cluster evolution (centroid drift, spawns) is byte-identical
+to a single-replica run of the same trace, and greedy generation
+depends only on (prefix chain tokens, suffix tokens, params) — so each
+query's token stream matches the single-replica drain oracle
+regardless of replica count or placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.scheduler import (ArrivalQueue, Assignment,
+                                     OnlineClusterAssigner,
+                                     OnlineScheduler)
+
+
+@dataclasses.dataclass
+class Replica:
+    """One serving replica: a private engine/pool/tier stack plus the
+    router-side load account.  ``load`` (routed − retired) is the
+    backlog the placement policies balance."""
+    idx: int
+    engine: Any                      # ServingEngine (cloned substrate)
+    scheduler: OnlineScheduler       # shared assigner, PRIVATE pool
+    queue: ArrivalQueue = dataclasses.field(default_factory=ArrivalQueue)
+    clock: float = 0.0               # this replica's virtual time
+    routed: int = 0                  # queries ever routed here
+    retired: int = 0                 # queries finished here
+    affinity_hits: int = 0           # routed to an existing placement
+    spawns: int = 0                  # clusters first placed here
+
+    @property
+    def load(self) -> int:
+        return self.routed - self.retired
+
+    @property
+    def stats(self):
+        return self.engine.cache_mgr.stats
+
+
+@dataclasses.dataclass
+class Route:
+    """One routing decision: the (globally ordered) assignment plus the
+    replica that will serve the query."""
+    replica: int
+    assignment: Assignment
+
+
+class ReplicaRouter:
+    """Cluster-affinity front-end over ``replicas`` serving stacks.
+
+    Build with :meth:`build` (clones the engine, wires per-replica
+    pools/tiers/stats).  The serving loop calls :meth:`route` once per
+    arrival IN ARRIVAL ORDER, :meth:`retire` when a query finishes, and
+    :meth:`maybe_rebalance` between iterations.  The router never
+    touches tokens — placement only decides WHERE a prefix chain is
+    resident, so migrations and rebalances cannot change output.
+    """
+
+    def __init__(self, replicas: List[Replica],
+                 assigner: OnlineClusterAssigner, *,
+                 hot_ratio: float = 1.5, min_gap: int = 2) -> None:
+        assert replicas, "need at least one replica"
+        self.replicas = replicas
+        self.assigner = assigner
+        self.hot_ratio = float(hot_ratio)
+        self.min_gap = int(min_gap)
+        self.placement: Dict[Hashable, int] = {}   # cluster -> replica
+        self.pending: Dict[Hashable, int] = {}     # cluster backlog
+        self.cluster_routed: Dict[Hashable, int] = {}  # traffic per run
+        self.migrations = 0
+        self._spawn_rr = 0                         # tie-break cursor
+        self._migrated: set = set()                # one move per cluster
+                                                   # per run (no ping-pong)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, engine, assigner: OnlineClusterAssigner, n: int, *,
+              pool_budget_bytes: int, prefix_tokens_fn,
+              segment_tokens_fn=None,
+              host_tier_bytes: Optional[int] = None,
+              hot_ratio: float = 1.5, min_gap: int = 2
+              ) -> "ReplicaRouter":
+        """N replica stacks over one model: replica 0 reuses ``engine``
+        itself (its params/tokenizer/jit substrate), replicas 1..N-1
+        are ``engine.clone()``s — same params BY REFERENCE, private
+        arenas.  Every replica gets its own ``PrefixPool`` and host
+        tier (the tier is mandatory: it is the migration transport);
+        ``host_tier_bytes`` defaults to the pool budget."""
+        from repro.core.prefix_pool import PrefixPool
+        from repro.core.tiered import HostTier
+        assert n >= 1, n
+        tier_bytes = host_tier_bytes if host_tier_bytes is not None \
+            else pool_budget_bytes
+        replicas = []
+        for i in range(n):
+            eng = engine if i == 0 else engine.clone()
+            eng.cache_mgr.reset_stats()
+            sched = OnlineScheduler(eng, assigner,
+                                    PrefixPool(pool_budget_bytes),
+                                    prefix_tokens_fn,
+                                    segment_tokens_fn=segment_tokens_fn)
+            sched.pool.attach_host_tier(HostTier(tier_bytes))
+            replicas.append(Replica(idx=i, engine=eng, scheduler=sched))
+        return cls(replicas, assigner, hot_ratio=hot_ratio,
+                   min_gap=min_gap)
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+    def route(self, embedding: np.ndarray, subgraph) -> Route:
+        """Assign (shared assigner — call in GLOBAL arrival order) and
+        place one query: affinity if the cluster is placed, else
+        least-loaded spawn."""
+        a = self.assigner.assign(embedding, subgraph)
+        cid = a.cluster_id
+        ridx = self.placement.get(cid)
+        if ridx is None:
+            ridx = self._least_loaded()
+            self.placement[cid] = ridx
+            self.replicas[ridx].spawns += 1
+        else:
+            self.replicas[ridx].affinity_hits += 1
+        self.replicas[ridx].routed += 1
+        self.pending[cid] = self.pending.get(cid, 0) + 1
+        self.cluster_routed[cid] = self.cluster_routed.get(cid, 0) + 1
+        return Route(replica=ridx, assignment=a)
+
+    def _least_loaded(self) -> int:
+        loads = [r.load for r in self.replicas]
+        lo = min(loads)
+        n = len(self.replicas)
+        # round-robin among ties so a burst of cold spawns spreads even
+        # while every backlog still reads zero
+        for k in range(n):
+            i = (self._spawn_rr + k) % n
+            if loads[i] == lo:
+                self._spawn_rr = (i + 1) % n
+                return i
+        return int(np.argmin(loads))      # unreachable
+
+    def retire(self, replica: int, cluster_id: Hashable, n: int = 1
+               ) -> None:
+        """Account ``n`` finished queries of ``cluster_id`` on the
+        replica that actually served them (which may differ from the
+        cluster's CURRENT placement if it migrated mid-flight)."""
+        self.replicas[replica].retired += n
+        left = self.pending.get(cluster_id, 0) - n
+        if left > 0:
+            self.pending[cluster_id] = left
+        else:
+            self.pending.pop(cluster_id, None)
+
+    # ------------------------------------------------------------------
+    # rebalancing
+    # ------------------------------------------------------------------
+    def maybe_rebalance(self) -> Optional[Hashable]:
+        """Migrate ONE cluster off the hottest replica when the load
+        imbalance crosses the trigger; returns the migrated cluster id
+        (None: balanced, or nothing movable).
+
+        The candidate must have ZERO pending backlog: migration only
+        redirects FUTURE arrivals (queries already queued stay where
+        they were routed), so moving a backlogged cluster destroys its
+        device-resident prefix on the hot replica while that replica
+        STILL has its queries to serve — a re-prefill on the busiest
+        engine, all cost and no relief.  Among the drained candidates
+        the one with the most routed traffic this run is the best bet
+        to keep receiving arrivals; clusters carrying over half the hot
+        replica's traffic are excluded (moving the dominant cluster
+        just swaps which replica is hot)."""
+        if len(self.replicas) < 2:
+            return None
+        loads = [r.load for r in self.replicas]
+        mean = sum(loads) / len(loads)
+        hi = int(np.argmax(loads))
+        lo = int(np.argmin(loads))
+        # loads[lo] == 0: the coldest replica is DRAINED, so the gap is
+        # a transient (the fleet is absorbing faster than arrivals) —
+        # moving placements at it just thrashes the next trace's start
+        if mean <= 0 or loads[lo] == 0 \
+                or loads[hi] <= self.hot_ratio * mean \
+                or loads[hi] - loads[lo] < self.min_gap:
+            return None
+        cap = max(1, self.replicas[hi].routed // 2)
+        cands = [(self.cluster_routed.get(cid, 0), cid)
+                 for cid, r in self.placement.items()
+                 if r == hi and cid not in self._migrated
+                 and self.pending.get(cid, 0) == 0
+                 and 0 < self.cluster_routed.get(cid, 0) <= cap]
+        if not cands:
+            return None
+        _, cid = max(cands, key=lambda t: t[0])
+        self._migrated.add(cid)
+        self.migrate(cid, hi, lo)
+        return cid
+
+    def migrate(self, cluster_id: Hashable, src: int, dst: int) -> int:
+        """Move ``cluster_id``'s placement from ``src`` to ``dst`` and
+        carry its resident chain segments along through the host
+        round-trip: targeted demote on the source, ``HostSegment``
+        handoff into the destination tier, lazy promote on the
+        destination at the cluster's next ``ensure_chain``.  Segments
+        that refuse to demote (pinned by an in-flight row, or shared
+        ancestors still anchoring another cluster's chain) are simply
+        skipped — the destination recomputes them through the ordinary
+        miss path, so correctness never depends on the move landing.
+        Returns the number of segments actually handed over."""
+        s = self.replicas[src]
+        d = self.replicas[dst]
+        moved = 0
+        # leaf-first: a demoted leaf un-anchors its parent for the next
+        # iteration, peeling the chain bottom-up in one pass
+        for key in reversed(self.chain_path(cluster_id)):
+            if not s.scheduler.pool.demote_to_host(key):
+                continue
+            hseg = s.scheduler.pool.tier.pop(key)
+            if hseg is not None and d.scheduler.pool.tier.admit(hseg):
+                moved += 1
+        s.stats.record_migration(out=moved)
+        d.stats.record_migration(into=moved)
+        self.placement[cluster_id] = dst
+        self.migrations += 1
+        return moved
+
+    def chain_path(self, cluster_id: Hashable) -> List[Hashable]:
+        """The cluster's pool keys root→leaf — same key scheme as
+        ``OnlineScheduler.ensure_chain``."""
+        c = self.assigner.clusters[cluster_id]
+        if c.chain is not None:
+            return [("seg", node) for node in c.chain.keys]
+        return [cluster_id]
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def reset_counters(self) -> None:
+        """Zero the per-run load/affinity/migration counters and the
+        virtual clocks; the placement map, cluster population, and every
+        replica's engine/jit substrate — the warmth — are kept.  Call
+        before a timed replay over a warmed router."""
+        for r in self.replicas:
+            r.routed = r.retired = r.affinity_hits = r.spawns = 0
+            r.clock = 0.0
+        self.pending.clear()
+        self.cluster_routed.clear()
+        self.migrations = 0
+        self._migrated.clear()
+
+    @property
+    def makespan(self) -> float:
+        """The slowest replica's virtual clock after a trace — the
+        denominator of the scaling bench's throughput."""
+        return max(r.clock for r in self.replicas)
+
+    @property
+    def loads(self) -> List[int]:
+        return [r.load for r in self.replicas]
+
+    def imbalance(self) -> float:
+        """Max/mean replica load — 1.0 is perfectly balanced (0 when
+        idle).  The aggregate gauge the skew bench reads."""
+        loads = [r.routed for r in self.replicas]
+        mean = sum(loads) / len(loads)
+        return max(loads) / mean if mean > 0 else 0.0
+
+    def affinity_hit_rate(self, replica: int) -> float:
+        """Of the queries routed to ``replica``, how many landed on a
+        cluster already placed there (prefix locality, per replica)."""
+        r = self.replicas[replica]
+        return r.affinity_hits / r.routed if r.routed else 0.0

@@ -467,7 +467,8 @@ class OnlineScheduler:
 
     def serve_batch(self, embeddings: Sequence[np.ndarray],
                     subgraphs: Sequence[Subgraph],
-                    suffix_token_lists: Sequence[List[int]]
+                    suffix_token_lists: Sequence[List[int]],
+                    assignments: Optional[Sequence[Assignment]] = None
                     ) -> List[ServedQuery]:
         """Assign, materialize prefixes, and serve one micro-batch.
 
@@ -479,12 +480,19 @@ class OnlineScheduler:
         same code path here.  Prefix-prefill cost is attributed to the
         queries of the cluster that caused it (uniform share), batched
         prefill/decode to every member of its sub-batch share.
+
+        ``assignments`` bypasses the internal ``assigner.assign`` pass:
+        the ``ReplicaRouter`` assigns clusters once, globally, at
+        arrival time (DESIGN.md §13) and hands each replica's scheduler
+        the pre-made ``Assignment`` records — cluster evolution must
+        not depend on how arrivals interleave across replicas.
         """
         from repro.serving.engine import Request
         n = len(suffix_token_lists)
         assert len(embeddings) == n and len(subgraphs) == n
-        assigns = [self.assigner.assign(e, sg)
-                   for e, sg in zip(embeddings, subgraphs)]
+        assigns = list(assignments) if assignments is not None else \
+            [self.assigner.assign(e, sg)
+             for e, sg in zip(embeddings, subgraphs)]
         order = sorted(set(a.cluster_id for a in assigns))
         states, hits, prefill_costs = {}, {}, {}
         pinned: List[Any] = []           # pool keys (full path per cluster)
@@ -527,7 +535,8 @@ class OnlineScheduler:
                          subgraphs: Sequence[Subgraph],
                          suffix_token_lists: Sequence[List[int]],
                          payloads: Optional[Sequence[Any]] = None,
-                         now: float = 0.0
+                         now: float = 0.0,
+                         assignments: Optional[Sequence[Assignment]] = None
                          ) -> Tuple[List[AdmittedQuery], float]:
         """Assign + materialize prefixes + ADMIT one group of arrivals
         into ``cont`` (a ``ContinuousEngine``) — the continuous
@@ -550,8 +559,9 @@ class OnlineScheduler:
         assert n <= cont.free_slots, (n, cont.free_slots)
         if payloads is None:
             payloads = [None] * n
-        assigns = [self.assigner.assign(e, sg)
-                   for e, sg in zip(embeddings, subgraphs)]
+        assigns = list(assignments) if assignments is not None else \
+            [self.assigner.assign(e, sg)
+             for e, sg in zip(embeddings, subgraphs)]
         order = sorted(set(a.cluster_id for a in assigns))
         members_of = {cid: sum(1 for a in assigns if a.cluster_id == cid)
                       for cid in order}

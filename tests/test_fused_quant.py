@@ -252,6 +252,53 @@ def test_int8_pool_doubles_blocks_at_equal_budget():
     assert pool16.prefix_block_bytes == pool16.block_bytes
 
 
+def _leaf_bytes(tree):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_resident_bytes_match_priced_layout(quant):
+    """Satellite regression (quantize_prefix dead-arena bug): the bytes
+    the pool PRICES (``device_bytes``) equal the bytes the arenas
+    actually HOLD on device — summed jax leaf nbytes.  Before the fix,
+    a quantized pool also allocated ``num_blocks`` compute-dtype arena
+    rows it never addressed, so residency silently exceeded the priced
+    layout ~3x."""
+    cfg = _gqa_cfg(dtype="bfloat16")
+    pool = KVBlockPool(cfg, num_blocks=16, block_size=8,
+                       quantize_prefix=quant)
+    held = _leaf_bytes(pool.arena)
+    if quant:
+        held += _leaf_bytes(pool.qarena)
+    assert pool.device_bytes == held
+
+
+def test_from_budget_sizes_suffix_and_prefix_spaces_separately():
+    """Under quantize_prefix the two address spaces get their OWN
+    counts from the same budget: compute-dtype suffix rows at the
+    compute block price, int8 prefix rows at the int8 price (~2x as
+    many) — not one count priced twice."""
+    cfg = _gqa_cfg(dtype="bfloat16")
+    budget = 512 * 1024
+    pool = KVBlockPool.from_budget(cfg, budget, 64, quantize_prefix=True)
+    bb = KVBlockPool.block_bytes_for(cfg, 64)
+    pb = KVBlockPool.prefix_block_bytes_for(cfg, 64, quantize_prefix=True)
+    assert pool.suffix_blocks == max(2, budget // bb + 1)
+    assert pool.num_blocks == max(2, budget // pb + 1)
+    assert pool.num_blocks > pool.suffix_blocks
+    # explicit suffix_blocks wins over the derived count
+    pool2 = KVBlockPool.from_budget(cfg, budget, 64,
+                                    quantize_prefix=True,
+                                    suffix_blocks=5)
+    assert pool2.suffix_blocks == 5
+    # the shrunk suffix space still serves: write a prefix, allocate a
+    # suffix path on the separate allocator
+    dense = M.init_cache(cfg, 1, 64)
+    page = pool.write_prefix(dense, 19)
+    assert pool.prefix_blocks_in_use == len(page.blocks)
+    assert pool.free_suffix_blocks == pool.suffix_allocator.num_usable
+
+
 def test_state_bytes_and_gauges_reflect_arena_dtype():
     """PrefixPool/CacheStats byte accounting prices paged states at the
     layout their blocks occupy: the quantized pool reports int8+scales

@@ -1,0 +1,284 @@
+"""Sharded KV arenas + head-parallel kernel wrappers (DESIGN.md §13).
+
+Three gates, in order of strength:
+
+1. Partition-rule coverage: every attention-paged zoo config maps its
+   block-arena leaves to structurally valid PartitionSpecs in every
+   mode — Hkv-divisible (heads), Hkv-non-divisible-but-Dh-divisible
+   (Dh fallback), and neither (replicate).  Pure-function tests; run
+   on a single device.
+2. Kernel-level bitwise identity: with a >1 'model' mesh configured,
+   the shard_map paged/fused wrappers return EXACTLY the single-device
+   result (head-parallel attention has no cross-head reduction, so no
+   collective and no reduction-order drift).  Needs >= 2 devices —
+   skipped unless ``XLA_FLAGS=--xla_force_host_platform_device_count``
+   provides them (the CI ``multidevice`` job; EXPERIMENTS.md).
+3. Engine-level token identity: a ``shard_engine``'d ServingEngine
+   serves token-identically to the plain engine over flat and chained
+   prefixes — f32/XLA (GSPMD-sharded gather path) and bf16/Pallas
+   (shard_map kernel path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.data.tokenizer import Tokenizer
+from repro.distributed import kv_sharding as KS
+from repro.kernels import ops as kops
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import Request, ServingEngine
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count>=2")
+
+
+# ----------------------------------------------------------------------
+# 1. partition rules (single device; FakeMesh drives the pure functions)
+# ----------------------------------------------------------------------
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    def __init__(self, nm):
+        self.shape = {"data": 1, "model": nm}
+
+
+def _paged_cfgs():
+    """Zoo configs whose stacks the paged arena covers (attention-only,
+    no cross-attention)."""
+    out = []
+    for arch in R.ASSIGNED_ARCHS:
+        cfg = R.get_config(arch)
+        try:
+            jax.eval_shape(lambda c=cfg: M.init_block_arena(c, 2, 8))
+        except ValueError:
+            continue
+        out.append(arch)
+    return out
+
+
+PAGED_ARCHS = _paged_cfgs()
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+@pytest.mark.parametrize("nm", [2, 4, 8, 16])
+def test_arena_pspecs_zoo(arch, nm):
+    """Every paged zoo config gets structurally valid arena specs: the
+    'model' axis lands on Hkv (heads mode) or Dh (fallback) only when
+    it divides, positions always replicate, and every spec's rank
+    matches its leaf."""
+    cfg = R.get_config(arch)
+    mesh = FakeMesh(nm)
+    mode = KS.kv_shard_mode(cfg, mesh)
+    if cfg.num_kv_heads % nm == 0:
+        assert mode == "heads"
+    elif cfg.head_dim_ % nm == 0:
+        assert mode == "dh"
+    else:
+        assert mode == "replicate"
+    arena = jax.eval_shape(lambda: M.init_block_arena(cfg, 4, 16))
+    specs = jax.tree_util.tree_map_with_path(
+        lambda p, x: KS.arena_leaf_spec(
+            getattr(p[-1], "key", None), x.shape, cfg, mesh), arena)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    assert flat
+    for kp, spec in flat:
+        key = getattr(kp[-1], "key", None)
+        if key == "pos":
+            assert all(s is None for s in spec)
+        elif mode == "heads":
+            assert spec[-2] == "model" and spec[-1] is None
+        elif mode == "dh":
+            assert spec[-1] == "model" and spec[-2] is None
+        else:
+            assert all(s is None for s in spec)
+
+
+def test_big_configs_shard_heads_on_production_width():
+    """The ISSUE's named big configs all run heads mode on an 8-wide
+    model axis (Hkv = 8 across the board)."""
+    for arch in ("mixtral-8x22b", "arctic-480b", "command-r-35b"):
+        if arch not in R.ASSIGNED_ARCHS:
+            continue
+        cfg = R.get_config(arch)
+        assert KS.kv_shard_mode(cfg, FakeMesh(8)) == "heads", arch
+
+
+def test_quantized_scale_leaves_shard_with_heads():
+    """qarena scale leaves [NB, Hkv] carry 'model' on their head dim in
+    heads mode and replicate otherwise."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=64, dtype="float32")
+    heads = KS.arena_leaf_spec("k_scale", (8, 2), cfg, FakeMesh(2))
+    assert tuple(heads) == (None, "model")
+    # Hkv=2 on a 4-wide axis: Dh fallback — scales replicate
+    assert KS.kv_shard_mode(cfg, FakeMesh(4)) == "dh"
+    rep = KS.arena_leaf_spec("k_scale", (8, 2), cfg, FakeMesh(4))
+    assert all(s is None for s in rep)
+
+
+# ----------------------------------------------------------------------
+# 2. kernel-level bitwise identity under shard_map
+# ----------------------------------------------------------------------
+def _mesh2():
+    return jax.make_mesh((1, 2), ("data", "model"))
+
+
+def _kernel_case(seed=0, b=3, hq=4, hkv=2, d=16, bs=8, nb=12):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    k = jax.random.normal(ks[0], (nb, hkv, bs, d))
+    v = jax.random.normal(ks[1], (nb, hkv, bs, d))
+    npb = 4
+    k_pos = jnp.arange(nb * bs).reshape(nb, bs) % (npb * bs)
+    k_pos = jnp.where(jnp.arange(nb)[:, None] == 0, -1, k_pos)
+    pt = jnp.asarray(
+        np.random.default_rng(seed).integers(1, nb, size=(b, npb)),
+        jnp.int32)
+    tq = 8
+    q = jax.random.normal(ks[2], (b, hq, tq, d))
+    q_pos = npb * bs + jnp.broadcast_to(jnp.arange(tq), (b, tq))
+    return q, k, v, q_pos, k_pos, pt
+
+
+@multidevice
+def test_paged_partial_bitwise_under_mesh():
+    q, k, v, q_pos, k_pos, pt = _kernel_case()
+    base = kops.paged_attention_partial(q, k, v, q_pos, k_pos, pt)
+    kops.configure_mesh(_mesh2())
+    try:
+        got = kops.paged_attention_partial(q, k, v, q_pos, k_pos, pt)
+    finally:
+        kops.configure_mesh(None)
+    for a, b_ in zip(base, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+@multidevice
+def test_paged_decode_bitwise_under_mesh():
+    q, k, v, q_pos, k_pos, pt = _kernel_case()
+    qd, qdp = q[:, :, 0], q_pos[:, 0]
+    base = kops.paged_decode_gqa(qd, k, v, qdp, k_pos, pt)
+    basep = kops.paged_decode_gqa_partial(qd, k, v, qdp, k_pos, pt)
+    kops.configure_mesh(_mesh2())
+    try:
+        got = kops.paged_decode_gqa(qd, k, v, qdp, k_pos, pt)
+        gotp = kops.paged_decode_gqa_partial(qd, k, v, qdp, k_pos, pt)
+    finally:
+        kops.configure_mesh(None)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+    for a, b_ in zip(basep, gotp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+@multidevice
+@pytest.mark.parametrize("quantized", [False, True], ids=["f32", "int8"])
+def test_fused_cascade_bitwise_under_mesh(quantized):
+    q, pk, pv, q_pos, p_kpos, ppt = _kernel_case(seed=1)
+    _, sk, sv, _, s_kpos, spt = _kernel_case(seed=2)
+    ks = vs = None
+    if quantized:
+        amax = jnp.max(jnp.abs(pk), axis=(2, 3))
+        ks = jnp.where(amax > 0, amax / 127.0, 1.0)
+        vs = jnp.ones_like(ks)
+        pk = jnp.clip(jnp.round(pk / ks[..., None, None]),
+                      -127, 127).astype(jnp.int8)
+        pv = jnp.clip(jnp.round(pv), -127, 127).astype(jnp.int8)
+        # kernel expects scales [NB, Hkv]
+        ks, vs = ks, vs
+    args = (q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos, ppt, spt, ks, vs)
+    base = kops.fused_paged_attention(*args)
+    based = kops.fused_paged_decode_gqa(q[:, :, 0], pk, pv, sk, sv,
+                                        q_pos[:, 0], p_kpos, s_kpos,
+                                        ppt, spt, ks, vs)
+    kops.configure_mesh(_mesh2())
+    try:
+        got = kops.fused_paged_attention(*args)
+        gotd = kops.fused_paged_decode_gqa(q[:, :, 0], pk, pv, sk, sv,
+                                           q_pos[:, 0], p_kpos, s_kpos,
+                                           ppt, spt, ks, vs)
+    finally:
+        kops.configure_mesh(None)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+    np.testing.assert_array_equal(np.asarray(based), np.asarray(gotd))
+
+
+@multidevice
+def test_nondivisible_heads_fall_through():
+    """Hkv=3 on a 2-wide model axis: the wrappers must take the plain
+    path (no shard_map) and still agree with themselves."""
+    q, k, v, q_pos, k_pos, pt = _kernel_case(hq=6, hkv=3)
+    base = kops.paged_attention_partial(q, k, v, q_pos, k_pos, pt)
+    kops.configure_mesh(_mesh2())
+    try:
+        assert kops._model_shards(3) == 0
+        got = kops.paged_attention_partial(q, k, v, q_pos, k_pos, pt)
+    finally:
+        kops.configure_mesh(None)
+    for a, b_ in zip(base, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+# ----------------------------------------------------------------------
+# 3. engine-level token identity
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a graph of nodes and edges answers questions"])
+
+
+def _cfg(vocab, dtype="float32", impl="xla"):
+    return ModelConfig(name="shard-test", family="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                       vocab_size=vocab, dtype=dtype,
+                       attention_impl=impl)
+
+
+def _serve_all(eng, tok):
+    t0 = tok.encode("a graph of nodes and edges", bos=True)
+    t1 = tok.encode("the quick brown fox jumps over the lazy dog")
+    sfx = [tok.encode("answers questions"), tok.encode("and edges"),
+           tok.encode("the quick")]
+    flat, _ = eng.prefill_prefix(t0 + t1, _record=False)
+    root, _ = eng.prefill_prefix(t0, _record=False)
+    leaf, _ = eng.prefill_prefix_extension(root, t1, _record=False)
+    out_flat, t = eng.serve([Request(s, flat) for s in sfx],
+                            _record=False)
+    assert t["paged"]
+    out_tree, _ = eng.serve([Request(s, leaf) for s in sfx],
+                            _record=False)
+    for st in (leaf, root, flat):
+        st.release()
+    return out_flat, out_tree
+
+
+@multidevice
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+def test_sharded_engine_token_identity(tok, dtype, impl):
+    """THE tentpole-(a) gate: an engine whose arenas are sharded over a
+    2-wide model axis serves token-identically to the single-device
+    engine — f32/XLA (GSPMD gathers the sharded arena) and bf16/Pallas
+    (shard_map walks per-device head slices)."""
+    cfg = _cfg(tok.vocab_size, dtype, impl)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    plain = ServingEngine(params, cfg, tok, max_cache_len=256,
+                          max_new_tokens=5)
+    base = _serve_all(plain, tok)
+    mesh = _mesh2()
+    sharded = ServingEngine(params, cfg, tok, max_cache_len=256,
+                            max_new_tokens=5)
+    try:
+        mode = KS.shard_engine(sharded, mesh)
+        assert mode == "heads"
+        k_leaf = jax.tree_util.tree_leaves(
+            sharded.block_pool.arena)[0]
+        assert len(k_leaf.sharding.device_set) == 2
+        got = _serve_all(sharded, tok)
+    finally:
+        kops.configure_mesh(None)
+    assert got == base

@@ -1,0 +1,351 @@
+"""Replica serving cluster (DESIGN.md §13): cluster-affinity routing,
+least-loaded spawn placement, hot-replica rebalancing via the host
+round-trip migration path, byte-gauge reconciliation across a
+migration, and end-to-end token identity of ``serve_stream(replicas=N)``
+against the single-replica drain oracle."""
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cache import CacheStats
+from repro.core.prefix_pool import state_bytes
+from repro.core.subgraph import Subgraph
+from repro.data.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.metrics import router_report
+from repro.serving.router import Replica, ReplicaRouter
+from repro.serving.scheduler import OnlineClusterAssigner
+
+
+def _sg(i):
+    return Subgraph.from_lists([i], [])
+
+
+def _stub_replica(idx):
+    eng = types.SimpleNamespace(
+        cache_mgr=types.SimpleNamespace(stats=CacheStats()))
+    return Replica(idx=idx, engine=eng, scheduler=None)
+
+
+def _policy_router(n=3, threshold=1.0):
+    return ReplicaRouter([_stub_replica(i) for i in range(n)],
+                         OnlineClusterAssigner(threshold=threshold))
+
+
+# ----------------------------------------------------------------------
+# placement policy (no engines)
+# ----------------------------------------------------------------------
+def test_affinity_stickiness_and_least_loaded_spawn():
+    """New clusters spread round-robin over equally-loaded replicas;
+    every later member of a cluster routes to ITS replica no matter how
+    loads shift (the prefix chain lives there and nowhere else)."""
+    router = _policy_router(n=3)
+    a = np.array([0.0, 0.0])
+    b = np.array([10.0, 0.0])
+    c = np.array([0.0, 10.0])
+    ra = router.route(a, _sg(0))
+    rb = router.route(b, _sg(1))
+    rc = router.route(c, _sg(2))
+    assert ra.assignment.is_new and rb.assignment.is_new \
+        and rc.assignment.is_new
+    # three cold spawns spread over three idle replicas
+    assert {ra.replica, rb.replica, rc.replica} == {0, 1, 2}
+
+    # members stick to their cluster's replica even when it is the
+    # most loaded one by far
+    for _ in range(6):
+        r = router.route(a + 0.01, _sg(0))
+        assert r.replica == ra.replica
+        assert not r.assignment.is_new
+    assert router.replicas[ra.replica].load == 7
+    assert router.affinity_hit_rate(ra.replica) == pytest.approx(6 / 7)
+    # a fresh cluster avoids the hot replica (least-loaded spawn)
+    rd = router.route(np.array([10.0, 10.0]), _sg(3))
+    assert rd.replica != ra.replica
+
+
+def test_retire_balances_load_accounting():
+    router = _policy_router(n=2)
+    r = router.route(np.array([0.0, 0.0]), _sg(0))
+    assert router.replicas[r.replica].load == 1
+    assert router.pending[r.assignment.cluster_id] == 1
+    router.retire(r.replica, r.assignment.cluster_id)
+    assert router.replicas[r.replica].load == 0
+    assert r.assignment.cluster_id not in router.pending
+
+
+def test_rebalance_moves_colocated_cluster_off_hot_replica():
+    """The rebalance candidate is a CO-LOCATED cluster with a DRAINED
+    queue (migration redirects future arrivals only — a backlogged
+    cluster would leave its queries behind while taking its resident
+    prefix with it), never the hot cluster itself (its traffic share
+    is over the cap; moving it would swap which replica is hot)."""
+    router = _policy_router(n=2)
+    hot = np.array([0.0, 0.0])
+    cold = np.array([10.0, 0.0])
+    r_hot = router.route(hot, _sg(0))
+    assert r_hot.replica == 0
+    # force co-location: the cold cluster spawns on replica 1
+    # (round-robin), so re-pin it onto replica 0 for the scenario
+    r_cold = router.route(cold, _sg(1))
+    cid_hot, cid_cold = (r_hot.assignment.cluster_id,
+                         r_cold.assignment.cluster_id)
+    router.placement[cid_cold] = 0
+    router.replicas[r_cold.replica].routed -= 1
+    router.replicas[0].routed += 1
+    for _ in range(7):
+        router.route(hot + 0.01, _sg(0))
+    for _ in range(3):
+        assert router.route(cold + 0.01, _sg(1)).replica == 0
+    # a third cluster keeps replica 1 NON-idle (an idle coldest replica
+    # means the fleet is draining — rebalancing then only thrashes)
+    r3 = router.route(np.array([0.0, 10.0]), _sg(2))
+    assert r3.replica == 1
+    router.route(np.array([0.0, 10.0]) + 0.01, _sg(2))
+
+    moves = []
+    router.migrate = lambda cid, s, d: moves.append((cid, s, d))
+    # the cold cluster still has queries queued -> NOT movable yet
+    assert router.maybe_rebalance() is None
+    # its queue drains; the hot cluster stays backlogged
+    router.retire(0, cid_cold, n=4)
+    router.replicas[0].routed += 4      # keep replica 0 the hot one
+    moved = router.maybe_rebalance()
+    # loads: replica0 = 12, replica1 = 2 -> hot; candidates need
+    # pending == 0 and routed <= half the hot replica's traffic:
+    # cold (routed 4, drained) fits, hot (routed 8, backlogged) never
+    assert moved == cid_cold
+    assert moves == [(cid_cold, 0, 1)]
+    assert cid_hot != cid_cold
+    # one move per cluster per run: the same candidate never ping-pongs
+    assert router.maybe_rebalance() is None
+    router.reset_counters()
+    assert not router._migrated
+    assert not router.cluster_routed
+
+
+def test_rebalance_noop_when_balanced():
+    router = _policy_router(n=2)
+    a, b = np.array([0.0, 0.0]), np.array([10.0, 0.0])
+    router.route(a, _sg(0))
+    router.route(b, _sg(1))
+    assert router.maybe_rebalance() is None
+    assert router.migrations == 0
+
+
+# ----------------------------------------------------------------------
+# migration over real engines: gauges reconciled, tokens unchanged
+# ----------------------------------------------------------------------
+def _cfg(vocab, dtype="float32", impl="xla"):
+    return ModelConfig(name="router-t", family="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2,
+                       head_dim=16, d_ff=128, vocab_size=vocab,
+                       dtype=dtype, attention_impl=impl)
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a graph of nodes and edges answers questions"])
+
+
+def _check_replica_invariants(rep):
+    """The PoolMachine invariants (tests/test_pool_properties.py),
+    applied to one replica's pool/tier/stats stack."""
+    pool = rep.scheduler.pool
+    bp = rep.engine.block_pool
+    assert pool.bytes_in_use == sum(
+        state_bytes(pool.entry(k).state) for k in pool.keys)
+    if pool.tier is not None:
+        assert pool.tier.bytes_in_use == sum(
+            pool.tier.peek(k).nbytes for k in pool.tier.keys())
+    st = rep.stats
+    st.record_blocks(bp)
+    assert st.block_bytes_in_use == (bp.prefix_blocks_in_use
+                                     * bp.prefix_block_bytes)
+    if pool.tier is not None:
+        st.record_host(pool.tier)
+        assert st.host_bytes_in_use == pool.tier.bytes_in_use
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_migration_reconciles_gauges_and_keeps_tokens(tok, quantize):
+    """Migrate a cluster between two real replicas: the source frees
+    its device blocks, the segment lands in the DESTINATION host tier,
+    pool/tier/CacheStats byte gauges stay reconciled on both sides, and
+    the cluster's next query — now served by the destination through a
+    lazy promotion — produces the SAME tokens it produced on the
+    source."""
+    cfg = _cfg(tok.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=4, quantize_prefix=quantize)
+    reps = {0: tok.encode("a graph of nodes and edges", bos=True),
+            1: tok.encode("the quick brown fox", bos=True)}
+    router = ReplicaRouter.build(
+        eng, OnlineClusterAssigner(threshold=1.0), 2,
+        pool_budget_bytes=1 << 30,
+        prefix_tokens_fn=lambda sg: reps[min(sg.nodes)])
+    emb = {0: np.array([0.0, 0.0]), 1: np.array([10.0, 0.0])}
+    sfx = tok.encode("answers questions")
+
+    rt = router.route(emb[0], _sg(0))
+    cid = rt.assignment.cluster_id
+    src = router.replicas[rt.replica]
+    served = src.scheduler.serve_batch([emb[0]], [_sg(0)], [sfx],
+                                       assignments=[rt.assignment])
+    router.retire(rt.replica, cid)
+    tokens_before = served[0].tokens
+    assert cid in src.scheduler.pool
+    for rep in router.replicas:
+        _check_replica_invariants(rep)
+
+    dst = router.replicas[1 - rt.replica]
+    moved = router.migrate(cid, src.idx, dst.idx)
+    assert moved == 1
+    assert router.placement[cid] == dst.idx
+    # source: entry gone, device blocks freed, nothing left hosted
+    assert cid not in src.scheduler.pool
+    assert src.engine.block_pool.blocks_in_use == 0
+    assert len(src.scheduler.pool.tier) == 0
+    # destination: the segment is host-resident, not yet on device
+    assert dst.scheduler.pool.tier.peek(cid) is not None
+    assert cid not in dst.scheduler.pool
+    assert src.stats.migrations_out == 1 and dst.stats.migrations_in == 1
+    for rep in router.replicas:
+        _check_replica_invariants(rep)
+
+    # the next member routes to the destination (affinity follows the
+    # placement) and is served from a host-tier promotion — same tokens
+    rt2 = router.route(emb[0] + 0.01, _sg(0))
+    assert rt2.replica == dst.idx and not rt2.assignment.is_new
+    served2 = dst.scheduler.serve_batch([emb[0]], [_sg(0)], [sfx],
+                                        assignments=[rt2.assignment])
+    router.retire(rt2.replica, cid)
+    assert served2[0].tokens == tokens_before
+    assert served2[0].pool_hit            # promotion counts as a hit
+    assert dst.stats.tier_promotions == 1
+    assert dst.stats.pool_reprefills == 0  # promoted, never recomputed
+    for rep in router.replicas:
+        _check_replica_invariants(rep)
+
+
+def test_migration_skips_pinned_segments(tok):
+    """A pinned (in-flight) segment refuses to demote: the migration
+    moves the placement but hands over nothing — the destination will
+    recompute through the ordinary miss path."""
+    cfg = _cfg(tok.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=512,
+                        max_new_tokens=3)
+    reps = {0: tok.encode("a graph of nodes", bos=True)}
+    router = ReplicaRouter.build(
+        eng, OnlineClusterAssigner(threshold=1.0), 2,
+        pool_budget_bytes=1 << 30,
+        prefix_tokens_fn=lambda sg: reps[min(sg.nodes)])
+    rt = router.route(np.array([0.0, 0.0]), _sg(0))
+    cid = rt.assignment.cluster_id
+    src = router.replicas[rt.replica]
+    src.scheduler.serve_batch([np.array([0.0, 0.0])], [_sg(0)],
+                              [tok.encode("answers")],
+                              assignments=[rt.assignment])
+    src.scheduler.pool.pin(cid)           # an in-flight row holds it
+    moved = router.migrate(cid, src.idx, 1 - src.idx)
+    assert moved == 0
+    assert cid in src.scheduler.pool      # untouched on the source
+    assert router.placement[cid] == 1 - src.idx
+    src.scheduler.pool.release(cid)
+
+
+# ----------------------------------------------------------------------
+# end-to-end: serve_stream(replicas=N) vs the single-replica oracle
+# ----------------------------------------------------------------------
+def _stream_pipe():
+    from repro.data.scenegraph import generate_scene_graph
+    from repro.rag.pipeline import GraphRAGPipeline
+    from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+    from repro.rag.text_encoder import TextEncoder
+
+    graph, queries = generate_scene_graph()
+    tok2 = Tokenizer.train([q.question + " " + q.answer
+                            for q in queries] + graph.node_text,
+                           max_vocab=2048)
+    cfg = ModelConfig(name="router-stream", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=tok2.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(32))
+    pipe = GraphRAGPipeline(
+        index=index, retriever=GRetrieverRetriever(index),
+        engine=ServingEngine(params, cfg, tok2, max_cache_len=512,
+                             max_new_tokens=3),
+        tokenizer=tok2, use_soft_prompt=False)
+    return pipe, queries
+
+
+@pytest.mark.parametrize("mode", ["drain", "continuous"])
+def test_serve_stream_replicas_token_identical_to_oracle(mode):
+    """Every query's token stream through 2 routed replicas matches the
+    single-replica drain oracle — placement only decides WHERE a prefix
+    is resident, and the shared assigner sees arrivals in the same
+    global order either way."""
+    pipe, queries = _stream_pipe()
+    items = queries[:8]
+    arrivals = [0.0, 0.0, 0.1, 0.1, 0.2, 5.0, 5.0, 5.1]
+    oracle, _, _ = pipe.serve_stream(items, arrivals, max_batch=4,
+                                     threshold=0.25, mode="drain",
+                                     pool_budget_bytes=1 << 26)
+    recs, summary, router = pipe.serve_stream(
+        items, arrivals, max_batch=4, threshold=0.25, mode=mode,
+        pool_budget_bytes=1 << 26, replicas=2)
+    assert [r.generated for r in recs] == [r.generated for r in oracle]
+    assert all(r.replica in (0, 1) for r in recs)
+    assert summary.num_queries == len(items)
+    assert all(r.queue_wait_s >= 0 for r in recs)
+    # the router accounted every query exactly once, and drained
+    assert sum(r.routed for r in router.replicas) == len(items)
+    assert all(r.load == 0 for r in router.replicas)
+    assert router.makespan > 0.0
+    rep = router_report(router, recs)
+    assert rep["num_replicas"] == 2
+    assert set(rep["replicas"]) == {"0", "1"}
+    for row in rep["replicas"].values():
+        assert 0.0 <= row["affinity_hit_rate"] <= 1.0
+    assert rep["clusters"] == len(router.placement)
+    # trace_summary grows the per-replica breakdown for routed traces
+    from repro.serving.metrics import trace_summary
+    ts = trace_summary(recs)
+    assert "replicas" in ts
+
+
+def test_serve_stream_replicas_warm_router_replay():
+    """A returned router replays warm through the ``scheduler`` slot:
+    same engines, kept placements, fresh counters, and — with the
+    cluster population already spawned — pure affinity routing."""
+    pipe, queries = _stream_pipe()
+    items = queries[:6]
+    arrivals = [0.0, 0.0, 0.1, 0.1, 0.2, 0.2]
+    recs, _, router = pipe.serve_stream(
+        items, arrivals, max_batch=4, threshold=0.25, mode="drain",
+        pool_budget_bytes=1 << 26, replicas=2)
+    engines = [id(r.engine) for r in router.replicas]
+    recs2, _, router2 = pipe.serve_stream(
+        items, arrivals, max_batch=4, threshold=0.25, mode="drain",
+        pool_budget_bytes=1 << 26, replicas=2, scheduler=router)
+    assert router2 is router
+    assert [id(r.engine) for r in router2.replicas] == engines
+    # NOTE: no token-identity claim here — the warm assigner keeps its
+    # drifted centroids, so a replayed query may legally land in a
+    # different (drifted) cluster than on the cold run.  Token identity
+    # is a COLD-run property (previous test); warm replay exists for
+    # timing (jit caches + placements stay hot).
+    assert len(recs2) == len(recs)
+    assert all(r.generated is not None for r in recs2)
+    assert sum(r.routed for r in router2.replicas) == len(items)
+    assert all(r.load == 0 for r in router2.replicas)
+    # the cold run's cluster population is still placed
+    assert len(router2.placement) > 0
