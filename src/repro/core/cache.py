@@ -23,7 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional
+import math
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +95,16 @@ class PrefixState:
     def segment_len(self) -> int:
         """Tokens this segment owns (= prefix_len for flat states)."""
         return self.prefix_len if self.seg_len is None else self.seg_len
+
+    @property
+    def base_pos(self) -> int:
+        """Absolute position of this segment's FIRST token in the chain
+        it was prefilled into — the anchor its stored (canonical-K)
+        position values count from.  Splicing the segment at
+        ``target_offset`` in another prompt reads it rotated by
+        ``target_offset - base_pos`` (DESIGN.md §14); a flat state's
+        base is 0."""
+        return self.prefix_len - self.segment_len
 
     def chain(self) -> List["PrefixState"]:
         """Segments root→self (a flat state is its own chain)."""
@@ -168,6 +179,116 @@ class PrefixState:
         return jax.tree.map(bc, self.cache, template)
 
 
+def recompute_window(seg_len: int, recompute_frac: float) -> int:
+    """Leading tokens of a spliced segment that are prefilled FRESH at
+    the target position (their cached copies masked): the boundary
+    smoothing knob of DESIGN.md §14.  ``ceil(frac * seg_len)`` clamped
+    to the segment — 0.0 is a pure splice, 1.0 degenerates to a dense
+    prefill of the whole segment."""
+    assert 0.0 <= recompute_frac <= 1.0, recompute_frac
+    return min(int(seg_len), math.ceil(recompute_frac * seg_len))
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedSegment:
+    """One cached segment spliced into a composed prompt: the resident
+    ``state`` contributes its OWN segment's blocks (ancestors are not
+    read — that independence is the point), re-based so its tokens read
+    as positions ``[target_offset, target_offset + segment_len)``.
+    ``tokens`` are the segment's token ids — needed to RE-prefill the
+    leading ``recompute_window`` tokens at the boundary."""
+    state: PrefixState
+    target_offset: int
+    tokens: Tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "tokens", tuple(self.tokens))
+        assert len(self.tokens) == self.state.segment_len, \
+            (len(self.tokens), self.state.segment_len)
+        assert self.target_offset >= 0, self.target_offset
+
+
+@dataclasses.dataclass
+class SegmentComposition:
+    """A position-independent serving plan (DESIGN.md §14): an ordered
+    splice of cached segments plus the fresh GAP spans between them,
+    tiling the prompt context ``[0, total_len)`` exactly.  The member
+    suffix (the query text) follows at ``total_len`` and stays on the
+    ``Request``; a prefix CHAIN is the degenerate composition whose
+    segments sit at their original offsets with no gaps.
+
+    ``recompute_frac`` re-prefills the leading fraction of every
+    spliced segment at its target position (cached copies masked via
+    per-block skips) — 0.0 is the pure splice, 1.0 falls back to a
+    dense prefill that is token-identical to serving without a cache.
+    """
+    segments: List[ComposedSegment]
+    gaps: List[Tuple[int, List[int]]]    # (target_offset, fresh tokens)
+    recompute_frac: float = 0.0
+
+    def __post_init__(self):
+        assert 0.0 <= self.recompute_frac <= 1.0, self.recompute_frac
+        spans = [(s.target_offset, len(s.tokens)) for s in self.segments]
+        spans += [(off, len(toks)) for off, toks in self.gaps]
+        spans.sort()
+        cur = 0
+        for off, ln in spans:
+            assert ln > 0, "empty span in composition"
+            assert off == cur, \
+                f"composition spans must tile [0, total): gap/overlap " \
+                f"at {off} (expected {cur})"
+            cur += ln
+        self._total = cur
+
+    @property
+    def total_len(self) -> int:
+        """Context tokens the composition covers (suffix not included)."""
+        return self._total
+
+    def fresh_spans(self) -> List[Tuple[int, List[int]]]:
+        """The spans a composed prefill must COMPUTE, position-sorted:
+        every gap plus each segment's leading recompute window."""
+        out = [(off, list(toks)) for off, toks in self.gaps]
+        for s in self.segments:
+            w = recompute_window(len(s.tokens), self.recompute_frac)
+            if w:
+                out.append((s.target_offset, list(s.tokens[:w])))
+        out.sort(key=lambda e: e[0])
+        return out
+
+    def page_plan(self, block_size: int
+                  ) -> Tuple[List[int], List[int], List[int]]:
+        """Per-block prefix-row layout: (block ids, position offsets,
+        leading-slot skips), segments in order.  Block ``k`` of a
+        segment covers segment-local slots ``[k*bs, (k+1)*bs)``; its
+        offset is the uniform re-base delta ``target - base_pos`` and
+        its skip masks whatever part of the recompute window falls in
+        it.  Fully-masked blocks are kept (NULL-equivalent) so the
+        layout stays aligned with ``PageTable.blocks``."""
+        blocks: List[int] = []
+        offsets: List[int] = []
+        skips: List[int] = []
+        for s in self.segments:
+            st = s.state
+            assert st.is_paged, "composition splices paged segments only"
+            delta = int(s.target_offset) - st.base_pos
+            w = recompute_window(len(s.tokens), self.recompute_frac)
+            for k, bid in enumerate(st.page.blocks):
+                blocks.append(int(bid))
+                offsets.append(delta)
+                skips.append(max(0, min(block_size, w - k * block_size)))
+        return blocks, offsets, skips
+
+    def spliced_tokens(self) -> int:
+        """Cached context tokens actually read via the splice (segment
+        tokens minus their recomputed windows) — the prefill work the
+        composition avoids."""
+        return sum(
+            len(s.tokens)
+            - recompute_window(len(s.tokens), self.recompute_frac)
+            for s in self.segments)
+
+
 @dataclasses.dataclass
 class CacheStats:
     """Accounting for the paper's efficiency claims.
@@ -237,6 +358,13 @@ class CacheStats:
                                  # this replica (demote leg)
     migrations_in: int = 0       # cluster segments adopted FROM another
                                  # replica (host-tier handoff leg)
+    # --- segment composition (DESIGN.md §14) ---
+    compose_requests: int = 0    # rows served through a composition plan
+    compose_segments: int = 0    # cached segments spliced (re-based)
+    compose_spliced_tokens: int = 0     # cached tokens read via splice
+                                        # (prefill work avoided)
+    compose_recomputed_tokens: int = 0  # boundary-window tokens
+                                        # re-prefilled (recompute_frac)
 
     @property
     def prefill_savings(self) -> float:
@@ -325,6 +453,18 @@ class CacheStats:
         self.tier_promoted_bytes += promoted_bytes
         self.tier_promotion_wait_s += promotion_wait_s
         self.host_discards += discards
+
+    def record_compose(self, comp: "SegmentComposition") -> None:
+        """One request served through a composition plan (DESIGN.md
+        §14).  Spliced tokens are cached context the prefill SKIPPED;
+        recomputed tokens are the boundary windows it paid for — the
+        quality-vs-TTFT sweep reads both."""
+        spliced = comp.spliced_tokens()
+        self.compose_requests += 1
+        self.compose_segments += len(comp.segments)
+        self.compose_spliced_tokens += spliced
+        self.compose_recomputed_tokens += (
+            sum(len(s.tokens) for s in comp.segments) - spliced)
 
     def record_migration(self, *, out: int = 0, into: int = 0) -> None:
         """Cluster-chain segments this replica migrated during router

@@ -131,6 +131,19 @@ class BlockAllocator:
 # page tables
 # ======================================================================
 @dataclasses.dataclass
+class ComposedRow:
+    """One request's pinned prefix-row layout under a composition plan
+    (``KVBlockPool.compose``, DESIGN.md §14): parallel per-block lists —
+    the page walk, each block's position re-base delta, and the leading
+    slots masked because their tokens are recomputed fresh.  ``pinned``
+    is what the caller must ``decref`` when serving completes."""
+    blocks: List[int]
+    offsets: List[int]
+    skips: List[int]
+    pinned: List[int]
+
+
+@dataclasses.dataclass
 class PageTable:
     """One request's logical->physical block map.
 
@@ -589,6 +602,35 @@ class KVBlockPool:
         self.qarena = _quantize_blocks(self.qarena, self.arena,
                                        jnp.asarray(src_bids, jnp.int32),
                                        jnp.asarray(dst, jnp.int32))
+
+    def compose(self, comp) -> ComposedRow:
+        """Pin a ``SegmentComposition``'s cached segments and emit the
+        prefix-row layout serving needs: per-block (page id, position
+        offset, leading-slot skip) triples (DESIGN.md §14).
+
+        Each spliced segment contributes its OWN page blocks only
+        (ancestors are never read); the blocks are ``incref``ed here for
+        the serve's duration — the returned ``pinned`` list is the
+        caller's to ``decref``, exception-safe like every other pin in
+        the engine.  Segments must be paged states of THIS pool."""
+        for s in comp.segments:
+            st = s.state
+            assert st.is_paged and st.block_pool is self, \
+                "composition needs page-table states from this pool"
+        blocks, offsets, skips = comp.page_plan(self.block_size)
+        pinned: List[int] = []
+        try:
+            for s in comp.segments:
+                own = list(s.state.page.blocks)
+                self.incref(own)
+                pinned.extend(own)
+        except BaseException:
+            if pinned:
+                self.decref(pinned)
+            raise
+        assert len(pinned) == len(blocks), (len(pinned), len(blocks))
+        return ComposedRow(blocks=blocks, offsets=offsets, skips=skips,
+                           pinned=pinned)
 
     def prefix_source(self):
         """The arena decode-time readers should pass as the PREFIX

@@ -24,10 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.cache import ComposedSegment, SegmentComposition
 from repro.core.clustering import Dendrogram, build_dendrogram
 from repro.core.subgraph import (Subgraph, intersect_subgraphs,
                                  merge_subgraphs)
@@ -100,6 +101,48 @@ def plan_singleton(subgraphs: Sequence[Subgraph]) -> BatchPlan:
                 for i, sg in enumerate(subgraphs)]
     return BatchPlan(clusters=clusters, cluster_processing_time_s=0.0,
                      num_queries=len(subgraphs))
+
+
+# ======================================================================
+# segment composition planning (DESIGN.md §14)
+# ======================================================================
+def plan_composition(segment_tokens: Sequence[Sequence[int]],
+                     lookup: Callable[[Tuple[int, ...]], Optional[object]],
+                     recompute_frac: float = 0.0
+                     ) -> Optional[SegmentComposition]:
+    """Plan a ``SegmentComposition`` for a prompt given as an ordered
+    list of SEGMENT token lists (the per-segment ``textualize_delta``
+    texts, tokenized).
+
+    ``lookup(tokens)`` maps a segment's token content to a resident
+    cached ``PrefixState`` (or None) — content-addressed, NOT
+    position-addressed: a segment prefilled under one chain at any base
+    position splices into this prompt at its target offset, read-time
+    rotation re-basing it (the cross-cluster reuse the dendrogram's
+    literal-prefix chains never expressed).  Consecutive misses merge
+    into one fresh gap span.  Returns None when NO segment is resident —
+    a composition of pure gaps is just a dense prefill, and the caller's
+    chain path both serves it and caches its segments for later
+    lookups."""
+    segs: List[ComposedSegment] = []
+    gaps: List[Tuple[int, List[int]]] = []
+    off = 0
+    for toks in segment_tokens:
+        toks = list(int(t) for t in toks)
+        st = lookup(tuple(toks)) if toks else None
+        if st is not None and st.segment_len == len(toks):
+            segs.append(ComposedSegment(state=st, target_offset=off,
+                                        tokens=tuple(toks)))
+        elif toks:
+            if gaps and gaps[-1][0] + len(gaps[-1][1]) == off:
+                gaps[-1][1].extend(toks)       # merge adjacent misses
+            else:
+                gaps.append((off, toks))
+        off += len(toks)
+    if not segs:
+        return None
+    return SegmentComposition(segments=segs, gaps=gaps,
+                              recompute_frac=recompute_frac)
 
 
 # ======================================================================

@@ -1,4 +1,4 @@
-"""Fused single-pass cascade serving kernels (DESIGN.md §11).
+"""Fused single-pass cascade serving kernels (DESIGN.md §11, §14).
 
 Through PR 5 the paged serving hot path launched one partial-attention
 kernel per chain segment group (prefix walk, suffix walk) plus a
@@ -9,7 +9,8 @@ root-to-leaf cascade into one ``pallas_call``:
 
 * BOTH page tables — the concatenated prefix-chain walk ``[Bp, NPP]``
   and the private suffix walk ``[B, NPS]`` — are scalar-prefetched
-  (``num_scalar_prefetch=2``); grid step ``j`` DMAs prefix block
+  together with the per-prefix-block position OFFSET and SKIP tables
+  (``num_scalar_prefetch=4``); grid step ``j`` DMAs prefix block
   ``ppt[row, j]`` while ``j < NPP`` and suffix block
   ``spt[b, j - NPP]`` after, so the kernel loop IS the full
   concatenated page walk.
@@ -29,6 +30,20 @@ root-to-leaf cascade into one ``pallas_call``:
   while every matmul stays f32.  Suffix tiles are always compute-dtype
   (decode writes them every step; quantizing the write path would put
   a round-trip quantization error inside the autoregressive loop).
+* **Canonical-K read-time RoPE** (``rope_theta`` set; DESIGN.md §14):
+  the arenas store UN-ROTATED keys.  Each DMA'd K tile is rotated
+  in-register at its *effective* positions — stored position plus the
+  scalar-prefetched per-prefix-block offset ``p_off[row, j]`` — right
+  before the score matmul, and the first ``p_skip[row, j]`` slots of a
+  prefix block are masked (boundary tokens recomputed into the suffix
+  stream shadow their cached copies).  This is what makes a segment
+  cached at base position P spliceable at any target offset T (delta =
+  T - P) with zero copies: the page walk and the offset table are the
+  whole composition.  On the non-quantized path the rotated tile is
+  rounded back to the arena dtype before the dot so the kernel sees
+  bitwise the same K bits as the XLA / multi-launch paths (which rotate
+  via ``apply_rope``, rounding to the cache dtype); the int8 path
+  rotates the dequantized f32 tile directly, exactly like its oracle.
 
 Exactness: the single-pass accumulator is mathematically identical to
 the multi-launch cascade + LSE fold but NOT bitwise (``exp(s - m)`` vs
@@ -39,10 +54,13 @@ composition — plus end-to-end greedy-token identity (tests).  The XLA
 serving path under ``fused=True`` runs the composition itself and is
 therefore bitwise-identical to multi-launch by construction.
 
-Masking is purely positional like every kernel in this repo: valid
-``kp >= 0``, causal ``kp <= qp`` (suffix side; every prefix position
-precedes every query so the prefix side matches the multi-launch
-``causal=False`` partial exactly), window ``qp - kp < w`` on both.
+Masking is purely positional like every kernel in this repo, on the
+EFFECTIVE positions: valid ``kp >= 0``, causal ``kp <= qp`` (suffix
+side always; prefix side of the prefill kernel only under
+``prefix_causal`` — vacuous for the chain layout where every prefix
+position precedes every query, required for compositions where fresh
+gap tokens interleave with spliced segment positions), window
+``qp - kp < w`` on both.
 """
 from __future__ import annotations
 
@@ -70,20 +88,59 @@ def _accum(s_mask, s, acc_ref, m_ref, l_ref, v):
     m_ref[:, 0] = m_new
 
 
-def _fused_decode_kernel(ppt_ref, spt_ref, *refs, window: int, npp: int,
-                         n_total: int, scale: float, quantized: bool):
+def _rot_tile(k, eff, inv_ref, store_dtype):
+    """RoPE-rotate a [rows, d] f32 K tile in-register at effective
+    positions ``eff`` [rows] (canonical-K read-time rotation).
+
+    The angle math mirrors ``models.layers.apply_rope`` exactly:
+    ``ang = eff_f32[:, None] * inv_freq``, halves rotated as
+    ``(k1 cos - k2 sin) ++ (k1 sin + k2 cos)``.  ``store_dtype`` (the
+    arena dtype; None on the dequantized-int8 path) rounds the rotated
+    tile back before the dot so the kernel attends bitwise the same K
+    bits as the XLA path's ``apply_rope`` (which rounds to the cache
+    dtype).  Rotation at ``eff == -1`` lands on masked lanes only.
+    """
+    inv = inv_ref[0]                                       # [d/2]
+    ang = eff.astype(jnp.float32)[:, None] * inv[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    d2 = k.shape[-1] // 2
+    k1, k2 = k[:, :d2], k[:, d2:]
+    out = jnp.concatenate([k1 * cos - k2 * sin, k1 * sin + k2 * cos],
+                          axis=-1)
+    if store_dtype is not None:
+        out = out.astype(store_dtype).astype(jnp.float32)
+    return out
+
+
+def _prefix_eff(pp, poff_ref, pskip_ref, row, j):
+    """Effective positions of a prefix K tile: stored positions plus the
+    block's composition offset, with the block's first ``skip`` slots
+    and empty slots folded to -1 (masked)."""
+    bs = pp.shape[0]
+    off = poff_ref[row, j]
+    skip = pskip_ref[row, j]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    eff = jnp.where(pp >= 0, pp + off, -1)
+    return jnp.where(slot < skip, -1, eff)
+
+
+def _fused_decode_kernel(ppt_ref, spt_ref, poff_ref, pskip_ref, *refs,
+                         window: int, npp: int, n_total: int, scale: float,
+                         quantized: bool, rope: bool, shared_p: bool):
     """Grid (B, Hkv, NPP + NPS); one [group, d] q tile rides the whole
-    concatenated walk.  Steps j < npp stream (and optionally dequantize)
-    prefix blocks; later steps stream suffix blocks.  Causal masking
-    always applies — a decode query is at or past every cached
-    position, same as the multi-launch decode partials."""
+    concatenated walk.  Steps j < npp stream (and optionally dequantize
+    + rotate) prefix blocks; later steps stream suffix blocks.  Causal
+    masking always applies on effective positions — a decode query is
+    at or past every cached position, same as the multi-launch decode
+    partials."""
     if quantized:
-        (qpos_ref, pkpos_ref, skpos_ref, q_ref, pk_ref, pv_ref,
+        (qpos_ref, pkpos_ref, skpos_ref, inv_ref, q_ref, pk_ref, pv_ref,
          sk_ref, sv_ref, ks_ref, vs_ref, o_ref,
          acc_ref, m_ref, l_ref) = refs
     else:
-        (qpos_ref, pkpos_ref, skpos_ref, q_ref, pk_ref, pv_ref,
+        (qpos_ref, pkpos_ref, skpos_ref, inv_ref, q_ref, pk_ref, pv_ref,
          sk_ref, sv_ref, o_ref, acc_ref, m_ref, l_ref) = refs
+    b_ = pl.program_id(0)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -110,12 +167,21 @@ def _fused_decode_kernel(ppt_ref, spt_ref, *refs, window: int, npp: int,
         if quantized:
             k = k * ks_ref[0, 0]                           # in-register dequant
             v = v * vs_ref[0, 0]
-        step(k, v, pkpos_ref[0])
+        row = 0 if shared_p else b_
+        eff = _prefix_eff(pkpos_ref[0], poff_ref, pskip_ref, row, j)
+        if rope:
+            k = _rot_tile(k, eff, inv_ref,
+                          None if quantized else pk_ref.dtype)
+        step(k, v, eff)
 
     @pl.when(j >= npp)
     def _suffix():
-        step(sk_ref[0, 0].astype(jnp.float32),
-             sv_ref[0, 0].astype(jnp.float32), skpos_ref[0])
+        k = sk_ref[0, 0].astype(jnp.float32)
+        v = sv_ref[0, 0].astype(jnp.float32)
+        kp = skpos_ref[0]
+        if rope:
+            k = _rot_tile(k, kp, inv_ref, sk_ref.dtype)
+        step(k, v, kp)
 
     @pl.when(j == n_total - 1)
     def _done():
@@ -124,10 +190,21 @@ def _fused_decode_kernel(ppt_ref, spt_ref, *refs, window: int, npp: int,
         o_ref[0, 0] = acc_ref[...] / safe[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _inv_freq_arg(d: int, rope_theta):
+    """The [1, d/2] f32 inverse-frequency operand (zeros when rotation is
+    off — the operand is always passed so kernel arity is static)."""
+    if rope_theta is None:
+        return jnp.zeros((1, d // 2), jnp.float32)
+    from repro.models.layers import rope_frequencies
+    return rope_frequencies(d, rope_theta).reshape(1, -1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret",
+                                             "rope_theta"))
 def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
                            prefix_table, suffix_table, k_scale=None,
-                           v_scale=None, *, window: int = 0,
+                           v_scale=None, p_off=None, p_skip=None, *,
+                           window: int = 0, rope_theta=None,
                            interpret: bool = True):
     """Single-token fused-cascade GQA decode over a paged KV arena.
 
@@ -136,12 +213,16 @@ def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
     dtype); sk, sv: [NBs, Hkv, bs, D] suffix arena (always compute
     dtype); p_kpos/s_kpos: [NB*, bs]; prefix_table: [Bp in (1, B), NPP]
     (a [1, NPP] table is the shared cluster walk); suffix_table:
-    [B or 1, NPS].  Returns the NORMALIZED output [B, Hq, D] f32 — no
-    (m, l) escapes, nothing merges after.
+    [B or 1, NPS].  ``rope_theta`` enables canonical-K read-time
+    rotation; ``p_off``/``p_skip`` [Bp, NPP] are the per-prefix-block
+    composition offset/skip tables (zeros = the degenerate chain).
+    Returns the NORMALIZED output [B, Hq, D] f32 — no (m, l) escapes,
+    nothing merges after.
     """
     b, hq, d = q.shape
     hkv, bs = pk.shape[1], pk.shape[2]
     assert sk.shape[2] == bs, (sk.shape, bs)
+    assert d % 2 == 0, d
     pb, npp = prefix_table.shape
     sb, nps = suffix_table.shape
     assert pb in (1, b) and sb in (1, b), (prefix_table.shape,
@@ -156,6 +237,11 @@ def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
 
     qg = q.reshape(b, hkv, group, d)
     qp2 = q_pos.reshape(b, 1).astype(jnp.int32)
+    if p_off is None:
+        p_off = jnp.zeros(prefix_table.shape, jnp.int32)
+    if p_skip is None:
+        p_skip = jnp.zeros(prefix_table.shape, jnp.int32)
+    inv = _inv_freq_arg(d, rope_theta)
 
     # the inactive table's index is CLAMPED to its last/first block so
     # Pallas sees an unchanged index and skips the re-DMA
@@ -166,45 +252,48 @@ def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
         return jnp.maximum(j - npp, 0)
 
     in_specs = [
-        pl.BlockSpec((1, 1), lambda b_, h, j, ppt, spt: (b_, 0)),
+        pl.BlockSpec((1, 1), lambda b_, h, j, ppt, spt, *_: (b_, 0)),
         pl.BlockSpec((1, bs),
-                     lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)], 0)),
+                     lambda b_, h, j, ppt, spt, *_: (ppt[prow(b_), jp(j)],
+                                                     0)),
         pl.BlockSpec((1, bs),
-                     lambda b_, h, j, ppt, spt: (spt[srow(b_), js(j)], 0)),
+                     lambda b_, h, j, ppt, spt, *_: (spt[srow(b_), js(j)],
+                                                     0)),
+        pl.BlockSpec((1, d // 2), lambda b_, h, j, ppt, spt, *_: (0, 0)),
         pl.BlockSpec((1, 1, group, d),
-                     lambda b_, h, j, ppt, spt: (b_, h, 0, 0)),
+                     lambda b_, h, j, ppt, spt, *_: (b_, h, 0, 0)),
         pl.BlockSpec((1, 1, bs, d),
-                     lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)],
-                                                 h, 0, 0)),
+                     lambda b_, h, j, ppt, spt, *_: (ppt[prow(b_), jp(j)],
+                                                     h, 0, 0)),
         pl.BlockSpec((1, 1, bs, d),
-                     lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)],
-                                                 h, 0, 0)),
+                     lambda b_, h, j, ppt, spt, *_: (ppt[prow(b_), jp(j)],
+                                                     h, 0, 0)),
         pl.BlockSpec((1, 1, bs, d),
-                     lambda b_, h, j, ppt, spt: (spt[srow(b_), js(j)],
-                                                 h, 0, 0)),
+                     lambda b_, h, j, ppt, spt, *_: (spt[srow(b_), js(j)],
+                                                     h, 0, 0)),
         pl.BlockSpec((1, 1, bs, d),
-                     lambda b_, h, j, ppt, spt: (spt[srow(b_), js(j)],
-                                                 h, 0, 0)),
+                     lambda b_, h, j, ppt, spt, *_: (spt[srow(b_), js(j)],
+                                                     h, 0, 0)),
     ]
-    args = [qp2, p_kpos, s_kpos, qg, pk, pv, sk, sv]
+    args = [qp2, p_kpos, s_kpos, inv, qg, pk, pv, sk, sv]
     if quantized:
         in_specs += [
             pl.BlockSpec((1, 1),
-                         lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)],
-                                                     h)),
+                         lambda b_, h, j, ppt, spt, *_:
+                         (ppt[prow(b_), jp(j)], h)),
             pl.BlockSpec((1, 1),
-                         lambda b_, h, j, ppt, spt: (ppt[prow(b_), jp(j)],
-                                                     h)),
+                         lambda b_, h, j, ppt, spt, *_:
+                         (ppt[prow(b_), jp(j)], h)),
         ]
         args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4,
         grid=(b, hkv, n_total),
         in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, group, d),
-                         lambda b_, h, j, ppt, spt: (b_, h, 0, 0)),
+                         lambda b_, h, j, ppt, spt, *_: (b_, h, 0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((group, d), jnp.float32),
@@ -214,28 +303,32 @@ def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
     )
     [out] = pl.pallas_call(
         functools.partial(_fused_decode_kernel, window=window, npp=npp,
-                          n_total=n_total, scale=scale, quantized=quantized),
+                          n_total=n_total, scale=scale, quantized=quantized,
+                          rope=rope_theta is not None, shared_p=pb == 1),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((b, hkv, group, d), jnp.float32)],
         interpret=interpret,
-    )(prefix_table.astype(jnp.int32), suffix_table.astype(jnp.int32), *args)
+    )(prefix_table.astype(jnp.int32), suffix_table.astype(jnp.int32),
+      p_off.astype(jnp.int32), p_skip.astype(jnp.int32), *args)
     return out.reshape(b, hq, d)
 
 
-def _fused_prefill_kernel(ppt_ref, spt_ref, *refs, causal: bool, window: int,
-                          npp: int, n_total: int, scale: float,
-                          quantized: bool):
+def _fused_prefill_kernel(ppt_ref, spt_ref, poff_ref, pskip_ref, *refs,
+                          causal: bool, window: int, npp: int, n_total: int,
+                          scale: float, quantized: bool, rope: bool,
+                          shared_p: bool, prefix_causal: bool):
     """Grid (B, Hq, nq, NPP + NPS); prefill-shaped [bq, d] q tiles.
-    Prefix steps use the multi-launch prefix mask (validity + window,
-    NO causal term — every prefix position precedes every query);
-    suffix steps apply the causal mask."""
+    Prefix steps use the multi-launch prefix mask (validity + window +
+    ``prefix_causal`` on effective positions); suffix steps apply the
+    causal mask."""
     if quantized:
-        (qpos_ref, pkpos_ref, skpos_ref, q_ref, pk_ref, pv_ref,
+        (qpos_ref, pkpos_ref, skpos_ref, inv_ref, q_ref, pk_ref, pv_ref,
          sk_ref, sv_ref, ks_ref, vs_ref, o_ref,
          acc_ref, m_ref, l_ref) = refs
     else:
-        (qpos_ref, pkpos_ref, skpos_ref, q_ref, pk_ref, pv_ref,
+        (qpos_ref, pkpos_ref, skpos_ref, inv_ref, q_ref, pk_ref, pv_ref,
          sk_ref, sv_ref, o_ref, acc_ref, m_ref, l_ref) = refs
+    b_ = pl.program_id(0)
     j = pl.program_id(3)
 
     @pl.when(j == 0)
@@ -264,12 +357,21 @@ def _fused_prefill_kernel(ppt_ref, spt_ref, *refs, causal: bool, window: int,
         if quantized:
             k = k * ks_ref[0, 0]
             v = v * vs_ref[0, 0]
-        step(k, v, pkpos_ref[0], False)
+        row = 0 if shared_p else b_
+        eff = _prefix_eff(pkpos_ref[0], poff_ref, pskip_ref, row, j)
+        if rope:
+            k = _rot_tile(k, eff, inv_ref,
+                          None if quantized else pk_ref.dtype)
+        step(k, v, eff, prefix_causal)
 
     @pl.when(j >= npp)
     def _suffix():
-        step(sk_ref[0, 0].astype(jnp.float32),
-             sv_ref[0, 0].astype(jnp.float32), skpos_ref[0], causal)
+        k = sk_ref[0, 0].astype(jnp.float32)
+        v = sv_ref[0, 0].astype(jnp.float32)
+        kp = skpos_ref[0]
+        if rope:
+            k = _rot_tile(k, kp, inv_ref, sk_ref.dtype)
+        step(k, v, kp, causal)
 
     @pl.when(j == n_total - 1)
     def _done():
@@ -279,23 +381,30 @@ def _fused_prefill_kernel(ppt_ref, spt_ref, *refs, causal: bool, window: int,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "interpret"))
+                                             "interpret", "rope_theta",
+                                             "prefix_causal"))
 def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
                           prefix_table, suffix_table, k_scale=None,
-                          v_scale=None, *, causal: bool = True,
-                          window: int = 0, block_q: int = 128,
+                          v_scale=None, p_off=None, p_skip=None, *,
+                          causal: bool = True, window: int = 0,
+                          block_q: int = 128, rope_theta=None,
+                          prefix_causal: bool = False,
                           interpret: bool = True):
     """Fused-cascade masked GQA prefill over a paged KV arena.
 
     q: [B, Hq, Tq, D]; arenas / tables / scales as in
     ``fused_paged_decode_gqa`` but with prefill q tiling (grid
-    (B, Hq, nq, NPP + NPS)).  ``causal`` applies to the SUFFIX side
-    only (the prefix side replicates the multi-launch ``causal=False``
-    prefix partial).  Returns the normalized output [B, Hq, Tq, D] f32.
+    (B, Hq, nq, NPP + NPS)).  ``causal`` applies to the SUFFIX side;
+    ``prefix_causal`` (on effective positions) is what compositions
+    need — vacuous under the chain layout.  ``rope_theta`` enables
+    canonical-K read-time rotation; ``p_off``/``p_skip`` [Bp, NPP] are
+    the per-prefix-block composition offset/skip tables.  Returns the
+    normalized output [B, Hq, Tq, D] f32.
     """
     b, hq, tq, d = q.shape
     hkv, bs = pk.shape[1], pk.shape[2]
     assert sk.shape[2] == bs, (sk.shape, bs)
+    assert d % 2 == 0, d
     pb, npp = prefix_table.shape
     sb, nps = suffix_table.shape
     assert pb in (1, b) and sb in (1, b), (prefix_table.shape,
@@ -314,6 +423,11 @@ def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
         q = jnp.pad(q, ((0, 0), (0, 0), (0, tq_p - tq), (0, 0)))
         q_pos = jnp.pad(q_pos, ((0, 0), (0, tq_p - tq)), constant_values=0)
     nq = tq_p // bq
+    if p_off is None:
+        p_off = jnp.zeros(prefix_table.shape, jnp.int32)
+    if p_skip is None:
+        p_skip = jnp.zeros(prefix_table.shape, jnp.int32)
+    inv = _inv_freq_arg(d, rope_theta)
 
     def jp(j):
         return jnp.minimum(j, npp - 1)
@@ -322,45 +436,48 @@ def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
         return jnp.maximum(j - npp, 0)
 
     in_specs = [
-        pl.BlockSpec((1, bq), lambda b_, h, i, j, ppt, spt: (b_, i)),
+        pl.BlockSpec((1, bq), lambda b_, h, i, j, ppt, spt, *_: (b_, i)),
         pl.BlockSpec((1, bs),
-                     lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)], 0)),
+                     lambda b_, h, i, j, ppt, spt, *_:
+                     (ppt[prow(b_), jp(j)], 0)),
         pl.BlockSpec((1, bs),
-                     lambda b_, h, i, j, ppt, spt: (spt[srow(b_), js(j)], 0)),
+                     lambda b_, h, i, j, ppt, spt, *_:
+                     (spt[srow(b_), js(j)], 0)),
+        pl.BlockSpec((1, d // 2), lambda b_, h, i, j, ppt, spt, *_: (0, 0)),
         pl.BlockSpec((1, 1, bq, d),
-                     lambda b_, h, i, j, ppt, spt: (b_, h, i, 0)),
+                     lambda b_, h, i, j, ppt, spt, *_: (b_, h, i, 0)),
         pl.BlockSpec((1, 1, bs, d),
-                     lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)],
-                                                    h // group, 0, 0)),
+                     lambda b_, h, i, j, ppt, spt, *_:
+                     (ppt[prow(b_), jp(j)], h // group, 0, 0)),
         pl.BlockSpec((1, 1, bs, d),
-                     lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)],
-                                                    h // group, 0, 0)),
+                     lambda b_, h, i, j, ppt, spt, *_:
+                     (ppt[prow(b_), jp(j)], h // group, 0, 0)),
         pl.BlockSpec((1, 1, bs, d),
-                     lambda b_, h, i, j, ppt, spt: (spt[srow(b_), js(j)],
-                                                    h // group, 0, 0)),
+                     lambda b_, h, i, j, ppt, spt, *_:
+                     (spt[srow(b_), js(j)], h // group, 0, 0)),
         pl.BlockSpec((1, 1, bs, d),
-                     lambda b_, h, i, j, ppt, spt: (spt[srow(b_), js(j)],
-                                                    h // group, 0, 0)),
+                     lambda b_, h, i, j, ppt, spt, *_:
+                     (spt[srow(b_), js(j)], h // group, 0, 0)),
     ]
-    args = [q_pos, p_kpos, s_kpos, q, pk, pv, sk, sv]
+    args = [q_pos, p_kpos, s_kpos, inv, q, pk, pv, sk, sv]
     if quantized:
         in_specs += [
             pl.BlockSpec((1, 1),
-                         lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)],
-                                                        h // group)),
+                         lambda b_, h, i, j, ppt, spt, *_:
+                         (ppt[prow(b_), jp(j)], h // group)),
             pl.BlockSpec((1, 1),
-                         lambda b_, h, i, j, ppt, spt: (ppt[prow(b_), jp(j)],
-                                                        h // group)),
+                         lambda b_, h, i, j, ppt, spt, *_:
+                         (ppt[prow(b_), jp(j)], h // group)),
         ]
         args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4,
         grid=(b, hq, nq, n_total),
         in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, bq, d),
-                         lambda b_, h, i, j, ppt, spt: (b_, h, i, 0)),
+                         lambda b_, h, i, j, ppt, spt, *_: (b_, h, i, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((bq, d), jnp.float32),
@@ -371,9 +488,11 @@ def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
     [out] = pl.pallas_call(
         functools.partial(_fused_prefill_kernel, causal=causal, window=window,
                           npp=npp, n_total=n_total, scale=scale,
-                          quantized=quantized),
+                          quantized=quantized, rope=rope_theta is not None,
+                          shared_p=pb == 1, prefix_causal=prefix_causal),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((b, hq, tq_p, d), jnp.float32)],
         interpret=interpret,
-    )(prefix_table.astype(jnp.int32), suffix_table.astype(jnp.int32), *args)
+    )(prefix_table.astype(jnp.int32), suffix_table.astype(jnp.int32),
+      p_off.astype(jnp.int32), p_skip.astype(jnp.int32), *args)
     return out[:, :, :tq, :]

@@ -20,6 +20,7 @@ kv_sharding.py``).  ``shard_map`` runs with ``check_rep=False``:
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -143,23 +144,34 @@ def paged_decode_gqa(q, k, v, q_pos, k_pos, page_table, *, window=0):
 def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
                           prefix_table, suffix_table, k_scale=None,
                           v_scale=None, *, causal=True, window=0,
-                          block_q=128):
+                          block_q=128, rope_theta=None, p_off=None,
+                          p_skip=None, prefix_causal=False):
     """Fused single-pass cascade prefill: ONE kernel walks the
     concatenated prefix-chain + suffix page tables, carrying the
     (o, m, l) accumulator in VMEM across every segment; int8 prefix
     tiles dequantize in-register when scales are passed (DESIGN.md
     §11).  Replaces per-segment ``paged_attention_partial`` launches
-    plus the LSE fold.  Head-parallel over a configured mesh (module
+    plus the LSE fold.  ``rope_theta`` turns on canonical-K read-time
+    rotation; ``p_off``/``p_skip`` [Bp, NPP] carry the per-prefix-block
+    composition offset/skip tables (DESIGN.md §14) and ride replicated
+    like the page tables.  Head-parallel over a configured mesh (module
     docstring); int8 scales [NBp, Hkv] shard on their head dim."""
-    def call(q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, *scales):
+    if p_off is None:
+        p_off = jnp.zeros(prefix_table.shape, jnp.int32)
+    if p_skip is None:
+        p_skip = jnp.zeros(prefix_table.shape, jnp.int32)
+
+    def call(q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, poff, pskip,
+             *scales):
         ks, vs = scales if scales else (None, None)
         return _fused.fused_paged_attention(
             q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, ks, vs,
-            causal=causal, window=window, block_q=block_q,
+            poff, pskip, causal=causal, window=window, block_q=block_q,
+            rope_theta=rope_theta, prefix_causal=prefix_causal,
             interpret=_interpret())
     args = (q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
-            prefix_table, suffix_table)
-    specs = (_H4, _H4, _H4, _H4, _H4, _R, _R, _R, _R, _R)
+            prefix_table, suffix_table, p_off, p_skip)
+    specs = (_H4, _H4, _H4, _H4, _H4, _R, _R, _R, _R, _R, _R, _R)
     if k_scale is not None:
         args += (k_scale, v_scale)
         specs += (_H2, _H2)
@@ -170,18 +182,26 @@ def fused_paged_attention(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
 
 def fused_paged_decode_gqa(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
                            prefix_table, suffix_table, k_scale=None,
-                           v_scale=None, *, window=0):
+                           v_scale=None, *, window=0, rope_theta=None,
+                           p_off=None, p_skip=None):
     """Fused single-pass cascade decode (decode-shaped [group, d] q
     tiles over the concatenated page walk); see
     ``fused_paged_attention``."""
-    def call(q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, *scales):
+    if p_off is None:
+        p_off = jnp.zeros(prefix_table.shape, jnp.int32)
+    if p_skip is None:
+        p_skip = jnp.zeros(prefix_table.shape, jnp.int32)
+
+    def call(q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, poff, pskip,
+             *scales):
         ks, vs = scales if scales else (None, None)
         return _fused.fused_paged_decode_gqa(
             q_, pk_, pv_, sk_, sv_, qp, pkp, skp, pt, st, ks, vs,
-            window=window, interpret=_interpret())
+            poff, pskip, window=window, rope_theta=rope_theta,
+            interpret=_interpret())
     args = (q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
-            prefix_table, suffix_table)
-    specs = (_H3, _H4, _H4, _H4, _H4, _R, _R, _R, _R, _R)
+            prefix_table, suffix_table, p_off, p_skip)
+    specs = (_H3, _H4, _H4, _H4, _H4, _R, _R, _R, _R, _R, _R, _R)
     if k_scale is not None:
         args += (k_scale, v_scale)
         specs += (_H2, _H2)

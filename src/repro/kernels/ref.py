@@ -86,7 +86,8 @@ def attention_partial_ref(q, k, v, q_pos, k_pos, *,
 
 
 def paged_attention_partial_ref(q, k, v, q_pos, k_pos, page_table, *,
-                                causal: bool = False, window: int = 0):
+                                causal: bool = False, window: int = 0,
+                                rope_theta=None, offsets=None, skips=None):
     """Partial masked GQA attention over a paged KV arena (oracle).
 
     q: [B, Hq, Tq, D]; k, v: [NB, Hkv, bs, D] block arena; k_pos:
@@ -97,23 +98,43 @@ def paged_attention_partial_ref(q, k, v, q_pos, k_pos, page_table, *,
     page-table order, so kernel and oracle see identical sequences.
     A [1, NP] table is the shared walk (every query row attends the
     same blocks; the dense delegate's Bk == 1 branch).
+
+    Canonical-K composition (DESIGN.md §14): ``offsets`` [Tb, NP] adds a
+    per-block position delta to the stored positions (segment spliced at
+    a new target offset), ``skips`` [Tb, NP] masks the first N slots of
+    each block (boundary tokens recomputed into the suffix stream shadow
+    the cached copies), and ``rope_theta`` rotates the gathered keys at
+    the resulting *effective* positions — the arena stores un-rotated
+    keys.  All masking downstream uses the effective positions.
     """
     tb, np_ = page_table.shape
     hkv, bs, d = k.shape[1], k.shape[2], k.shape[3]
     kk = jnp.moveaxis(k[page_table], 1, 2).reshape(tb, hkv, np_ * bs, d)
     vv = jnp.moveaxis(v[page_table], 1, 2).reshape(tb, hkv, np_ * bs, d)
     kp = k_pos[page_table].reshape(tb, np_ * bs)
+    if offsets is not None:
+        off = jnp.repeat(offsets.astype(jnp.int32), bs, axis=1)
+        kp = jnp.where(kp >= 0, kp + off, -1)
+    if skips is not None:
+        slot = jnp.tile(jnp.arange(bs, dtype=jnp.int32), np_)[None]
+        skip = jnp.repeat(skips.astype(jnp.int32), bs, axis=1)
+        kp = jnp.where(slot < skip, -1, kp)
+    if rope_theta is not None:
+        from repro.models.layers import apply_rope
+        kk = apply_rope(kk, kp[:, None, :], rope_theta)
     return attention_partial_ref(q, kk, vv, q_pos, kp, causal=causal,
                                  window=window)
 
 
 def paged_decode_gqa_partial_ref(q, k, v, q_pos, k_pos, page_table, *,
-                                 window: int = 0):
+                                 window: int = 0, rope_theta=None,
+                                 offsets=None, skips=None):
     """Single-token paged GQA decode partial (oracle): gather the page
     walk dense, then the causal decode partial.  q: [B, Hq, D]."""
     out, m, l = paged_attention_partial_ref(
         q[:, :, None, :], k, v, q_pos[:, None], k_pos, page_table,
-        causal=True, window=window)
+        causal=True, window=window, rope_theta=rope_theta, offsets=offsets,
+        skips=skips)
     return out[:, :, 0, :], m[:, :, 0], l[:, :, 0]
 
 
@@ -161,7 +182,9 @@ def dequantize_paged_ref(x, scale):
 def fused_paged_attention_ref(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
                               prefix_table, suffix_table, k_scale=None,
                               v_scale=None, *, causal: bool = True,
-                              window: int = 0):
+                              window: int = 0, rope_theta=None,
+                              p_off=None, p_skip=None,
+                              prefix_causal: bool = False):
     """Oracle for the fused single-pass cascade prefill kernel.
 
     BY CONSTRUCTION this is the exact multi-launch composition — prefix
@@ -173,32 +196,45 @@ def fused_paged_attention_ref(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
     allclose + end-to-end greedy-token identity.  When
     ``k_scale``/``v_scale`` [NBp, Hkv] are given the prefix arena is
     int8 and is dequantized before the prefix partial (int8 mode is
-    otherwise off for oracles).  Returns the normalized output only.
+    otherwise off for oracles).  ``rope_theta``/``p_off``/``p_skip``
+    mirror the canonical-K kernel (read-time rotation at effective
+    positions; see ``paged_attention_partial_ref``); ``prefix_causal``
+    makes the prefix partial causal on effective positions — the serving
+    path sets it whenever rotating, since composed prompts interleave
+    fresh gap tokens with cached segment positions (vacuous for the
+    chain layout).  Returns the normalized output only.
     """
     if k_scale is not None:
         pk = dequantize_paged_ref(pk, k_scale)
         pv = dequantize_paged_ref(pv, v_scale)
     o1, m1, l1 = paged_attention_partial_ref(
-        q, pk, pv, q_pos, p_kpos, prefix_table, causal=False, window=window)
+        q, pk, pv, q_pos, p_kpos, prefix_table, causal=prefix_causal,
+        window=window, rope_theta=rope_theta, offsets=p_off, skips=p_skip)
     o2, m2, l2 = paged_attention_partial_ref(
-        q, sk, sv, q_pos, s_kpos, suffix_table, causal=causal, window=window)
+        q, sk, sv, q_pos, s_kpos, suffix_table, causal=causal, window=window,
+        rope_theta=rope_theta)
     out, _, _ = merge_partials_ref(o1, m1, l1, o2, m2, l2)
     return out
 
 
 def fused_paged_decode_gqa_ref(q, pk, pv, sk, sv, q_pos, p_kpos, s_kpos,
                                prefix_table, suffix_table, k_scale=None,
-                               v_scale=None, *, window: int = 0):
+                               v_scale=None, *, window: int = 0,
+                               rope_theta=None, p_off=None, p_skip=None):
     """Oracle for the fused single-pass cascade decode kernel: the exact
     multi-launch decode composition (both partials causal) with optional
-    int8 prefix dequantization.  q: [B, Hq, D]; returns [B, Hq, D]."""
+    int8 prefix dequantization and canonical-K read-time rotation /
+    composition offsets (see ``paged_attention_partial_ref``).
+    q: [B, Hq, D]; returns [B, Hq, D]."""
     if k_scale is not None:
         pk = dequantize_paged_ref(pk, k_scale)
         pv = dequantize_paged_ref(pv, v_scale)
     o1, m1, l1 = paged_decode_gqa_partial_ref(
-        q, pk, pv, q_pos, p_kpos, prefix_table, window=window)
+        q, pk, pv, q_pos, p_kpos, prefix_table, window=window,
+        rope_theta=rope_theta, offsets=p_off, skips=p_skip)
     o2, m2, l2 = paged_decode_gqa_partial_ref(
-        q, sk, sv, q_pos, s_kpos, suffix_table, window=window)
+        q, sk, sv, q_pos, s_kpos, suffix_table, window=window,
+        rope_theta=rope_theta)
     out, _, _ = merge_partials_ref(o1, m1, l1, o2, m2, l2)
     return out
 

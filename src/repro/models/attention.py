@@ -6,10 +6,17 @@ local attention, prefix reuse and ring-buffer long-context decode):
   cache = {"k": [B, Hkv, C, D], "v": [B, Hkv, C, D], "pos": [B, C]}
 
 ``pos`` holds the absolute token position stored in each slot, ``-1``
-meaning empty.  Keys are RoPE-rotated *at write time* with their absolute
-position, so slot order inside the buffer is irrelevant — masking is done
-purely on position values.  This makes SubGCache prefix reuse, sliding
-windows and wrap-around decode all the same code path.
+meaning empty.  Keys are stored CANONICAL (un-rotated); every read path
+applies the RoPE rotation at its *effective* positions just before the
+score matmul (DESIGN.md §14).  For the chain path the effective position
+is simply the stored position — bitwise what write-time rotation used to
+produce, because ``apply_rope`` rounds back to the cache dtype — while
+segment COMPOSITION adds a per-prefix-block position offset (a segment
+cached at base position P can be spliced at target offset T by rotating
+at ``stored_pos + (T - P)``).  Slot order inside the buffer stays
+irrelevant — masking is done purely on position values — which keeps
+SubGCache prefix reuse, sliding windows, wrap-around decode and spliced
+segments all the same code path.
 
 All masking is positional:
   valid(k)   = k_pos >= 0
@@ -240,7 +247,8 @@ def fold_attend(partials):
 def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix,
                   k_suf: jnp.ndarray, v_suf: jnp.ndarray,
                   suf_pos: jnp.ndarray, *, window: int = 0,
-                  impl: str = "xla") -> jnp.ndarray:
+                  impl: str = "xla",
+                  rope_theta: Optional[float] = None) -> jnp.ndarray:
     """Cascade attention over [shared prefix chain ++ per-member suffix].
 
     q: [B, Hq, Tq, D]; prefix: a {"k","v","pos"} seq-major batch-1
@@ -261,16 +269,25 @@ def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix,
     """
     segments = (tuple(prefix) if isinstance(prefix, (list, tuple))
                 else (prefix,))
+
+    def rot(kk, kp):
+        # Canonical-K storage: rotate at the stored positions just before
+        # attending.  ``apply_rope`` rounds back to the cache dtype, so
+        # this is bitwise what write-time rotation used to store.
+        if rope_theta is None:
+            return kk
+        return apply_rope(kk, kp[:, :, None], rope_theta)
+
     if impl == "pallas":
         from repro.kernels import ops as kops
-        sk = k_suf.transpose(0, 2, 1, 3)             # head-major for MXU
+        sk = rot(k_suf, suf_pos).transpose(0, 2, 1, 3)  # head-major for MXU
         sv = v_suf.transpose(0, 2, 1, 3)
         if q.shape[2] == 1:
             # decode: keep the decode-shaped [group, d] q tiling (one KV
             # stream per kv-head group) instead of 1-row prefill tiles;
             # the elementwise fold stays in XLA (fuses, nothing to tile)
             parts = [kops.decode_gqa_partial(
-                q[:, :, 0], p["k"].transpose(0, 2, 1, 3),
+                q[:, :, 0], rot(p["k"], p["pos"]).transpose(0, 2, 1, 3),
                 p["v"].transpose(0, 2, 1, 3), q_pos[:, 0], p["pos"],
                 window=window) for p in segments]
             parts.append(kops.decode_gqa_partial(
@@ -278,17 +295,19 @@ def attend_shared(q: jnp.ndarray, q_pos: jnp.ndarray, prefix,
             out, _, _ = fold_attend(parts)
             return out[:, :, None].astype(q.dtype)
         parts = [kops.attention_partial(
-            q, p["k"].transpose(0, 2, 1, 3), p["v"].transpose(0, 2, 1, 3),
+            q, rot(p["k"], p["pos"]).transpose(0, 2, 1, 3),
+            p["v"].transpose(0, 2, 1, 3),
             q_pos, p["pos"], causal=False, window=window)
             for p in segments]
         parts.append(kops.attention_partial(q, sk, sv, q_pos, suf_pos,
                                             causal=True, window=window))
         out, _, _ = kops.fold_partials(parts)
         return out.astype(q.dtype)
-    parts = [attend_partial(q, p["k"], p["v"], q_pos, p["pos"],
-                            causal=False, window=window) for p in segments]
-    parts.append(attend_partial(q, k_suf, v_suf, q_pos, suf_pos,
-                                causal=True, window=window))
+    parts = [attend_partial(q, rot(p["k"], p["pos"]), p["v"], q_pos,
+                            p["pos"], causal=False, window=window)
+             for p in segments]
+    parts.append(attend_partial(q, rot(k_suf, suf_pos), v_suf, q_pos,
+                                suf_pos, causal=True, window=window))
     out, _, _ = fold_attend(parts)
     return out.astype(q.dtype)
 
@@ -297,7 +316,10 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
                  prefix_arena: dict, prefix_pages: jnp.ndarray,
                  suffix_arena: dict, suffix_pages: jnp.ndarray,
                  *, window: int = 0, impl: str = "xla",
-                 fused: bool = True) -> jnp.ndarray:
+                 fused: bool = True,
+                 rope_theta: Optional[float] = None,
+                 prefix_offsets: Optional[jnp.ndarray] = None,
+                 prefix_skips: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Cascade attention over a paged KV arena (DESIGN.md §8, §11).
 
     q: [B, Hq, Tq, D]; prefix_arena / suffix_arena: {"k","v","pos"}
@@ -339,9 +361,23 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
     The Pallas path walks the page tables with one-block-per-grid-step
     scalar-prefetch DMA; the XLA path gathers the blocks (exact, and
     what CPU validation runs).
+
+    CANONICAL-K / COMPOSITION (DESIGN.md §14): arenas store un-rotated
+    keys; ``rope_theta`` (the serving path always passes it) enables
+    read-time rotation at each block's effective positions.
+    ``prefix_offsets`` [Bp, NBP] adds a per-prefix-block position delta
+    (segment spliced at a new target offset) and ``prefix_skips``
+    [Bp, NBP] masks the first N slots of a block (boundary tokens
+    recomputed into the suffix stream shadow the cached copies).  With
+    ``rope_theta`` set, the prefix partial is CAUSAL on effective
+    positions — vacuous for the chain layout (every prefix position
+    precedes every query) and required for compositions, where fresh
+    gap tokens interleave with cached segment positions.  Legacy calls
+    without ``rope_theta`` keep the historical pre-rotated semantics.
     """
     k_scale = prefix_arena.get("k_scale")
     v_scale = prefix_arena.get("v_scale")
+    p_causal = rope_theta is not None
     if impl == "pallas":
         from repro.kernels import ops as kops
         pka = prefix_arena["k"].transpose(0, 2, 1, 3)  # head-major (MXU)
@@ -354,15 +390,26 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
                 out = kops.fused_paged_decode_gqa(
                     q[:, :, 0], pka, pva, ska, sva, q_pos[:, 0], ppos,
                     spos, prefix_pages, suffix_pages, k_scale, v_scale,
-                    window=window)
+                    window=window, rope_theta=rope_theta,
+                    p_off=prefix_offsets, p_skip=prefix_skips)
                 return out[:, :, None].astype(q.dtype)
             out = kops.fused_paged_attention(
                 q, pka, pva, ska, sva, q_pos, ppos, spos, prefix_pages,
-                suffix_pages, k_scale, v_scale, window=window)
+                suffix_pages, k_scale, v_scale, window=window,
+                rope_theta=rope_theta, p_off=prefix_offsets,
+                p_skip=prefix_skips, prefix_causal=p_causal)
             return out.astype(q.dtype)
+        if prefix_offsets is not None or prefix_skips is not None:
+            raise NotImplementedError(
+                "segment composition needs fused=True or impl='xla'")
         if k_scale is not None:     # multi-launch kernels read raw tiles:
             pka = pka.astype(jnp.float32) * k_scale[:, :, None, None]
             pva = pva.astype(jnp.float32) * v_scale[:, :, None, None]
+        if rope_theta is not None:
+            # Multi-launch kernels read raw tiles: rotate the whole arena
+            # densely (offset-0 chain layout only; CPU-validation path).
+            pka = apply_rope(pka, ppos[:, None, :], rope_theta)
+            ska = apply_rope(ska, spos[:, None, :], rope_theta)
         if q.shape[2] == 1:
             o1, m1, l1 = kops.paged_decode_gqa_partial(
                 q[:, :, 0], pka, pva, q_pos[:, 0], ppos, prefix_pages,
@@ -373,7 +420,7 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
             out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
             return out[:, :, None].astype(q.dtype)
         o1, m1, l1 = kops.paged_attention_partial(
-            q, pka, pva, q_pos, ppos, prefix_pages, causal=False,
+            q, pka, pva, q_pos, ppos, prefix_pages, causal=p_causal,
             window=window)
         o2, m2, l2 = kops.paged_attention_partial(
             q, ska, sva, q_pos, spos, suffix_pages, causal=True,
@@ -381,7 +428,7 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
         out, _, _ = merge_attend(o1, m1, l1, o2, m2, l2)
         return out.astype(q.dtype)
 
-    def gathered(arena, pages):
+    def gathered(arena, pages, offsets=None, skips=None):
         kk = arena["k"][pages]                     # [Bk, W, bs, Hkv, D]
         bk, w, bs, hkv, d = kk.shape
         vv = arena["v"][pages]
@@ -393,11 +440,21 @@ def attend_paged(q: jnp.ndarray, q_pos: jnp.ndarray,
         kk = kk.reshape(bk, w * bs, hkv, d)
         vv = vv.reshape(bk, w * bs, hkv, d)
         pp = arena["pos"][pages].reshape(bk, w * bs)
+        if offsets is not None:                    # composition: splice
+            off = jnp.repeat(offsets.astype(jnp.int32), bs, axis=1)
+            pp = jnp.where(pp >= 0, pp + off, -1)  # effective positions
+        if skips is not None:                      # boundary recompute
+            slot = jnp.tile(jnp.arange(bs, dtype=jnp.int32), w)[None]
+            skip = jnp.repeat(skips.astype(jnp.int32), bs, axis=1)
+            pp = jnp.where(slot < skip, -1, pp)
+        if rope_theta is not None:
+            kk = apply_rope(kk, pp[:, :, None], rope_theta)
         return kk, vv, pp
 
-    pk, pv, pp = gathered(prefix_arena, prefix_pages)
+    pk, pv, pp = gathered(prefix_arena, prefix_pages, prefix_offsets,
+                          prefix_skips)
     sk, sv, sp = gathered(suffix_arena, suffix_pages)
-    o1, m1, l1 = attend_partial(q, pk, pv, q_pos, pp, causal=False,
+    o1, m1, l1 = attend_partial(q, pk, pv, q_pos, pp, causal=p_causal,
                                 window=window)
     o2, m2, l2 = attend_partial(q, sk, sv, q_pos, sp, causal=True,
                                 window=window)
@@ -531,7 +588,9 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                    slot_offset=0,
                    prefix_pages: Optional[jnp.ndarray] = None,
                    suffix_pages: Optional[jnp.ndarray] = None,
-                   fused: bool = True):
+                   fused: bool = True,
+                   prefix_offsets: Optional[jnp.ndarray] = None,
+                   prefix_skips: Optional[jnp.ndarray] = None):
     """x: [B, T, D_model]; positions: [B, T] absolute positions.
 
     Returns (out [B, T, D_model], new_cache or None).
@@ -581,11 +640,13 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
     k = k.reshape(b, t, num_kv_heads, head_dim)
     v = v.reshape(b, t, num_kv_heads, head_dim)
     q = apply_rope(q, positions[:, None, :], rope_theta)
-    k = apply_rope(k, positions[:, :, None], rope_theta)
+    # Keys are written CANONICAL (un-rotated); every branch below rotates
+    # at its effective positions just before attending (DESIGN.md §14).
 
     if cache is None:
         self_pos = positions if valid is None else jnp.where(valid, positions, -1)
-        out = _attend(q, k, v, positions, self_pos)
+        k_r = apply_rope(k, positions[:, :, None], rope_theta)
+        out = _attend(q, k_r, v, positions, self_pos)
         new_cache = None
     elif suffix_pages is not None:
         # Paged cascade: fresh KV scatters into the row's private suffix
@@ -593,16 +654,20 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
         # arena holding the suffix blocks; the prefix blocks live in
         # ``prefix`` when given (decode: the main arena as a read-only
         # scan invariant) or in the same ``cache`` (prefill: one
-        # address space).
+        # address space).  Rotation happens inside ``attend_paged`` at
+        # effective positions (stored pos + per-block composition offset).
         new_cache = cache_write_paged(cache, k, v, positions, suffix_pages,
                                       slot_offset=slot_offset, valid=valid)
         prefix_src = prefix if prefix is not None else new_cache
         out = attend_paged(q, positions, prefix_src, prefix_pages,
                            new_cache, suffix_pages, window=window,
-                           impl=impl, fused=fused)
+                           impl=impl, fused=fused, rope_theta=rope_theta,
+                           prefix_offsets=prefix_offsets,
+                           prefix_skips=prefix_skips)
     elif prefix is not None:
         # Split prefix/suffix cascade: fresh KV goes into the suffix-only
-        # cache; the shared batch-1 prefix buffers are attended in place.
+        # cache; the shared batch-1 prefix buffers are attended in place
+        # (rotated at their stored positions inside ``attend_shared``).
         self_pos = positions if valid is None else jnp.where(valid, positions, -1)
         if window and t > 1:
             # The window-sized suffix ring cannot hold T > capacity fresh
@@ -615,7 +680,8 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                 [cache["v"], v.astype(cache["v"].dtype)], axis=1)
             pos_all = jnp.concatenate([cache["pos"], self_pos], axis=1)
             out = attend_shared(q, positions, prefix, k_all, v_all, pos_all,
-                                window=window, impl=impl)
+                                window=window, impl=impl,
+                                rope_theta=rope_theta)
             new_cache = ring_write_window(cache, k, v, positions, valid,
                                           slot_offset=slot_offset)
         else:
@@ -624,7 +690,8 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
                                     valid=valid, slot_offset=slot_offset)
             out = attend_shared(q, positions, prefix, new_cache["k"],
                                 new_cache["v"], new_cache["pos"],
-                                window=window, impl=impl)
+                                window=window, impl=impl,
+                                rope_theta=rope_theta)
     elif window and t > 1:
         # Windowed multi-token (prefill / suffix prefill): the ring buffer
         # cannot hold T > capacity fresh tokens at once, so attend over
@@ -634,14 +701,16 @@ def self_attention(p: dict, x: jnp.ndarray, *, num_heads: int,
         k_all = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
         v_all = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
         pos_all = jnp.concatenate([cache["pos"], self_pos], axis=1)
-        out = _attend(q, k_all, v_all, positions, pos_all)
+        k_r = apply_rope(k_all, pos_all[:, :, None], rope_theta)
+        out = _attend(q, k_r, v_all, positions, pos_all)
         new_cache = ring_write_window(cache, k, v, positions, valid)
     else:
         ring_eff = ring or bool(window)
         new_cache = cache_write(cache, k, v, positions, ring=ring_eff,
                                 valid=valid)
-        out = _attend(q, new_cache["k"], new_cache["v"], positions,
-                      new_cache["pos"])
+        k_r = apply_rope(new_cache["k"], new_cache["pos"][:, :, None],
+                         rope_theta)
+        out = _attend(q, k_r, new_cache["v"], positions, new_cache["pos"])
     out = out.transpose(0, 2, 1, 3).reshape(b, t, num_heads * head_dim)
     return linear(out, p["wo"]), new_cache
 

@@ -142,7 +142,9 @@ def apply_layer(p: dict, spec: LayerSpec, cfg: ModelConfig, x: jnp.ndarray,
             slot_offset=ctx.get("slot_offset", 0),
             prefix_pages=ctx.get("prefix_pages"),
             suffix_pages=ctx.get("suffix_pages"),
-            fused=ctx.get("fused", True))
+            fused=ctx.get("fused", True),
+            prefix_offsets=ctx.get("prefix_offsets"),
+            prefix_skips=ctx.get("prefix_skips"))
         if sub_new is not None:
             new_cache.update(sub_new)
     elif spec.mixer == MAMBA:
@@ -477,7 +479,9 @@ def forward(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
             prefix: Optional[dict] = None, slot_offset=0,
             prefix_pages: Optional[jnp.ndarray] = None,
             suffix_pages: Optional[jnp.ndarray] = None,
-            fused: bool = True):
+            fused: bool = True,
+            prefix_offsets: Optional[jnp.ndarray] = None,
+            prefix_skips: Optional[jnp.ndarray] = None):
     """Run the decoder stack in any serving mode.
 
     embeds: [B, T, D] already-embedded inputs; positions: [B, T]
@@ -497,11 +501,17 @@ def forward(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
     cluster's own prefix length).  One batch mixes members of any
     number of clusters — sharing is a page-table fact, not a tensor
     layout.
+
+    Segment composition (DESIGN.md §14): ``prefix_offsets`` /
+    ``prefix_skips`` [Bp, NBP] give each prefix block a read-time
+    position delta and a leading-slot skip count — how a segment cached
+    at one base position serves a prompt that splices it elsewhere.
     """
     ctx = {"positions": positions, "valid": valid, "ring": ring,
            "enc": enc, "causal": True, "slot_offset": slot_offset,
            "prefix_pages": prefix_pages, "suffix_pages": suffix_pages,
-           "fused": fused}
+           "fused": fused, "prefix_offsets": prefix_offsets,
+           "prefix_skips": prefix_skips}
     return run_stack(params, cfg, embeds, cache, ctx, prefix=prefix)
 
 

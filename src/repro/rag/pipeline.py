@@ -142,7 +142,9 @@ class GraphRAGPipeline:
 
     def run_subgcache(self, items: Sequence[QAItem], num_clusters: int,
                       linkage: str = "ward", tree_levels: int = 1,
-                      dendrogram: Optional[Dendrogram] = None) -> tuple:
+                      dendrogram: Optional[Dendrogram] = None,
+                      compose: bool = False,
+                      recompute_frac: float = 0.0) -> tuple:
         """Cluster-wise prefix-cache processing (the paper's method).
 
         ``tree_levels`` (DESIGN.md §10): cut the dendrogram at
@@ -156,7 +158,22 @@ class GraphRAGPipeline:
         ``dendrogram``: pass a precomputed ``build_dendrogram`` result
         to make the clustering step a cheap cut replay (the fig3 sweep
         computes the merge tree once and cuts it per point).
+
+        ``compose=True`` (paged backends; DESIGN.md §14): serve every
+        leaf cluster through position-independent segment COMPOSITION
+        instead of literal-prefix chains — segments are cached
+        content-addressed (keyed by their delta token text), so a
+        cluster whose prompt contains a segment some OTHER cluster
+        already prefilled splices the cached copy at its own offset via
+        read-time re-rotation, with ``recompute_frac`` of each spliced
+        segment's leading tokens recomputed fresh (0.0 = pure splice,
+        1.0 = dense-equivalent recompute — the quality-vs-TTFT dial,
+        EXPERIMENTS.md).
         """
+        if compose:
+            return self._run_subgcache_compose(items, num_clusters, linkage,
+                                               tree_levels, dendrogram,
+                                               recompute_frac)
         if tree_levels > 1 and self.engine.use_split_prefix:
             return self._run_subgcache_tree(items, num_clusters, linkage,
                                             tree_levels, dendrogram)
@@ -321,6 +338,140 @@ class GraphRAGPipeline:
         return records, summary, plan, stats
 
     # ------------------------------------------------------------------
+    def _run_subgcache_compose(self, items: Sequence[QAItem],
+                               num_clusters: int, linkage: str,
+                               tree_levels: int,
+                               dendrogram: Optional[Dendrogram],
+                               recompute_frac: float) -> tuple:
+        """Offline serving via segment composition (DESIGN.md §14).
+
+        Segments are cached CONTENT-addressed: the registry maps a
+        segment's delta token text (``textualize_delta`` is
+        order-normalized, so equal content sets give byte-identical
+        text) to its cached ``PrefixState``.  Per leaf cluster:
+
+        * the cold LEADING run of its path is prefilled as a chain and
+          registered — a segment's cached KV encodes attention over its
+          left context, so only contiguous-from-root segments are
+          coherent enough to cache;
+        * a registry hit ANYWHERE in the path splices the cached copy
+          at this prompt's offset (read-time re-rotation), even when it
+          was prefilled under a different cluster at a different
+          position — the cross-cluster reuse literal-prefix chains
+          never expressed;
+        * segments behind a splice or gap are served as fresh GAP spans
+          (recomputed per serve, not cached).
+
+        Exact-offset hits (shared dendrogram ancestors) splice with a
+        zero delta and stay token-identical to the chain path;
+        re-based splices are approximate — ``recompute_frac`` and the
+        benchmark's greedy-match gate govern that trade."""
+        from repro.core.planner import plan_composition
+        from repro.serving.engine import Request
+        assert self.engine.use_paged, \
+            "segment composition rides the paged backend (DESIGN.md §14)"
+        subgraphs, ret_times = self.retrieve_all(items)
+
+        t0 = time.perf_counter()
+        emb = self.embed_for_clustering(subgraphs)
+        plan = plan_prefix_tree(subgraphs, emb, num_clusters,
+                                tree_levels=tree_levels, linkage=linkage,
+                                dendrogram=dendrogram)
+        cluster_time = (time.perf_counter() - t0
+                        + plan.cluster_processing_time_s)
+        share = cluster_time / max(1, len(items))
+
+        stats = self.engine.cache_mgr.reset_stats()
+        reg: dict = {}           # segment token content -> PrefixState
+        owned: List = []         # registry-owned states (released below)
+        records: List[QueryRecord] = [None] * len(items)  # type: ignore
+        try:
+            for leaf in plan.leaves:
+                node = plan.nodes[leaf]
+                path = plan.path(leaf)
+                t1 = time.perf_counter()
+                seg_toks: List[List[int]] = []
+                for depth, nid in enumerate(path):
+                    content = plan.nodes[nid].content
+                    base = (plan.nodes[path[depth - 1]].content
+                            if depth else None)
+                    payload = self._segment_payload(content, base)
+                    toks, soft = (payload if isinstance(payload, tuple)
+                                  else (payload, None))
+                    assert soft is None, \
+                        "compose mode serves token segments — disable " \
+                        "the soft graph prompt (use_soft_prompt=False)"
+                    seg_toks.append(list(toks))
+                t_build_prefix = time.perf_counter() - t1
+
+                # cache + register the cold leading run of the path
+                t1 = time.perf_counter()
+                parent, extendable, off = None, True, 0
+                for toks in seg_toks:
+                    key = tuple(toks)
+                    hit = reg.get(key)
+                    if hit is not None:
+                        # extension may continue only through an
+                        # exact-offset hit (a shared ancestor): its
+                        # chain IS this path's prefix
+                        extendable = extendable and hit.base_pos == off
+                        parent = hit if extendable else None
+                    elif extendable:
+                        if parent is None:
+                            st, _ = self.engine.prefill_prefix(
+                                toks, _record=False)
+                        else:
+                            st, _ = self.engine.prefill_prefix_extension(
+                                parent, toks, _record=False)
+                        reg[key] = st
+                        owned.append(st)
+                        parent = st
+                    else:
+                        parent = None            # gap: not cacheable
+                    off += len(toks)
+                t_prefix = time.perf_counter() - t1
+
+                comp = plan_composition(seg_toks, reg.get,
+                                        recompute_frac=recompute_frac)
+                assert comp is not None     # the leading run registered
+
+                n = len(node.member_indices)
+                suffixes, builds = [], []
+                for qi in node.member_indices:
+                    t1 = time.perf_counter()
+                    suffixes.append(self.tokenizer.encode(
+                        self.suffix_text(items[qi].question)))
+                    builds.append(time.perf_counter() - t1)
+
+                outs, t = self.engine.serve(
+                    [Request(suffix_tokens=s, composition=comp)
+                     for s in suffixes])
+
+                for k, qi in enumerate(node.member_indices):
+                    it = items[qi]
+                    text = self.tokenizer.decode(outs[k])
+                    records[qi] = QueryRecord(
+                        query=it.question, answer=it.answer,
+                        generated=text,
+                        correct=self._check(text, it.answer),
+                        retrieval_s=ret_times[qi], cluster_share_s=share,
+                        prompt_build_s=builds[k] + t_build_prefix / n,
+                        prefix_share_s=t_prefix / n,
+                        prefill_s=t["prefill_share"][k],
+                        decode_s=t["decode_share"][k],
+                        prompt_tokens=comp.total_len + len(suffixes[k]),
+                        cached_tokens=comp.spliced_tokens())
+        finally:
+            for st in owned:
+                st.release()
+        summary = RunSummary.from_records(
+            f"subgcache-compose(c={num_clusters},{linkage},"
+            f"tree{tree_levels},frac={recompute_frac})", records,
+            cluster_processing_s=cluster_time,
+            prefill_savings=stats.prefill_savings)
+        return records, summary, plan, stats
+
+    # ------------------------------------------------------------------
     def _prefix_payload(self, sg: Subgraph):
         """(prefix tokens, soft-prompt embeds or None) for a cluster
         representative — the closure ``OnlineScheduler`` prefills with."""
@@ -351,7 +502,8 @@ class GraphRAGPipeline:
                      tree_levels: int = 1,
                      tree_clusters: Optional[int] = None,
                      host_tier_bytes: Optional[int] = None,
-                     scheduler=None, replicas: int = 1) -> tuple:
+                     scheduler=None, replicas: int = 1,
+                     compose_frac: Optional[float] = None) -> tuple:
         """Online serving of a streaming query trace (DESIGN.md §7/§9).
 
         ``items[i]`` arrives at ``arrivals[i]`` seconds (any order).
@@ -406,6 +558,17 @@ class GraphRAGPipeline:
         consulted in global arrival order, so the token streams stay
         identical to ``replicas=1``; returns ``(records, summary,
         router)`` (the router in the scheduler slot).
+
+        ``compose_frac`` (paged backends; DESIGN.md §14) turns on
+        position-independent segment composition: before materializing
+        a cluster's chain the scheduler consults its content-addressed
+        segment registry and, when the chain can be assembled from
+        resident segments with at least one re-based splice, serves the
+        row from a ``SegmentComposition`` instead of prefilling — only
+        gap spans and a boundary recompute window of that fraction per
+        segment are recomputed.  ``1.0`` recomputes every spliced token
+        (token-identical to the chain path); ``None`` (default)
+        disables composition entirely.
         """
         from repro.core.prefix_pool import PrefixPool
         from repro.serving.scheduler import ArrivalQueue, OnlineScheduler
@@ -437,6 +600,10 @@ class GraphRAGPipeline:
             scheduler.pool.stats = stats    # fresh accounting window
             if scheduler.pool.tier is not None:
                 scheduler.pool.tier.stats = stats
+        scheduler.compose_frac = compose_frac
+        if compose_frac is not None:
+            assert self.engine.use_paged, \
+                "segment composition requires the paged backend"
         if host_tier_bytes is not None and scheduler.pool.tier is None \
                 and getattr(self.engine, "block_pool", None) is not None:
             from repro.core.tiered import HostTier

@@ -54,7 +54,8 @@ import numpy as np
 
 from repro.core.cache import PrefixState
 from repro.core.paged import NULL_BLOCK, reset_pos_rows
-from repro.data.tokenizer import EOS
+from repro.data.tokenizer import EOS, PAD
+from repro.models import model as M
 from repro.serving.bucketing import blocks_for, bucket_len, bucket_pow2
 from repro.serving.engine import Request
 
@@ -79,6 +80,16 @@ class RowState:
     on_retire: Optional[Callable[[Any], None]]
     decode_s: float = 0.0           # exact: sum of chunk_time / live_rows
     steps: int = 0                  # decode steps actually consumed
+    plen: int = 0                   # context length for stats (chain:
+                                    # prefix_len; composed: total_len)
+    pinned: List[int] = dataclasses.field(default_factory=list)
+                                    # blocks this row increfed at
+                                    # admission (decrefed at retirement)
+    prefix_offsets: List[int] = dataclasses.field(default_factory=list)
+                                    # per-prefix-block position deltas
+    prefix_skips: List[int] = dataclasses.field(default_factory=list)
+                                    # per-prefix-block leading-slot masks
+                                    # (composed rows, DESIGN.md §14)
 
 
 @dataclasses.dataclass
@@ -229,6 +240,8 @@ class ContinuousEngine:
         if payloads is None:
             payloads = [None] * k
         assert len(payloads) == k
+        if any(r.composition is not None for r in requests):
+            return self._admit_composed(requests, payloads, now, on_retire)
         states = [r.prefix for r in requests]
         for st in states:
             if st is not None:
@@ -305,7 +318,113 @@ class ContinuousEngine:
                 emitted=[int(first[j])],
                 steps_left=eng.max_new_tokens - 1,
                 admitted_s=now, prefill_s=t_prefill / k,
-                on_retire=on_retire)
+                on_retire=on_retire,
+                plen=st.prefix_len if st is not None else 0,
+                pinned=prefix_blocks[j])
+            b.slots[slot] = row
+            if row.tok == EOS or row.steps_left == 0:
+                self._retire(slot)       # no decode owed: retire now
+        return t_prefill
+
+    def _admit_composed(self, requests: Sequence[Request], payloads,
+                        now: float,
+                        on_retire: Optional[Callable[[Any], None]]
+                        ) -> float:
+        """Admission for batches carrying composition plans (DESIGN.md
+        §14) — chain and prefixless rows ride along as degenerate plans
+        (``ServingEngine._row_plan``).  Differs from the plain path in
+        the same three ways the drain ``_serve_composed`` does: prefix
+        tables carry per-block offsets/skips, the prefill computes a
+        NON-CONTIGUOUS fresh stream at explicit absolute positions, and
+        the slot's fixed suffix band anchors at the row's first fresh
+        position.  The row's whole fresh SPAN (first fresh position to
+        prompt end — cached holes included) must fit ``max_suffix_len``:
+        the band is a compiled shape, so this is an admission contract,
+        not a serving-time reallocation."""
+        eng, b = self.engine, self.batch
+        pool = eng.block_pool
+        k = len(requests)
+        slots = b.free[:k]
+        t0 = time.perf_counter()
+        kb = bucket_pow2(k)
+        plans: List[dict] = []
+        flat: Optional[List[int]] = None
+        try:
+            for r in requests:
+                plans.append(eng._row_plan(r))     # pins plan["pinned"]
+            for p in plans:
+                assert len(p["ids"]) <= b.t_max, \
+                    (len(p["ids"]), b.t_max)
+                assert p["prompt_len"] - p["slot_off"] <= b.t_max, \
+                    ("composed fresh span exceeds the slot band",
+                     p["prompt_len"], p["slot_off"], b.t_max)
+            pad = dict(blocks=[], offsets=[], skips=[], pinned=[],
+                       ids=[EOS], pos=[0], slot_off=0, prompt_len=1)
+            plans_kb = plans + [pad] * (kb - k)     # batch padding rows
+            flat = pool.alloc(k * b.nbs, suffix=True)
+            for j in range(k):
+                pool.note_tokens(flat[j * b.nbs:(j + 1) * b.nbs],
+                                 len(plans[j]["ids"]), suffix=True)
+            eng.cache_mgr.stats.record_blocks(pool)
+
+            nbp = bucket_pow2(max(1, max(len(p["blocks"])
+                                         for p in plans_kb)))
+            prow = np.full((kb, nbp), NULL_BLOCK, np.int32)
+            poff = np.zeros((kb, nbp), np.int32)
+            pskip = np.zeros((kb, nbp), np.int32)
+            for j, p in enumerate(plans_kb):
+                w = len(p["blocks"])
+                prow[j, :w] = p["blocks"]
+                poff[j, :w] = p["offsets"]
+                pskip[j, :w] = p["skips"]
+            srow = np.full((kb, b.nbs), b.trash_row, np.int32)
+            for j, s in enumerate(slots):
+                srow[j] = b.slot_rows(s)
+            b.reset_slots(slots)
+            ids = np.full((kb, b.t_max), PAD, np.int32)
+            pos = np.zeros((kb, b.t_max), np.int32)
+            valid = np.zeros((kb, b.t_max), bool)
+            for j, p in enumerate(plans_kb):
+                w = len(p["ids"])
+                ids[j, :w] = p["ids"]
+                pos[j, :w] = p["pos"]
+                valid[j, :w] = True
+            embeds = M.embed_tokens(eng.params, jnp.asarray(ids))
+            offs = np.asarray([p["slot_off"] for p in plans_kb], np.int32)
+            prefill = eng._prefill_jit(kb, b.t_max)
+            out = b._with_sub(lambda sub: _cache_last(prefill(
+                eng.params, embeds, jnp.asarray(pos), jnp.asarray(valid),
+                sub, pool.prefix_source(), jnp.asarray(offs),
+                jnp.asarray(prow), jnp.asarray(srow), jnp.asarray(poff),
+                jnp.asarray(pskip))))
+            first = np.asarray(jax.block_until_ready(
+                jnp.argmax(out[0], axis=-1).astype(jnp.int32)))
+            t_prefill = time.perf_counter() - t0
+        except BaseException:
+            # unwind: no phantom segment pins, no leaked reservations
+            for p in plans:
+                if p["pinned"]:
+                    pool.decref(p["pinned"])
+            if flat is not None:
+                pool.decref(flat, suffix=True)
+            raise
+
+        for j, (slot, req, p) in enumerate(zip(slots, requests, plans)):
+            if req.composition is not None:
+                eng.cache_mgr.stats.record_compose(req.composition)
+            row = RowState(
+                payload=payloads[j], state=req.prefix,
+                prefix_blocks=list(p["blocks"]),
+                blocks=flat[j * b.nbs:(j + 1) * b.nbs],
+                suffix_len=len(req.suffix_tokens),
+                offset=int(p["slot_off"]), pos=int(p["prompt_len"]),
+                tok=int(first[j]), emitted=[int(first[j])],
+                steps_left=eng.max_new_tokens - 1,
+                admitted_s=now, prefill_s=t_prefill / k,
+                on_retire=on_retire,
+                plen=int(p["prompt_len"]) - len(req.suffix_tokens),
+                pinned=p["pinned"], prefix_offsets=list(p["offsets"]),
+                prefix_skips=list(p["skips"]))
             b.slots[slot] = row
             if row.tok == EOS or row.steps_left == 0:
                 self._retire(slot)       # no decode owed: retire now
@@ -353,11 +472,24 @@ class ContinuousEngine:
             r = b.slots[i]
             tok[i], pos[i], done[i], offs[i] = r.tok, r.pos, False, r.offset
             prow[i, :len(r.prefix_blocks)] = r.prefix_blocks
+        # composed rows decode with per-block offset/skip tables; pure
+        # chain batches pass None and keep their pre-composition
+        # executable (None vs array is a separate trace)
+        poff = pskip = None
+        if any(any(b.slots[i].prefix_offsets) or any(b.slots[i].prefix_skips)
+               for i in live):
+            poff = np.zeros((n, nbp), np.int32)
+            pskip = np.zeros((n, nbp), np.int32)
+            for i in live:
+                r = b.slots[i]
+                w = len(r.prefix_offsets)
+                poff[i, :w] = r.prefix_offsets
+                pskip[i, :w] = r.prefix_skips
 
         t0 = time.perf_counter()
         toks = b._with_sub(lambda sub: eng.decode_step(
             tok, pos, done, sub, offs, prow, b._sub_pages,
-            steps=b.chunk))[0]
+            steps=b.chunk, prefix_offsets=poff, prefix_skips=pskip))[0]
         out = np.asarray(jax.block_until_ready(toks))
         wall = time.perf_counter() - t0
 
@@ -466,12 +598,11 @@ class ContinuousEngine:
         # freed blocks' stored-token counters, so the gauge never keeps
         # charging a retired row's unconsumed decode budget
         pool.decref(r.blocks, suffix=True)
-        if r.prefix_blocks:
-            pool.decref(r.prefix_blocks)     # the admission-time chain pins
+        if r.pinned:
+            pool.decref(r.pinned)    # the admission-time chain/segment pins
         stats = eng.cache_mgr.stats
-        plen = r.state.prefix_len if r.state is not None else 0
         stats.record_served(1)
-        stats.record_member(plen + r.suffix_len, r.suffix_len)
+        stats.record_member(r.plen + r.suffix_len, r.suffix_len)
         stats.finalize()
         stats.record_blocks(pool)
         toks = eng._cut(np.asarray(r.emitted, np.int32))

@@ -54,7 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import ClusterCacheManager, PrefixState
+from repro.core.cache import (ClusterCacheManager, PrefixState,
+                              SegmentComposition)
 from repro.core.paged import NULL_BLOCK, KVBlockPool, PageTable
 from repro.data.tokenizer import EOS, PAD, Tokenizer
 from repro.models import model as M
@@ -67,9 +68,21 @@ from repro.serving.bucketing import (blocks_for, bucket_capacity, bucket_len,
 class Request:
     """One serving request: a suffix to prefill+decode behind an
     optional shared-prefix state (None = no cached prefix; the row
-    attends nothing but its own tokens)."""
+    attends nothing but its own tokens).
+
+    ``composition`` (mutually exclusive with ``prefix``) serves the row
+    against a ``SegmentComposition`` plan instead (DESIGN.md §14): the
+    prompt context ``[0, total_len)`` is a splice of re-based cached
+    segments plus fresh gap spans, and ``suffix_tokens`` follow at
+    ``total_len`` as the final fresh span (the query text — the plan
+    must end in fresh tokens so the first decode logit exists)."""
     suffix_tokens: List[int]
     prefix: Optional[PrefixState] = None
+    composition: Optional[SegmentComposition] = None
+
+    def __post_init__(self):
+        assert self.prefix is None or self.composition is None, \
+            "a request carries a prefix state OR a composition plan"
 
 
 class ServingEngine:
@@ -183,13 +196,16 @@ class ServingEngine:
         fused = self.fused
 
         def prefill(params, embeds, positions, valid, cache, prefix,
-                    slot_offset, prefix_pages, suffix_pages):
+                    slot_offset, prefix_pages, suffix_pages,
+                    prefix_offsets=None, prefix_skips=None):
             hidden, cache, _ = M.forward(params, cfg, embeds, positions,
                                          cache=cache, valid=valid,
                                          prefix=prefix,
                                          slot_offset=slot_offset,
                                          prefix_pages=prefix_pages,
                                          suffix_pages=suffix_pages,
+                                         prefix_offsets=prefix_offsets,
+                                         prefix_skips=prefix_skips,
                                          fused=fused)
             lengths = jnp.sum(valid.astype(jnp.int32), axis=1)      # [B]
             last = jnp.take_along_axis(
@@ -211,7 +227,8 @@ class ServingEngine:
         fused = self.fused
 
         def decode(params, first_token, lengths, cache, prefix, slot_offset,
-                   prefix_pages, suffix_pages):
+                   prefix_pages, suffix_pages,
+                   prefix_offsets=None, prefix_skips=None):
             def body(carry, _):
                 cache, tok, pos, done = carry
                 emb = M.embed_tokens(params, tok[:, None])
@@ -220,6 +237,8 @@ class ServingEngine:
                                              slot_offset=slot_offset,
                                              prefix_pages=prefix_pages,
                                              suffix_pages=suffix_pages,
+                                             prefix_offsets=prefix_offsets,
+                                             prefix_skips=prefix_skips,
                                              fused=fused)
                 logits = M.unembed(params, cfg, hidden)[:, 0]
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -253,7 +272,8 @@ class ServingEngine:
         fused = self.fused
 
         def decode_step(params, tok, pos, done, cache, prefix, slot_offset,
-                        prefix_pages, suffix_pages):
+                        prefix_pages, suffix_pages,
+                        prefix_offsets=None, prefix_skips=None):
             def body(carry, _):
                 cache, tok, pos, done = carry
                 emb = M.embed_tokens(params, tok[:, None])
@@ -262,6 +282,8 @@ class ServingEngine:
                                              slot_offset=slot_offset,
                                              prefix_pages=prefix_pages,
                                              suffix_pages=suffix_pages,
+                                             prefix_offsets=prefix_offsets,
+                                             prefix_skips=prefix_skips,
                                              fused=fused)
                 logits = M.unembed(params, cfg, hidden)[:, 0]
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -276,19 +298,28 @@ class ServingEngine:
         return jax.jit(decode_step, donate_argnums=(4,))
 
     def decode_step(self, tok, pos, done, sub, offs, prefix_rows,
-                    suffix_rows, *, steps: int):
+                    suffix_rows, *, steps: int,
+                    prefix_offsets=None, prefix_skips=None):
         """Run one ``steps``-token decode chunk over an in-flight batch
         (continuous serving facade; see ``serving/continuous.py``).
 
         ``sub`` is DONATED: callers must treat their handle as consumed
         and re-home the returned sub-arena (exception-safe, like
-        ``_with_arena``).  Returns ``(tokens [B, steps], sub)``."""
+        ``_with_arena``).  ``prefix_offsets``/``prefix_skips`` [B, NBP]
+        carry composed rows' per-block re-base deltas and boundary
+        masks (DESIGN.md §14; None for chain-only batches — a separate
+        trace, not a zero-filled operand, so chain serving keeps its
+        executable).  Returns ``(tokens [B, steps], sub)``."""
         fn = self._decode_step_jit(int(len(tok)), int(steps))
+        po = (None if prefix_offsets is None
+              else jnp.asarray(prefix_offsets, jnp.int32))
+        ps = (None if prefix_skips is None
+              else jnp.asarray(prefix_skips, jnp.int32))
         return fn(self.params, jnp.asarray(tok, jnp.int32),
                   jnp.asarray(pos, jnp.int32), jnp.asarray(done, bool),
                   sub, self.block_pool.prefix_source(),
                   jnp.asarray(offs, jnp.int32), jnp.asarray(prefix_rows),
-                  jnp.asarray(suffix_rows))
+                  jnp.asarray(suffix_rows), po, ps)
 
     # ------------------------------------------------------------------
     # embedding helpers
@@ -512,7 +543,11 @@ class ServingEngine:
         """
         n = len(requests)
         assert n > 0, "serve() needs at least one request"
-        if self.use_paged and not any(
+        if any(r.composition is not None for r in requests):
+            assert self.use_paged, \
+                "composition plans need the paged backend (DESIGN.md §14)"
+            outs, timing = self._serve_composed(requests)
+        elif self.use_paged and not any(
                 r.prefix is not None and r.prefix.enc_len for r in requests):
             outs, timing = self._serve_paged(requests)
         else:
@@ -523,7 +558,11 @@ class ServingEngine:
             stats = self.cache_mgr.stats
             stats.record_served(n)
             for r in requests:
-                plen = r.prefix.prefix_len if r.prefix is not None else 0
+                if r.composition is not None:
+                    plen = r.composition.total_len
+                    stats.record_compose(r.composition)
+                else:
+                    plen = r.prefix.prefix_len if r.prefix is not None else 0
                 stats.record_member(plen + len(r.suffix_tokens),
                                     len(r.suffix_tokens))
             stats.finalize()
@@ -679,6 +718,155 @@ class ServingEngine:
         return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
                       "batch": b, "split_prefix": True, "paged": True,
                       "num_prefixes": len(pinned),
+                      "prefill_share": [t_prefill / n] * n,
+                      "decode_share": [t_decode / n] * n}
+
+    # ------------------------------------------------------------------
+    # composed serving (DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def _row_plan(self, req: Request) -> dict:
+        """Host-side serving plan for one request under the composed
+        path: the prefix-row layout (blocks + per-block offsets/skips,
+        PINNED — caller decrefs ``pinned``), the fresh token/position
+        stream the prefill must compute, the suffix-table slot offset,
+        and the total prompt length.  A chain/prefixless request is the
+        degenerate plan (zero offsets, zero skips, contiguous fresh
+        suffix) — one code path serves mixed batches."""
+        pool = self.block_pool
+        sfx = list(req.suffix_tokens)
+        if req.composition is not None:
+            comp = req.composition
+            assert sfx, "a composed request needs suffix tokens — the " \
+                "prompt must end in fresh tokens for the first decode logit"
+            crow = pool.compose(comp)            # pins segment blocks
+            ids: List[int] = []
+            pos: List[int] = []
+            for off, toks in comp.fresh_spans():
+                ids.extend(toks)
+                pos.extend(range(off, off + len(toks)))
+            ids.extend(sfx)
+            pos.extend(range(comp.total_len, comp.total_len + len(sfx)))
+            return dict(blocks=crow.blocks, offsets=crow.offsets,
+                        skips=crow.skips, pinned=crow.pinned, ids=ids,
+                        pos=pos, slot_off=pos[0] if ids else 0,
+                        prompt_len=comp.total_len + len(sfx))
+        st = req.prefix
+        if st is None:
+            return dict(blocks=[], offsets=[], skips=[], pinned=[],
+                        ids=sfx, pos=list(range(len(sfx))), slot_off=0,
+                        prompt_len=len(sfx))
+        assert st.is_paged and st.block_pool is pool, \
+            "paged serve needs page-table states from this engine"
+        blocks = st.chain_blocks()
+        pool.incref(blocks)
+        plen = st.prefix_len
+        return dict(blocks=blocks, offsets=[0] * len(blocks),
+                    skips=[0] * len(blocks), pinned=blocks, ids=sfx,
+                    pos=list(range(plen, plen + len(sfx))), slot_off=plen,
+                    prompt_len=plen + len(sfx))
+
+    def _serve_composed(self, requests: Sequence[Request]
+                        ) -> Tuple[List[List[int]], dict]:
+        """Serve a batch containing composition plans (DESIGN.md §14).
+
+        Differs from ``_serve_paged`` in three ways: the prefix tables
+        carry per-block position offsets and leading-slot skips; the
+        prefill computes a NON-CONTIGUOUS fresh stream (gap spans +
+        boundary recompute windows + the suffix) at explicit absolute
+        positions; and each row's suffix table anchors at its first
+        fresh position (``slot_off``) so fresh KV and the decode tail
+        share one table — blocks spanning cached holes are allocated
+        and unused, the price of a uniform slot mapping.  Chain and
+        prefixless rows ride along as degenerate plans."""
+        pool = self.block_pool
+        n = len(requests)
+        b = bucket_pow2(n)
+        t0 = time.perf_counter()
+        plans: List[dict] = []
+        flat: Optional[List[int]] = None
+        try:
+            for r in requests:
+                plans.append(self._row_plan(r))
+            pad = dict(blocks=[], offsets=[], skips=[], pinned=[],
+                       ids=[EOS], pos=[0], slot_off=0, prompt_len=1)
+            plans += [pad] * (b - n)                 # batch padding rows
+            nbp = bucket_pow2(max(1, max(len(p["blocks"])
+                                         for p in plans)))
+            prow = np.full((b, nbp), NULL_BLOCK, np.int32)
+            poff = np.zeros((b, nbp), np.int32)
+            pskip = np.zeros((b, nbp), np.int32)
+            for i, p in enumerate(plans):
+                w = len(p["blocks"])
+                prow[i, :w] = p["blocks"]
+                poff[i, :w] = p["offsets"]
+                pskip[i, :w] = p["skips"]
+            lens = np.asarray([len(p["ids"]) for p in plans], np.int32)
+            t_pad = bucket_len(int(lens.max()), self.bucket)
+            ids = np.full((b, t_pad), PAD, np.int32)
+            pos = np.zeros((b, t_pad), np.int32)
+            valid = np.zeros((b, t_pad), bool)
+            for i, p in enumerate(plans):
+                ids[i, :lens[i]] = p["ids"]
+                pos[i, :lens[i]] = p["pos"]
+                valid[i, :lens[i]] = True
+            embeds = M.embed_tokens(self.params, jnp.asarray(ids))
+            offs = np.asarray([p["slot_off"] for p in plans], np.int32)
+            # suffix tables span [slot_off, prompt_end + decode tail]
+            # per row; width is the batch max (holes over cached spans
+            # stay unwritten)
+            need = max(int(p["prompt_len"]) - int(p["slot_off"])
+                       for p in plans)
+            suffix_cap = self._suffix_capacity_for(need)
+            nbs = blocks_for(suffix_cap, self.block_size)
+            flat = pool.alloc_suffix(b * nbs)
+            suffix_rows = np.asarray(flat, np.int32).reshape(b, nbs)
+            for i in range(b):
+                pool.note_tokens(suffix_rows[i], int(lens[i]), suffix=True)
+            self.cache_mgr.stats.record_blocks(pool)
+            prowj = jnp.asarray(prow)
+            poffj = jnp.asarray(poff)
+            pskipj = jnp.asarray(pskip)
+            srow = jnp.asarray(suffix_rows)
+            offj = jnp.asarray(offs)
+            prefill = self._prefill_jit(b, t_pad)
+            arena, logits, _ = self._with_arena(
+                lambda a: prefill(self.params, embeds, jnp.asarray(pos),
+                                  jnp.asarray(valid), a, pool.qarena,
+                                  offj, prowj, srow, poffj, pskipj))
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            jax.block_until_ready(first)
+            t_prefill = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            lengths = jnp.asarray([p["prompt_len"] for p in plans],
+                                  jnp.int32)
+            decode = self._decode_jit(b)
+            sub = pool.extract(flat)
+            sub_pages = jnp.arange(b * nbs, dtype=jnp.int32).reshape(b, nbs)
+            out, _ = decode(self.params, first, lengths, sub,
+                            pool.prefix_source(), offj, prowj, sub_pages,
+                            poffj, pskipj)
+            out = np.asarray(jax.block_until_ready(out))
+            t_decode = time.perf_counter() - t0
+            for i in range(b):
+                row = out[i].tolist()
+                gen = (row.index(EOS) + 1 if EOS in row else len(row))
+                pool.note_tokens(suffix_rows[i], int(lens[i]) + gen,
+                                 suffix=True)
+            self.cache_mgr.stats.record_blocks(pool)
+        finally:
+            if flat is not None:
+                pool.decref(flat, suffix=True)
+            for p in plans:
+                if p["pinned"]:
+                    pool.decref(p["pinned"])
+        self.cache_mgr.stats.record_blocks(pool)
+        toks = [self._cut(out[i]) for i in range(n)]
+        return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
+                      "batch": b, "split_prefix": True, "paged": True,
+                      "composed": True,
+                      "num_prefixes": sum(
+                          1 for p in plans if p["pinned"]),
                       "prefill_share": [t_prefill / n] * n,
                       "decode_share": [t_decode / n] * n}
 

@@ -45,7 +45,9 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.planner import BatchPlan, ChainSpec, PrefixTreePlan
+from repro.core.cache import SegmentComposition
+from repro.core.planner import (BatchPlan, ChainSpec, PrefixTreePlan,
+                                plan_composition)
 from repro.core.prefix_pool import PrefixPool
 from repro.core.subgraph import Subgraph
 
@@ -309,6 +311,13 @@ class OnlineScheduler:
         self.pool = pool
         self.prefix_tokens_fn = prefix_tokens_fn
         self.segment_tokens_fn = segment_tokens_fn
+        # segment composition (DESIGN.md §14): ``compose_frac`` arms the
+        # composed admission path (None = chains only, the historical
+        # behavior); the registry maps segment token CONTENT to the pool
+        # key it is cached under, so a cluster can splice a segment some
+        # other cluster prefilled at a different base position
+        self.compose_frac: Optional[float] = None
+        self._seg_registry: dict = {}
         # pool accounting flows into the engine's serving stats window
         self.pool.stats = engine.cache_mgr.stats
         # paged backend: block-allocator pressure evicts cold pooled
@@ -345,6 +354,8 @@ class OnlineScheduler:
         toks, soft = payload if isinstance(payload, tuple) else (payload, None)
         state, dt = self.engine.prefill_prefix(toks, soft)
         self.pool.put(cluster_id, state, prefill_s=dt, pin=pin)
+        if soft is None:
+            self._seg_registry[tuple(toks)] = cluster_id
         return state, False, dt
 
     def ensure_chain(self, cluster_id: int, pin: bool = False):
@@ -396,6 +407,8 @@ class OnlineScheduler:
                         st, dt = self.engine.prefill_prefix_extension(
                             parent, toks)
                     self.pool.put(key, st, prefill_s=dt, pin=pin)
+                    if soft is None:
+                        self._seg_registry[tuple(toks)] = key
                     prefill_s += dt
                 stats.record_tree_segment(i, st.segment_len, hit=hit,
                                           leaf=(i == n - 1))
@@ -411,6 +424,76 @@ class OnlineScheduler:
             raise
         self.pool.observe_tree_residency()
         return parent, hit, prefill_s, keys
+
+    # ------------------------------------------------------------------
+    # segment composition admission (DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def try_compose(self, cluster_id: int, pin: bool = True
+                    ) -> Optional[Tuple[SegmentComposition, List[Any]]]:
+        """Plan a ``SegmentComposition`` for this cluster from
+        pool-resident segments; ``(comp, pinned_pool_keys)`` or None.
+
+        Engages ONLY when composition offers something the chain path
+        cannot: at least one RE-BASED splice — a resident segment whose
+        cached base position differs from its offset in this cluster's
+        prompt (cached under another cluster's chain, found through the
+        content registry).  Everything else — full own-chain residency,
+        cold paths, exact-offset-only hits — returns None and falls
+        back to ``ensure_chain``, which serves it equally well AND
+        caches the cold remainder for later (a composition's gap spans
+        are recomputed per serve, never cached).  Returned pins follow
+        ``serve_batch``'s contract: caller releases every key."""
+        if self.compose_frac is None or self.segment_tokens_fn is None:
+            return None
+        c = self.assigner.clusters[cluster_id]
+        if c.chain is None:
+            return None        # flat prefix: one segment, own pool entry
+        seg_toks: List[List[int]] = []
+        for i, content in enumerate(c.chain.contents):
+            base = c.chain.contents[i - 1] if i else None
+            payload = self.segment_tokens_fn(content, base)
+            toks, soft = (payload if isinstance(payload, tuple)
+                          else (payload, None))
+            if soft is not None:
+                return None    # composition serves token segments only
+            seg_toks.append(list(toks))
+        pinned: List[Any] = []
+
+        def lookup(key):
+            pool_key = self._seg_registry.get(key)
+            if pool_key is None:
+                return None
+            st = self.pool.get(pool_key, pin=pin)
+            if st is None and self.pool.tier is not None:
+                # demoted since it was registered: promote it back — a
+                # promoted segment carries its base-position metadata
+                # (prefix_len/seg_len) bitwise, so it composes exactly
+                # like a never-evicted one (DESIGN.md §12/§14).  Chain
+                # segments promote only under a resident parent (the
+                # tier's linkage rule); otherwise this stays a gap.
+                hseg = self.pool.tier.peek(pool_key)
+                parent = (self.pool.get(hseg.parent_key)
+                          if hseg is not None
+                          and hseg.parent_key is not None else None)
+                if hseg is not None and (hseg.parent_key is None
+                                         or parent is not None):
+                    st = self.pool.promote(pool_key, parent=parent,
+                                           pin=pin)
+            if st is None:
+                return None    # registered but evicted since
+            if pin:
+                pinned.append(pool_key)
+            return st
+
+        comp = plan_composition(seg_toks, lookup,
+                                recompute_frac=self.compose_frac)
+        if comp is not None and any(
+                s.target_offset != s.state.base_pos for s in comp.segments):
+            return comp, pinned
+        if pin:
+            for key in pinned:
+                self.pool.release(key)
+        return None
 
     # ------------------------------------------------------------------
     # speculative host→device prefetch (DESIGN.md §12)
@@ -495,20 +578,30 @@ class OnlineScheduler:
              for e, sg in zip(embeddings, subgraphs)]
         order = sorted(set(a.cluster_id for a in assigns))
         states, hits, prefill_costs = {}, {}, {}
+        comps: dict = {}                 # cid -> SegmentComposition
         pinned: List[Any] = []           # pool keys (full path per cluster)
         try:
             # materialize-and-pin: each state is pinned the moment it is
             # acquired — for a chain cluster every PATH segment is
             # pinned (root to leaf) — so a later cluster's admission in
             # this same loop cannot evict a state this batch already
-            # claimed
+            # claimed.  A cluster that can splice resident foreign
+            # segments takes the composed path instead (DESIGN.md §14).
             for cid in order:
+                ct = self.try_compose(cid, pin=True)
+                if ct is not None:
+                    comps[cid], keys = ct
+                    pinned.extend(keys)
+                    states[cid], hits[cid], prefill_costs[cid] = \
+                        None, True, 0.0
+                    continue
                 st, hit, dt, keys = self.ensure_chain(cid, pin=True)
                 pinned.extend(keys)
                 states[cid], hits[cid], prefill_costs[cid] = st, hit, dt
             outs, t = self.engine.serve(
                 [Request(suffix_tokens=list(s),
-                         prefix=states[a.cluster_id])
+                         prefix=states[a.cluster_id],
+                         composition=comps.get(a.cluster_id))
                  for a, s in zip(assigns, suffix_token_lists)])
         finally:
             # promotion transfers dispatched for/during this batch have
@@ -521,9 +614,12 @@ class OnlineScheduler:
         served = []
         for i, a in enumerate(assigns):
             share = prefill_costs[a.cluster_id] / members_of[a.cluster_id]
+            cid = a.cluster_id
+            plen = (comps[cid].total_len if cid in comps
+                    else states[cid].prefix_len)
             served.append(ServedQuery(
                 tokens=outs[i], cluster_id=a.cluster_id,
-                prefix_len=states[a.cluster_id].prefix_len,
+                prefix_len=plen,
                 pool_hit=hits[a.cluster_id], spawned=a.is_new,
                 prefix_share_s=share,
                 prefill_s=t["prefill_share"][i],
@@ -566,15 +662,22 @@ class OnlineScheduler:
         members_of = {cid: sum(1 for a in assigns if a.cluster_id == cid)
                       for cid in order}
         states, hits, costs, paths = {}, {}, {}, {}
+        comps: dict = {}                # cid -> SegmentComposition
         pins: List[Any] = []            # one pool key per pin taken
         try:
             for cid in order:
                 # the full root→leaf path is pinned per ROW: a cluster's
                 # whole chain stays unevictable exactly as long as any
-                # of its members is in flight (DESIGN.md §10)
-                st, hit, dt, keys = self.ensure_chain(cid, pin=True)
+                # of its members is in flight (DESIGN.md §10).  Clusters
+                # that splice resident foreign segments pin those
+                # segments instead (DESIGN.md §14).
+                ct = self.try_compose(cid, pin=True)
+                if ct is not None:
+                    comps[cid], keys = ct
+                else:
+                    st, hit, dt, keys = self.ensure_chain(cid, pin=True)
+                    states[cid], hits[cid], costs[cid] = st, hit, dt
                 pins.extend(keys)
-                states[cid], hits[cid], costs[cid] = st, hit, dt
                 paths[cid] = keys
                 for _ in range(members_of[cid] - 1):
                     for key in keys:
@@ -582,15 +685,20 @@ class OnlineScheduler:
                         pins.append(key)
             admitted = [AdmittedQuery(
                 payload=payloads[i], cluster_id=a.cluster_id,
-                prefix_len=states[a.cluster_id].prefix_len,
-                pool_hit=hits[a.cluster_id], spawned=a.is_new,
-                prefix_share_s=(costs[a.cluster_id]
+                prefix_len=(comps[a.cluster_id].total_len
+                            if a.cluster_id in comps
+                            else states[a.cluster_id].prefix_len),
+                pool_hit=(True if a.cluster_id in comps
+                          else hits[a.cluster_id]),
+                spawned=a.is_new,
+                prefix_share_s=(costs.get(a.cluster_id, 0.0)
                                 / members_of[a.cluster_id]),
                 pin_keys=list(paths[a.cluster_id]))
                 for i, a in enumerate(assigns)]
             prefill_s = cont.admit(
                 [Request(suffix_tokens=list(s),
-                         prefix=states[a.cluster_id])
+                         prefix=states.get(a.cluster_id),
+                         composition=comps.get(a.cluster_id))
                  for a, s in zip(assigns, suffix_token_lists)],
                 payloads=admitted, now=now,
                 on_retire=self._release_pins)

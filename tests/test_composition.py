@@ -1,0 +1,684 @@
+"""Position-independent segment composition (DESIGN.md §14).
+
+Gates, in order of strength:
+
+1. Read-time RoPE rotation at a matching offset is BITWISE the
+   write-time rotation — oracle level (XLA gather) and kernel level
+   (fused Pallas, interpret): a canonical-K tile read with
+   ``p_off = delta`` equals the same tile pre-rotated at
+   ``stored_pos + delta`` and read without rotation.
+2. An exact-offset composition (the chain's own segments at their
+   original offsets, ``recompute_frac = 0``) serves token-identically
+   to the chain path — f32/XLA and bf16/Pallas, drain path.
+3. ``recompute_frac = 1.0`` (every spliced token re-prefilled, cached
+   copies masked) is token-identical to the chain path too — the dense
+   fallback end of the quality-vs-TTFT dial.
+4. Cross-cluster splice: a segment cached under one chain composes at a
+   DIFFERENT offset into another prompt; the serve runs, the compose
+   stats count the spliced/recomputed tokens, and all pins unwind.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import (ComposedSegment, SegmentComposition,
+                              recompute_window)
+from repro.data.tokenizer import Tokenizer
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope
+from repro.serving.engine import Request, ServingEngine
+
+THETA = 10_000.0
+
+
+# ----------------------------------------------------------------------
+# gate 1: read-time rotation == write-time rotation, bitwise
+# ----------------------------------------------------------------------
+def _rot_arena(k, kpos, delta):
+    """Write-time-style rotation of a whole head-major arena at the
+    re-based positions (invalid slots keep -1 semantics via eff)."""
+    eff = jnp.where(kpos >= 0, kpos + delta, -1)
+    return apply_rope(k, eff[:, None, :], THETA), eff
+
+
+def test_oracle_read_rotation_bitwise_matches_write_rotation():
+    """XLA oracle: canonical K + (rope_theta, offsets=delta) must be
+    EXACTLY the pre-rotated arena attended without rope — rotation
+    commutes with the gather, so the bits agree, not just the values."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    nb, hkv, bs, d, hq, tq = 6, 2, 8, 16, 4, 5
+    k = jax.random.normal(ks[0], (nb, hkv, bs, d))
+    v = jax.random.normal(ks[1], (nb, hkv, bs, d))
+    kpos = jnp.arange(nb * bs).reshape(nb, bs) % (4 * bs)
+    kpos = jnp.where(jnp.arange(nb)[:, None] == 0, -1, kpos)
+    table = jnp.array([[1, 2, 3], [4, 5, 0]], jnp.int32)
+    delta = 24
+    offs = jnp.full(table.shape, delta, jnp.int32)
+    q = jax.random.normal(ks[2], (2, hq, tq, d))
+    q_pos = 4 * bs + delta + jnp.broadcast_to(jnp.arange(tq)[None], (2, tq))
+
+    got = R.paged_attention_partial_ref(
+        q, k, v, q_pos, kpos, table, causal=True, rope_theta=THETA,
+        offsets=offs)
+    k_rot, eff = _rot_arena(k, kpos, delta)
+    want = R.paged_attention_partial_ref(
+        q, k_rot, v, q_pos, eff, table, causal=True)
+    for g, w in zip(got, want):
+        assert jnp.array_equal(g, w), "oracle read-rotation not bitwise"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_kernel_read_rotation_bitwise_matches_write_rotation(dtype):
+    """Kernel level (fused Pallas cascade, interpret): a prefix tile
+    cached CANONICAL at base 0 and rotated by ``p_off`` in-register
+    must produce bitwise the output of storing the write-time-rotated
+    tile (apply_rope at stored+delta, cast to the arena dtype) and
+    reading it without rotation.  The in-kernel recast to the arena
+    dtype after rotation is what makes this exact for bf16 arenas."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    nb, hkv, bs, d, hq, tq, b = 5, 2, 8, 16, 4, 8, 2
+    k = jax.random.normal(ks[0], (nb, hkv, bs, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[1], (nb, hkv, bs, d), jnp.float32).astype(dtype)
+    kpos = jnp.arange(nb * bs).reshape(nb, bs) % (3 * bs)
+    kpos = jnp.where(jnp.arange(nb)[:, None] == 0, -1, kpos)
+    # suffix: one live block per row so the cascade has both legs
+    sk = jax.random.normal(ks[2], (3, hkv, bs, d), jnp.float32).astype(dtype)
+    sv = jax.random.normal(ks[3], (3, hkv, bs, d), jnp.float32).astype(dtype)
+    delta = 40
+    skpos = 3 * bs + delta + jnp.arange(3 * bs).reshape(3, bs) % bs
+    skpos = jnp.where(jnp.arange(3)[:, None] == 0, -1, skpos)
+    ppt = jnp.array([[1, 2, 3], [4, 1, 0]], jnp.int32)
+    spt = jnp.array([[1], [2]], jnp.int32)
+    p_off = jnp.full(ppt.shape, delta, jnp.int32)
+    p_skip = jnp.zeros(ppt.shape, jnp.int32)
+    q = jax.random.normal(ks[4], (b, hq, tq, d), jnp.float32).astype(dtype)
+    q_pos = 3 * bs + delta + jnp.broadcast_to(jnp.arange(tq)[None], (b, tq))
+
+    got = ops.fused_paged_attention(
+        q, k, v, sk, sv, q_pos, kpos, skpos, ppt, spt,
+        rope_theta=THETA, p_off=p_off, p_skip=p_skip, prefix_causal=True,
+        block_q=8)
+
+    # Gate A (same executable, bitwise at BOTH dtypes): the tile cached
+    # at base 0 and offset by delta must equal the tile whose STORED
+    # positions already sit at the target (offset 0) — both arms run
+    # the identical compiled kernel with identical effective positions,
+    # so this is a true bitwise position-independence gate.
+    eff = jnp.where(kpos >= 0, kpos + delta, -1)
+    shifted = ops.fused_paged_attention(
+        q, k, v, sk, sv, q_pos, eff, skpos, ppt, spt,
+        rope_theta=THETA, p_off=jnp.zeros_like(p_off), p_skip=p_skip,
+        prefix_causal=True, block_q=8)
+    assert jnp.array_equal(got, shifted), \
+        "fused kernel rotation is not position-independent"
+
+    # Gate B (vs write-time rotation): rotate the cached tile at
+    # stored+delta outside the kernel (apply_rope returns the arena
+    # dtype), re-base the positions, pre-rotate the suffix at its raw
+    # stored positions, and read with rotation OFF.
+    k_rot, _ = _rot_arena(k, kpos, delta)
+    sk_rot = apply_rope(sk, jnp.where(skpos >= 0, skpos, -1)[:, None, :],
+                        THETA)
+    want = ops.fused_paged_attention(
+        q, k_rot.astype(dtype), v, sk_rot.astype(dtype), sv, q_pos, eff,
+        skpos, ppt, spt, prefix_causal=True, block_q=8)
+    assert got.dtype == want.dtype
+    if dtype == jnp.bfloat16:
+        # The arena dtype the Pallas path serves with: the in-kernel
+        # recast of the rotated f32 tile to bf16 lands on the same bits
+        # as apply_rope's bf16 cast — BITWISE.
+        assert jnp.array_equal(got, want), \
+            "fused kernel read-rotation not bitwise vs write-time (bf16)"
+    else:
+        # f32: XLA's FMA contraction differs between the in-kernel
+        # fusion and the standalone apply_rope graph (one ulp in
+        # k1*cos - k2*sin), so bitwise is not compiler-guaranteed here;
+        # gate at a few-ulp tolerance instead.  (Eagerly, _rot_tile and
+        # apply_rope ARE bitwise identical — see the oracle test.)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-6, atol=2e-6)
+
+
+# ----------------------------------------------------------------------
+# gates 2-4: end-to-end drain serving
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tok():
+    return Tokenizer.train(["the quick brown fox jumps over the lazy dog "
+                            "a graph of nodes and edges answers questions"])
+
+
+def _cfg(vocab, dtype="float32", impl="xla"):
+    return ModelConfig(name="compose-test", family="dense", num_layers=3,
+                       d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+                       d_ff=160, vocab_size=vocab, dtype=dtype,
+                       attention_impl=impl)
+
+
+def _engine(tok, key=1, dtype="float32", impl="xla", **kw):
+    cfg = _cfg(tok.vocab_size, dtype, impl)
+    params = M.init_params(jax.random.PRNGKey(key), cfg)
+    kw.setdefault("max_cache_len", 512)
+    kw.setdefault("max_new_tokens", 5)
+    return ServingEngine(params, cfg, tok, **kw)
+
+
+def _chain(eng, seg_tokens):
+    """Prefill a chain, one state per segment; returns the leaf."""
+    st = None
+    for toks in seg_tokens:
+        if st is None:
+            st, _ = eng.prefill_prefix(toks, _record=False)
+        else:
+            st, _ = eng.prefill_prefix_extension(st, toks, _record=False)
+    return st
+
+
+def _release_chain(leaf):
+    for st in leaf.chain():
+        st.release()
+
+
+def _chain_composition(leaf, seg_tokens, frac=0.0):
+    """The degenerate composition: the chain's own segments at their
+    original offsets, no gaps."""
+    segs, off = [], 0
+    for st, toks in zip(leaf.chain(), seg_tokens):
+        segs.append(ComposedSegment(state=st, target_offset=off,
+                                    tokens=tuple(toks)))
+        off += len(toks)
+    return SegmentComposition(segments=segs, gaps=[], recompute_frac=frac)
+
+
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+@pytest.mark.parametrize("frac", [0.0, 1.0])
+def test_composition_token_identical_to_chain_drain(tok, dtype, impl, frac):
+    """Exact-offset compositions (frac=0: pure splice; frac=1: full
+    boundary recompute, cached copies masked) serve token-identically
+    to the chain path on the drain serve — f32/XLA and bf16/Pallas."""
+    eng = _engine(tok, dtype=dtype, impl=impl)
+    segs = [tok.encode("a graph of nodes and edges", bos=True),
+            tok.encode("the quick brown fox jumps over the lazy dog"),
+            tok.encode("answers questions the lazy dog")]
+    leaf = _chain(eng, segs)
+    sfx = [tok.encode("answers questions"), tok.encode("and edges"),
+           tok.encode("the quick"), tok.encode("lazy dog jumps")]
+    try:
+        want, t = eng.serve([Request(s, leaf) for s in sfx], _record=False)
+        assert t["paged"] and "composed" not in t
+        comp = _chain_composition(leaf, segs, frac=frac)
+        got, t2 = eng.serve([Request(s, composition=comp) for s in sfx],
+                            _record=False)
+        assert t2["composed"]
+        assert got == want, (frac, dtype, impl)
+    finally:
+        _release_chain(leaf)
+    # every pin unwound: the chain's own refcounts are the only
+    # remaining references, dropped by release() above
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_composition_mixed_batch_and_stats(tok):
+    """One batch mixing a composed row, a chain row, and a prefixless
+    row; compose stats count the spliced vs recomputed tokens."""
+    eng = _engine(tok)
+    segs = [tok.encode("a graph of nodes and edges", bos=True),
+            tok.encode("the quick brown fox jumps over the lazy dog")]
+    leaf = _chain(eng, segs)
+    sfx = tok.encode("answers questions")
+    comp = _chain_composition(leaf, segs, frac=0.25)
+    try:
+        outs, t = eng.serve([
+            Request(sfx, composition=comp),
+            Request(sfx, leaf),
+            Request(sfx),
+        ])
+        assert t["composed"] and len(outs) == 3
+        # composed row == chain row: same context, exact offsets
+        assert outs[0] == outs[1]
+        st = eng.cache_mgr.stats
+        assert st.compose_requests == 1
+        assert st.compose_segments == 2
+        wins = [recompute_window(len(s), 0.25) for s in segs]
+        assert st.compose_recomputed_tokens == sum(wins)
+        assert st.compose_spliced_tokens == \
+            sum(len(s) for s in segs) - sum(wins)
+    finally:
+        _release_chain(leaf)
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_cross_cluster_splice_reuses_foreign_segment(tok):
+    """The headline capability: a segment prefilled under cluster A's
+    chain (at base != 0) composes into a DIFFERENT prompt at a new
+    offset — a reuse the dendrogram chain layout never expressed.  With
+    recompute_frac=1.0 the result must equal the chain serve of the
+    equivalent fresh chain (full recompute = position-independent by
+    construction); with a partial frac the serve must run and the
+    savings counters must show the splice."""
+    eng = _engine(tok)
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    a_ext = tok.encode("the quick brown fox jumps over the lazy dog")
+    leaf_a = _chain(eng, [a_root, a_ext])           # a_ext base = len(a_root)
+    seg_a = leaf_a                                   # leaf owns a_ext
+    b_root = tok.encode("answers questions the lazy dog", bos=True)
+    sfx = tok.encode("answers questions")
+    # prompt B: b_root ++ a_ext, with a_ext spliced from cluster A
+    comp = SegmentComposition(
+        segments=[ComposedSegment(state=seg_a,
+                                  target_offset=len(b_root),
+                                  tokens=tuple(a_ext))],
+        gaps=[(0, list(b_root))], recompute_frac=1.0)
+    try:
+        got, t = eng.serve([Request(sfx, composition=comp)], _record=False)
+        assert t["composed"]
+        # oracle: the same prompt served as a fresh chain
+        oracle_leaf = _chain(eng, [b_root, a_ext])
+        want, _ = eng.serve([Request(sfx, oracle_leaf)], _record=False)
+        _release_chain(oracle_leaf)
+        assert got == want
+        # partial recompute: runs, and the splice saves prefill tokens
+        comp2 = SegmentComposition(
+            segments=[ComposedSegment(state=seg_a,
+                                      target_offset=len(b_root),
+                                      tokens=tuple(a_ext))],
+            gaps=[(0, list(b_root))], recompute_frac=0.25)
+        outs, _ = eng.serve([Request(sfx, composition=comp2)])
+        assert len(outs) == 1
+        st = eng.cache_mgr.stats
+        w = recompute_window(len(a_ext), 0.25)
+        assert st.compose_spliced_tokens == len(a_ext) - w > 0
+        assert st.compose_recomputed_tokens == w > 0
+    finally:
+        _release_chain(leaf_a)
+    assert eng.block_pool.blocks_in_use == 0
+
+
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+@pytest.mark.parametrize("frac", [0.0, 1.0])
+def test_composition_token_identical_to_chain_continuous(tok, dtype, impl,
+                                                         frac):
+    """The same identity on the CONTINUOUS path: composed rows admitted
+    mid-flight (across two admissions, with chunked decode between)
+    emit exactly the chain drain-serve's tokens."""
+    from repro.serving.continuous import ContinuousEngine
+    eng = _engine(tok, dtype=dtype, impl=impl)
+    segs = [tok.encode("a graph of nodes and edges", bos=True),
+            tok.encode("the quick brown fox jumps over the lazy dog"),
+            tok.encode("answers questions the lazy dog")]
+    leaf = _chain(eng, segs)
+    sfx = [tok.encode("answers questions"), tok.encode("and edges"),
+           tok.encode("the quick"), tok.encode("lazy dog jumps")]
+    try:
+        want, _ = eng.serve([Request(s, leaf) for s in sfx], _record=False)
+        comp = _chain_composition(leaf, segs, frac=frac)
+        cont = ContinuousEngine(eng, max_slots=4, chunk=2,
+                                max_suffix_len=64)
+        cont.admit([Request(s, composition=comp) for s in sfx[:2]],
+                   payloads=[0, 1])
+        cont.step()
+        cont.admit([Request(s, composition=comp) for s in sfx[2:]],
+                   payloads=[2, 3])
+        cont.flush()
+        got = [None] * 4
+        for r in cont.pop_retired():
+            got[r.payload] = r.tokens
+        assert got == want, (frac, dtype, impl)
+    finally:
+        _release_chain(leaf)
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_continuous_mixed_composed_and_chain_rows(tok):
+    """One continuous admission mixing a composed row with a plain
+    chain row: both must match their drain-serve oracles, and chain
+    rows decode with zero offset tables (the degenerate plan)."""
+    from repro.serving.continuous import ContinuousEngine
+    eng = _engine(tok)
+    segs = [tok.encode("a graph of nodes and edges", bos=True),
+            tok.encode("the quick brown fox jumps over the lazy dog")]
+    leaf = _chain(eng, segs)
+    sfx = tok.encode("answers questions")
+    try:
+        want, _ = eng.serve([Request(sfx, leaf), Request(sfx)],
+                            _record=False)
+        comp = _chain_composition(leaf, segs, frac=0.25)
+        cont = ContinuousEngine(eng, max_slots=4, chunk=2,
+                                max_suffix_len=64)
+        cont.admit([Request(sfx, composition=comp),
+                    Request(sfx, leaf), Request(sfx)],
+                   payloads=["comp", "chain", "flat"])
+        cont.flush()
+        got = {r.payload: r.tokens for r in cont.pop_retired()}
+        # composed row == chain row == drain chain serve
+        assert got["comp"] == got["chain"] == want[0]
+        assert got["flat"] == want[1]
+        assert eng.cache_mgr.stats.compose_requests == 1
+    finally:
+        _release_chain(leaf)
+    assert eng.block_pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# quantized pools: composed serving + the dead-row reclaim regression
+# ----------------------------------------------------------------------
+def test_composed_serve_quantized_pool_accounting(tok):
+    """Composition over an int8 prefix arena: the fused read-time
+    rotation rides the in-register dequant (no store-dtype recast of a
+    dequantized tile), frac=1.0 equals the all-fresh oracle, and — the
+    satellite regression — every compute-dtype row the composed serve
+    stages through returns to the suffix free list, so resident bytes
+    stay exactly the priced layout (no dead full-precision rows)."""
+    from repro.serving.continuous import ContinuousEngine
+    eng = _engine(tok, quantize_prefix=True)
+    pool = eng.block_pool
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    shared = tok.encode("the quick brown fox jumps over the lazy dog")
+    b_root = tok.encode("answers questions", bos=True)
+    sfx = tok.encode("lazy dog jumps")
+    leaf = _chain(eng, [a_root, shared])
+    comp = SegmentComposition(
+        segments=[ComposedSegment(state=leaf, target_offset=len(b_root),
+                                  tokens=tuple(shared))],
+        gaps=[(0, list(b_root))], recompute_frac=1.0)
+    try:
+        got, t = eng.serve([Request(sfx, composition=comp)], _record=False)
+        assert t["composed"]
+        # frac=1.0 recomputes every spliced token at compute dtype, so
+        # the composed row must equal the all-fresh (prefixless) serve
+        # of the same token stream — int8 never enters the attended KV
+        want, _ = eng.serve([Request(b_root + shared + sfx)],
+                            _record=False)
+        assert got == want
+        # partial frac reads the int8 splice through dequant+rotate
+        comp2 = SegmentComposition(
+            segments=[ComposedSegment(state=leaf,
+                                      target_offset=len(b_root),
+                                      tokens=tuple(shared))],
+            gaps=[(0, list(b_root))], recompute_frac=0.25)
+        outs, _ = eng.serve([Request(sfx, composition=comp2)],
+                            _record=False)
+        assert len(outs[0]) > 0
+        cont = ContinuousEngine(eng, max_slots=2, chunk=2,
+                                max_suffix_len=64)
+        cont.admit([Request(sfx, composition=comp)], payloads=[0])
+        cont.flush()
+        assert [r.tokens for r in cont.pop_retired()] == [want[0]]
+        # the reclaim regression, on every composed path above: all
+        # staging/suffix rows are back, residency is prefix-space only
+        assert pool.free_suffix_blocks == pool.suffix_allocator.num_usable
+        held = sum(np.asarray(x).nbytes for x in
+                   jax.tree_util.tree_leaves(pool.arena)) + \
+            sum(np.asarray(x).nbytes for x in
+                jax.tree_util.tree_leaves(pool.qarena))
+        assert pool.device_bytes == held
+        assert pool.prefix_blocks_in_use * pool.prefix_block_bytes == \
+            sum(len(st.page.blocks) for st in leaf.chain()) * \
+            pool.prefix_block_bytes
+    finally:
+        _release_chain(leaf)
+    assert pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# scheduler + pipeline wiring (content-addressed segment registry)
+# ----------------------------------------------------------------------
+def _stub_scheduler(eng, chains):
+    """An ``OnlineScheduler`` over a stub assigner whose cluster ``i``
+    carries chain ``chains[i]`` — each a list of token-id segments.
+    ``segment_tokens_fn`` just passes the tokens through, so the test
+    controls segment content (and thus registry keys) exactly."""
+    from repro.core.planner import ChainSpec
+    from repro.core.prefix_pool import PrefixPool
+    from repro.serving.scheduler import OnlineCluster, OnlineScheduler
+
+    class _Assigner:
+        clusters: list = []
+
+        def representative(self, cid):
+            return self.clusters[cid].representative
+
+    asg = _Assigner()
+    asg.clusters = [
+        OnlineCluster(cluster_id=i, centroid=np.zeros(4, np.float32),
+                      representative=None,
+                      chain=ChainSpec(
+                          keys=[f"c{i}s{j}" for j in range(len(segs))],
+                          contents=[list(s) for s in segs]))
+        for i, segs in enumerate(chains)]
+    return OnlineScheduler(eng, asg, PrefixPool(1 << 28),
+                           prefix_tokens_fn=lambda rep: list(rep),
+                           segment_tokens_fn=lambda c, b: list(c))
+
+
+def test_scheduler_composes_cross_cluster_segment(tok):
+    """`try_compose` through the content registry: a segment prefilled
+    under cluster A's chain is spliced into cluster B's prompt at a
+    DIFFERENT offset; with recompute_frac=1.0 the served tokens equal
+    the fresh-chain oracle.  Exact-offset-only residency (cluster A
+    again) must NOT engage composition — the chain path serves it."""
+    from repro.serving.scheduler import Assignment
+    eng = _engine(tok)
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    shared = tok.encode("the quick brown fox jumps over the lazy dog")
+    b_root = tok.encode("answers questions", bos=True)
+    assert len(a_root) != len(b_root)       # the splice is re-based
+    sched = _stub_scheduler(eng, [[a_root, shared], [b_root, shared]])
+    sched.compose_frac = 1.0
+    emb, sgs = [np.zeros(4, np.float32)], [None]
+    sfx = [tok.encode("lazy dog jumps")]
+    stats = eng.cache_mgr.stats
+
+    # cluster 0 cold: chain path, registry learns both segments
+    out_a = sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=0, is_new=True, distance=0.0)])
+    assert stats.compose_requests == 0
+    assert tuple(shared) in sched._seg_registry
+
+    # cluster 0 again: fully resident at exact offsets -> still chain
+    out_a2 = sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=0, is_new=False, distance=0.0)])
+    assert stats.compose_requests == 0
+    assert out_a2[0].tokens == out_a[0].tokens
+
+    # cluster 1: b_root is cold (gap) but `shared` is resident at base
+    # len(a_root) != len(b_root) -> re-based splice -> composition
+    out_b = sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=1, is_new=False, distance=0.0)])
+    assert stats.compose_requests == 1
+    assert out_b[0].prefix_len == len(b_root) + len(shared)
+    assert out_b[0].pool_hit
+
+    # oracle: the same prompt served as a fresh chain on a twin engine
+    eng2 = _engine(tok)
+    leaf = _chain(eng2, [b_root, shared])
+    want, _ = eng2.serve([Request(sfx[0], leaf)], _record=False)
+    _release_chain(leaf)
+    assert out_b[0].tokens == want[0]
+
+
+def test_scheduler_serve_continuous_composes(tok):
+    """The same cross-cluster splice through `serve_continuous`: the
+    composed row admits into the in-flight batch, decodes the oracle's
+    tokens, and its pins unwind at retirement."""
+    from repro.serving.continuous import ContinuousEngine
+    from repro.serving.scheduler import Assignment
+    eng = _engine(tok)
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    shared = tok.encode("the quick brown fox jumps over the lazy dog")
+    b_root = tok.encode("answers questions", bos=True)
+    sched = _stub_scheduler(eng, [[a_root, shared], [b_root, shared]])
+    sched.compose_frac = 1.0
+    emb, sgs = [np.zeros(4, np.float32)], [None]
+    sfx = [tok.encode("lazy dog jumps")]
+    sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=0, is_new=True, distance=0.0)])
+
+    cont = ContinuousEngine(eng, max_slots=4, chunk=2, max_suffix_len=64)
+    admitted, _ = sched.serve_continuous(
+        cont, emb, sgs, sfx, payloads=["b"], now=0.0, assignments=[
+            Assignment(cluster_id=1, is_new=False, distance=0.0)])
+    assert eng.cache_mgr.stats.compose_requests == 1
+    assert admitted[0].prefix_len == len(b_root) + len(shared)
+    cont.flush()
+    got = {r.payload.payload: r.tokens for r in cont.pop_retired()}
+    eng2 = _engine(tok)
+    leaf = _chain(eng2, [b_root, shared])
+    want, _ = eng2.serve([Request(sfx[0], leaf)], _record=False)
+    _release_chain(leaf)
+    assert got["b"] == want[0]
+
+
+def test_tier_round_trip_composes_identically(tok):
+    """Satellite 2: demote → promote carries the per-segment
+    base-position metadata (prefix_len/seg_len → base_pos), so a
+    promoted segment splices into a composition exactly like the
+    never-evicted original — same tokens, same base_pos."""
+    from repro.core.prefix_pool import PrefixPool
+    from repro.core.tiered import HostTier
+    eng = _engine(tok)
+    pp = PrefixPool(1 << 28)
+    pp.stats = eng.cache_mgr.stats
+    pp.attach_block_pool(eng.block_pool)
+    pp.attach_host_tier(HostTier(1 << 28))
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    shared = tok.encode("the quick brown fox jumps over the lazy dog")
+    b_root = tok.encode("answers questions", bos=True)
+    sfx = tok.encode("lazy dog jumps")
+    root, _ = eng.prefill_prefix(a_root, _record=False)
+    leaf, _ = eng.prefill_prefix_extension(root, shared, _record=False)
+    pp.put("root", root)
+    pp.put(("seg", "x"), leaf)
+
+    def splice(st):
+        return SegmentComposition(
+            segments=[ComposedSegment(state=st,
+                                      target_offset=len(b_root),
+                                      tokens=tuple(shared))],
+            gaps=[(0, list(b_root))], recompute_frac=0.25)
+
+    want, _ = eng.serve([Request(sfx, composition=splice(leaf))],
+                        _record=False)
+    base0, slen0 = leaf.base_pos, leaf.segment_len
+    assert pp.demote_to_host(("seg", "x"))
+    assert pp.get(("seg", "x")) is None          # device-evicted
+    promoted = pp.promote(("seg", "x"), parent=root, pin=True)
+    assert promoted is not None
+    assert promoted.base_pos == base0
+    assert promoted.segment_len == slen0
+    got, _ = eng.serve([Request(sfx, composition=splice(promoted))],
+                       _record=False)
+    assert got == want                           # bitwise host round trip
+    pp.release(("seg", "x"))
+
+
+def test_scheduler_composes_through_promoted_segment(tok):
+    """The scheduler's registry lookup promotes a demoted segment back
+    for composition: after cluster A's shared segment is demoted to the
+    host tier (parent still resident), cluster B's composed serve still
+    splices it — and serves the same tokens as before the demote."""
+    from repro.core.tiered import HostTier
+    from repro.serving.scheduler import Assignment
+    eng = _engine(tok)
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    shared = tok.encode("the quick brown fox jumps over the lazy dog")
+    b_root = tok.encode("answers questions", bos=True)
+    sched = _stub_scheduler(eng, [[a_root, shared], [b_root, shared]])
+    sched.compose_frac = 1.0
+    sched.pool.attach_host_tier(HostTier(1 << 28))
+    emb, sgs = [np.zeros(4, np.float32)], [None]
+    sfx = [tok.encode("lazy dog jumps")]
+    sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=0, is_new=True, distance=0.0)])
+    out_b = sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=1, is_new=False, distance=0.0)])
+    stats = eng.cache_mgr.stats
+    assert stats.compose_requests == 1
+    # demote the shared segment (the chain leaf) to the host tier
+    assert sched.pool.demote_to_host(("seg", "c0s1"))
+    out_b2 = sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=1, is_new=False, distance=0.0)])
+    assert stats.compose_requests == 2           # composed again
+    assert stats.tier_promotions >= 1            # via the tier
+    assert out_b2[0].tokens == out_b[0].tokens
+
+
+@pytest.fixture(scope="module")
+def scene_pipe():
+    from repro.data.scenegraph import generate_scene_graph
+    from repro.rag.pipeline import GraphRAGPipeline
+    from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+    from repro.rag.text_encoder import TextEncoder
+    graph, queries = generate_scene_graph()
+    tok2 = Tokenizer.train([q.question + " " + q.answer for q in queries]
+                           + graph.node_text, max_vocab=2048)
+    cfg = ModelConfig(name="compose-pipe", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=tok2.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(32))
+    pipe = GraphRAGPipeline(
+        index=index, retriever=GRetrieverRetriever(index),
+        engine=ServingEngine(params, cfg, tok2, max_cache_len=768,
+                             max_new_tokens=4),
+        tokenizer=tok2, use_soft_prompt=False)
+    return pipe, queries[:8]
+
+
+def test_run_subgcache_compose_frac_one_matches_chain(scene_pipe):
+    """Offline compose mode at recompute_frac=1.0 is token-identical to
+    the chain tree runner, and the arena returns to its baseline."""
+    pipe, items = scene_pipe
+    base = pipe.engine.block_pool.blocks_in_use
+    recs_chain, _, _, _ = pipe.run_subgcache(items, num_clusters=3,
+                                             tree_levels=3)
+    recs_comp, summary, _, stats = pipe.run_subgcache(
+        items, num_clusters=3, tree_levels=3, compose=True,
+        recompute_frac=1.0)
+    assert [r.generated for r in recs_comp] == \
+        [r.generated for r in recs_chain]
+    assert "compose" in summary.name
+    assert pipe.engine.block_pool.blocks_in_use == base
+    # partial recompute runs end to end and reports splice savings
+    recs_p, _, _, stats_p = pipe.run_subgcache(
+        items, num_clusters=3, tree_levels=3, compose=True,
+        recompute_frac=0.25)
+    assert all(r is not None and r.generated is not None for r in recs_p)
+    assert pipe.engine.block_pool.blocks_in_use == base
+
+
+def test_serve_stream_compose_frac_one_matches_plain(scene_pipe):
+    """`serve_stream(compose_frac=1.0)` keeps token streams identical to
+    the chains-only scheduler on both serving loops (composition only
+    reschedules prefill work; at frac=1.0 it recomputes every spliced
+    token, so even engaged splices are exact)."""
+    pipe, items = scene_pipe
+    arr = np.cumsum(np.full(len(items), 0.01))
+    kw = dict(max_batch=4, tree_levels=2, tree_clusters=3)
+    r0, _, _ = pipe.serve_stream(items, arr, mode="drain", **kw)
+    r1, _, s1 = pipe.serve_stream(items, arr, mode="drain",
+                                  compose_frac=1.0, **kw)
+    assert [r.generated for r in r0] == [r.generated for r in r1]
+    assert s1.compose_frac == 1.0
+    rc, _, _ = pipe.serve_stream(items, arr, mode="continuous", chunk=2,
+                                 compose_frac=1.0, **kw)
+    assert [r.generated for r in rc] == [r.generated for r in r0]
+
+
+def test_composition_validation():
+    """Span tiling is enforced: overlaps, holes, and empty spans are
+    construction errors, not serving surprises."""
+    with pytest.raises(AssertionError):
+        SegmentComposition(segments=[], gaps=[(1, [5, 6])])
+    with pytest.raises(AssertionError):
+        SegmentComposition(segments=[], gaps=[(0, [])])
+    c = SegmentComposition(segments=[], gaps=[(0, [1, 2, 3])])
+    assert c.total_len == 3
+    assert c.fresh_spans() == [(0, [1, 2, 3])]
+    assert c.spliced_tokens() == 0

@@ -282,3 +282,67 @@ def test_sharded_engine_token_identity(tok, dtype, impl):
     finally:
         kops.configure_mesh(None)
     assert got == base
+
+
+# ----------------------------------------------------------------------
+# 4. tensor-parallel x replica-router composition (ROADMAP known debt:
+#    previously composed "only by construction, not yet by a test")
+# ----------------------------------------------------------------------
+@multidevice
+@pytest.mark.parametrize("mode", ["drain", "continuous"])
+def test_sharded_replicas_token_identical_to_oracle(mode):
+    """Every replica of a 2-replica router runs with its KV arenas
+    sharded over the 'model' mesh axis, and the routed trace stays
+    token-identical to the UNSHARDED 1-replica drain oracle — the two
+    scale-out mechanisms (tensor-parallel arenas within an engine,
+    cluster-affinity routing across engines) compose without touching
+    the math."""
+    from repro.data.scenegraph import generate_scene_graph
+    from repro.rag.pipeline import GraphRAGPipeline
+    from repro.rag.retriever import GRetrieverRetriever, RetrieverIndex
+    from repro.rag.text_encoder import TextEncoder
+    from repro.serving.router import ReplicaRouter
+
+    graph, queries = generate_scene_graph()
+    tok2 = Tokenizer.train([q.question + " " + q.answer
+                            for q in queries] + graph.node_text,
+                           max_vocab=2048)
+    cfg = ModelConfig(name="tp-replica", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=tok2.vocab_size, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    index = RetrieverIndex.build(graph, TextEncoder(32))
+    pipe = GraphRAGPipeline(
+        index=index, retriever=GRetrieverRetriever(index),
+        engine=ServingEngine(params, cfg, tok2, max_cache_len=512,
+                             max_new_tokens=3),
+        tokenizer=tok2, use_soft_prompt=False)
+    items = queries[:8]
+    arrivals = [0.0, 0.0, 0.1, 0.1, 0.2, 5.0, 5.0, 5.1]
+    oracle, _, _ = pipe.serve_stream(items, arrivals, max_batch=4,
+                                     threshold=0.25, mode="drain",
+                                     pool_budget_bytes=1 << 26)
+
+    # build the router FIRST so every replica (the reused engine AND
+    # the clone) can be sharded before any routed serving traces a jit
+    assigner = pipe._make_assigner(items, 0.25, None, 1, None)
+    router = ReplicaRouter.build(
+        pipe.engine, assigner, 2, pool_budget_bytes=1 << 26,
+        prefix_tokens_fn=pipe._prefix_payload,
+        segment_tokens_fn=pipe._segment_payload)
+    mesh = _mesh2()
+    try:
+        for r in router.replicas:
+            smode = KS.shard_engine(r.engine, mesh)
+            assert smode == "heads"
+            leaf = jax.tree_util.tree_leaves(r.engine.block_pool.arena)[0]
+            assert len(leaf.sharding.device_set) == 2
+        recs, summary, router2 = pipe.serve_stream(
+            items, arrivals, max_batch=4, threshold=0.25, mode=mode,
+            pool_budget_bytes=1 << 26, replicas=2, scheduler=router)
+    finally:
+        kops.configure_mesh(None)
+    assert router2 is router
+    assert [r.generated for r in recs] == [r.generated for r in oracle]
+    assert sum(r.routed for r in router.replicas) == len(items)
+    assert all(r.load == 0 for r in router.replicas)
