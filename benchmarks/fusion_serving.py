@@ -2,22 +2,32 @@
 (DESIGN.md §14) on a trace built so chain reuse MISSES but segment
 reuse HITS.
 
-The workload is K clusters whose prompts all embed the SAME long
-context segment behind per-cluster roots of *different lengths*:
+The workload is K clusters in ``GROUP_SIZE``-cluster groups; every
+cluster in a group embeds the SAME long context segment behind
+per-cluster roots of *different lengths*, and the groups' shared
+segments have *different lengths* (``CTX_LENS``):
 
     cluster i prompt = root_i (R_i tokens, all R_i distinct)
-                       + ctx (C tokens, identical content)
+                       + ctx_g (C_g tokens, shared within group g)
                        + delta_i (D tokens, unique)
 
 Chain (prefix-tree) reuse only shares literal token *prefixes*: the
-roots differ, so every cluster prefills its own copy of ``ctx`` — the
-tree layout cannot see the overlap.  The composition path caches
-``ctx`` once (under cluster 0's chain), finds it through the
-content-addressed segment registry, and SPLICES it into every other
-cluster's prompt at a different base position — canonical-K storage
-plus read-time RoPE delta rotation make the cached blocks valid at any
-offset.  Only the roots, deltas, and a leading ``recompute_frac``
-boundary window of ``ctx`` are prefilled fresh.
+roots differ, so every cluster prefills its own copy of its ``ctx_g``
+— the tree layout cannot see the overlap.  The composition path caches
+each ``ctx_g`` once (under the group's first cluster — the donor),
+finds it through the content-addressed segment registry, and SPLICES
+it into every other group member's prompt at a different base position
+— canonical-K storage plus read-time RoPE delta rotation make the
+cached blocks valid at any offset.  Only the roots, deltas, and a
+recompute window/mask of ``ctx_g`` are prefilled fresh.
+
+The MIXED segment lengths are what separates the two recompute dials:
+``recompute_frac`` spends proportionally to segment length (f * C_g
+tokens per splice) even though splice staleness concentrates in a
+roughly length-INDEPENDENT leading region, so one frac over-repairs
+the long segments and under-repairs the short ones at once; a drift
+budget spends the same absolute tokens per splice exactly where the
+scores put them.
 
 Arms (all on one engine, f32/XLA, paged + fused path):
 
@@ -25,7 +35,12 @@ Arms (all on one engine, f32/XLA, paged + fused path):
   * ``chain``   — the DESIGN.md §10 chain path (``compose_frac=None``);
   * ``compose@f`` — ``try_compose`` armed at ``recompute_frac = f``
     for f in ``FRACS`` (1.0 degenerates to dense recompute of every
-    spliced token and must be token-identical to the chain arm).
+    spliced token and must be token-identical to the chain arm);
+  * ``drift@B`` — drift-scored selective recompute (DESIGN.md §15) at
+    ``recompute_budget = B`` tokens per spliced segment: the layer-0
+    attention-mass x staleness probe picks WHICH blocks of the splice
+    to re-prefill instead of always the leading window (``B = MAX_CTX``
+    selects every block and must be token-identical to the chain arm).
 
 Reported per arm: prefix prefill tokens (EMPIRICAL, from the serving
 stats — asserted equal to the analytic count from the plan semantics),
@@ -36,10 +51,25 @@ continuations).
 Gates, asserted on every timed replay:
 
   1. ``chain`` serves token-identically to ``dense`` (f32/XLA);
-  2. ``compose@1.0`` serves token-identically to ``chain``;
-  3. some PARTIAL frac cuts prefix prefill tokens >= 2.0x vs the chain
-     arm while clearing a >= 0.90 greedy-match rate — the headline:
-     fusion reuse wins where chain reuse cannot, at near-dense output.
+  2. ``compose@1.0`` AND ``drift@MAX_CTX`` serve token-identically to
+     ``chain``;
+  3. some PARTIAL reuse arm (fixed frac or drift budget) cuts prefix
+     prefill tokens >= 2.0x vs the chain arm while clearing a >= 0.90
+     greedy-match rate — the headline: fusion reuse wins where chain
+     reuse cannot, at near-dense output.  On this mixed-length trace
+     every FIXED frac misses one axis (one frac over-repairs the long
+     splices and under-repairs the short ones at once), so the winners
+     here are drift arms;
+  4. some partial drift arm BEATS the fixed-window frontier: >= 1.3x
+     the best fixed arm's prefill cut at >= its greedy-match rate (or
+     an equal cut at a strictly higher match) — selective recompute
+     spends the same budget where the attention drift actually is;
+  5. admission (one-shot section): on a repeat-heavy replay of the
+     same trace the "cost" policy declines >= 1 engage and finishes
+     with FEWER total prefill tokens than greedy engagement;
+  6. identity (one-shot section): the compose@1.0 and drift@MAX_CTX
+     identities re-asserted against the chain arm on a bf16/Pallas
+     engine (interpret mode, reduced trace).
 
 Writes ``BENCH_fusion_serving.json`` at the repo root.  Runs on CPU.
 
@@ -69,15 +99,24 @@ from repro.serving.scheduler import (Assignment, OnlineCluster,
 MAX_CACHE_LEN = 1024
 BLOCK_SIZE = 32
 NUM_CLUSTERS = 12           # K: one query per cluster per replay
-CTX_LEN = 256               # C: the shared (spliceable) segment
+GROUP_SIZE = 4              # clusters per ctx group; first = donor
+CTX_LENS = [64, 256, 512]   # C_g: shared-segment length per group —
+                            # the length SPREAD is what separates a
+                            # relative frac from an absolute budget
+MAX_CTX = max(CTX_LENS)
 DELTA_LEN = 8               # D: unique per-cluster tail segment
 SUFFIX_LEN = 10             # query suffix appended after the prefix
 ROOT_LENS = [3 + i for i in range(NUM_CLUSTERS)]   # all distinct ->
                                                    # every splice is
                                                    # re-based
 FRACS = [0.25, 0.5, 1.0]    # recompute_frac points for the compose arm
+BUDGETS = [32, 64, 128, MAX_CTX]   # drift recompute budgets (tokens
+                                   # per splice); MAX_CTX masks every
+                                   # block -> the chain-identity anchor
 GATE_MIN_PREFILL_CUT = 2.0  # vs the chain arm, at some partial frac
 GATE_MIN_MATCH = 0.90       # greedy-match rate vs dense, same frac
+GATE_DRIFT_CUT_RATIO = 1.3  # drift cut over the BEST fixed partial
+                            # arm's cut, at >= its match rate
 MAX_NEW_TOKENS = 12
 REPLAYS = 3
 
@@ -96,8 +135,8 @@ def substrate():
     params = M.init_params(jax.random.PRNGKey(0), cfg)
 
     stream = tok.encode(" ".join(graph.node_text))
-    need = CTX_LEN + sum(ROOT_LENS) + NUM_CLUSTERS * (DELTA_LEN
-                                                      + SUFFIX_LEN)
+    need = sum(CTX_LENS) + sum(ROOT_LENS) + NUM_CLUSTERS * (DELTA_LEN
+                                                            + SUFFIX_LEN)
     while len(stream) < need:
         stream = stream + stream
     off = 0
@@ -108,11 +147,11 @@ def substrate():
         return piece
 
     from repro.data.tokenizer import BOS
-    ctx = take(CTX_LEN)
+    ctxs = [take(c) for c in CTX_LENS]
     roots = [[BOS] + take(r - 1) for r in ROOT_LENS]
     deltas = [take(DELTA_LEN) for _ in range(NUM_CLUSTERS)]
     suffixes = [take(SUFFIX_LEN) for _ in range(NUM_CLUSTERS)]
-    return tok, cfg, params, ctx, roots, deltas, suffixes
+    return tok, cfg, params, ctxs, roots, deltas, suffixes
 
 
 def make_engine(tok, cfg, params):
@@ -158,14 +197,18 @@ def run_dense(eng, prompts, suffixes):
     return rows, time.perf_counter() - t0
 
 
-def run_scheduled(eng, chains, suffixes, frac):
-    """Chain arm (``frac is None``) or compose arm: one query per
-    cluster through ``serve_batch``.  Computed prefix tokens are taken
-    from the serving stats — ``prefix_tokens_computed`` covers chain
-    prefills, and a composed row computes ``prefix_len`` minus the
-    tokens it spliced from cache (gap + boundary-window tokens)."""
+def run_scheduled(eng, chains, suffixes, frac, budget=None,
+                  admission="greedy"):
+    """Chain arm (``frac is None``), compose arm, or drift arm
+    (``budget`` set, frac = 0.0): one query per cluster through
+    ``serve_batch``.  Computed prefix tokens are taken from the serving
+    stats — ``prefix_tokens_computed`` covers chain prefills, and a
+    composed row computes ``prefix_len`` minus the tokens it spliced
+    from cache (gap + drift-masked / boundary-window tokens)."""
     sched = make_scheduler(eng, chains)
     sched.compose_frac = frac
+    sched.compose_budget = budget
+    sched.compose_admission = admission
     stats = eng.cache_mgr.stats
     rows, seen, t0 = [], set(), time.perf_counter()
     for cid, sfx in enumerate(suffixes):
@@ -194,21 +237,29 @@ def run_scheduled(eng, chains, suffixes, frac):
     return rows, wall
 
 
-def expected_tokens(roots, ctx, deltas, suffixes, frac):
+def expected_tokens(roots, ctx_list, deltas, suffixes, frac):
     """Analytic computed-token count the empirical stats must match."""
     sfx = sum(len(s) for s in suffixes)
-    if frac == "dense":
-        return sum(len(r) + len(ctx) + len(d)
-                   for r, d in zip(roots, deltas)) + sfx
-    if frac is None:        # chain: every segment prefilled once, cold
-        return sum(len(r) + len(ctx) + len(d)
-                   for r, d in zip(roots, deltas)) + sfx
-    # compose: cluster 0 cold-chains; the rest splice ctx and prefill
-    # only their root + delta gaps and the boundary window
-    win = recompute_window(len(ctx), frac)
-    return (len(roots[0]) + len(ctx) + len(deltas[0])
-            + sum(len(r) + len(d) + win
-                  for r, d in zip(roots[1:], deltas[1:]))) + sfx
+    if frac == "dense" or frac is None:   # dense, or chain cold-prefill
+        return sum(len(r) + len(c) + len(d)
+                   for r, c, d in zip(roots, ctx_list, deltas)) + sfx
+    total = sfx
+    for i, (r, c, d) in enumerate(zip(roots, ctx_list, deltas)):
+        if i % GROUP_SIZE == 0:
+            # group donor: cold-chains its full prompt, seeding the
+            # registry with ctx_g for the rest of the group
+            total += len(r) + len(c) + len(d)
+            continue
+        if isinstance(frac, tuple):
+            # drift@B: budget quantizes UP to whole blocks; every C_g
+            # divides BLOCK_SIZE so each maskable block is full — the
+            # count is exact REGARDLESS of which blocks the scores pick
+            win = min(-(-frac[1] // BLOCK_SIZE) * BLOCK_SIZE, len(c))
+        else:
+            # compose: fixed leading boundary window, f * C_g tokens
+            win = recompute_window(len(c), frac)
+        total += len(r) + len(d) + win
+    return total
 
 
 def match_rate(rows, ref_rows):
@@ -227,21 +278,108 @@ def match_rate(rows, ref_rows):
 
 
 # ----------------------------------------------------------------------
+def run_admission(tok, cfg, params, chains, suffixes):
+    """Composition-aware admission (gate 5): a repeat-heavy replay —
+    cluster 0 cold, clusters 1..3 (the rest of ctx group 0) arriving
+    3x each — under both policies at frac = 0.5.  Greedy engages every arrival and pays the
+    gap + window recompute each time; "cost" projects the repeats from
+    ``CacheStats.cluster_arrivals`` (doubling heuristic), sees that one
+    chain prefill amortizes cheaper, declines, and lets the repeats hit
+    the pool."""
+    def trace(policy):
+        eng = make_engine(tok, cfg, params)
+        sched = make_scheduler(eng, chains)
+        sched.compose_frac = 0.5
+        sched.compose_admission = policy
+        eng.gap_admit = None          # isolate the admission decision
+        st = eng.cache_mgr.stats
+        total = 0
+
+        def serve(cid, is_new):
+            nonlocal total
+            p0, s0, c0 = (st.prefix_tokens_computed,
+                          st.compose_spliced_tokens, st.compose_requests)
+            q = sched.serve_batch(
+                [np.zeros(4, np.float32)], [None], [suffixes[cid]],
+                assignments=[Assignment(cluster_id=cid, is_new=is_new,
+                                        distance=0.0)])[0]
+            total += (st.prefix_tokens_computed - p0) + len(suffixes[cid])
+            if st.compose_requests > c0:
+                total += q.prefix_len - (st.compose_spliced_tokens - s0)
+
+        serve(0, True)
+        for _ in range(3):
+            for cid in (1, 2, 3):
+                serve(cid, False)
+        declines, engages = st.compose_declines, st.compose_requests
+        sched.pool.clear()
+        assert eng.block_pool.blocks_in_use == 0
+        return total, declines, engages
+
+    toks_g, dec_g, eng_g = trace("greedy")
+    toks_c, dec_c, eng_c = trace("cost")
+    assert dec_g == 0 and eng_g > 0       # greedy engaged throughout
+    assert dec_c >= 1                     # cost refused >= 1 engage ...
+    assert toks_c < toks_g                # ... and total prefill fell
+    return {
+        "trace": "cluster 0 cold + clusters 1-3 arriving 3x each",
+        "compose_frac": 0.5,
+        "prefill_tokens": {"greedy": toks_g, "cost": toks_c},
+        "declines": {"greedy": dec_g, "cost": dec_c},
+        "engages": {"greedy": eng_g, "cost": eng_c},
+        "cost_saves_tokens": True,
+    }
+
+
+def run_bf16_identity(tok, ctx, roots, deltas, suffixes):
+    """Identity gate 6 on bf16/Pallas (interpret mode on CPU, so a
+    reduced 3-cluster trace over the group-0 ctx): compose@1.0 and
+    drift@MAX_CTX must serve token-identically to the chain arm on
+    that engine too."""
+    n = 3
+    cfg = ModelConfig(name="bench-fusion-bf16", family="dense",
+                      num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=tok.vocab_size,
+                      dtype="bfloat16", attention_impl="pallas")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, tok, max_cache_len=MAX_CACHE_LEN,
+                        max_new_tokens=4, block_size=BLOCK_SIZE,
+                        arena_blocks=256)
+    chains = [[r, ctx, d] for r, d in zip(roots[:n], deltas[:n])]
+    sfx = suffixes[:n]
+    chain_rows, _ = run_scheduled(eng, chains, sfx, None)
+    comp_rows, _ = run_scheduled(eng, chains, sfx, 1.0)
+    drift_rows, _ = run_scheduled(eng, chains, sfx, 0.0, budget=MAX_CTX)
+    for i in range(n):
+        assert comp_rows[i]["tokens"] == chain_rows[i]["tokens"]
+        assert drift_rows[i]["tokens"] == chain_rows[i]["tokens"]
+    return {"clusters": n, "dtype": "bfloat16", "impl": "pallas",
+            "compose_frac1_identical_to_chain": True,
+            "drift_full_budget_identical_to_chain": True}
+
+
 def run(out_path):
-    tok, cfg, params, ctx, roots, deltas, suffixes = substrate()
+    tok, cfg, params, ctxs, roots, deltas, suffixes = substrate()
     eng = make_engine(tok, cfg, params)
-    chains = [[r, ctx, d] for r, d in zip(roots, deltas)]
-    prompts = [r + ctx + d for r, d in zip(roots, deltas)]
-    arms = [("dense", "dense"), ("chain", None)] + \
-        [(f"compose@{f}", f) for f in FRACS]
+    ctx_list = [ctxs[i // GROUP_SIZE] for i in range(NUM_CLUSTERS)]
+    chains = [[r, c, d] for r, c, d in zip(roots, ctx_list, deltas)]
+    prompts = [r + c + d for r, c, d in zip(roots, ctx_list, deltas)]
+    arms = ([("dense", "dense"), ("chain", None)]
+            + [(f"compose@{f}", f) for f in FRACS]
+            + [(f"drift@{b}", ("drift", b)) for b in BUDGETS])
+
+    def run_arm(frac):
+        if frac == "dense":
+            return run_dense(eng, prompts, suffixes)
+        if isinstance(frac, tuple):
+            return run_scheduled(eng, chains, suffixes, 0.0,
+                                 budget=frac[1])
+        return run_scheduled(eng, chains, suffixes, frac)
 
     # warm pass: compiles every prefill/decode shape each arm touches,
     # and exercises the identity gates once before timing
     for _, frac in arms:
-        if frac == "dense":
-            run_dense(eng, prompts, suffixes)
-        else:
-            run_scheduled(eng, chains, suffixes, frac)
+        run_arm(frac)
 
     results = {name: {"computed": [], "ttft_mean_s": [], "ttft_p95_s": [],
                       "wall_s": [], "match_vs_dense": [],
@@ -250,14 +388,11 @@ def run(out_path):
     for _ in range(REPLAYS):
         replay = {}
         for name, frac in arms:          # interleaved: arms alternate
-            if frac == "dense":
-                rows, wall = run_dense(eng, prompts, suffixes)
-            else:
-                rows, wall = run_scheduled(eng, chains, suffixes, frac)
+            rows, wall = run_arm(frac)
             replay[name] = rows
             r = results[name]
             computed = sum(x["computed"] for x in rows)
-            assert computed == expected_tokens(roots, ctx, deltas,
+            assert computed == expected_tokens(roots, ctx_list, deltas,
                                                suffixes, frac), \
                 (name, computed)         # exact accounting gate
             r["computed"].append(computed)
@@ -272,6 +407,8 @@ def run(out_path):
             assert replay["chain"][i]["tokens"] == \
                 replay["dense"][i]["tokens"]
             assert replay["compose@1.0"][i]["tokens"] == \
+                replay["chain"][i]["tokens"]
+            assert replay[f"drift@{MAX_CTX}"][i]["tokens"] == \
                 replay["chain"][i]["tokens"]
         for name, _ in arms:
             results[name]["match_vs_dense"].append(
@@ -294,18 +431,47 @@ def run(out_path):
         arms_out[name]["prefill_cut_vs_chain"] = round(
             chain_tokens / arms_out[name]["prefill_tokens"], 3)
 
-    # headline gate: a PARTIAL frac that wins on both axes at once
+    # headline gate 3: a PARTIAL reuse arm (fixed frac or drift budget)
+    # that wins on both axes at once — on the mixed-length trace the
+    # fixed fracs each miss one axis, so the winners are drift arms
     winners = [
         name for name, frac in arms
-        if isinstance(frac, float) and frac < 1.0
+        if ((isinstance(frac, float) and frac < 1.0)
+            or (isinstance(frac, tuple) and frac[1] < MAX_CTX))
         and arms_out[name]["prefill_cut_vs_chain"] >= GATE_MIN_PREFILL_CUT
         and arms_out[name]["greedy_match_vs_dense"] >= GATE_MIN_MATCH]
     assert winners, arms_out
 
+    # headline gate 4: drift beats the fixed-window FRONTIER — at least
+    # one partial drift arm takes >= GATE_DRIFT_CUT_RATIO x the best
+    # fixed arm's prefill cut without giving up match (or matches its
+    # cut at strictly higher fidelity)
+    best_fixed = max(
+        (name for name, frac in arms
+         if isinstance(frac, float) and frac < 1.0),
+        key=lambda n: arms_out[n]["prefill_cut_vs_chain"])
+    fx_cut = arms_out[best_fixed]["prefill_cut_vs_chain"]
+    fx_match = arms_out[best_fixed]["greedy_match_vs_dense"]
+    drift_winners = []
+    for name, frac in arms:
+        if not (isinstance(frac, tuple) and frac[1] < MAX_CTX):
+            continue
+        cut = arms_out[name]["prefill_cut_vs_chain"]
+        match = arms_out[name]["greedy_match_vs_dense"]
+        if ((cut >= GATE_DRIFT_CUT_RATIO * fx_cut and match >= fx_match)
+                or (cut >= fx_cut and match > fx_match)):
+            drift_winners.append(name)
+    assert drift_winners, (best_fixed, fx_cut, fx_match, arms_out)
+
+    # one-shot sections: admission policy + bf16/Pallas identity
+    admission = run_admission(tok, cfg, params, chains, suffixes)
+    bf16 = run_bf16_identity(tok, ctxs[0], roots, deltas, suffixes)
+
     report = {
         "bench": "fusion_serving",
-        "design": "DESIGN.md §14: spliceable KV segments, read-time "
-                  "RoPE delta rotation, content-addressed registry",
+        "design": "DESIGN.md §14/§15: spliceable KV segments, read-time "
+                  "RoPE delta rotation, content-addressed registry, "
+                  "drift-scored selective recompute, cost admission",
         "config": dict(model=cfg.name, num_layers=cfg.num_layers,
                        d_model=cfg.d_model, num_heads=cfg.num_heads,
                        num_kv_heads=cfg.num_kv_heads, dtype=cfg.dtype,
@@ -313,25 +479,34 @@ def run(out_path):
                        max_cache_len=MAX_CACHE_LEN,
                        block_size=BLOCK_SIZE,
                        max_new_tokens=MAX_NEW_TOKENS,
-                       num_clusters=NUM_CLUSTERS, ctx_len=CTX_LEN,
+                       num_clusters=NUM_CLUSTERS, group_size=GROUP_SIZE,
+                       ctx_lens=CTX_LENS,
                        root_lens=ROOT_LENS, delta_len=DELTA_LEN,
                        suffix_len=SUFFIX_LEN, fracs=FRACS,
-                       replays=REPLAYS,
+                       budgets=BUDGETS, replays=REPLAYS,
                        gate_min_prefill_cut=GATE_MIN_PREFILL_CUT,
-                       gate_min_match=GATE_MIN_MATCH),
+                       gate_min_match=GATE_MIN_MATCH,
+                       gate_drift_cut_ratio=GATE_DRIFT_CUT_RATIO),
         "arms": arms_out,
         "gates": {
             "chain_token_identical_to_dense": True,
             "compose_frac1_token_identical_to_chain": True,
+            "drift_full_budget_token_identical_to_chain": True,
             "accounting_matches_plan_semantics": True,
             "partial_frac_winners": winners,
+            "fixed_window_frontier": {
+                "arm": best_fixed, "prefill_cut_vs_chain": fx_cut,
+                "greedy_match_vs_dense": fx_match},
+            "drift_frontier_winners": drift_winners,
+            "admission": admission,
+            "bf16_pallas_identity": bf16,
         },
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
     print(json.dumps(report["arms"], indent=2))
-    print("winners:", winners, "->", out_path)
+    print("winners:", winners, "drift:", drift_winners, "->", out_path)
     return report
 
 

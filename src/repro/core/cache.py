@@ -189,6 +189,37 @@ def recompute_window(seg_len: int, recompute_frac: float) -> int:
     return min(int(seg_len), math.ceil(recompute_frac * seg_len))
 
 
+def masked_block_tokens(seg_len: int, blocks, block_size: int) -> int:
+    """Tokens covered by the selected block indices of a
+    ``seg_len``-token segment (the last block may be partial)."""
+    return sum(min(block_size, seg_len - b * block_size) for b in blocks)
+
+
+def select_drift_blocks(scores, budget_tokens: int, seg_len: int,
+                        block_size: int) -> Tuple[int, ...]:
+    """Pick the block indices a ``budget_tokens`` recompute budget is
+    spent on, highest drift score first (DESIGN.md §15).
+
+    The budget is quantized UP to whole blocks (``ceil(budget / bs)``)
+    so the masked-span prefill stays block-aligned and the paged
+    scatter dense; ``budget_tokens >= seg_len`` selects every block —
+    the exactness anchor (identical to ``recompute_frac=1.0``).  The
+    sort key is ``(-score, block_index)`` and the sort is stable, so
+    tied scores select LEADING blocks first — the drift mask always
+    contains the fixed leading window's tokens at equal budget when
+    scores tie."""
+    assert budget_tokens >= 0, budget_tokens
+    nb = (seg_len + block_size - 1) // block_size
+    assert len(scores) == nb, (len(scores), nb)
+    n_sel = min(nb, (budget_tokens + block_size - 1) // block_size)
+    if budget_tokens >= seg_len:
+        n_sel = nb
+    if n_sel == 0:
+        return ()
+    order = sorted(range(nb), key=lambda b: (-float(scores[b]), b))
+    return tuple(sorted(order[:n_sel]))
+
+
 @dataclasses.dataclass(frozen=True)
 class ComposedSegment:
     """One cached segment spliced into a composed prompt: the resident
@@ -196,16 +227,36 @@ class ComposedSegment:
     read — that independence is the point), re-based so its tokens read
     as positions ``[target_offset, target_offset + segment_len)``.
     ``tokens`` are the segment's token ids — needed to RE-prefill the
-    leading ``recompute_window`` tokens at the boundary."""
+    leading ``recompute_window`` tokens at the boundary.
+
+    ``recompute_blocks`` (drift-scored selection, DESIGN.md §15)
+    REPLACES the leading-window dial for this splice: the listed
+    segment-local block indices are re-prefilled fresh (their cached
+    copies fully masked via per-block skips) and everything else is
+    read from the splice untouched — the recompute spend lands on the
+    tokens whose attention actually moved, not on a fixed position
+    range.  ``drift_scores`` keeps the per-block scores the selection
+    was made from (metrics / replay)."""
     state: PrefixState
     target_offset: int
     tokens: Tuple[int, ...]
+    recompute_blocks: Optional[Tuple[int, ...]] = None
+    drift_scores: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self):
         object.__setattr__(self, "tokens", tuple(self.tokens))
         assert len(self.tokens) == self.state.segment_len, \
             (len(self.tokens), self.state.segment_len)
         assert self.target_offset >= 0, self.target_offset
+        if self.recompute_blocks is not None:
+            blocks = tuple(sorted(int(b) for b in self.recompute_blocks))
+            assert len(set(blocks)) == len(blocks), blocks
+            assert all(b >= 0 for b in blocks), blocks
+            object.__setattr__(self, "recompute_blocks", blocks)
+        if self.drift_scores is not None:
+            object.__setattr__(
+                self, "drift_scores",
+                tuple(float(s) for s in self.drift_scores))
 
 
 @dataclasses.dataclass
@@ -221,10 +272,20 @@ class SegmentComposition:
     spliced segment at its target position (cached copies masked via
     per-block skips) — 0.0 is the pure splice, 1.0 falls back to a
     dense prefill that is token-identical to serving without a cache.
+    A segment carrying ``recompute_blocks`` (drift-scored selection,
+    DESIGN.md §15) overrides the window with its own block mask;
+    ``block_size`` must then match the pool the plan is served from.
+
+    ``gap_parts`` optionally keeps the per-segment sub-spans the
+    merged ``gaps`` were built from — the content-addressed units the
+    engine's gap-span capture registers (a merged gap's combined token
+    span would never match a later single-segment lookup).
     """
     segments: List[ComposedSegment]
     gaps: List[Tuple[int, List[int]]]    # (target_offset, fresh tokens)
     recompute_frac: float = 0.0
+    block_size: int = 0
+    gap_parts: Optional[List[Tuple[int, List[int]]]] = None
 
     def __post_init__(self):
         assert 0.0 <= self.recompute_frac <= 1.0, self.recompute_frac
@@ -239,20 +300,54 @@ class SegmentComposition:
                 f"at {off} (expected {cur})"
             cur += ln
         self._total = cur
+        for s in self.segments:
+            if s.recompute_blocks is not None:
+                assert self.block_size > 0, \
+                    "block-masked segments need the pool block_size"
+                nb = (len(s.tokens) + self.block_size - 1) // self.block_size
+                assert all(b < nb for b in s.recompute_blocks), \
+                    (s.recompute_blocks, nb)
+        if self.gap_parts is not None:
+            by_off = {off: list(toks) for off, toks in self.gap_parts}
+            for off, toks in self.gaps:
+                # every merged gap must be exactly re-coverable by parts
+                cur, end = off, off + len(toks)
+                while cur < end:
+                    part = by_off.get(cur)
+                    assert part is not None, (cur, self.gap_parts)
+                    cur += len(part)
+                assert cur == end, (off, toks, self.gap_parts)
 
     @property
     def total_len(self) -> int:
         """Context tokens the composition covers (suffix not included)."""
         return self._total
 
+    def _fresh_runs(self, s: ComposedSegment) -> List[Tuple[int, int]]:
+        """Segment-local [lo, hi) token runs this splice re-prefills:
+        the drift block mask merged into contiguous block-aligned runs,
+        or the single leading ``recompute_frac`` window."""
+        if s.recompute_blocks is None:
+            w = recompute_window(len(s.tokens), self.recompute_frac)
+            return [(0, w)] if w else []
+        bs = self.block_size
+        runs: List[List[int]] = []
+        for b in s.recompute_blocks:
+            lo, hi = b * bs, min(len(s.tokens), (b + 1) * bs)
+            if runs and runs[-1][1] == lo:
+                runs[-1][1] = hi                 # adjacent blocks merge
+            else:
+                runs.append([lo, hi])
+        return [(lo, hi) for lo, hi in runs]
+
     def fresh_spans(self) -> List[Tuple[int, List[int]]]:
         """The spans a composed prefill must COMPUTE, position-sorted:
-        every gap plus each segment's leading recompute window."""
+        every gap plus each segment's recompute runs (drift-masked
+        blocks, or the leading window)."""
         out = [(off, list(toks)) for off, toks in self.gaps]
         for s in self.segments:
-            w = recompute_window(len(s.tokens), self.recompute_frac)
-            if w:
-                out.append((s.target_offset, list(s.tokens[:w])))
+            for lo, hi in self._fresh_runs(s):
+                out.append((s.target_offset + lo, list(s.tokens[lo:hi])))
         out.sort(key=lambda e: e[0])
         return out
 
@@ -263,8 +358,11 @@ class SegmentComposition:
         segment covers segment-local slots ``[k*bs, (k+1)*bs)``; its
         offset is the uniform re-base delta ``target - base_pos`` and
         its skip masks whatever part of the recompute window falls in
-        it.  Fully-masked blocks are kept (NULL-equivalent) so the
-        layout stays aligned with ``PageTable.blocks``."""
+        it (a drift-selected block is masked WHOLE: skip = block_size).
+        Fully-masked blocks are kept (NULL-equivalent) so the layout
+        stays aligned with ``PageTable.blocks``."""
+        assert self.block_size in (0, block_size), \
+            (self.block_size, block_size)
         blocks: List[int] = []
         offsets: List[int] = []
         skips: List[int] = []
@@ -272,21 +370,48 @@ class SegmentComposition:
             st = s.state
             assert st.is_paged, "composition splices paged segments only"
             delta = int(s.target_offset) - st.base_pos
+            mask = (None if s.recompute_blocks is None
+                    else set(s.recompute_blocks))
             w = recompute_window(len(s.tokens), self.recompute_frac)
             for k, bid in enumerate(st.page.blocks):
                 blocks.append(int(bid))
                 offsets.append(delta)
-                skips.append(max(0, min(block_size, w - k * block_size)))
+                if mask is None:
+                    skips.append(max(0, min(block_size, w - k * block_size)))
+                else:
+                    skips.append(block_size if k in mask else 0)
         return blocks, offsets, skips
+
+    def recomputed_tokens(self) -> int:
+        """Tokens of spliced segments the prefill re-computes fresh
+        (drift-masked blocks or leading windows)."""
+        return sum(hi - lo for s in self.segments
+                   for lo, hi in self._fresh_runs(s))
 
     def spliced_tokens(self) -> int:
         """Cached context tokens actually read via the splice (segment
         tokens minus their recomputed windows) — the prefill work the
         composition avoids."""
-        return sum(
-            len(s.tokens)
-            - recompute_window(len(s.tokens), self.recompute_frac)
-            for s in self.segments)
+        return (sum(len(s.tokens) for s in self.segments)
+                - self.recomputed_tokens())
+
+    def apply_drift(self, scores, budget_tokens: int) -> None:
+        """Attach drift-scored block masks (DESIGN.md §15): ``scores``
+        holds one per-block score array per segment (same order);
+        every segment gets the top-``budget_tokens`` blocks selected by
+        ``select_drift_blocks``.  The masks REPLACE the
+        ``recompute_frac`` window for these segments."""
+        assert self.block_size > 0, \
+            "apply_drift needs the pool block_size on the composition"
+        assert len(scores) == len(self.segments), \
+            (len(scores), len(self.segments))
+        self.segments = [
+            dataclasses.replace(
+                s,
+                recompute_blocks=select_drift_blocks(
+                    sc, budget_tokens, len(s.tokens), self.block_size),
+                drift_scores=tuple(float(x) for x in sc))
+            for s, sc in zip(self.segments, scores)]
 
 
 @dataclasses.dataclass
@@ -363,8 +488,24 @@ class CacheStats:
     compose_segments: int = 0    # cached segments spliced (re-based)
     compose_spliced_tokens: int = 0     # cached tokens read via splice
                                         # (prefill work avoided)
-    compose_recomputed_tokens: int = 0  # boundary-window tokens
-                                        # re-prefilled (recompute_frac)
+    compose_recomputed_tokens: int = 0  # boundary-window / drift-mask
+                                        # tokens re-prefilled
+    # --- drift-scored recomputation + admission (DESIGN.md §15) ---
+    compose_declines: int = 0    # engages the admission cost model
+                                 # refused (served chained instead)
+    compose_drift_splices: int = 0      # splices carrying a drift mask
+    compose_drift_tokens: int = 0       # tokens recomputed via drift
+                                        # masks (subset of recomputed)
+    compose_drift_score: float = 0.0    # summed drift score (attention
+                                        # mass) of the SELECTED blocks —
+                                        # what the budget paid down
+    gap_spans_cached: int = 0    # composition gap spans captured into
+                                 # the registry (repeat traffic hits)
+    gap_tokens_cached: int = 0   # tokens those captured spans hold
+    # per-cluster arrival counts — what the composition-aware admission
+    # cost model reads as its repeat-rate signal (DESIGN.md §15)
+    cluster_arrivals: Dict[Any, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def prefill_savings(self) -> float:
@@ -457,14 +598,47 @@ class CacheStats:
     def record_compose(self, comp: "SegmentComposition") -> None:
         """One request served through a composition plan (DESIGN.md
         §14).  Spliced tokens are cached context the prefill SKIPPED;
-        recomputed tokens are the boundary windows it paid for — the
-        quality-vs-TTFT sweep reads both."""
+        recomputed tokens are the boundary windows / drift masks it
+        paid for — the quality-vs-TTFT sweep reads both.  Drift-masked
+        splices additionally record their selected-block score mass
+        (DESIGN.md §15) so ``trace_summary`` can report how much
+        attention drift the recompute budget actually covered."""
         spliced = comp.spliced_tokens()
         self.compose_requests += 1
         self.compose_segments += len(comp.segments)
         self.compose_spliced_tokens += spliced
         self.compose_recomputed_tokens += (
             sum(len(s.tokens) for s in comp.segments) - spliced)
+        for s in comp.segments:
+            if s.recompute_blocks is None:
+                continue
+            self.compose_drift_splices += 1
+            self.compose_drift_tokens += masked_block_tokens(
+                len(s.tokens), s.recompute_blocks, comp.block_size)
+            if s.drift_scores is not None:
+                self.compose_drift_score += sum(
+                    s.drift_scores[b] for b in s.recompute_blocks)
+
+    def record_compose_decline(self) -> None:
+        """The admission cost model (DESIGN.md §15) refused an engage —
+        the request was served through its chain instead because repeat
+        traffic makes the chain's one-time prefill cheaper than paying
+        gap + recompute tokens on every arrival."""
+        self.compose_declines += 1
+
+    def record_arrival(self, cluster_id) -> None:
+        """One request arrived for ``cluster_id`` — the repeat-rate
+        signal the composition-aware admission cost model extrapolates
+        from (doubling heuristic: k arrivals seen ⇒ expect ~k more)."""
+        self.cluster_arrivals[cluster_id] = \
+            self.cluster_arrivals.get(cluster_id, 0) + 1
+
+    def record_gap_cached(self, tokens: int) -> None:
+        """One composition gap span captured into content-addressed
+        cache blocks (DESIGN.md §15) — repeat traffic over the same
+        content will splice it instead of re-prefilling."""
+        self.gap_spans_cached += 1
+        self.gap_tokens_cached += int(tokens)
 
     def record_migration(self, *, out: int = 0, into: int = 0) -> None:
         """Cluster-chain segments this replica migrated during router

@@ -306,6 +306,39 @@ def _quantize_blocks(qarena, arena, src_bids, dst_bids):
     return jax.tree_util.tree_map_with_path(f, qarena)
 
 
+@functools.partial(jax.jit, static_argnames=("start", "n", "n_tokens",
+                                             "block_size"))
+def _gather_span(arena, rows, *, start: int, n: int, n_tokens: int,
+                 block_size: int):
+    """Repack a token span living at slot offset ``start`` of arena
+    rows ``rows`` into a compact ``n``-row sub-arena aligned at slot 0
+    (gap-span capture, DESIGN.md §15).  Non-donating: the arena stays
+    live — the caller scatters the result into fresh blocks.  Tail
+    slots past ``n_tokens`` get position -1 (the source rows may hold a
+    neighboring span's tokens there; positional masking must never
+    expose them under the captured segment)."""
+    want = n * block_size
+
+    def f(path, x):
+        seq_ax, blk_ax = _leaf_axes(path)
+        is_pos = getattr(path[-1], "key", None) == "pos"
+        xb = jnp.moveaxis(x, blk_ax, 0)[rows]        # [R, .., bs, tail..]
+        lead_seq = xb.ndim + seq_ax                  # slot axis, absolute
+        xb = jnp.moveaxis(xb, lead_seq, 1)           # [R, bs, lead.., tail..]
+        xb = xb.reshape((xb.shape[0] * block_size,) + xb.shape[2:])
+        pad = [(0, want)] + [(0, 0)] * (xb.ndim - 1)
+        xb = jnp.pad(xb, pad, constant_values=-1 if is_pos else 0)
+        xb = xb[start:start + want]
+        if is_pos:
+            live = jnp.arange(want) < n_tokens
+            xb = jnp.where(live.reshape((want,) + (1,) * (xb.ndim - 1)),
+                           xb, -1)
+        xb = xb.reshape((n, block_size) + xb.shape[1:])
+        xb = jnp.moveaxis(xb, 1, lead_seq)           # slots back at seq_ax
+        return jnp.moveaxis(xb, 0, blk_ax)
+    return jax.tree_util.tree_map_with_path(f, arena)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_blocks(arena, sub, bids):
     """Scatter a compact sub-arena (row i = block ``bids[i]``) back
@@ -631,6 +664,62 @@ class KVBlockPool:
         assert len(pinned) == len(blocks), (len(pinned), len(blocks))
         return ComposedRow(blocks=blocks, offsets=offsets, skips=skips,
                            pinned=pinned)
+
+    def cache_span(self, row_bids: Sequence[int], start_slot: int,
+                   n_tokens: int, *, src=None) -> List[int]:
+        """Capture a freshly prefilled token span into the prefix space
+        (gap-span caching, DESIGN.md §15).
+
+        The span lives at slot offset ``start_slot`` of the suffix rows
+        ``row_bids`` (the serving row's suffix table, slot = position -
+        slot_off); it is gathered, re-aligned so token ``i`` lands in
+        block ``i // block_size`` slot ``i % block_size`` (the layout
+        ``SegmentComposition.page_plan`` assumes for cached segments),
+        and scattered into ``ceil(n_tokens / block_size)`` freshly
+        allocated prefix blocks — positions copied verbatim, so the
+        segment's stored (canonical) base position is the span's
+        absolute offset in the composition it was prefilled under.
+        Quantized pools stage through suffix rows exactly like
+        ``write_prefix``.  ``src`` overrides the arena the span is
+        gathered FROM (continuous serving's compact decode sub-arena,
+        whose rows ``row_bids`` then index; same geometry); the
+        captured blocks always land in THIS pool's prefix space.
+        Returns the new block ids (refcount 1, caller-owned)."""
+        assert n_tokens >= 1
+        bs = self.block_size
+        n = self.blocks_needed(n_tokens)
+        first = start_slot // bs
+        last = (start_slot + n_tokens - 1) // bs
+        rows = [int(row_bids[i]) for i in range(first, last + 1)]
+        sub = _gather_span(self.arena if src is None else src,
+                           jnp.asarray(rows, jnp.int32),
+                           start=start_slot - first * bs, n=n,
+                           n_tokens=n_tokens, block_size=bs)
+        if self.qarena is None:
+            bids = self.alloc(n)
+            try:
+                self.arena = _scatter_blocks(self.arena, sub,
+                                             jnp.asarray(bids, jnp.int32))
+            except BaseException:
+                self.decref(bids)
+                raise
+            self.note_tokens(bids, n_tokens)
+            return bids
+        stage = self.alloc(n, suffix=True)
+        bids: Optional[List[int]] = None
+        try:
+            self.arena = _scatter_blocks(self.arena, sub,
+                                         jnp.asarray(stage, jnp.int32))
+            bids = self.alloc(n)
+        except BaseException:
+            self.decref(stage, suffix=True)
+            if bids is not None:
+                self.decref(bids)
+            raise
+        self.quantize_blocks(stage, bids)
+        self.decref(stage, suffix=True)
+        self.note_tokens(bids, n_tokens)
+        return bids
 
     def prefix_source(self):
         """The arena decode-time readers should pass as the PREFIX

@@ -108,7 +108,10 @@ def plan_singleton(subgraphs: Sequence[Subgraph]) -> BatchPlan:
 # ======================================================================
 def plan_composition(segment_tokens: Sequence[Sequence[int]],
                      lookup: Callable[[Tuple[int, ...]], Optional[object]],
-                     recompute_frac: float = 0.0
+                     recompute_frac: float = 0.0,
+                     *, recompute_budget: Optional[int] = None,
+                     scorer: Optional[Callable] = None,
+                     block_size: int = 0
                      ) -> Optional[SegmentComposition]:
     """Plan a ``SegmentComposition`` for a prompt given as an ordered
     list of SEGMENT token lists (the per-segment ``textualize_delta``
@@ -120,12 +123,23 @@ def plan_composition(segment_tokens: Sequence[Sequence[int]],
     position splices into this prompt at its target offset, read-time
     rotation re-basing it (the cross-cluster reuse the dendrogram's
     literal-prefix chains never expressed).  Consecutive misses merge
-    into one fresh gap span.  Returns None when NO segment is resident —
-    a composition of pure gaps is just a dense prefill, and the caller's
-    chain path both serves it and caches its segments for later
-    lookups."""
+    into one fresh gap span (per-segment sub-spans kept as
+    ``gap_parts`` for the engine's content-addressed gap capture).
+    Returns None when NO segment is resident — a composition of pure
+    gaps is just a dense prefill, and the caller's chain path both
+    serves it and caches its segments for later lookups.
+
+    Drift-scored plans (DESIGN.md §15): with ``recompute_budget`` and
+    ``scorer`` both given, ``scorer(comp)`` is called on the
+    window-free plan and must return one per-block score array per
+    segment; the top-scoring blocks worth ``recompute_budget`` tokens
+    per splice are masked for fresh re-prefill
+    (``SegmentComposition.apply_drift``), REPLACING the
+    ``recompute_frac`` leading window.  ``block_size`` must then be
+    the serving pool's block size."""
     segs: List[ComposedSegment] = []
     gaps: List[Tuple[int, List[int]]] = []
+    parts: List[Tuple[int, List[int]]] = []
     off = 0
     for toks in segment_tokens:
         toks = list(int(t) for t in toks)
@@ -134,6 +148,7 @@ def plan_composition(segment_tokens: Sequence[Sequence[int]],
             segs.append(ComposedSegment(state=st, target_offset=off,
                                         tokens=tuple(toks)))
         elif toks:
+            parts.append((off, list(toks)))
             if gaps and gaps[-1][0] + len(gaps[-1][1]) == off:
                 gaps[-1][1].extend(toks)       # merge adjacent misses
             else:
@@ -141,8 +156,12 @@ def plan_composition(segment_tokens: Sequence[Sequence[int]],
         off += len(toks)
     if not segs:
         return None
-    return SegmentComposition(segments=segs, gaps=gaps,
-                              recompute_frac=recompute_frac)
+    comp = SegmentComposition(segments=segs, gaps=gaps,
+                              recompute_frac=recompute_frac,
+                              block_size=block_size, gap_parts=parts)
+    if recompute_budget is not None and scorer is not None:
+        comp.apply_drift(scorer(comp), recompute_budget)
+    return comp
 
 
 # ======================================================================

@@ -111,6 +111,13 @@ class PrefixPool:
         self._seen: set = set()      # keys ever admitted (re-prefill count)
         self._clock = 0
         self.tier: Optional[HostTier] = None
+        # fired with the pool key when an entry leaves the pool with NO
+        # host-tier copy surviving (hard eviction) — content-addressed
+        # indexes layered above the pool (scheduler._seg_registry,
+        # DESIGN.md §15) hang their invalidation here; without it a
+        # stale registry entry would keep resolving to a key whose
+        # blocks were recycled long ago
+        self.on_hard_evict = None
 
     # ------------------------------------------------------------------
     # paged backend wiring
@@ -147,6 +154,7 @@ class PrefixPool:
         block-level references, so serving correctness is unaffected."""
         for e in self._entries.values():
             e.state.release()
+            self._fire_hard_evict(e.key)
         self._entries.clear()
 
     def attach_host_tier(self, tier: HostTier) -> None:
@@ -362,7 +370,19 @@ class PrefixPool:
         # now, or when the last in-flight reader releases
         worst.state.release()
         self.stats.record_pool(evictions=1)
+        self._fire_hard_evict(worst.key)
         return True
+
+    def _fire_hard_evict(self, key: Hashable) -> None:
+        """Notify ``on_hard_evict`` iff no host copy survives: a
+        demoted segment is still promotable under the same key, so a
+        content index pointing at it stays valid — only a true drop
+        must invalidate."""
+        if self.on_hard_evict is None:
+            return
+        if self.tier is not None and self.tier.peek(key) is not None:
+            return
+        self.on_hard_evict(key)
 
     def _key_of_state(self, st: PrefixState) -> Optional[Hashable]:
         for k, e in self._entries.items():
@@ -427,6 +447,7 @@ class PrefixPool:
             return False
         del self._entries[key]
         e.state.release()
+        self._fire_hard_evict(key)   # no-op when the tier holds a copy
         return True
 
     # ------------------------------------------------------------------

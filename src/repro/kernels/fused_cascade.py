@@ -380,6 +380,105 @@ def _fused_prefill_kernel(ppt_ref, spt_ref, poff_ref, pskip_ref, *refs,
         o_ref[0, 0] = acc_ref[...] / safe[:, None]
 
 
+def _drift_probe_kernel(qpos_ref, kpos_ref, q_ref, k_ref, o_ref,
+                        m_ref, l_ref, *, nkb: int, scale: float):
+    """Two-phase in-kernel drift-score accumulation (DESIGN.md §15),
+    grid (Hkv, 2 * nkb).  Phase A (j < nkb) streams the key blocks once
+    and folds them into the per-query online-softmax (m, l) VMEM
+    scratch — the same accumulator discipline as the fused cascade.
+    Phase B (j >= nkb) revisits each block (its tile re-DMA'd by the
+    clamped index map) and emits the per-key probability mass
+    ``sum_rows(exp(s - m) / l)`` now that the FULL normalizer is known.
+    The phase-A visit writes zeros to the output block so every HBM
+    flush is deterministic; the phase-B overwrite is the final value.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # [rows, d]
+    qp = qpos_ref[0]                                       # [rows]
+    k = k_ref[0].astype(jnp.float32)                       # [bk, d]
+    kp = kpos_ref[0]                                       # [bk]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = (kp[None, :] >= 0) & (qp[:, None] >= 0) \
+        & (kp[None, :] <= qp[:, None])
+
+    @pl.when(j < nkb)
+    def _scan():
+        s_m = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s_m, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[:, 0] = jnp.exp(m_prev - m_new) * l_ref[:, 0] \
+            + jnp.sum(p, axis=-1)
+        m_ref[:, 0] = m_new
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    @pl.when(j >= nkb)
+    def _emit():
+        p = jnp.where(mask, jnp.exp(s - m_ref[:, 0][:, None]), 0.0)
+        l = l_ref[:, 0]
+        p = p / jnp.where(l > 0, l, 1.0)[:, None]
+        o_ref[0] = jnp.sum(p, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def drift_probe(q, k, q_pos, k_pos, *, block_k: int = 128,
+                interpret: bool = True):
+    """Per-key causal attention mass from probe queries — the Pallas
+    companion of ``kernels.ref.drift_mass_ref`` (DESIGN.md §15).
+
+    q: [Hq, Tq, D] probe queries (pre-rotated at their positions);
+    k: [Hkv, S, D] composed keys (pre-rotated); q_pos: [Tq];
+    k_pos: [S] (-1 = padding).  Returns [S] float32: softmax mass each
+    key draws from the probe set, summed over heads and queries.  The
+    score pass runs in-kernel with the online-softmax scratch
+    discipline of the fused cascade (two-phase: normalize, then emit) —
+    gated allclose against the oracle, not bitwise (the two-phase
+    normalizer rounds differently than the dense softmax)."""
+    hq, tq, d = q.shape
+    hkv, s_len = k.shape[0], k.shape[1]
+    g = hq // hkv
+    assert g * hkv == hq, (hq, hkv)
+    bk = min(block_k, max(1, s_len))
+    s_pad = ((s_len + bk - 1) // bk) * bk
+    if s_pad != s_len:
+        k = jnp.pad(k, ((0, 0), (0, s_pad - s_len), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, s_pad - s_len), constant_values=-1)
+    nkb = s_pad // bk
+    rows = g * tq
+    qr = q.reshape(hkv, g, tq, d).reshape(hkv, rows, d)
+    qp = jnp.tile(q_pos.astype(jnp.int32), g).reshape(1, rows)
+    kp = k_pos.astype(jnp.int32).reshape(1, s_pad)
+
+    def jk(j):
+        return jnp.where(j < nkb, j, j - nkb)
+
+    [out] = pl.pallas_call(
+        functools.partial(_drift_probe_kernel, nkb=nkb, scale=d ** -0.5),
+        grid=(hkv, 2 * nkb),
+        in_specs=[
+            pl.BlockSpec((1, rows), lambda h, j: (0, 0)),
+            pl.BlockSpec((1, bk), lambda h, j: (0, jk(j))),
+            pl.BlockSpec((1, rows, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j: (h, jk(j), 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, bk), lambda h, j: (h, jk(j)))],
+        out_shape=[jax.ShapeDtypeStruct((hkv, s_pad), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, qr, k)
+    return jnp.sum(out, axis=0)[:s_len]
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "interpret", "rope_theta",
                                              "prefix_causal"))

@@ -173,6 +173,39 @@ def fold_partials_ref(partials):
     return o, m, l
 
 
+def drift_mass_ref(q, k, q_pos, k_pos):
+    """Per-key causal attention-mass oracle for drift scoring
+    (DESIGN.md §15).
+
+    q: [Hq, Tq, D] probe queries (the composed prompt's FRESH tokens —
+    gap spans + the member suffix — already RoPE-rotated at their
+    absolute positions); k: [Hkv, S, D] the full composed key set,
+    rotated at ``k_pos``; q_pos: [Tq]; k_pos: [S] (-1 = padding).
+
+    Returns [S] float32: the total softmax probability mass the probe
+    queries place on each key under the causal mask, summed over heads
+    and queries.  Keys of a spliced segment that draw heavy mass from
+    the fresh context are the ones whose own KV the frozen cache most
+    misrepresents — their blocks are what ``recompute_budget`` should
+    spend itself on.  Padding query rows (q_pos == -1) and padding keys
+    contribute exactly zero.
+    """
+    hq, tq, d = q.shape
+    hkv = k.shape[0]
+    g = hq // hkv
+    qg = q.reshape(hkv, g, tq, d).astype(jnp.float32)
+    scores = jnp.einsum("hgtd,hsd->hgts", qg, k.astype(jnp.float32))
+    scores = scores * (d ** -0.5)
+    mask = (k_pos[None, :] >= 0) & (q_pos[:, None] >= 0) \
+        & (k_pos[None, :] <= q_pos[:, None])             # [Tq, S]
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)          # [Hkv,G,Tq,1]
+    p = jnp.where(mask[None, None], jnp.exp(scores - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l > 0, l, 1.0)
+    return jnp.sum(p, axis=(0, 1, 2))                    # [S]
+
+
 def dequantize_paged_ref(x, scale):
     """Dequantize a head-major int8 paged arena [NB, Hkv, bs, D] with
     per-(block, kv-head) f32 scales [NB, Hkv]."""

@@ -33,7 +33,7 @@ from repro.rag.retriever import (GRAGRetriever, GRetrieverRetriever,
                                  RetrieverIndex)
 from repro.rag.text_encoder import TextEncoder
 from repro.serving.engine import ServingEngine
-from repro.serving.metrics import tier_report, tree_report
+from repro.serving.metrics import compose_report, tier_report, tree_report
 from repro.training import checkpoint as ckpt
 from repro.training import optimizer as opt
 from repro.training.train_loop import train as run_train
@@ -118,6 +118,8 @@ def serving_report(pipe: GraphRAGPipeline, router=None) -> dict:
         "tree": tree_report(st),
         # host tier (DESIGN.md §12; all-zero when no tier is attached)
         "tier": tier_report(st),
+        # segment composition + drift recompute (DESIGN.md §14/§15)
+        "compose": compose_report(st),
     }
     if router is not None:
         from repro.serving.metrics import router_report

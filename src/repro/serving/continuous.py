@@ -409,6 +409,15 @@ class ContinuousEngine:
                 pool.decref(flat, suffix=True)
             raise
 
+        # gap-span capture (DESIGN.md §15): the fresh KV sits in the
+        # slots' sub-arena bands, which persist for the rows' lifetime —
+        # but capture NOW, before decode overwrites nothing (gaps are
+        # pre-prompt) and so repeat arrivals in the very next drain tick
+        # already hit
+        if eng.gap_admit is not None:
+            eng._capture_gaps(requests, plans,
+                              [b.slot_rows(s) for s in slots], src=b.sub)
+
         for j, (slot, req, p) in enumerate(zip(slots, requests, plans)):
             if req.composition is not None:
                 eng.cache_mgr.stats.record_compose(req.composition)

@@ -56,10 +56,14 @@ import numpy as np
 
 from repro.core.cache import (ClusterCacheManager, PrefixState,
                               SegmentComposition)
-from repro.core.paged import NULL_BLOCK, KVBlockPool, PageTable
+from repro.core.paged import (NULL_BLOCK, KVBlockPool, OutOfBlocks,
+                              PageTable)
 from repro.data.tokenizer import EOS, PAD, Tokenizer
+from repro.kernels.fused_cascade import drift_probe
+from repro.kernels.ref import drift_mass_ref
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, linear, rms_norm
 from repro.serving.bucketing import (blocks_for, bucket_capacity, bucket_len,
                                      bucket_pow2)
 
@@ -173,6 +177,14 @@ class ServingEngine:
         else:
             self.block_pool = None
         self.quantize_prefix = bool(quantize_prefix) and self.use_paged
+        # gap-span capture (DESIGN.md §15): after a composed serve, gap
+        # spans at least ``gap_min_tokens`` long are repacked from the
+        # suffix rows into content-addressed prefix blocks and offered
+        # to ``gap_admit(tokens, state) -> bool`` (installed by the
+        # scheduler; False = caller declined ownership, the state is
+        # released here).  None disables capture entirely.
+        self.gap_admit = None
+        self.gap_min_tokens = block_size
 
     def clone(self) -> "ServingEngine":
         """A fresh engine over the SAME params/config/tokenizer with a
@@ -765,6 +777,137 @@ class ServingEngine:
                     pos=list(range(plen, plen + len(sfx))), slot_off=plen,
                     prompt_len=plen + len(sfx))
 
+    # ------------------------------------------------------------------
+    # drift scoring (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def _layer0_params(self):
+        """Layer-0 parameters (ln1 + attention mixer) regardless of the
+        stacked/unrolled parameter layout — the drift probe reads them
+        to build exact layer-0 Q/K from token ids alone."""
+        dec = self.params["dec"]
+        if dec.get("groups"):
+            return jax.tree.map(lambda x: x[0], dec["groups"]["0"])
+        return dec["rest"][0]
+
+    def drift_scores(self, comp: SegmentComposition,
+                     probe_tokens: Sequence[int] = ()
+                     ) -> List[List[float]]:
+        """Per-segment per-block drift scores for a composition plan
+        (the ``scorer`` argument of ``plan_composition``; DESIGN.md
+        §15).
+
+        The score of a composed key is the causal attention mass the
+        plan's FRESH tokens (gap spans + the probe suffix — the query
+        text) direct at it under layer-0 attention, weighted by the
+        key's STALENESS prior.  Layer-0 Q/K are context-independent
+        (embed → rms_norm → projection → RoPE), so the full composed
+        key set is computable densely from token ids alone — no arena
+        reads, exact even when cached blocks are int8.
+
+        The staleness prior captures what the probe alone cannot: a
+        spliced token's V is wrong in proportion to the attention its
+        ORIGINAL prefill paid into the left context the splice
+        replaced.  Token ``j`` of a segment prefilled behind
+        ``base_pos`` tokens of old context had an attention window of
+        ``base_pos + j + 1`` keys, ``base_pos`` of which are now gone —
+        so its expected-staleness weight is
+        ``base_pos / (base_pos + j + 1)``, largest at the splice's
+        leading edge and decaying as intra-segment context dominates.
+        The product (fresh attention INTO the key) x (how wrong the
+        key's V is) is the expected contribution of that key to output
+        error; the recompute budget is spent there.  Dispatch follows
+        ``cfg.attention_impl``: the Pallas two-phase score kernel, or
+        the dense oracle (``kernels/ref.py``)."""
+        bs = self.block_size
+        nb = lambda s: (len(s.tokens) + bs - 1) // bs
+        toks = np.zeros(comp.total_len, np.int64)
+        for s in comp.segments:
+            toks[s.target_offset:s.target_offset + len(s.tokens)] = s.tokens
+        for off, g in comp.gaps:
+            toks[off:off + len(g)] = g
+        probe = list(probe_tokens)
+        full = (np.concatenate([toks, np.asarray(probe, np.int64)])
+                if probe else toks)
+        q_idx = [off + i for off, g in comp.gaps for i in range(len(g))]
+        q_idx += list(range(comp.total_len, comp.total_len + len(probe)))
+        q_idx.sort()
+        if not q_idx:
+            return [[0.0] * nb(s) for s in comp.segments]
+        cfg = self.cfg
+        p0 = self._layer0_params()
+        mx = p0["mixer"]
+        hd = cfg.head_dim_
+        length = int(full.shape[0])
+        h = M.embed_tokens(self.params, jnp.asarray(full, jnp.int32)[None])
+        h = rms_norm(h, p0["ln1"], cfg.norm_eps)
+        k = linear(h, mx["wk"])
+        if "bk" in mx:
+            k = k + mx["bk"]
+        kpos = jnp.arange(length, dtype=jnp.int32)
+        k = k.reshape(1, length, cfg.num_kv_heads, hd)
+        k = apply_rope(k, kpos[None, :, None], cfg.rope_theta)
+        k = k.transpose(0, 2, 1, 3)[0]               # [Hkv, L, hd]
+        qi = jnp.asarray(q_idx, jnp.int32)
+        hq = jnp.take(h, qi, axis=1)
+        q = linear(hq, mx["wq"])
+        if "bq" in mx:
+            q = q + mx["bq"]
+        q = q.reshape(1, len(q_idx), cfg.num_heads, hd).transpose(0, 2, 1, 3)
+        q = apply_rope(q, qi[None, None, :], cfg.rope_theta)[0]  # [Hq,Tq,hd]
+        if cfg.attention_impl == "pallas":
+            mass = drift_probe(q, k, qi, kpos, block_k=bs)
+        else:
+            mass = drift_mass_ref(q, k, qi, kpos)
+        mass = np.asarray(jax.block_until_ready(mass))
+        out = []
+        for s in comp.segments:
+            seg = mass[s.target_offset:s.target_offset + len(s.tokens)]
+            j = np.arange(len(s.tokens), dtype=np.float64)
+            stale = s.state.base_pos / (s.state.base_pos + j + 1.0)
+            seg = seg * stale
+            out.append([float(seg[b * bs:(b + 1) * bs].sum())
+                        for b in range(nb(s))])
+        return out
+
+    def _capture_gaps(self, requests: Sequence[Request],
+                      plans: Sequence[dict], suffix_rows,
+                      src=None) -> None:
+        """Register freshly prefilled composition gap spans as
+        content-addressed prefix segments (DESIGN.md §15): each
+        ``gap_parts`` sub-span at least ``gap_min_tokens`` long is
+        repacked from the row's suffix blocks into new prefix blocks
+        (``KVBlockPool.cache_span``) and offered to ``gap_admit``.
+        Runs while the suffix blocks are still live — before the
+        serve's ``finally`` frees them.  ``src`` overrides the arena
+        the spans are gathered from (the continuous path's sub-arena,
+        where ``suffix_rows`` are then slot-row indices).  Capture is
+        opportunistic: an arena shortage skips the span, never fails
+        the serve."""
+        pool = self.block_pool
+        for i, (r, p) in enumerate(zip(requests, plans)):
+            comp = r.composition
+            if comp is None or not comp.gap_parts:
+                continue
+            for off, gtoks in comp.gap_parts:
+                if len(gtoks) < self.gap_min_tokens:
+                    continue
+                start = off - p["slot_off"]
+                assert start >= 0, (off, p["slot_off"])
+                try:
+                    bids = pool.cache_span(suffix_rows[i], start,
+                                           len(gtoks), src=src)
+                except OutOfBlocks:
+                    continue
+                state = PrefixState(
+                    cache=None, prefix_len=off + len(gtoks),
+                    capacity=self._prefix_capacity_for(off + len(gtoks)),
+                    page=PageTable(blocks=bids, length=len(gtoks)),
+                    block_pool=pool, seg_len=len(gtoks))
+                if self.gap_admit(tuple(gtoks), state):
+                    self.cache_mgr.stats.record_gap_cached(len(gtoks))
+                else:
+                    state.release()          # duplicate / declined
+
     def _serve_composed(self, requests: Sequence[Request]
                         ) -> Tuple[List[List[int]], dict]:
         """Serve a batch containing composition plans (DESIGN.md §14).
@@ -853,6 +996,8 @@ class ServingEngine:
                 gen = (row.index(EOS) + 1 if EOS in row else len(row))
                 pool.note_tokens(suffix_rows[i], int(lens[i]) + gen,
                                  suffix=True)
+            if self.gap_admit is not None:
+                self._capture_gaps(requests, plans, suffix_rows)
             self.cache_mgr.stats.record_blocks(pool)
         finally:
             if flat is not None:

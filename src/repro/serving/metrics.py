@@ -129,6 +129,7 @@ def trace_summary(records: List[QueryRecord], stats=None) -> dict:
                                        + stats.suffix_tokens_computed)
         out["tree"] = tree_report(stats)
         out["tier"] = tier_report(stats)
+        out["compose"] = compose_report(stats)
     if any(r.replica for r in records):
         out["replicas"] = {
             str(i): {
@@ -239,6 +240,30 @@ def tier_report(stats) -> dict:
         "host_segments": stats.host_segments,
         "host_bytes_in_use": stats.host_bytes_in_use,
         "host_bytes_peak": stats.host_bytes_peak,
+    }
+
+
+def compose_report(stats) -> dict:
+    """Segment-composition accounting from a ``CacheStats`` window
+    (DESIGN.md §14/§15; all-zero when composition never engaged).  The
+    drift gauges make the selective-recompute claim auditable: how many
+    splices carried a drift mask, how many tokens their masks re-
+    prefilled, and the summed attention-drift score those tokens
+    covered.  ``declines`` counts engages the admission cost model
+    refused (served through the chain instead); ``gap_spans_cached`` /
+    ``gap_tokens_cached`` are the composition gap prefills captured
+    into content-addressed blocks for repeat traffic."""
+    return {
+        "requests": stats.compose_requests,
+        "segments_spliced": stats.compose_segments,
+        "spliced_tokens": stats.compose_spliced_tokens,
+        "recomputed_tokens": stats.compose_recomputed_tokens,
+        "drift_splices": stats.compose_drift_splices,
+        "drift_recomputed_tokens": stats.compose_drift_tokens,
+        "drift_score_covered": round(stats.compose_drift_score, 4),
+        "declines": stats.compose_declines,
+        "gap_spans_cached": stats.gap_spans_cached,
+        "gap_tokens_cached": stats.gap_tokens_cached,
     }
 
 

@@ -82,6 +82,86 @@ class Route:
     assignment: Assignment
 
 
+class SharedSegmentIndex:
+    """Cross-replica content-addressed segment directory (DESIGN.md
+    §15).  Each replica's scheduler publishes ``content tuple -> (that
+    scheduler, its pool key)`` as segments are prefilled or captured;
+    a ``try_compose`` registry miss on one replica can then FETCH the
+    segment from wherever it lives, over the SAME host round-trip the
+    router's migration uses (targeted demote on the source, a
+    ``HostSegment`` handoff between host tiers, lazy promote on the
+    destination) — never a device-to-device path.  A fetch that cannot
+    land (pinned source, full tier, stale linkage) degrades to an
+    ordinary miss; correctness never depends on the move."""
+
+    def __init__(self) -> None:
+        # content tuple -> list of (scheduler, pool_key) publications
+        self._where: Dict[tuple, list] = {}
+        self.fetches = 0          # segments moved cross-replica
+        self.fetch_failures = 0   # foreign candidates that refused
+
+    def __len__(self) -> int:
+        return len(self._where)
+
+    def publish(self, content: tuple, scheduler, pool_key) -> None:
+        entries = self._where.setdefault(content, [])
+        for i, (s, _) in enumerate(entries):
+            if s is scheduler:
+                entries[i] = (scheduler, pool_key)
+                return
+        entries.append((scheduler, pool_key))
+
+    def retract(self, content: tuple, scheduler) -> None:
+        entries = self._where.get(content)
+        if not entries:
+            return
+        entries[:] = [(s, k) for s, k in entries if s is not scheduler]
+        if not entries:
+            del self._where[content]
+
+    def fetch(self, content: tuple, dst) -> Optional[Hashable]:
+        """Move ``content``'s segment from some OTHER replica into
+        ``dst``'s host tier; returns the pool key it now lives under
+        (``dst``'s registry learns the mapping, promotion onboards it
+        on the caller's next lookup) or None."""
+        tried = False
+        for src, key in list(self._where.get(content, ())):
+            if src is dst or dst.pool.tier is None:
+                continue
+            tried = True
+            hseg = self._extract(src, key)
+            if hseg is None:
+                continue
+            if not dst.pool.tier.admit(hseg):
+                # nowhere to land: hand the bits back to the source
+                # tier so the segment is not lost to a full admit
+                if src.pool.tier is not None:
+                    src.pool.tier.admit(hseg)
+                continue
+            # the source no longer holds the segment under that key —
+            # its registry (and our publication for it) must forget it
+            src._invalidate_key(key)
+            dst._register_segment(content, key)
+            self.fetches += 1
+            return key
+        if tried:
+            self.fetch_failures += 1
+        return None
+
+    @staticmethod
+    def _extract(src, key):
+        """Pull one segment out of ``src`` as a ``HostSegment``: straight
+        from its host tier when already demoted, else a targeted
+        ``demote_to_host`` (refuses when pinned or anchoring resident
+        descendants — the same rules migration obeys)."""
+        pool = src.pool
+        if pool.tier is None:
+            return None
+        if pool.tier.peek(key) is None and not pool.demote_to_host(key):
+            return None
+        return pool.tier.pop(key)
+
+
 class ReplicaRouter:
     """Cluster-affinity front-end over ``replicas`` serving stacks.
 
@@ -105,6 +185,7 @@ class ReplicaRouter:
         self.pending: Dict[Hashable, int] = {}     # cluster backlog
         self.cluster_routed: Dict[Hashable, int] = {}  # traffic per run
         self.migrations = 0
+        self.shared_index: Optional[SharedSegmentIndex] = None
         self._spawn_rr = 0                         # tie-break cursor
         self._migrated: set = set()                # one move per cluster
                                                    # per run (no ping-pong)
@@ -140,8 +221,15 @@ class ReplicaRouter:
                                     segment_tokens_fn=segment_tokens_fn)
             sched.pool.attach_host_tier(HostTier(tier_bytes))
             replicas.append(Replica(idx=i, engine=eng, scheduler=sched))
-        return cls(replicas, assigner, hot_ratio=hot_ratio,
-                   min_gap=min_gap)
+        router = cls(replicas, assigner, hot_ratio=hot_ratio,
+                     min_gap=min_gap)
+        # one shared content index across the fleet (DESIGN.md §15):
+        # composition lookups resolve segments any replica prefilled
+        index = SharedSegmentIndex()
+        for r in replicas:
+            r.scheduler.shared_index = index
+        router.shared_index = index
+        return router
 
     # ------------------------------------------------------------------
     # routing
@@ -255,6 +343,9 @@ class ReplicaRouter:
             hseg = s.scheduler.pool.tier.pop(key)
             if hseg is not None and d.scheduler.pool.tier.admit(hseg):
                 moved += 1
+                # the key left the source stack entirely: retract its
+                # content-registry entries (and index publications)
+                s.scheduler._invalidate_key(key)
         s.stats.record_migration(out=moved)
         d.stats.record_migration(into=moved)
         self.placement[cluster_id] = dst

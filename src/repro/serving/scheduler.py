@@ -318,12 +318,75 @@ class OnlineScheduler:
         # other cluster prefilled at a different base position
         self.compose_frac: Optional[float] = None
         self._seg_registry: dict = {}
+        # drift-scored recomputation (DESIGN.md §15): when set, spliced
+        # segments re-prefill their top-``compose_budget`` drift-scored
+        # token blocks instead of the fixed ``compose_frac`` leading
+        # window (the frac still covers segments when the budget is off)
+        self.compose_budget: Optional[int] = None
+        # composed admission policy: "greedy" engages every re-based
+        # splice (historical behavior); "cost" additionally weighs the
+        # per-arrival fresh-token bill against the chain's one-time
+        # prefill using observed repeat rates (DESIGN.md §15)
+        self.compose_admission: str = "greedy"
+        # reverse of _seg_registry: pool key -> content tuples mapped to
+        # it, so a hard eviction can retract exactly its own entries
+        self._key_contents: dict = {}
+        # cross-replica content index (DESIGN.md §15): installed by
+        # ``ReplicaRouter.build``; None = per-replica registry only
+        self.shared_index = None
         # pool accounting flows into the engine's serving stats window
         self.pool.stats = engine.cache_mgr.stats
+        self.pool.on_hard_evict = self._invalidate_key
         # paged backend: block-allocator pressure evicts cold pooled
-        # prefixes (admission and HBM budget are one mechanism)
+        # prefixes (admission and HBM budget are one mechanism); the
+        # engine hands captured gap spans to this scheduler's registry
         if getattr(engine, "block_pool", None) is not None:
             self.pool.attach_block_pool(engine.block_pool)
+            engine.gap_admit = self.gap_admit
+
+    # ------------------------------------------------------------------
+    # content-addressed segment registry (DESIGN.md §14/§15)
+    # ------------------------------------------------------------------
+    def _register_segment(self, content: tuple, pool_key) -> None:
+        """Map segment token CONTENT to the pool key holding its KV,
+        maintain the reverse map hard-eviction invalidation walks, and
+        publish to the cross-replica index when one is installed."""
+        self._seg_registry[content] = pool_key
+        self._key_contents.setdefault(pool_key, set()).add(content)
+        if self.shared_index is not None:
+            self.shared_index.publish(content, self, pool_key)
+
+    def _invalidate_key(self, pool_key) -> None:
+        """``PrefixPool.on_hard_evict`` hook: the entry under
+        ``pool_key`` is gone with no host copy, so every content tuple
+        resolving to it must be forgotten — a dangling registry entry
+        would send ``try_compose`` to a key whose blocks were recycled
+        (the bug this hook exists to prevent; see
+        tests/test_composition.py regression)."""
+        for content in self._key_contents.pop(pool_key, ()):
+            if self._seg_registry.get(content) == pool_key:
+                del self._seg_registry[content]
+            if self.shared_index is not None:
+                self.shared_index.retract(content, self)
+
+    def gap_admit(self, tokens: tuple, state) -> bool:
+        """Engine callback (DESIGN.md §15): adopt one captured
+        composition gap span as a content-addressed pool entry so
+        repeat traffic over the same content splices it instead of
+        re-prefilling it.  Returns False — caller releases the state —
+        when the content is already resolvable through the registry (a
+        duplicate capture would spend blocks on bits we have)."""
+        content = tuple(tokens)
+        old = self._seg_registry.get(content)
+        if old is not None and (
+                self.pool.peek(old) is not None
+                or (self.pool.tier is not None
+                    and self.pool.tier.peek(old) is not None)):
+            return False
+        key = ("gap", content)
+        self.pool.put(key, state)
+        self._register_segment(content, key)
+        return True
 
     # ------------------------------------------------------------------
     def ensure_state(self, cluster_id: int, pin: bool = False):
@@ -355,7 +418,7 @@ class OnlineScheduler:
         state, dt = self.engine.prefill_prefix(toks, soft)
         self.pool.put(cluster_id, state, prefill_s=dt, pin=pin)
         if soft is None:
-            self._seg_registry[tuple(toks)] = cluster_id
+            self._register_segment(tuple(toks), cluster_id)
         return state, False, dt
 
     def ensure_chain(self, cluster_id: int, pin: bool = False):
@@ -408,7 +471,7 @@ class OnlineScheduler:
                             parent, toks)
                     self.pool.put(key, st, prefill_s=dt, pin=pin)
                     if soft is None:
-                        self._seg_registry[tuple(toks)] = key
+                        self._register_segment(tuple(toks), key)
                     prefill_s += dt
                 stats.record_tree_segment(i, st.segment_len, hit=hit,
                                           leaf=(i == n - 1))
@@ -428,7 +491,8 @@ class OnlineScheduler:
     # ------------------------------------------------------------------
     # segment composition admission (DESIGN.md §14)
     # ------------------------------------------------------------------
-    def try_compose(self, cluster_id: int, pin: bool = True
+    def try_compose(self, cluster_id: int, pin: bool = True,
+                    probe_tokens: Sequence[int] = ()
                     ) -> Optional[Tuple[SegmentComposition, List[Any]]]:
         """Plan a ``SegmentComposition`` for this cluster from
         pool-resident segments; ``(comp, pinned_pool_keys)`` or None.
@@ -437,11 +501,17 @@ class OnlineScheduler:
         cannot: at least one RE-BASED splice — a resident segment whose
         cached base position differs from its offset in this cluster's
         prompt (cached under another cluster's chain, found through the
-        content registry).  Everything else — full own-chain residency,
-        cold paths, exact-offset-only hits — returns None and falls
-        back to ``ensure_chain``, which serves it equally well AND
-        caches the cold remainder for later (a composition's gap spans
-        are recomputed per serve, never cached).  Returned pins follow
+        content registry — or through the cross-replica shared index,
+        which migrates the segment here over the host-tier transport).
+        Everything else — full own-chain residency, cold paths,
+        exact-offset-only hits — returns None and falls back to
+        ``ensure_chain``, which serves it equally well AND caches the
+        cold remainder for later.  With ``compose_budget`` set, spliced
+        segments carry drift-scored recompute masks (DESIGN.md §15)
+        scored against the plan's gap tokens plus ``probe_tokens`` (the
+        arriving query's suffix).  ``compose_admission == "cost"`` may
+        additionally DECLINE a viable engage when observed repeat
+        traffic makes the chain path cheaper.  Returned pins follow
         ``serve_batch``'s contract: caller releases every key."""
         if self.compose_frac is None or self.segment_tokens_fn is None:
             return None
@@ -461,6 +531,12 @@ class OnlineScheduler:
 
         def lookup(key):
             pool_key = self._seg_registry.get(key)
+            if pool_key is None and self.shared_index is not None:
+                # another replica may hold this content: fetch moves it
+                # into OUR host tier over the migration transport and
+                # registers it locally; the promote path below then
+                # onboards it like any demoted segment (DESIGN.md §15)
+                pool_key = self.shared_index.fetch(key, self)
             if pool_key is None:
                 return None
             st = self.pool.get(pool_key, pin=pin)
@@ -485,15 +561,43 @@ class OnlineScheduler:
                 pinned.append(pool_key)
             return st
 
-        comp = plan_composition(seg_toks, lookup,
-                                recompute_frac=self.compose_frac)
+        scorer = None
+        if self.compose_budget is not None:
+            probe = tuple(probe_tokens)
+            scorer = lambda c: self.engine.drift_scores(c, probe)
+        comp = plan_composition(
+            seg_toks, lookup, recompute_frac=self.compose_frac,
+            recompute_budget=self.compose_budget, scorer=scorer,
+            block_size=getattr(self.engine, "block_size", 0) or 0)
         if comp is not None and any(
                 s.target_offset != s.state.base_pos for s in comp.segments):
-            return comp, pinned
+            if not self._compose_declined(cluster_id, comp):
+                return comp, pinned
+            self.engine.cache_mgr.stats.record_compose_decline()
         if pin:
             for key in pinned:
                 self.pool.release(key)
         return None
+
+    def _compose_declined(self, cluster_id: int,
+                          comp: SegmentComposition) -> bool:
+        """Composition-aware admission cost model (DESIGN.md §15).
+
+        The composed path pays its fresh tokens — gaps plus drift /
+        window recompute spans — on EVERY arrival of this cluster
+        (gap spans may get captured opportunistically, but the model
+        prices the guaranteed-cost worst case), while the chain path
+        pays the full prompt ONCE and serves repeats from the pool.
+        Under the doubling heuristic (``k`` arrivals seen ⇒ expect
+        ``~k`` more) the engage is declined when the repeat-weighted
+        fresh-token bill exceeds the one-shot chain prefill."""
+        if self.compose_admission != "cost":
+            return False
+        seen = self.engine.cache_mgr.stats.cluster_arrivals.get(
+            cluster_id, 0)
+        expected = max(1, seen)       # doubling heuristic
+        fresh = sum(len(t) for _, t in comp.fresh_spans())
+        return fresh * (1 + expected) > comp.total_len
 
     # ------------------------------------------------------------------
     # speculative host→device prefetch (DESIGN.md §12)
@@ -576,6 +680,11 @@ class OnlineScheduler:
         assigns = list(assignments) if assignments is not None else \
             [self.assigner.assign(e, sg)
              for e, sg in zip(embeddings, subgraphs)]
+        stats = self.engine.cache_mgr.stats
+        sfx_of: dict = {}       # cid -> first member's suffix (drift probe)
+        for a, s in zip(assigns, suffix_token_lists):
+            stats.record_arrival(a.cluster_id)
+            sfx_of.setdefault(a.cluster_id, list(s))
         order = sorted(set(a.cluster_id for a in assigns))
         states, hits, prefill_costs = {}, {}, {}
         comps: dict = {}                 # cid -> SegmentComposition
@@ -588,7 +697,8 @@ class OnlineScheduler:
             # claimed.  A cluster that can splice resident foreign
             # segments takes the composed path instead (DESIGN.md §14).
             for cid in order:
-                ct = self.try_compose(cid, pin=True)
+                ct = self.try_compose(cid, pin=True,
+                                      probe_tokens=sfx_of.get(cid, ()))
                 if ct is not None:
                     comps[cid], keys = ct
                     pinned.extend(keys)
@@ -659,6 +769,11 @@ class OnlineScheduler:
             [self.assigner.assign(e, sg)
              for e, sg in zip(embeddings, subgraphs)]
         order = sorted(set(a.cluster_id for a in assigns))
+        stats = self.engine.cache_mgr.stats
+        sfx_of: dict = {}       # cid -> first member's suffix (drift probe)
+        for a, s in zip(assigns, suffix_token_lists):
+            stats.record_arrival(a.cluster_id)
+            sfx_of.setdefault(a.cluster_id, list(s))
         members_of = {cid: sum(1 for a in assigns if a.cluster_id == cid)
                       for cid in order}
         states, hits, costs, paths = {}, {}, {}, {}
@@ -671,7 +786,8 @@ class OnlineScheduler:
                 # of its members is in flight (DESIGN.md §10).  Clusters
                 # that splice resident foreign segments pin those
                 # segments instead (DESIGN.md §14).
-                ct = self.try_compose(cid, pin=True)
+                ct = self.try_compose(cid, pin=True,
+                                      probe_tokens=sfx_of.get(cid, ()))
                 if ct is not None:
                     comps[cid], keys = ct
                 else:

@@ -682,3 +682,294 @@ def test_composition_validation():
     assert c.total_len == 3
     assert c.fresh_spans() == [(0, [1, 2, 3])]
     assert c.spliced_tokens() == 0
+
+
+# ----------------------------------------------------------------------
+# drift-scored selective recomputation (DESIGN.md §15)
+# ----------------------------------------------------------------------
+def _drift_composition(eng, leaf, seg_tokens, budget, probe):
+    """The chain's own segments at exact offsets, masks from the
+    engine's layer-0 drift probe at ``budget`` tokens per segment."""
+    segs, off = [], 0
+    for st, toks in zip(leaf.chain(), seg_tokens):
+        segs.append(ComposedSegment(state=st, target_offset=off,
+                                    tokens=tuple(toks)))
+        off += len(toks)
+    comp = SegmentComposition(segments=segs, gaps=[],
+                              block_size=eng.block_size)
+    comp.apply_drift(eng.drift_scores(comp, probe), budget)
+    return comp
+
+
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+def test_drift_budget_seg_len_identical_to_chain(tok, dtype, impl):
+    """Property (a): ``recompute_budget >= seg_len`` selects every
+    block, making the drift path the same executable plan as
+    ``recompute_frac=1.0`` — and both token-identical to the chain
+    serve — on the drain AND continuous paths, f32/XLA and bf16/Pallas."""
+    from repro.serving.continuous import ContinuousEngine
+    eng = _engine(tok, dtype=dtype, impl=impl, block_size=4)
+    segs = [tok.encode("a graph of nodes and edges", bos=True),
+            tok.encode("the quick brown fox jumps over the lazy dog"),
+            tok.encode("answers questions the lazy dog")]
+    leaf = _chain(eng, segs)
+    sfx = [tok.encode("answers questions"), tok.encode("lazy dog jumps")]
+    budget = max(len(s) for s in segs)
+    try:
+        want, _ = eng.serve([Request(s, leaf) for s in sfx], _record=False)
+        comp = _drift_composition(eng, leaf, segs, budget, sfx[0])
+        for s in comp.segments:     # budget >= seg_len: every block
+            nb = (len(s.tokens) + 3) // 4
+            assert s.recompute_blocks == tuple(range(nb))
+        got, t = eng.serve([Request(s, composition=comp) for s in sfx],
+                           _record=False)
+        assert t["composed"] and got == want, (dtype, impl)
+        frac1 = _chain_composition(leaf, segs, frac=1.0)
+        got1, _ = eng.serve([Request(s, composition=frac1) for s in sfx],
+                            _record=False)
+        assert got1 == want
+        cont = ContinuousEngine(eng, max_slots=4, chunk=2,
+                                max_suffix_len=64)
+        cont.admit([Request(s, composition=comp) for s in sfx],
+                   payloads=[0, 1])
+        cont.flush()
+        gotc = [None, None]
+        for r in cont.pop_retired():
+            gotc[r.payload] = r.tokens
+        assert gotc == want, (dtype, impl)
+    finally:
+        _release_chain(leaf)
+    assert eng.block_pool.blocks_in_use == 0
+
+
+@pytest.mark.parametrize("dtype,impl", [("float32", "xla"),
+                                        ("bfloat16", "pallas")])
+def test_drift_partial_budget_stats_reconcile(tok, dtype, impl):
+    """Property (c): with a partial budget the serve runs on both
+    paths and the drift gauges reconcile exactly against the masks —
+    ``compose_drift_tokens`` (block accounting incl. the ragged tail)
+    equals ``compose_recomputed_tokens``, one drift splice per spliced
+    segment, positive covered score."""
+    from repro.core.cache import masked_block_tokens
+    from repro.serving.continuous import ContinuousEngine
+    eng = _engine(tok, dtype=dtype, impl=impl, block_size=4)
+    segs = [tok.encode("a graph of nodes and edges", bos=True),
+            tok.encode("the quick brown fox jumps over the lazy dog")]
+    leaf = _chain(eng, segs)
+    sfx = tok.encode("answers questions")
+    comp = _drift_composition(eng, leaf, segs, 4, sfx)   # 1 block/segment
+    expect = sum(masked_block_tokens(len(s.tokens), s.recompute_blocks, 4)
+                 for s in comp.segments)
+    assert 0 < expect < sum(len(s) for s in segs)        # a real subset
+    try:
+        outs, t = eng.serve([Request(sfx, composition=comp)])
+        assert t["composed"] and len(outs) == 1
+        st = eng.cache_mgr.stats
+        assert st.compose_drift_splices == len(segs)
+        assert st.compose_drift_tokens == expect
+        assert st.compose_recomputed_tokens == expect
+        assert st.compose_spliced_tokens == \
+            sum(len(s) for s in segs) - expect
+        assert st.compose_drift_score > 0.0
+        cont = ContinuousEngine(eng, max_slots=2, chunk=2,
+                                max_suffix_len=64)
+        cont.admit([Request(sfx, composition=comp)], payloads=[0])
+        cont.flush()
+        assert len(cont.pop_retired()) == 1
+        assert st.compose_drift_tokens == 2 * expect     # both paths
+        assert st.compose_recomputed_tokens == 2 * expect
+    finally:
+        _release_chain(leaf)
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_drift_quantized_pool_budget_identity(tok):
+    """The frac=1.0 anchor holds over an int8 prefix arena too:
+    budget >= seg_len masks every cached (quantized) block, so the
+    composed serve equals the all-fresh serve bitwise."""
+    eng = _engine(tok, quantize_prefix=True, block_size=4)
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    shared = tok.encode("the quick brown fox jumps over the lazy dog")
+    sfx = tok.encode("lazy dog jumps")
+    leaf = _chain(eng, [a_root, shared])
+    try:
+        comp = _drift_composition(eng, leaf, [a_root, shared],
+                                  len(shared), sfx)
+        got, t = eng.serve([Request(sfx, composition=comp)], _record=False)
+        assert t["composed"]
+        want, _ = eng.serve([Request(a_root + shared + sfx)],
+                            _record=False)
+        assert got == want
+    finally:
+        _release_chain(leaf)
+    assert eng.block_pool.blocks_in_use == 0
+
+
+# ----------------------------------------------------------------------
+# gap-span caching + registry invalidation + admission (DESIGN.md §15)
+# ----------------------------------------------------------------------
+def test_gap_span_cached_and_respliced(tok):
+    """Satellite 1: the cold gap a composed serve prefills is captured
+    into content-addressed blocks; the SAME cluster's next arrival
+    splices the gap instead of recomputing it — token-identically —
+    and a duplicate capture is declined."""
+    from repro.serving.scheduler import Assignment
+    eng = _engine(tok, block_size=4)
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    shared = tok.encode("the quick brown fox jumps over the lazy dog")
+    b_root = tok.encode("answers questions over the dog", bos=True)
+    assert len(b_root) >= 4                  # above gap_min_tokens
+    sched = _stub_scheduler(eng, [[a_root, shared], [b_root, shared]])
+    sched.compose_frac = 1.0
+    emb, sgs = [np.zeros(4, np.float32)], [None]
+    sfx = [tok.encode("lazy dog jumps")]
+    stats = eng.cache_mgr.stats
+    sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=0, is_new=True, distance=0.0)])
+    assert stats.gap_spans_cached == 0       # chain path: no gaps
+    out1 = sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=1, is_new=False, distance=0.0)])
+    assert stats.compose_requests == 1
+    assert stats.compose_segments == 1       # only `shared` spliced
+    assert stats.gap_spans_cached == 1       # b_root captured
+    assert stats.gap_tokens_cached == len(b_root)
+    assert tuple(b_root) in sched._seg_registry
+    out2 = sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=1, is_new=False, distance=0.0)])
+    assert stats.compose_requests == 2
+    assert stats.compose_segments == 3       # b_root AND shared spliced
+    assert out2[0].tokens == out1[0].tokens  # gap splice is exact
+    assert stats.gap_spans_cached == 1       # no duplicate capture
+    sched.pool.clear()                       # hard-evict everything …
+    assert sched._seg_registry == {}         # … registry fully retracts
+    assert eng.block_pool.blocks_in_use == 0
+
+
+def test_hard_evicted_registry_entry_never_splices(tok):
+    """Satellite 3 regression: a segment hard-evicted from the pool (no
+    host tier) must drop out of the content registry via the
+    ``on_hard_evict`` hook — a later compose plan treats the content as
+    cold instead of dereferencing recycled blocks."""
+    from repro.serving.scheduler import Assignment
+    eng = _engine(tok, block_size=4)
+    a_root = tok.encode("a graph of nodes and edges", bos=True)
+    shared = tok.encode("the quick brown fox jumps over the lazy dog")
+    b_root = tok.encode("answers questions", bos=True)
+    sched = _stub_scheduler(eng, [[a_root, shared], [b_root, shared]])
+    sched.compose_frac = 1.0
+    emb, sgs = [np.zeros(4, np.float32)], [None]
+    sfx = [tok.encode("lazy dog jumps")]
+    sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=0, is_new=True, distance=0.0)])
+    assert tuple(shared) in sched._seg_registry
+    # hard-evict the shared segment (leaf first: it is unanchored)
+    assert sched.pool._evict_entry(sched.pool.entry(("seg", "c0s1")))
+    assert tuple(shared) not in sched._seg_registry
+    # composition finds nothing spliceable -> chain path, correct serve
+    assert sched.try_compose(1) is None
+    out_b = sched.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=1, is_new=False, distance=0.0)])
+    assert eng.cache_mgr.stats.compose_requests == 0
+    eng2 = _engine(tok)
+    leaf = _chain(eng2, [b_root, shared])
+    want, _ = eng2.serve([Request(sfx[0], leaf)], _record=False)
+    _release_chain(leaf)
+    assert out_b[0].tokens == want[0]
+
+
+def test_admission_cost_model_declines_repeat_heavy(tok):
+    """Satellite: composition-aware admission.  On a repeat-heavy trace
+    the "cost" policy declines the engage (chain prefills once, repeats
+    are pool hits) and ends with FEWER total prefill tokens than the
+    greedy policy, which pays gap + recompute on every arrival."""
+    from repro.serving.scheduler import Assignment
+    a_root, shared, b_root, sfx = None, None, None, None
+
+    def run(policy):
+        nonlocal a_root, shared, b_root, sfx
+        eng = _engine(tok, block_size=4)
+        a_root = tok.encode("a graph of nodes and edges", bos=True)
+        shared = tok.encode("the quick brown fox jumps over the lazy dog")
+        b_root = tok.encode("answers questions", bos=True)
+        sfx = [tok.encode("lazy dog")]
+        sched = _stub_scheduler(eng, [[a_root, shared], [b_root, shared]])
+        sched.compose_frac = 1.0          # every engage recomputes all
+        sched.compose_admission = policy
+        # gap capture off: isolate the admission decision itself
+        eng.gap_admit = None
+        emb, sgs = [np.zeros(4, np.float32)], [None]
+        st = eng.cache_mgr.stats
+        total = 0
+
+        def serve(cid, is_new):
+            # bench-style accounting: chain prefills land in
+            # prefix_tokens_computed; a composed row computes its
+            # prefix_len minus whatever it spliced from cache
+            nonlocal total
+            p0, s0, c0 = (st.prefix_tokens_computed,
+                          st.compose_spliced_tokens, st.compose_requests)
+            q = sched.serve_batch(emb, sgs, sfx, assignments=[
+                Assignment(cluster_id=cid, is_new=is_new,
+                           distance=0.0)])[0]
+            t = (st.prefix_tokens_computed - p0) + len(sfx[0])
+            if st.compose_requests > c0:
+                t += q.prefix_len - (st.compose_spliced_tokens - s0)
+            total += t
+            return q.tokens
+
+        serve(0, True)
+        outs = [serve(1, False)
+                for _ in range(4)]        # repeat-heavy: B over and over
+        return outs, st, total
+
+    outs_g, st_g, toks_greedy = run("greedy")
+    outs_c, st_c, toks_cost = run("cost")
+    assert outs_g == outs_c               # policy changes cost, not tokens
+    assert st_g.compose_declines == 0 and st_g.compose_requests == 4
+    assert st_c.compose_declines >= 1     # at least one refused engage
+    assert st_c.compose_requests < 4
+    assert toks_cost < toks_greedy        # the decline paid off
+
+
+def test_shared_index_cross_replica_splice(tok):
+    """Satellite 2: a registry miss on one replica fetches the segment
+    another replica holds through the shared content index + host-tier
+    transport, promotes it locally, and the composed serve is
+    token-identical to a fresh local chain."""
+    from repro.core.tiered import HostTier
+    from repro.serving.router import SharedSegmentIndex
+    from repro.serving.scheduler import Assignment
+    shared = tok.encode("the quick brown fox jumps over the lazy dog",
+                        bos=True)
+    b_root = tok.encode("answers questions", bos=True)
+    sfx = [tok.encode("lazy dog jumps")]
+    emb, sgs = [np.zeros(4, np.float32)], [None]
+    eng0, eng1 = _engine(tok, block_size=4), _engine(tok, block_size=4)
+    s0 = _stub_scheduler(eng0, [[shared]])
+    s1 = _stub_scheduler(eng1, [[shared], [b_root, shared]])
+    for s in (s0, s1):
+        s.compose_frac = 1.0
+        s.pool.attach_host_tier(HostTier(1 << 28))
+    idx = SharedSegmentIndex()
+    s0.shared_index = idx
+    s1.shared_index = idx
+    # replica 0 prefills `shared` (a root segment) and publishes it
+    s0.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=0, is_new=True, distance=0.0)])
+    assert tuple(shared) not in s1._seg_registry
+    # replica 1 composes cluster 1: local miss -> cross-replica fetch
+    out = s1.serve_batch(emb, sgs, sfx, assignments=[
+        Assignment(cluster_id=1, is_new=False, distance=0.0)])
+    assert idx.fetches == 1
+    assert eng1.cache_mgr.stats.compose_requests == 1
+    assert eng1.cache_mgr.stats.tier_promotions == 1
+    # move semantics: the source no longer resolves the content
+    assert tuple(shared) not in s0._seg_registry
+    assert s1._seg_registry[tuple(shared)] == ("seg", "c0s0")
+    # token-identical to a fresh local chain of the same prompt
+    eng2 = _engine(tok)
+    leaf = _chain(eng2, [b_root, shared])
+    want, _ = eng2.serve([Request(sfx[0], leaf)], _record=False)
+    _release_chain(leaf)
+    assert out[0].tokens == want[0]

@@ -1,0 +1,115 @@
+"""Drift-probe kernel vs oracle (DESIGN.md §15).
+
+``drift_probe`` (kernels/fused_cascade.py) accumulates per-key causal
+attention mass in two grid phases (online-softmax normalizer scan, then
+a revisit pass that emits normalized mass per key block).  The oracle
+``drift_mass_ref`` computes the same quantity densely.  The two round
+differently — the kernel applies the normalizer per revisited block
+with the FINAL (m, l), the oracle normalizes a dense row — so the gate
+is allclose, not bitwise (same contract as the fused serving kernels).
+
+Also pins the pure-python selection semantics the scores feed
+(``select_drift_blocks``): budget quantization UP to whole blocks,
+budget >= seg_len selecting everything (the frac=1.0 identity anchor),
+and the tie-break that keeps the fixed leading window a subset of the
+drift mask when scores tie.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import masked_block_tokens, select_drift_blocks
+from repro.kernels.fused_cascade import drift_probe
+from repro.kernels.ref import drift_mass_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(key, hq, hkv, tq, s, d, dtype=jnp.float32):
+    kq, kk = jax.random.split(jax.random.PRNGKey(key))
+    q = (jax.random.normal(kq, (hq, tq, d)) * 0.7).astype(dtype)
+    k = (jax.random.normal(kk, (hkv, s, d)) * 0.7).astype(dtype)
+    return q, k
+
+
+@pytest.mark.parametrize("hq,hkv,tq,s,d,block_k", [
+    (8, 2, 6, 48, 16, 16),      # GQA g=4, S a multiple of block_k
+    (4, 4, 3, 37, 8, 16),       # MHA, ragged S (kernel pads the tail)
+    (6, 2, 1, 9, 32, 4),        # single probe query, tiny blocks
+    (8, 1, 11, 130, 8, 128),    # MQA, S just past one block
+])
+def test_drift_probe_matches_oracle(hq, hkv, tq, s, d, block_k):
+    q, k = _mk(3 + s, hq, hkv, tq, s, d)
+    # fresh tokens sit AFTER most keys: probe positions interleave with
+    # the key tail so the causal mask actually cuts (not all-visible)
+    k_pos = jnp.arange(s, dtype=jnp.int32)
+    q_pos = jnp.linspace(s // 3, s + 4, tq).astype(jnp.int32)
+    got = drift_probe(q, k, q_pos, k_pos, block_k=block_k)
+    want = drift_mass_ref(q, k, q_pos, k_pos)
+    assert got.shape == (s,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_drift_probe_padding_and_masked_rows():
+    """Padding keys (k_pos == -1), padding queries (q_pos == -1), and a
+    query older than every key all contribute exactly zero mass."""
+    q, k = _mk(11, 4, 2, 5, 40, 16)
+    k_pos = jnp.where(jnp.arange(40) < 33, jnp.arange(40), -1)
+    k_pos = k_pos.astype(jnp.int32)
+    # rows: two padding probes, three real ones
+    q_pos = jnp.asarray([-1, -1, 10, 20, 40], jnp.int32)
+    got = np.asarray(drift_probe(q, k, q_pos, k_pos, block_k=16))
+    want = np.asarray(drift_mass_ref(q, k, q_pos, k_pos))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert np.all(got[33:] == 0.0)    # padding keys: exactly zero
+    # each live probe row distributes exactly 1.0 per query head over
+    # its visible keys; 3 live rows x 4 query heads
+    np.testing.assert_allclose(got.sum(), 3 * 4, rtol=1e-5)
+
+
+def test_drift_probe_bf16_inputs():
+    q, k = _mk(7, 8, 2, 4, 64, 16, dtype=jnp.bfloat16)
+    k_pos = jnp.arange(64, dtype=jnp.int32)
+    q_pos = jnp.asarray([30, 45, 60, 63], jnp.int32)
+    got = drift_probe(q, k, q_pos, k_pos, block_k=32)
+    want = drift_mass_ref(q, k, q_pos, k_pos)
+    # bf16 scores, f32 accumulation in both paths
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------------------
+# selection semantics (pure python, no kernel)
+# ----------------------------------------------------------------------
+def test_select_drift_blocks_budget_quantization():
+    scores = [0.1, 5.0, 0.2, 3.0]          # 4 blocks, bs=8, seg_len=29
+    # 1 token of budget still buys a whole block (the top scorer)
+    assert select_drift_blocks(scores, 1, 29, 8) == (1,)
+    # 9 tokens -> ceil to 2 blocks: the two top scorers, index-sorted
+    assert select_drift_blocks(scores, 9, 29, 8) == (1, 3)
+    # budget >= seg_len selects everything (frac=1.0 identity anchor)
+    assert select_drift_blocks(scores, 29, 29, 8) == (0, 1, 2, 3)
+    assert select_drift_blocks(scores, 10_000, 29, 8) == (0, 1, 2, 3)
+    # zero budget recomputes nothing
+    assert select_drift_blocks(scores, 0, 29, 8) == ()
+
+
+def test_select_drift_blocks_tie_break_is_leading():
+    """Equal scores select LEADING blocks first, so at equal budget the
+    drift mask always CONTAINS the fixed leading window's blocks — the
+    containment property the issue's test checklist names."""
+    scores = [1.0, 1.0, 1.0, 1.0, 1.0]
+    assert select_drift_blocks(scores, 16, 40, 8) == (0, 1)
+    assert select_drift_blocks(scores, 17, 40, 8) == (0, 1, 2)
+    # a genuinely hotter tail block still wins over a cold leading one
+    assert select_drift_blocks([0.0, 1.0, 1.0, 2.0, 1.0], 8, 40, 8) \
+        == (3,)
+
+
+def test_masked_block_tokens_counts_tail_block():
+    # full blocks count block_size, the tail block only its live tokens
+    assert masked_block_tokens(29, (0, 3), 8) == 8 + 5
+    assert masked_block_tokens(32, (0, 3), 8) == 16
+    assert masked_block_tokens(29, (), 8) == 0
